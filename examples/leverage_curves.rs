@@ -1,0 +1,65 @@
+//! Leverage curves (Figure 2 in miniature): print the exact rescaled
+//! leverage G_λ(x,x) next to the paper's SA approximation K̃_λ(x,x) on a
+//! 1-d bimodal design, as a terminal table + sparkline.
+//!
+//! Run: `cargo run --release --example leverage_curves`
+
+use leverkrr::data::{dist1d, Dist1d};
+use leverkrr::kde;
+use leverkrr::kernels::{Kernel, KernelSpec};
+use leverkrr::krr;
+use leverkrr::leverage::exact::rescaled_leverage_exact;
+use leverkrr::leverage::sa::SaEstimator;
+use leverkrr::util::rng::Rng;
+
+fn main() {
+    let n = 2000;
+    let mut rng = Rng::seed_from_u64(42);
+    let ds = dist1d(Dist1d::Bimodal, n, &mut rng);
+    let nu = 1.5;
+    let kernel = Kernel::new(KernelSpec::Matern { nu, a: (2.0 * nu).sqrt() });
+    let lambda = krr::lambda::fig2(n);
+    println!("1-d bimodal, n={n}, Matérn ν=1.5, λ={lambda:.2e}\n");
+
+    println!("computing exact rescaled leverage (O(n³)) …");
+    let g = rescaled_leverage_exact(&ds.x, &kernel, lambda);
+
+    println!("computing SA approximation (Õ(n)) …");
+    let h = kde::bandwidth::fig2_other(n);
+    let sa = SaEstimator { bandwidth: Some(h), ..Default::default() };
+    let p_hat = kde::density_at_points(&ds.x, h, sa.kde, &mut rng);
+    let k = sa.scores_from_density(&p_hat, &kernel, lambda, 1);
+
+    // sort by x and print a sampled curve
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| ds.x[(a, 0)].partial_cmp(&ds.x[(b, 0)]).unwrap());
+    let gmax = g.iter().cloned().fold(0.0, f64::max);
+    println!("\n{:>8}  {:>10}  {:>10}  {:>8}  curve (#=exact, o=SA)", "x", "G_exact", "K_SA", "rel.err");
+    for &i in idx.iter().step_by(n / 48) {
+        let bar_g = ((g[i] / gmax) * 40.0).round() as usize;
+        let bar_k = ((k[i] / gmax) * 40.0).round().max(0.0) as usize;
+        let mut line = vec![b' '; 44];
+        if bar_k < line.len() {
+            line[bar_k] = b'o';
+        }
+        if bar_g < line.len() {
+            line[bar_g] = b'#';
+        }
+        println!(
+            "{:>8.4}  {:>10.2}  {:>10.2}  {:>7.1}%  |{}",
+            ds.x[(i, 0)],
+            g[i],
+            k[i],
+            100.0 * (k[i] - g[i]).abs() / g[i],
+            String::from_utf8(line).unwrap()
+        );
+    }
+    let med = {
+        let mut r: Vec<f64> =
+            (0..n).map(|i| (k[i] - g[i]).abs() / g[i]).collect();
+        r.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        r[n / 2]
+    };
+    println!("\nmedian relative error: {:.2}%", med * 100.0);
+    println!("note the elevated leverage over the sparse mode x∈[1,1.5] — that is\nexactly what uniform Nyström sampling misses (paper Fig. 2).");
+}

@@ -1,0 +1,48 @@
+//! Quickstart: fit a Nyström-KRR model with SA leverage sampling on the
+//! paper's 3-d bimodal design and compare against uniform sampling.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use leverkrr::coordinator::{fit_with_backend, FitConfig};
+use leverkrr::data;
+use leverkrr::krr;
+use leverkrr::leverage::LeverageMethod;
+use leverkrr::runtime::Backend;
+use leverkrr::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::seed_from_u64(7);
+    let n = 10_000;
+    println!("generating the paper's 3-d bimodal design, n = {n} …");
+    let ds = data::bimodal3(n, 0.4, &mut rng);
+
+    // Paper-rule hyperparameters (λ = 0.075·n^{-2/3}, m = 5·n^{1/3}).
+    let mut cfg = FitConfig::default_for(&ds);
+    cfg.lambda = krr::lambda::fig1(n);
+    cfg.m_sub = leverkrr::nystrom::subsize::fig1(n);
+    cfg.kde_bandwidth = Some(leverkrr::kde::bandwidth::fig1(n));
+
+    // XLA backend if `make artifacts` has been run, else native.
+    let backend = Backend::auto();
+    println!("kernel backend: {}", backend.name());
+
+    for method in [LeverageMethod::Sa, LeverageMethod::Uniform] {
+        cfg.method = method;
+        let model = fit_with_backend(&ds, &cfg, backend.clone())?;
+        let fitted = model.predict_batch(&ds.x);
+        let risk = krr::in_sample_risk(&fitted, &ds.f_true);
+        println!(
+            "{:>8}: leverage {:.3}s, solve {:.3}s, total {:.3}s → in-sample risk {:.5}",
+            model.report.method,
+            model.report.kde_and_leverage_secs,
+            model.report.solve_secs,
+            model.report.total_secs,
+            risk
+        );
+    }
+    println!(
+        "\nSA should match or beat uniform on risk — the bimodal far mode is\n\
+         only found when sampling follows the leverage profile (paper Fig. 1)."
+    );
+    Ok(())
+}

@@ -1,0 +1,77 @@
+"""AOT lowering: L2 graphs (with L1 Pallas bodies) → HLO text artifacts.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax
+≥ 0.5 emits protos with 64-bit instruction ids that the runtime's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Writes one `<entry>.hlo.txt` per ENTRIES item plus `manifest.json`
+describing tile geometry — everything the rust runtime needs.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(fn, args):
+    """jit → lower → StableHLO → XlaComputation → HLO text."""
+    lowered = jax.jit(fn).lower(*args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only", default="", help="comma-separated entry names (default: all)"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    only = {s for s in args.only.split(",") if s}
+
+    manifest = {
+        "version": 1,
+        "tm": model.TM,
+        "tn": model.TN,
+        "d": model.D_MAX,
+        "jax_version": jax.__version__,
+        "entries": {},
+    }
+    for name, (fn, kind, (tm, tn)) in model.ENTRIES.items():
+        if only and name not in only:
+            continue
+        text = to_hlo_text(fn, model.example_args(kind, tm, tn))
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest["entries"][name] = {
+            "file": fname,
+            "kind": kind,
+            "tm": tm,
+            "tn": tn,
+            "sha256_16": digest,
+            "bytes": len(text),
+        }
+        print(f"  {name}: {len(text)} chars → {path}")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote manifest with {len(manifest['entries'])} entries")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""L1 Pallas kernels: pairwise kernel-matrix blocks and masked KDE sums.
+
+HARDWARE ADAPTATION (DESIGN.md §Hardware-Adaptation): the paper's hot
+spot is assembling dense kernel blocks K(X, Y) — an O(n·m·d) pairwise
+computation a CUDA implementation would tile over threadblocks with the
+distance Gram staged through shared memory. On TPU the same insight maps
+to: tile (TM, D)×(TN, D) blocks into VMEM via BlockSpec, compute the
+−2·X·Yᵀ contraction on the MXU (a rank-D matmul — `jnp.dot` inside the
+kernel), add the row/col squared norms on the VPU, and apply the scalar
+kernel profile elementwise. One fused Pallas kernel per tile keeps the
+whole block resident in VMEM: 2·128·8·4B inputs + 128·128·4B output
+≈ 74 KiB ≪ 16 MiB VMEM; a (128,8)@(8,128) MXU matmul per tile.
+
+interpret=True throughout: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; lowering in interpret mode emits plain HLO the rust runtime
+executes. The same code compiles for real TPU by flipping the flag.
+
+The scale parameter (Matérn `a` / Gaussian `σ` / KDE `h`) enters as a
+(1,)-shaped operand so ONE artifact serves every hyperparameter setting —
+no recompilation on the λ/bandwidth sweeps the benches run.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile geometry — shared with aot.py and the rust runtime via the
+# manifest. 128 matches the MXU systolic dimension; D_MAX=8 covers the
+# paper's experiments (d ≤ 8 after HTRU2) with zero-padding for d < 8.
+TM = 128
+TN = 128
+D_MAX = 8
+
+
+def _sqdist_tile(x, y):
+    """(TM,D)·(TN,D) → (TM,TN) squared distances, MXU-friendly form."""
+    xx = jnp.sum(x * x, axis=1)[:, None]
+    yy = jnp.sum(y * y, axis=1)[None, :]
+    # the rank-D contraction — this is the MXU matmul on real hardware
+    xy = jnp.dot(x, y.T, preferred_element_type=jnp.float32)
+    return jnp.maximum(xx + yy - 2.0 * xy, 0.0)
+
+
+def _matern05_profile(r2, a):
+    return jnp.exp(-a * jnp.sqrt(r2))
+
+
+def _matern15_profile(r2, a):
+    t = a * jnp.sqrt(r2)
+    return (1.0 + t) * jnp.exp(-t)
+
+
+def _matern25_profile(r2, a):
+    t = a * jnp.sqrt(r2)
+    return (1.0 + t + t * t / 3.0) * jnp.exp(-t)
+
+
+def _gaussian_profile(r2, sigma):
+    return jnp.exp(-r2 / (2.0 * sigma * sigma))
+
+
+PROFILES = {
+    "matern05": _matern05_profile,
+    "matern15": _matern15_profile,
+    "matern25": _matern25_profile,
+    "gaussian": _gaussian_profile,
+}
+
+
+def _kernel_block_kernel(profile, x_ref, y_ref, scale_ref, o_ref):
+    """Pallas kernel body: one fused distance-Gram + profile tile."""
+    x = x_ref[...]
+    y = y_ref[...]
+    a = scale_ref[0]
+    o_ref[...] = profile(_sqdist_tile(x, y), a)
+
+
+@functools.partial(jax.jit, static_argnames=("name",))
+def kernel_block(name, x, y, scale):
+    """K(x, y) tile for kernel `name`; x:(TM,D), y:(TN,D), scale:(1,)."""
+    profile = PROFILES[name]
+    return pl.pallas_call(
+        functools.partial(_kernel_block_kernel, profile),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], y.shape[0]), jnp.float32),
+        interpret=True,
+    )(x, y, scale)
+
+
+def _kde_block_kernel(q_ref, d_ref, w_ref, h_ref, o_ref):
+    """Masked Gaussian-KDE partial sums over one data tile."""
+    q = q_ref[...]
+    x = d_ref[...]
+    w = w_ref[...]
+    h = h_ref[0]
+    d2 = _sqdist_tile(q, x)
+    k = jnp.exp(-d2 / (2.0 * h * h))
+    # mask out padded data rows, reduce over the data axis (VPU reduce)
+    o_ref[...] = jnp.dot(k, w, preferred_element_type=jnp.float32)
+
+
+@jax.jit
+def kde_block(q, data, w, h):
+    """Partial KDE sums; q:(TM,D), data:(TN,D), w:(TN,), h:(1,) → (TM,)."""
+    return pl.pallas_call(
+        _kde_block_kernel,
+        out_shape=jax.ShapeDtypeStruct((q.shape[0],), jnp.float32),
+        interpret=True,
+    )(q, data, w, h)
+
+
+def vmem_footprint_bytes(tm=TM, tn=TN, d=D_MAX):
+    """Estimated VMEM residency of one kernel-block tile (f32).
+
+    Used by DESIGN.md / EXPERIMENTS.md to argue the real-TPU schedule:
+    inputs + distance Gram + output, all f32.
+    """
+    inputs = (tm * d + tn * d + 1) * 4
+    gram = tm * tn * 4
+    output = tm * tn * 4
+    return inputs + gram + output

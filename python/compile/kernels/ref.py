@@ -1,0 +1,81 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Every Pallas kernel in this package has an exact counterpart here written
+with plain jax.numpy. pytest asserts allclose between the two across
+shapes, dtypes, parameters, and padding patterns — this is the CORE
+correctness signal for the L1 layer (the rust test suite then checks the
+AOT artifacts against the *rust-native* implementation, closing the loop).
+"""
+
+import jax.numpy as jnp
+
+__all__ = [
+    "sqdist",
+    "matern05",
+    "matern15",
+    "matern25",
+    "gaussian",
+    "kernel_block_ref",
+    "kde_block_ref",
+]
+
+
+def sqdist(x, y):
+    """Pairwise squared distances ‖x_i − y_j‖² for x:(m,d), y:(n,d).
+
+    Uses the expansion ‖x‖² + ‖y‖² − 2⟨x,y⟩ — identical to the Pallas
+    kernel so rounding behaviour matches (both clamp at 0).
+    """
+    xx = jnp.sum(x * x, axis=1)[:, None]
+    yy = jnp.sum(y * y, axis=1)[None, :]
+    d2 = xx + yy - 2.0 * (x @ y.T)
+    return jnp.maximum(d2, 0.0)
+
+
+def matern05(r2, a):
+    """Matérn ν=1/2 (exponential): exp(−a·r)."""
+    r = jnp.sqrt(r2)
+    return jnp.exp(-a * r)
+
+
+def matern15(r2, a):
+    """Matérn ν=3/2: (1 + a·r)·exp(−a·r)."""
+    t = a * jnp.sqrt(r2)
+    return (1.0 + t) * jnp.exp(-t)
+
+
+def matern25(r2, a):
+    """Matérn ν=5/2: (1 + a·r + (a·r)²/3)·exp(−a·r)."""
+    t = a * jnp.sqrt(r2)
+    return (1.0 + t + t * t / 3.0) * jnp.exp(-t)
+
+
+def gaussian(r2, sigma):
+    """Gaussian kernel exp(−r²/(2σ²))."""
+    return jnp.exp(-r2 / (2.0 * sigma * sigma))
+
+
+_KERNELS = {
+    "matern05": matern05,
+    "matern15": matern15,
+    "matern25": matern25,
+    "gaussian": gaussian,
+}
+
+
+def kernel_block_ref(name, x, y, scale):
+    """Reference kernel block K(x, y):(m,n) for kernel `name`."""
+    return _KERNELS[name](sqdist(x, y), scale)
+
+
+def kde_block_ref(q, data, w, h):
+    """Masked Gaussian-KDE partial sums.
+
+    q:(m,d) queries, data:(n,d) points, w:(n,) 0/1 mask for padded rows,
+    h: bandwidth. Returns (m,) with sum_j w_j·exp(−‖q_i−x_j‖²/(2h²)).
+    (Normalization by n·(2πh²)^{d/2} happens on the rust side, which
+    knows the true n and d before padding.)
+    """
+    d2 = sqdist(q, data)
+    k = jnp.exp(-d2 / (2.0 * h * h))
+    return k @ w

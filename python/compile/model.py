@@ -1,0 +1,92 @@
+"""L2: JAX compute graphs lowered to the AOT artifacts.
+
+Each entry point is a jittable function over fixed tile shapes that calls
+the L1 Pallas kernels — the whole graph (Pallas body included, via
+interpret=True) lowers to a single HLO module that the rust runtime
+executes per tile. Python never runs at serve time.
+
+Entry points (see aot.py for the lowering and the manifest):
+  * kernel_block_<name>(x, y, scale) → (TM, TN) kernel matrix tile
+  * kde_block(q, data, w, h)         → (TM,) masked KDE partial sums
+  * predict_block(q, land, beta, scale) → (TM,) fused K(q, X_m)·β tile
+    (serving fast path: avoids materializing the query kernel block on
+    the host)
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import pairwise
+from .kernels.pairwise import D_MAX, TM, TN, kde_block, kernel_block  # noqa: F401
+
+
+def make_kernel_block(name):
+    """Close over the kernel name → a jittable (x, y, scale) graph."""
+
+    def fn(x, y, scale):
+        return (kernel_block(name, x, y, scale),)
+
+    fn.__name__ = f"kernel_block_{name}"
+    return fn
+
+
+def kde_block_entry(q, data, w, h):
+    return (kde_block(q, data, w, h),)
+
+
+def predict_block_entry_factory(name):
+    """Fused Nyström predict tile: K(q, landmarks)·β.
+
+    β for padded landmark rows is zero, so padding is self-masking.
+    """
+
+    def fn(q, land, beta, scale):
+        k = kernel_block(name, q, land, scale)
+        return (jnp.dot(k, beta, preferred_element_type=jnp.float32),)
+
+    fn.__name__ = f"predict_block_{name}"
+    return fn
+
+
+#: Large-tile geometry (perf variant): one CPU-PJRT dispatch costs
+#: ~100–300 µs, so big assemblies want fewer, fatter tiles. 512×512×8 f32
+#: is 2 MiB of output + 32 KiB inputs — still far under the 16 MiB VMEM
+#: budget on real TPU (EXPERIMENTS.md §Perf records the measured win).
+TM_L = 512
+TN_L = 512
+
+
+def example_args(kind, tm=TM, tn=TN):
+    """ShapeDtypeStructs for lowering each entry kind at a tile size."""
+    f32 = jnp.float32
+    tile_x = jax.ShapeDtypeStruct((tm, D_MAX), f32)
+    tile_y = jax.ShapeDtypeStruct((tn, D_MAX), f32)
+    scalar = jax.ShapeDtypeStruct((1,), f32)
+    vec_n = jax.ShapeDtypeStruct((tn,), f32)
+    if kind == "kernel_block":
+        return (tile_x, tile_y, scalar)
+    if kind == "kde_block":
+        return (tile_x, tile_y, vec_n, scalar)
+    if kind == "predict_block":
+        return (tile_x, tile_y, vec_n, scalar)
+    raise ValueError(kind)
+
+
+#: name → (entry fn, kind, (tm, tn)); the manifest mirrors this table.
+ENTRIES = {
+    "matern05_block": (make_kernel_block("matern05"), "kernel_block", (TM, TN)),
+    "matern15_block": (make_kernel_block("matern15"), "kernel_block", (TM, TN)),
+    "matern25_block": (make_kernel_block("matern25"), "kernel_block", (TM, TN)),
+    "gaussian_block": (make_kernel_block("gaussian"), "kernel_block", (TM, TN)),
+    "kde_block": (kde_block_entry, "kde_block", (TM, TN)),
+    "predict_matern05": (predict_block_entry_factory("matern05"), "predict_block", (TM, TN)),
+    "predict_matern15": (predict_block_entry_factory("matern15"), "predict_block", (TM, TN)),
+    "predict_matern25": (predict_block_entry_factory("matern25"), "predict_block", (TM, TN)),
+    "predict_gaussian": (predict_block_entry_factory("gaussian"), "predict_block", (TM, TN)),
+    # large-tile perf variants (runtime picks per problem size)
+    "matern05_block_l": (make_kernel_block("matern05"), "kernel_block", (TM_L, TN_L)),
+    "matern15_block_l": (make_kernel_block("matern15"), "kernel_block", (TM_L, TN_L)),
+    "matern25_block_l": (make_kernel_block("matern25"), "kernel_block", (TM_L, TN_L)),
+    "gaussian_block_l": (make_kernel_block("gaussian"), "kernel_block", (TM_L, TN_L)),
+    "kde_block_l": (kde_block_entry, "kde_block", (TM_L, TN_L)),
+}

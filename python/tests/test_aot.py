@@ -1,0 +1,58 @@
+"""AOT artifact pipeline: manifest integrity + determinism."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+PY_DIR = os.path.join(REPO, "python")
+
+
+def run_aot(out_dir, only=""):
+    cmd = [sys.executable, "-m", "compile.aot", "--out-dir", out_dir]
+    if only:
+        cmd += ["--only", only]
+    subprocess.run(cmd, cwd=PY_DIR, check=True, capture_output=True)
+
+
+def test_aot_writes_manifest_and_artifacts(tmp_path):
+    out = str(tmp_path / "arts")
+    run_aot(out, only="matern05_block,kde_block")
+    with open(os.path.join(out, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["tm"] == 128 and man["tn"] == 128 and man["d"] == 8
+    assert set(man["entries"]) == {"matern05_block", "kde_block"}
+    for name, meta in man["entries"].items():
+        path = os.path.join(out, meta["file"])
+        assert os.path.exists(path), name
+        text = open(path).read()
+        assert text.startswith("HloModule")
+        assert len(text) == meta["bytes"]
+
+
+def test_aot_is_deterministic(tmp_path):
+    a, b = str(tmp_path / "a"), str(tmp_path / "b")
+    run_aot(a, only="gaussian_block")
+    run_aot(b, only="gaussian_block")
+    ja = json.load(open(os.path.join(a, "manifest.json")))
+    jb = json.load(open(os.path.join(b, "manifest.json")))
+    assert (
+        ja["entries"]["gaussian_block"]["sha256_16"]
+        == jb["entries"]["gaussian_block"]["sha256_16"]
+    )
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(REPO, "artifacts", "manifest.json")),
+    reason="run `make artifacts` first",
+)
+def test_checked_in_artifacts_match_manifest():
+    art = os.path.join(REPO, "artifacts")
+    man = json.load(open(os.path.join(art, "manifest.json")))
+    for name, meta in man["entries"].items():
+        path = os.path.join(art, meta["file"])
+        assert os.path.exists(path), f"{name} missing"
+        assert len(open(path).read()) == meta["bytes"], f"{name} stale"

@@ -1,0 +1,7 @@
+//! `cargo bench --bench ablation -- [--full] [--reps N]`
+//! SA design-choice ablations (integration path, KDE backend, LOO,
+//! stabilization). See `leverkrr::bench_harness::experiments::ablation`.
+fn main() {
+    let opts = leverkrr::bench_harness::ExpOptions::parse_cli("ablation", "SA ablations");
+    leverkrr::bench_harness::experiments::ablation::run(&opts);
+}

@@ -1,0 +1,7 @@
+//! `cargo bench --bench fig1 -- [--full] [--reps N] [--ns a,b,c] [--out f.json]`
+//! Regenerates the paper's fig1 experiment. See
+//! `leverkrr::bench_harness::experiments::fig1` for the setting.
+fn main() {
+    let opts = leverkrr::bench_harness::ExpOptions::parse_cli("fig1", "paper experiment driver");
+    leverkrr::bench_harness::experiments::fig1::run(&opts);
+}

@@ -1,0 +1,7 @@
+//! `cargo bench --bench fig2 -- [--full] [--reps N] [--ns a,b,c] [--out f.json]`
+//! Regenerates the paper's fig2 experiment. See
+//! `leverkrr::bench_harness::experiments::fig2` for the setting.
+fn main() {
+    let opts = leverkrr::bench_harness::ExpOptions::parse_cli("fig2", "paper experiment driver");
+    leverkrr::bench_harness::experiments::fig2::run(&opts);
+}

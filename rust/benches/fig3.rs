@@ -1,0 +1,7 @@
+//! `cargo bench --bench fig3 -- [--full] [--reps N] [--ns a,b,c] [--out f.json]`
+//! Regenerates the paper's fig3 experiment. See
+//! `leverkrr::bench_harness::experiments::fig3` for the setting.
+fn main() {
+    let opts = leverkrr::bench_harness::ExpOptions::parse_cli("fig3", "paper experiment driver");
+    leverkrr::bench_harness::experiments::fig3::run(&opts);
+}

@@ -1,0 +1,7 @@
+//! `cargo bench --bench perf -- [--full] [--reps N] [--ns a,b,c] [--out f.json]`
+//! Regenerates the paper's perf experiment. See
+//! `leverkrr::bench_harness::experiments::perf` for the setting.
+fn main() {
+    let opts = leverkrr::bench_harness::ExpOptions::parse_cli("perf", "paper experiment driver");
+    leverkrr::bench_harness::experiments::perf::run(&opts);
+}

@@ -1,0 +1,7 @@
+//! `cargo bench --bench table1 -- [--full] [--reps N] [--ns a,b,c] [--out f.json]`
+//! Regenerates the paper's table1 experiment. See
+//! `leverkrr::bench_harness::experiments::table1` for the setting.
+fn main() {
+    let opts = leverkrr::bench_harness::ExpOptions::parse_cli("table1", "paper experiment driver");
+    leverkrr::bench_harness::experiments::table1::run(&opts);
+}

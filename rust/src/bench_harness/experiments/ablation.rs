@@ -1,0 +1,126 @@
+//! Ablations over the SA estimator's design choices (DESIGN.md §Perf /
+//! §Key algorithmic notes):
+//!
+//! * integration path: closed form vs polar-reduced quadrature,
+//! * density source: KDE backends (grid / subsampled / exact) vs the
+//!   generator's true density (isolates formula error),
+//! * leave-one-out KDE correction on/off,
+//! * §B.3 low-density stabilization on/off.
+//!
+//! Metric: leverage time + R-ACC (mean ratio vs exact scores + q05/q95
+//! band) on the 3-d bimodal design, where both the true density and the
+//! exact scores are computable.
+
+use crate::bench_harness::{maybe_write_out, ExpOptions, Table};
+use crate::data;
+use crate::kde::{self, KdeMethod};
+use crate::kernels::{Kernel, KernelSpec};
+use crate::krr;
+use crate::leverage::exact::rescaled_leverage_exact;
+use crate::leverage::sa::{SaEstimator, SaIntegration};
+use crate::leverage::{normalize, LeverageContext, LeverageEstimator};
+use crate::metrics::{quantile_sorted, time_it};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+struct Variant {
+    label: &'static str,
+    est: SaEstimator,
+    use_true_p: bool,
+}
+
+pub fn run(opts: &ExpOptions) {
+    let n = if opts.full { 6000 } else { 2000 };
+    let nu = 1.5;
+    let kernel = Kernel::new(KernelSpec::Matern { nu, a: (2.0 * nu).sqrt() });
+    let h = kde::bandwidth::fig1(n);
+    let base = SaEstimator { bandwidth: Some(h), ..Default::default() };
+    let variants = vec![
+        Variant { label: "closed-form (default)", est: base.clone(), use_true_p: false },
+        Variant {
+            label: "quadrature",
+            est: SaEstimator { integration: SaIntegration::Quadrature, ..base.clone() },
+            use_true_p: false,
+        },
+        Variant {
+            label: "true density (oracle)",
+            est: SaEstimator { use_true_density: true, ..base.clone() },
+            use_true_p: true,
+        },
+        Variant {
+            label: "kde=exact",
+            est: SaEstimator { kde: KdeMethod::Exact, ..base.clone() },
+            use_true_p: false,
+        },
+        Variant {
+            label: "kde=grid",
+            est: SaEstimator { kde: KdeMethod::Grid, ..base.clone() },
+            use_true_p: false,
+        },
+        Variant {
+            label: "kde=subsampled(4√n)",
+            est: SaEstimator {
+                kde: KdeMethod::Subsampled { m: 4 * (n as f64).sqrt() as usize },
+                ..base.clone()
+            },
+            use_true_p: false,
+        },
+        Variant {
+            label: "no LOO correction",
+            est: SaEstimator { loo: false, ..base.clone() },
+            use_true_p: false,
+        },
+        Variant {
+            label: "no stabilization",
+            est: SaEstimator { stabilize: false, ..base.clone() },
+            use_true_p: false,
+        },
+    ];
+    println!("# Ablation — SA design choices, 3-d bimodal, n={n}, reps={}", opts.reps);
+    let mut table = Table::new(&["variant", "time_s", "r_mean", "q05", "q95"]);
+    let mut out_rows = Vec::new();
+    for v in &variants {
+        let mut times = Vec::new();
+        let mut r_means = Vec::new();
+        let mut q05s = Vec::new();
+        let mut q95s = Vec::new();
+        for rep in 0..opts.reps {
+            let mut rng = Rng::seed_from_u64(opts.seed + rep as u64);
+            let ds = data::bimodal3(n, 0.4, &mut rng);
+            let lambda = krr::lambda::fig1(n);
+            let q_exact = normalize(&rescaled_leverage_exact(&ds.x, &kernel, lambda));
+            let mut ctx = LeverageContext::new(&ds.x, &kernel, lambda);
+            if v.use_true_p {
+                ctx.p_true = ds.p_true.as_deref();
+            }
+            let mut mrng = rng.fork(1);
+            let (scores, secs) = time_it(|| v.est.estimate(&ctx, &mut mrng));
+            let q = normalize(&scores);
+            let mut ratios: Vec<f64> = (0..n).map(|i| q[i] / q_exact[i]).collect();
+            let mean_r = ratios.iter().sum::<f64>() / n as f64;
+            ratios.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            times.push(secs);
+            r_means.push(mean_r);
+            q05s.push(quantile_sorted(&ratios, 0.05));
+            q95s.push(quantile_sorted(&ratios, 0.95));
+        }
+        let avg = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        table.row(vec![
+            v.label.to_string(),
+            format!("{:.4}", avg(&times)),
+            format!("{:.3}", avg(&r_means)),
+            format!("{:.2}", avg(&q05s)),
+            format!("{:.2}", avg(&q95s)),
+        ]);
+        out_rows.push(Json::obj(vec![
+            ("variant", Json::Str(v.label.into())),
+            ("time", Json::Num(avg(&times))),
+            ("r_mean", Json::Num(avg(&r_means))),
+            ("q05", Json::Num(avg(&q05s))),
+            ("q95", Json::Num(avg(&q95s))),
+        ]));
+        eprintln!("  {} done", v.label);
+    }
+    table.print();
+    maybe_write_out(opts, "ablation", Json::Arr(out_rows));
+}

@@ -1,0 +1,158 @@
+//! Figure 3 — Gaussian kernels with increasing input dimension.
+//!
+//! Paper setting (§B.4): d ∈ {3, 10, 30}; Gaussian kernel with bandwidth
+//! σ = 1.5·n^{−1/(2d+3)}; d-dim bimodal design (γ=0.4, far mode
+//! ∏(7−2x_j) on [3,3.5]^d); target f* = g(‖x‖₂/d) + g(x₁);
+//! λ = 0.075·n^{−(d+3)/(2d+3)}; projection dimension 5·n^{d/(2d+3)};
+//! iterative-method subsample 1·n^{d/(2d+3)}; n ∈ [10³, 10⁵]; 20 reps.
+//!
+//! Expected shape: as d grows every leverage-based method loses its edge
+//! over Vanilla (the curse of dimensionality flattens the leverage
+//! profile and inflates absolute error by orders of magnitude).
+
+use crate::bench_harness::{maybe_write_out, ExpOptions, Table};
+use crate::data;
+use crate::kernels::{Kernel, KernelSpec};
+use crate::krr;
+use crate::leverage::{LeverageContext, LeverageMethod};
+use crate::metrics::{time_it, Summary};
+use crate::nystrom::{self, NystromKrr};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+pub fn default_ns(full: bool) -> Vec<usize> {
+    if full {
+        vec![1_000, 3_000, 10_000, 30_000, 100_000]
+    } else {
+        vec![1_000, 3_000]
+    }
+}
+
+pub fn default_ds(full: bool) -> Vec<usize> {
+    if full {
+        vec![3, 10, 30]
+    } else {
+        vec![3, 10]
+    }
+}
+
+pub struct Row {
+    pub d: usize,
+    pub n: usize,
+    pub method: LeverageMethod,
+    pub lev_time: Summary,
+    pub err: Summary,
+}
+
+pub fn run(opts: &ExpOptions) -> Vec<Row> {
+    let ns = opts.ns.clone().unwrap_or_else(|| default_ns(opts.full));
+    let ds_dims = default_ds(opts.full);
+    let backend = opts.backend();
+    let methods = LeverageMethod::all_comparison();
+    let mut rows = Vec::new();
+    println!(
+        "# Figure 3 — Gaussian kernels, σ=1.5·n^(-1/(2d+3)), d-dim bimodal, reps={}",
+        opts.reps
+    );
+    for &d in &ds_dims {
+        for &n in &ns {
+            let sigma = 1.5 * (n as f64).powf(-1.0 / (2.0 * d as f64 + 3.0));
+            let kernel = Kernel::new(KernelSpec::Gaussian { sigma });
+            let lambda = krr::lambda::fig3(n, d);
+            let m_sub = nystrom::subsize::fig3(n, d).min(n / 2).max(8);
+            let inner = nystrom::subsize::fig3_inner(n, d).max(8);
+            // KDE bandwidth "tuned per dimension" (paper): Scott's rule.
+            let h = crate::kde::bandwidth::scott(n, d);
+            let mut per: Vec<(LeverageMethod, Summary, Summary)> =
+                methods.iter().map(|&m| (m, Summary::new(), Summary::new())).collect();
+            for rep in 0..opts.reps {
+                let mut rng =
+                    Rng::seed_from_u64(opts.seed + rep as u64 * 131 + n as u64 + d as u64);
+                let ds = data::bimodal_d(n, d, 0.4, &mut rng);
+                for (method, t_sum, e_sum) in per.iter_mut() {
+                    let mut mrng = rng.fork(*method as u64 + 3);
+                    let est =
+                        crate::bench_harness::experiments::fig1::build_estimator(*method, h);
+                    let mut ctx = LeverageContext::new(&ds.x, &kernel, lambda);
+                    ctx.inner_m = inner;
+                    let (scores, secs) = time_it(|| est.estimate(&ctx, &mut mrng));
+                    let q = crate::leverage::normalize(&scores);
+                    let nys = NystromKrr::fit(
+                        kernel.clone(),
+                        &ds.x,
+                        &ds.y,
+                        lambda,
+                        &q,
+                        m_sub,
+                        &mut mrng,
+                        &backend,
+                    )
+                    .expect("nystrom fit");
+                    let fitted = nys.predict_with(&ds.x, &backend);
+                    let err = krr::in_sample_risk(&fitted, &ds.f_true);
+                    t_sum.add(secs);
+                    e_sum.add(err);
+                }
+            }
+            for (m, t, e) in per {
+                rows.push(Row { d, n, method: m, lev_time: t, err: e });
+            }
+            eprintln!("  d={d} n={n} done");
+        }
+    }
+    print_table(&rows);
+    let json = Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("d", Json::Num(r.d as f64)),
+                    ("n", Json::Num(r.n as f64)),
+                    ("method", Json::Str(super::method_label(r.method).into())),
+                    ("lev_time_mean", Json::Num(r.lev_time.mean())),
+                    ("err_mean", Json::Num(r.err.mean())),
+                ])
+            })
+            .collect(),
+    );
+    maybe_write_out(opts, "fig3", json);
+    rows
+}
+
+fn print_table(rows: &[Row]) {
+    let mut t = Table::new(&["d", "n", "method", "lev_time_s", "err_mean", "err_std"]);
+    for r in rows {
+        t.row(vec![
+            r.d.to_string(),
+            r.n.to_string(),
+            super::method_label(r.method).to_string(),
+            if r.method == LeverageMethod::Uniform {
+                "-".to_string()
+            } else {
+                format!("{:.4}", r.lev_time.mean())
+            },
+            format!("{:.5}", r.err.mean()),
+            format!("{:.5}", r.err.std()),
+        ]);
+    }
+    println!("\n## Fig 3: in-sample error for Gaussian kernels, growing d");
+    t.print();
+    // shape: the SA/Vanilla error gap should shrink as d grows
+    println!("\n## Shape checks (leverage advantage should fade with d)");
+    let dims: Vec<usize> = {
+        let mut v: Vec<usize> = rows.iter().map(|r| r.d).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    };
+    for &d in &dims {
+        let nmax = rows.iter().filter(|r| r.d == d).map(|r| r.n).max().unwrap();
+        let err = |m: LeverageMethod| {
+            rows.iter()
+                .find(|r| r.d == d && r.n == nmax && r.method == m)
+                .map(|r| r.err.mean())
+                .unwrap_or(f64::NAN)
+        };
+        let gap = err(LeverageMethod::Uniform) / err(LeverageMethod::Sa);
+        println!("  d={d} (n={nmax}): err Vanilla/SA ratio = {gap:.3}");
+    }
+}

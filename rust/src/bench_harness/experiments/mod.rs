@@ -1,0 +1,29 @@
+//! Experiment drivers — one per table/figure in the paper's evaluation.
+//!
+//! | Driver | Reproduces | Paper setting |
+//! |---|---|---|
+//! | [`fig1::run`] | Figure 1 (runtime vs error trade-off) | §4.1 / §B.1 |
+//! | [`table1::run`] | Table 1 (leverage approximation accuracy) | §4.2 / §B.2 |
+//! | [`fig2::run`] | Figure 2 (SA vs true rescaled leverage) | §4.2 / §B.3 |
+//! | [`fig3::run`] | Figure 3 (Gaussian kernels, growing d) | §B.4 |
+//! | [`perf::run`] | §Perf hot-path microbenches | EXPERIMENTS.md §Perf |
+
+pub mod ablation;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod perf;
+pub mod table1;
+
+use crate::leverage::LeverageMethod;
+
+pub fn method_label(m: LeverageMethod) -> &'static str {
+    match m {
+        LeverageMethod::Exact => "Exact",
+        LeverageMethod::Sa => "SA",
+        LeverageMethod::SaQuadrature => "SA-int",
+        LeverageMethod::Uniform => "Vanilla",
+        LeverageMethod::RecursiveRls => "RC",
+        LeverageMethod::Bless => "BLESS",
+    }
+}

@@ -1,0 +1,170 @@
+//! §Perf — hot-path microbenchmarks (EXPERIMENTS.md §Perf feeds on this).
+//!
+//! Covers every layer:
+//! * L3 native substrate: kernel-block assembly, Cholesky, alias sampling,
+//!   SA closed form + quadrature, KDE (exact / grid / subsampled);
+//! * Runtime: XLA kernel-block + KDE dispatch (when artifacts exist),
+//!   including per-tile dispatch overhead;
+//! * Serving: batched predict throughput + latency through the server.
+
+use crate::bench_harness::{bench_reps, timing_row, ExpOptions};
+use crate::coordinator::{fit_with_backend, FitConfig, Server, ServerConfig};
+use crate::data;
+use crate::kde;
+use crate::kernels::{Kernel, KernelSpec};
+use crate::leverage::sa::{sa_value_closed_form, sa_value_quadrature, SpectralDensity};
+use crate::linalg::{Cholesky, Mat};
+use crate::nystrom;
+use crate::runtime::{Backend, Engine};
+use crate::util::rng::{AliasTable, Rng};
+use std::sync::Arc;
+
+pub fn run(opts: &ExpOptions) {
+    let mut rng = Rng::seed_from_u64(opts.seed);
+    let reps = opts.reps.max(3);
+    println!("# §Perf microbenches (reps={reps})\n");
+
+    // ---- L3: kernel-matrix assembly (native) ------------------------------
+    let n = if opts.full { 8192 } else { 4096 };
+    let m = 512;
+    let d = 3;
+    let x = Mat::from_fn(n, d, |_, _| rng.normal());
+    let y = Mat::from_fn(m, d, |_, _| rng.normal());
+    let kernel = Kernel::new(KernelSpec::Matern { nu: 1.5, a: 1.0 });
+    let t = bench_reps(1, reps, || {
+        std::hint::black_box(kernel.matrix(&x, &y));
+    });
+    println!("{}", timing_row(&format!("native K_nm ({n}x{m}, d={d})"), &t));
+    let flops = 3.0 * n as f64 * m as f64 * d as f64;
+    println!(
+        "    ~{:.2} Gflop-equiv/s (dist part)",
+        flops / t[0] / 1e9
+    );
+
+    // gaussian kernel assembly (cheaper per-element path)
+    let kg = Kernel::new(KernelSpec::Gaussian { sigma: 1.0 });
+    let t = bench_reps(1, reps, || {
+        std::hint::black_box(kg.matrix(&x, &y));
+    });
+    println!("{}", timing_row(&format!("native K_nm gaussian ({n}x{m})"), &t));
+
+    // ---- Runtime: XLA kernel block ----------------------------------------
+    match Engine::load_default() {
+        Ok(engine) => {
+            let engine = Arc::new(engine);
+            let t = bench_reps(1, reps, || {
+                std::hint::black_box(engine.kernel_matrix(&kernel, &x, &y).unwrap());
+            });
+            println!("{}", timing_row(&format!("XLA  K_nm ({n}x{m}, d={d})"), &t));
+            // single-tile dispatch overhead
+            let xt = Mat::from_fn(engine.tm, d, |_, _| 0.5);
+            let yt = Mat::from_fn(engine.tn, d, |_, _| 0.5);
+            let t = bench_reps(2, reps * 3, || {
+                std::hint::black_box(engine.kernel_matrix(&kernel, &xt, &yt).unwrap());
+            });
+            println!(
+                "{}",
+                timing_row(&format!("XLA single tile ({}x{})", engine.tm, engine.tn), &t)
+            );
+            // XLA KDE
+            let t = bench_reps(1, reps, || {
+                std::hint::black_box(engine.kde_at_points(&x, &x, 0.2).unwrap());
+            });
+            println!("{}", timing_row(&format!("XLA  KDE exact ({n} pts)"), &t));
+        }
+        Err(e) => println!("(XLA engine unavailable: {e}; run `make artifacts`)"),
+    }
+
+    // ---- KDE ----------------------------------------------------------------
+    let ds = data::bimodal3(n, 0.4, &mut rng);
+    let h = kde::bandwidth::fig1(n);
+    let t = bench_reps(1, reps, || {
+        std::hint::black_box(kde::exact(&ds.x, &ds.x, h));
+    });
+    println!("{}", timing_row(&format!("KDE exact (n={n}, d=3)"), &t));
+    let t = bench_reps(1, reps, || {
+        std::hint::black_box(kde::grid(&ds.x, h).unwrap());
+    });
+    println!("{}", timing_row(&format!("KDE grid  (n={n}, d=3)"), &t));
+    let mut rng2 = rng.fork(1);
+    let t = bench_reps(1, reps, || {
+        std::hint::black_box(kde::subsampled(&ds.x, h, 400, &mut rng2));
+    });
+    println!("{}", timing_row(&format!("KDE subsampled m=400 (n={n})"), &t));
+
+    // ---- SA integral evaluation --------------------------------------------
+    let sd = SpectralDensity::new(&kernel, 3);
+    let gl = crate::quadrature::GaussLegendre::new(32);
+    let ps: Vec<f64> = (0..n).map(|i| 0.01 + (i % 100) as f64 * 0.05).collect();
+    let t = bench_reps(1, reps, || {
+        let s: f64 = ps.iter().map(|&p| sa_value_closed_form(p, &sd, 1e-4)).sum();
+        std::hint::black_box(s);
+    });
+    println!("{}", timing_row(&format!("SA closed form ({n} points)"), &t));
+    let t = bench_reps(1, reps, || {
+        let s: f64 =
+            ps.iter().take(512).map(|&p| sa_value_quadrature(p, &sd, 1e-4, &gl)).sum();
+        std::hint::black_box(s);
+    });
+    println!("{}", timing_row("SA quadrature (512 points)", &t));
+
+    // ---- sampling + linalg ---------------------------------------------------
+    let weights: Vec<f64> = (0..n).map(|i| 1.0 + (i % 7) as f64).collect();
+    let t = bench_reps(1, reps, || {
+        let at = AliasTable::new(&weights);
+        std::hint::black_box(at.sample_many(m, &mut rng2));
+    });
+    println!("{}", timing_row(&format!("alias build+sample (n={n}, m={m})"), &t));
+
+    let spd = {
+        let b = Mat::from_fn(m, m, |_, _| rng2.normal());
+        let mut g = b.gram();
+        g.add_diag(m as f64 * 0.1);
+        g
+    };
+    let t = bench_reps(1, reps, || {
+        std::hint::black_box(Cholesky::factor(&spd).unwrap());
+    });
+    println!("{}", timing_row(&format!("cholesky (m={m})"), &t));
+
+    // ---- end-to-end fit + serve ------------------------------------------------
+    let cfg = FitConfig {
+        m_sub: nystrom::subsize::fig1(ds.n()),
+        ..FitConfig::default_for(&ds)
+    };
+    let t = bench_reps(0, reps, || {
+        std::hint::black_box(fit_with_backend(&ds, &cfg, Backend::Native).unwrap());
+    });
+    println!("{}", timing_row(&format!("fit pipeline SA (n={n}, 3-d)"), &t));
+
+    let model = Arc::new(fit_with_backend(&ds, &cfg, Backend::Native).unwrap());
+    let server = Server::start(model, ServerConfig::default());
+    let n_req = if opts.full { 20_000 } else { 5_000 };
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for w in 0..4 {
+            let server = &server;
+            s.spawn(move || {
+                let mut r = Rng::seed_from_u64(w as u64);
+                for _ in 0..n_req / 4 {
+                    let q = [r.f64(), r.f64(), r.f64()];
+                    std::hint::black_box(server.predict(&q));
+                }
+            });
+        }
+    });
+    let secs = t0.elapsed().as_secs_f64();
+    let reg = server.shutdown();
+    let p50 = {
+        // reconstruct from summary (mean proxy) — detailed quantiles via metrics
+        reg.timer_mean("serve.latency.secs")
+    };
+    println!(
+        "serve: {} reqs in {:.2}s → {:.0} req/s, mean latency {:.3}ms, batches={}",
+        n_req,
+        secs,
+        n_req as f64 / secs,
+        p50 * 1e3,
+        reg.counter("serve.batches")
+    );
+}

@@ -1,0 +1,145 @@
+//! Table 1 — statistical leverage score approximation accuracy.
+//!
+//! Paper setting (§4.2, §B.2): datasets RQC (10000×3), HTRU2 (17898×8),
+//! CCPP (9568×5), normalized; Matérn ν=0.5 (α = d/2 + 0.5);
+//! λ = 0.15·n^{−2α/(2α+d)}; RC/BLESS inner subsample ⌊1·n^{d/(2α+d)}⌋;
+//! KDE bandwidth 0.5·n^{−1/3}; 10 replicates. Exact scores q_i come from
+//! the O(n³) Cholesky path; each method reports runtime, mean R-ACC
+//! r̄ = mean(q̃_i/q_i) and the 5th/95th quantiles of the ratios.
+//!
+//! The real UCI files are replaced by shape-matched simulators when
+//! absent (see `data::uci`); `--full` runs the paper's full n (the exact
+//! reference is then *slow*), the default subsamples to n=2500/dataset.
+//!
+//! Expected shape: SA has r̄ closest to 1 with the tightest band and the
+//! smallest runtime; Vanilla has the widest band.
+
+use crate::bench_harness::{maybe_write_out, ExpOptions, Table};
+use crate::data::uci::{self, UciName};
+use crate::kde;
+use crate::kernels::{Kernel, KernelSpec};
+use crate::krr;
+use crate::leverage::{
+    exact::rescaled_leverage_exact, normalize, LeverageContext, LeverageMethod,
+};
+use crate::metrics::{quantile_sorted, time_it, Summary};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+pub struct Row {
+    pub dataset: &'static str,
+    pub method: LeverageMethod,
+    pub time: Summary,
+    pub r_mean: Summary,
+    pub r_q05: Summary,
+    pub r_q95: Summary,
+}
+
+const METHODS: [LeverageMethod; 4] = [
+    LeverageMethod::Sa,
+    LeverageMethod::Uniform,
+    LeverageMethod::RecursiveRls,
+    LeverageMethod::Bless,
+];
+
+pub fn run(opts: &ExpOptions) -> Vec<Row> {
+    let datasets = [
+        ("RQC", UciName::Rqc),
+        ("HTRU2", UciName::Htru2),
+        ("CCPP", UciName::Ccpp),
+    ];
+    let n_cap = if opts.full { None } else { Some(2500) };
+    let mut rows: Vec<Row> = Vec::new();
+    println!(
+        "# Table 1 — leverage approximation accuracy (Matérn ν=0.5), reps={}, n_cap={:?}",
+        opts.reps, n_cap
+    );
+    for (label, name) in datasets {
+        let mut per_method: Vec<Row> = METHODS
+            .iter()
+            .map(|&m| Row {
+                dataset: label,
+                method: m,
+                time: Summary::new(),
+                r_mean: Summary::new(),
+                r_q05: Summary::new(),
+                r_q95: Summary::new(),
+            })
+            .collect();
+        for rep in 0..opts.reps {
+            let mut rng = Rng::seed_from_u64(opts.seed + rep as u64 * 7919 + name as u64);
+            let ds = uci::load(name, "data/uci", n_cap, &mut rng);
+            let (n, d) = (ds.n(), ds.d());
+            let nu = 0.5;
+            let alpha = nu + d as f64 / 2.0;
+            let kernel = Kernel::new(KernelSpec::Matern { nu, a: (2.0 * nu).sqrt() });
+            let lambda = krr::lambda::table1(n, alpha, d);
+            let inner = crate::nystrom::subsize::table1_inner(n, alpha, d).max(8);
+            // Paper rule 0.5·n^{−1/3}, guarded by Scott's n^{−1/(d+4)}: in
+            // z-normalized d=5..8 space the raw rule leaves no neighbor
+            // inside 3h (every p̂ ≈ 0 ⇒ SA degenerates to uniform). The
+            // paper's reported HTRU2 band implies an effectively larger
+            // bandwidth; Scott's rule is the standard-convention stand-in
+            // (documented in DESIGN.md / EXPERIMENTS.md).
+            let h = kde::bandwidth::table1(n).max(kde::bandwidth::scott(n, d));
+            // exact reference (not timed into any method)
+            let q_exact = normalize(&rescaled_leverage_exact(&ds.x, &kernel, lambda));
+            for row in per_method.iter_mut() {
+                let mut mrng = rng.fork(row.method as u64 + 17);
+                let est = crate::bench_harness::experiments::fig1::build_estimator(
+                    row.method, h,
+                );
+                let mut ctx = LeverageContext::new(&ds.x, &kernel, lambda);
+                ctx.inner_m = inner;
+                let (scores, secs) = time_it(|| est.estimate(&ctx, &mut mrng));
+                let q_tilde = normalize(&scores);
+                let mut ratios: Vec<f64> =
+                    (0..n).map(|i| q_tilde[i] / q_exact[i]).collect();
+                let mean_r = ratios.iter().sum::<f64>() / n as f64;
+                ratios.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                row.time.add(secs);
+                row.r_mean.add(mean_r);
+                row.r_q05.add(quantile_sorted(&ratios, 0.05));
+                row.r_q95.add(quantile_sorted(&ratios, 0.95));
+            }
+            eprintln!("  {label} rep {rep} done (n={n})");
+        }
+        rows.extend(per_method);
+    }
+    print_table(&rows);
+    let json = Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("dataset", Json::Str(r.dataset.into())),
+                    ("method", Json::Str(super::method_label(r.method).into())),
+                    ("time", Json::Num(r.time.mean())),
+                    ("r_mean", Json::Num(r.r_mean.mean())),
+                    ("r_q05", Json::Num(r.r_q05.mean())),
+                    ("r_q95", Json::Num(r.r_q95.mean())),
+                ])
+            })
+            .collect(),
+    );
+    maybe_write_out(opts, "table1", json);
+    rows
+}
+
+fn print_table(rows: &[Row]) {
+    let mut t = Table::new(&["dataset", "method", "time_s", "r_mean", "q05/q95"]);
+    for r in rows {
+        t.row(vec![
+            r.dataset.to_string(),
+            super::method_label(r.method).to_string(),
+            if r.method == LeverageMethod::Uniform {
+                "-".to_string()
+            } else {
+                format!("{:.3}", r.time.mean())
+            },
+            format!("{:.3}", r.r_mean.mean()),
+            format!("{:.2}/{:.2}", r.r_q05.mean(), r.r_q95.mean()),
+        ]);
+    }
+    println!("\n## Table 1: R-ACC (ratios q̃/q vs exact)");
+    t.print();
+}

@@ -1,0 +1,231 @@
+//! Benchmark harness (criterion replacement) + the experiment drivers
+//! that regenerate every table and figure in the paper.
+//!
+//! Each `rust/benches/*.rs` target (and the matching `leverkrr bench-*`
+//! subcommand) parses flags into [`ExpOptions`] and calls the driver in
+//! [`experiments`]. Default scales are laptop-sized; `--full` runs the
+//! paper's full ranges (exact-leverage ground truth at full Table-1 /
+//! Figure-2 sizes is O(n³) — budget accordingly).
+
+pub mod experiments;
+
+use crate::metrics::quantile_sorted;
+use crate::util::cli::{Args, Command};
+use crate::util::json::Json;
+use std::time::Instant;
+
+/// Common experiment options.
+#[derive(Clone, Debug)]
+pub struct ExpOptions {
+    pub full: bool,
+    pub reps: usize,
+    pub seed: u64,
+    pub ns: Option<Vec<usize>>,
+    pub out: Option<String>,
+    pub use_xla: bool,
+}
+
+impl ExpOptions {
+    pub fn command(name: &'static str, about: &'static str) -> Command {
+        Command::new(name, about)
+            .switch("full", "run the paper's full problem sizes")
+            .flag("reps", "3", "replicates per configuration")
+            .flag("seed", "0", "base RNG seed")
+            .flag("ns", "", "comma-separated sample sizes (overrides default sweep)")
+            .flag("out", "", "write results JSON to this path")
+            .switch("xla", "use the AOT/PJRT backend (requires `make artifacts`)")
+            .switch("bench", "ignored (cargo bench passes --bench)")
+    }
+
+    pub fn from_args(a: &Args) -> ExpOptions {
+        ExpOptions {
+            full: a.get_bool("full"),
+            reps: a.get_usize("reps").unwrap_or(3).max(1),
+            seed: a.get_u64("seed").unwrap_or(0),
+            ns: a.get_usize_list("ns").filter(|v| !v.is_empty()),
+            out: a.get("out").map(|s| s.to_string()).filter(|s| !s.is_empty()),
+            use_xla: a.get_bool("xla"),
+        }
+    }
+
+    /// Parse process args (for bench binaries: everything after `--`).
+    pub fn parse_cli(name: &'static str, about: &'static str) -> ExpOptions {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        match Self::command(name, about).parse(&argv) {
+            Ok(a) => Self::from_args(&a),
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    pub fn backend(&self) -> crate::runtime::Backend {
+        if self.use_xla {
+            crate::runtime::Backend::auto()
+        } else {
+            crate::runtime::Backend::Native
+        }
+    }
+}
+
+/// Timing loop: warmup + timed reps, returns seconds per rep (sorted).
+pub fn bench_reps(warmup: usize, reps: usize, mut f: impl FnMut()) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times
+}
+
+/// Summary line for a timing vector.
+pub fn timing_row(name: &str, times: &[f64]) -> String {
+    format!(
+        "{:<38} mean {:>9} p50 {:>9} min {:>9}  (n={})",
+        name,
+        fmt_secs(times.iter().sum::<f64>() / times.len() as f64),
+        fmt_secs(quantile_sorted(times, 0.5)),
+        fmt_secs(times[0]),
+        times.len()
+    )
+}
+
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
+/// Simple fixed-width table printer.
+pub struct Table {
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:>w$}  ", c, w = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!(
+            "{}",
+            widths.iter().map(|w| "-".repeat(*w + 2)).collect::<String>().trim_end()
+        );
+        for row in &self.rows {
+            line(row);
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.rows
+                .iter()
+                .map(|r| {
+                    Json::Obj(
+                        self.headers
+                            .iter()
+                            .zip(r)
+                            .map(|(h, c)| {
+                                let v = c
+                                    .parse::<f64>()
+                                    .map(Json::Num)
+                                    .unwrap_or(Json::Str(c.clone()));
+                                (h.clone(), v)
+                            })
+                            .collect(),
+                    )
+                })
+                .collect(),
+        )
+    }
+}
+
+/// Write results JSON if requested.
+pub fn maybe_write_out(opts: &ExpOptions, name: &str, body: Json) {
+    if let Some(path) = &opts.out {
+        let doc = Json::obj(vec![
+            ("experiment", Json::Str(name.into())),
+            ("full", Json::Bool(opts.full)),
+            ("reps", Json::Num(opts.reps as f64)),
+            ("seed", Json::Num(opts.seed as f64)),
+            ("results", body),
+        ]);
+        std::fs::write(path, doc.to_string_pretty()).expect("writing results");
+        println!("\nwrote {path}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reps_counts() {
+        let mut calls = 0;
+        let t = bench_reps(2, 5, || calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(t.len(), 5);
+        assert!(t.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert!(fmt_secs(2.5e-9).ends_with("ns"));
+        assert!(fmt_secs(3.0e-5).ends_with("µs"));
+        assert!(fmt_secs(0.012).ends_with("ms"));
+        assert!(fmt_secs(12.0).ends_with('s'));
+    }
+
+    #[test]
+    fn table_json_types() {
+        let mut t = Table::new(&["n", "method"]);
+        t.row(vec!["100".into(), "sa".into()]);
+        let j = t.to_json();
+        assert_eq!(j.as_arr().unwrap()[0].get("n").as_f64(), Some(100.0));
+        assert_eq!(j.as_arr().unwrap()[0].get("method").as_str(), Some("sa"));
+    }
+
+    #[test]
+    fn expoptions_parse() {
+        let cmd = ExpOptions::command("x", "y");
+        let a = cmd
+            .parse(&["--full".into(), "--reps".into(), "7".into(), "--ns".into(), "10,20".into()])
+            .unwrap();
+        let o = ExpOptions::from_args(&a);
+        assert!(o.full);
+        assert_eq!(o.reps, 7);
+        assert_eq!(o.ns, Some(vec![10, 20]));
+    }
+}

@@ -1,0 +1,187 @@
+//! JSON config files for the fit pipeline (framework-level UX): a single
+//! document describing dataset, kernel, leverage method, Nyström size,
+//! serving knobs. `leverkrr fit --config run.json` merges the file under
+//! any explicit CLI flags.
+//!
+//! ```json
+//! {
+//!   "data": {"name": "bimodal3", "n": 50000, "seed": 1},
+//!   "kernel": "matern:nu=1.5,a=1.732",
+//!   "lambda": 2.3e-4,
+//!   "method": "sa",
+//!   "m_sub": 180,
+//!   "kde_bandwidth": 0.031,
+//!   "serve": {"max_batch": 256, "max_wait_ms": 4, "workers": 4}
+//! }
+//! ```
+
+use super::{FitConfig, ServerConfig};
+use crate::data::Dataset;
+use crate::kernels::KernelSpec;
+use crate::leverage::LeverageMethod;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Context, Result};
+
+/// Parsed config document.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub data_name: String,
+    pub n: usize,
+    pub seed: u64,
+    pub kernel: Option<KernelSpec>,
+    pub lambda: Option<f64>,
+    pub method: Option<LeverageMethod>,
+    pub m_sub: Option<usize>,
+    pub kde_bandwidth: Option<f64>,
+    pub serve: ServerConfig,
+}
+
+impl RunConfig {
+    pub fn from_file(path: &str) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        Self::from_json_str(&text)
+    }
+
+    pub fn from_json_str(text: &str) -> Result<RunConfig> {
+        let doc = Json::parse(text).map_err(|e| anyhow!("config parse: {e}"))?;
+        let data = doc.get("data");
+        let kernel = match doc.get("kernel") {
+            Json::Str(s) => Some(KernelSpec::parse(s).map_err(|e| anyhow!(e))?),
+            Json::Null => None,
+            other => return Err(anyhow!("kernel must be a string, got {other}")),
+        };
+        let method = match doc.get("method") {
+            Json::Str(s) => Some(LeverageMethod::parse(s).map_err(|e| anyhow!(e))?),
+            Json::Null => None,
+            other => return Err(anyhow!("method must be a string, got {other}")),
+        };
+        let serve = doc.get("serve");
+        let default_serve = ServerConfig::default();
+        Ok(RunConfig {
+            data_name: data
+                .get("name")
+                .as_str()
+                .unwrap_or("bimodal3")
+                .to_string(),
+            n: data.get("n").as_usize().unwrap_or(5000),
+            seed: data.get("seed").as_usize().unwrap_or(0) as u64,
+            kernel,
+            lambda: doc.get("lambda").as_f64(),
+            method,
+            m_sub: doc.get("m_sub").as_usize(),
+            kde_bandwidth: doc.get("kde_bandwidth").as_f64(),
+            serve: ServerConfig {
+                max_batch: serve
+                    .get("max_batch")
+                    .as_usize()
+                    .unwrap_or(default_serve.max_batch),
+                max_wait: std::time::Duration::from_millis(
+                    serve.get("max_wait_ms").as_usize().unwrap_or(2) as u64,
+                ),
+                workers: serve
+                    .get("workers")
+                    .as_usize()
+                    .unwrap_or(default_serve.workers),
+            },
+        })
+    }
+
+    /// Materialize the dataset described by the config.
+    pub fn build_dataset(&self) -> Result<Dataset> {
+        let mut rng = Rng::seed_from_u64(self.seed);
+        let ds = match self.data_name.as_str() {
+            "bimodal3" => crate::data::bimodal3(self.n, 0.4, &mut rng),
+            "uniform1" => crate::data::dist1d(crate::data::Dist1d::Uniform, self.n, &mut rng),
+            "beta1" => crate::data::dist1d(crate::data::Dist1d::Beta15_2, self.n, &mut rng),
+            "bimodal1" => crate::data::dist1d(crate::data::Dist1d::Bimodal, self.n, &mut rng),
+            "rqc" | "htru2" | "ccpp" => {
+                let name = crate::data::uci::UciName::parse(&self.data_name)
+                    .map_err(|e| anyhow!(e))?;
+                crate::data::uci::load(name, "data/uci", Some(self.n), &mut rng)
+            }
+            other if other.starts_with("bimodal") => {
+                let d: usize = other["bimodal".len()..]
+                    .parse()
+                    .map_err(|_| anyhow!("bad dataset '{other}'"))?;
+                crate::data::bimodal_d(self.n, d, 0.4, &mut rng)
+            }
+            other if std::path::Path::new(other).exists() => {
+                crate::data::uci::load_csv(other, other)?
+            }
+            other => return Err(anyhow!("unknown dataset '{other}'")),
+        };
+        Ok(ds)
+    }
+
+    /// Apply overrides to a paper-rule baseline for the dataset.
+    pub fn fit_config(&self, ds: &Dataset) -> FitConfig {
+        let mut cfg = FitConfig::default_for(ds);
+        cfg.seed = self.seed;
+        if let Some(k) = self.kernel {
+            cfg.kernel = k;
+        }
+        if let Some(l) = self.lambda {
+            cfg.lambda = l;
+        }
+        if let Some(m) = self.method {
+            cfg.method = m;
+        }
+        if let Some(m) = self.m_sub {
+            cfg.m_sub = m;
+        }
+        if let Some(h) = self.kde_bandwidth {
+            cfg.kde_bandwidth = Some(h);
+        }
+        cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_document() {
+        let cfg = RunConfig::from_json_str(
+            r#"{
+              "data": {"name": "bimodal1", "n": 1234, "seed": 9},
+              "kernel": "gaussian:sigma=0.4",
+              "lambda": 0.001,
+              "method": "bless",
+              "m_sub": 77,
+              "kde_bandwidth": 0.02,
+              "serve": {"max_batch": 32, "max_wait_ms": 7, "workers": 2}
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.data_name, "bimodal1");
+        assert_eq!(cfg.n, 1234);
+        assert_eq!(cfg.kernel, Some(KernelSpec::Gaussian { sigma: 0.4 }));
+        assert_eq!(cfg.method, Some(LeverageMethod::Bless));
+        assert_eq!(cfg.m_sub, Some(77));
+        assert_eq!(cfg.serve.max_batch, 32);
+        assert_eq!(cfg.serve.max_wait.as_millis(), 7);
+        let ds = cfg.build_dataset().unwrap();
+        assert_eq!(ds.n(), 1234);
+        let fc = cfg.fit_config(&ds);
+        assert_eq!(fc.m_sub, 77);
+        assert_eq!(fc.lambda, 0.001);
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        let cfg = RunConfig::from_json_str(r#"{"data": {"name": "uniform1"}}"#).unwrap();
+        assert_eq!(cfg.n, 5000);
+        assert!(cfg.kernel.is_none());
+        let ds = cfg.build_dataset().unwrap();
+        let fc = cfg.fit_config(&ds);
+        assert_eq!(fc.method, LeverageMethod::Sa);
+    }
+
+    #[test]
+    fn rejects_bad_kernel() {
+        assert!(RunConfig::from_json_str(r#"{"kernel": "rbf"}"#).is_err());
+        assert!(RunConfig::from_json_str(r#"{"kernel": 12}"#).is_err());
+    }
+}

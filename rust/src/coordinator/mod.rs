@@ -1,0 +1,243 @@
+//! L3 coordinator: the fit pipeline and the dynamic-batching predict
+//! server.
+//!
+//! Fit pipeline (one job = one dataset):
+//!
+//! ```text
+//!   KDE ──▶ leverage scores ──▶ landmark sampling ──▶ K_nm assembly ──▶ solve
+//!   (Õ(n))   (SA: Õ(n);          (alias table,         (AOT/PJRT or      (m×m chol)
+//!            baselines: ~n·m²)    O(m))                 native blocks)
+//! ```
+//!
+//! Every stage is timed into a [`FitReport`] — the per-stage split is what
+//! Figure 1 plots (leverage time vs end-to-end error).
+//!
+//! Serving: [`Server`] owns the fitted model on worker threads behind a
+//! dynamic batcher (max-batch / max-wait), turning point queries into
+//! batched K(X_q, X_m)·β evaluations — the same structure a model server
+//! uses for GPU batching, here amortizing kernel-block dispatch.
+
+pub mod config;
+pub mod server;
+
+pub use config::RunConfig;
+pub use server::{Server, ServerConfig};
+
+use crate::data::Dataset;
+use crate::kernels::{Kernel, KernelSpec};
+use crate::leverage::{LeverageContext, LeverageMethod};
+use crate::linalg::Mat;
+use crate::metrics::time_it;
+use crate::nystrom::NystromKrr;
+use crate::runtime::Backend;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Everything needed to fit a model.
+#[derive(Clone, Debug)]
+pub struct FitConfig {
+    pub kernel: KernelSpec,
+    pub lambda: f64,
+    pub method: LeverageMethod,
+    /// Number of Nyström landmarks (sub-sample size d_sub).
+    pub m_sub: usize,
+    /// Inner dictionary size for iterative estimators (RC / BLESS).
+    pub inner_m: usize,
+    /// KDE bandwidth for SA (None → Scott's rule).
+    pub kde_bandwidth: Option<f64>,
+    pub seed: u64,
+}
+
+impl FitConfig {
+    /// Paper-style defaults for a dataset: Matérn ν=1.5 (a=√3),
+    /// λ = 0.15·n^{−2α/(2α+d)}, m = 5·n^{d/(2α+d)}, SA leverage.
+    pub fn default_for(ds: &Dataset) -> FitConfig {
+        let n = ds.n();
+        let d = ds.d();
+        let nu = 1.5;
+        let alpha = nu + d as f64 / 2.0;
+        FitConfig {
+            kernel: KernelSpec::Matern { nu, a: (2.0 * nu).sqrt() },
+            lambda: crate::krr::lambda::table1(n, alpha, d),
+            method: LeverageMethod::Sa,
+            m_sub: crate::nystrom::subsize::table1(n, alpha, d).max(16),
+            inner_m: crate::nystrom::subsize::table1_inner(n, alpha, d).max(8),
+            kde_bandwidth: Some(crate::kde::bandwidth::table1(n)),
+            seed: 0,
+        }
+    }
+}
+
+/// Per-stage wall times + pipeline stats.
+#[derive(Clone, Debug, Default)]
+pub struct FitReport {
+    pub kde_and_leverage_secs: f64,
+    pub sample_secs: f64,
+    pub solve_secs: f64,
+    pub total_secs: f64,
+    pub m_sub: usize,
+    pub backend: &'static str,
+    pub method: &'static str,
+}
+
+impl FitReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("leverage_secs", Json::Num(self.kde_and_leverage_secs)),
+            ("sample_secs", Json::Num(self.sample_secs)),
+            ("solve_secs", Json::Num(self.solve_secs)),
+            ("total_secs", Json::Num(self.total_secs)),
+            ("m_sub", Json::Num(self.m_sub as f64)),
+            ("backend", Json::Str(self.backend.into())),
+            ("method", Json::Str(self.method.into())),
+        ])
+    }
+}
+
+/// A fitted Nyström-KRR model plus provenance.
+pub struct FittedModel {
+    pub nystrom: NystromKrr,
+    pub report: FitReport,
+    pub backend: Backend,
+    /// Normalized sampling distribution used for the landmarks.
+    pub q: Vec<f64>,
+}
+
+impl FittedModel {
+    pub fn predict_batch(&self, xq: &Mat) -> Vec<f64> {
+        self.nystrom.predict_with(xq, &self.backend)
+    }
+
+    pub fn predict_one(&self, x: &[f64]) -> f64 {
+        self.nystrom.predict_one(x)
+    }
+}
+
+/// Fit with an explicit backend (the full pipeline).
+pub fn fit_with_backend(
+    ds: &Dataset,
+    cfg: &FitConfig,
+    backend: Backend,
+) -> anyhow::Result<FittedModel> {
+    let kernel = Kernel::new(cfg.kernel);
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    let t_total = std::time::Instant::now();
+
+    // Stage 1+2: density estimation + leverage scores.
+    let estimator = cfg.method.build();
+    let mut ctx = LeverageContext::new(&ds.x, &kernel, cfg.lambda);
+    ctx.p_true = ds.p_true.as_deref();
+    ctx.inner_m = cfg.inner_m;
+    let (scores, lev_secs) = time_it(|| {
+        if let (LeverageMethod::Sa | LeverageMethod::SaQuadrature, Some(h)) =
+            (cfg.method, cfg.kde_bandwidth)
+        {
+            let est = crate::leverage::sa::SaEstimator {
+                bandwidth: Some(h),
+                integration: if cfg.method == LeverageMethod::SaQuadrature {
+                    crate::leverage::sa::SaIntegration::Quadrature
+                } else {
+                    crate::leverage::sa::SaIntegration::ClosedForm
+                },
+                ..Default::default()
+            };
+            crate::leverage::LeverageEstimator::estimate(&est, &ctx, &mut rng)
+        } else {
+            estimator.estimate(&ctx, &mut rng)
+        }
+    });
+    let q = crate::leverage::normalize(&scores);
+
+    // Stage 3: landmark sampling.
+    let (idx, sample_secs) =
+        time_it(|| crate::nystrom::sample_landmarks(&q, cfg.m_sub, &mut rng));
+
+    // Stage 4+5: assembly + solve.
+    let (nystrom, solve_secs) = time_it(|| {
+        NystromKrr::fit_with_landmarks(
+            kernel.clone(),
+            &ds.x,
+            &ds.y,
+            cfg.lambda,
+            &idx,
+            &backend,
+        )
+    });
+    let nystrom = nystrom?;
+
+    let report = FitReport {
+        kde_and_leverage_secs: lev_secs,
+        sample_secs,
+        solve_secs,
+        total_secs: t_total.elapsed().as_secs_f64(),
+        m_sub: cfg.m_sub,
+        backend: backend.name(),
+        method: estimator.name(),
+    };
+    Ok(FittedModel { nystrom, report, backend, q })
+}
+
+/// Fit with the auto backend (XLA artifacts if present, else native).
+pub fn fit(ds: &Dataset, cfg: &FitConfig) -> anyhow::Result<FittedModel> {
+    fit_with_backend(ds, cfg, Backend::auto())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+
+    #[test]
+    fn pipeline_end_to_end_sa() {
+        let mut rng = Rng::seed_from_u64(1);
+        let ds = data::dist1d(data::Dist1d::Bimodal, 600, &mut rng);
+        let cfg = FitConfig::default_for(&ds);
+        let model = fit_with_backend(&ds, &cfg, Backend::Native).unwrap();
+        let pred = model.predict_batch(&ds.x);
+        let risk = crate::krr::in_sample_risk(&pred, &ds.f_true);
+        assert!(risk < 0.1, "risk {risk}");
+        assert!(model.report.total_secs > 0.0);
+        assert_eq!(model.report.method, "sa");
+        // q is a distribution
+        assert!((model.q.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pipeline_all_methods_run() {
+        let mut rng = Rng::seed_from_u64(2);
+        let ds = data::dist1d(data::Dist1d::Uniform, 250, &mut rng);
+        for method in [
+            LeverageMethod::Sa,
+            LeverageMethod::Uniform,
+            LeverageMethod::RecursiveRls,
+            LeverageMethod::Bless,
+            LeverageMethod::Exact,
+        ] {
+            let mut cfg = FitConfig::default_for(&ds);
+            cfg.method = method;
+            let model = fit_with_backend(&ds, &cfg, Backend::Native)
+                .unwrap_or_else(|e| panic!("{method:?}: {e}"));
+            let risk =
+                crate::krr::in_sample_risk(&model.predict_batch(&ds.x), &ds.f_true);
+            assert!(risk < 0.2, "{method:?} risk {risk}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut rng = Rng::seed_from_u64(3);
+        let ds = data::dist1d(data::Dist1d::Uniform, 200, &mut rng);
+        let cfg = FitConfig::default_for(&ds);
+        let m1 = fit_with_backend(&ds, &cfg, Backend::Native).unwrap();
+        let m2 = fit_with_backend(&ds, &cfg, Backend::Native).unwrap();
+        assert_eq!(m1.nystrom.idx, m2.nystrom.idx);
+        assert_eq!(m1.nystrom.beta, m2.nystrom.beta);
+    }
+
+    #[test]
+    fn report_serializes() {
+        let r = FitReport { total_secs: 1.5, method: "sa", backend: "native", ..Default::default() };
+        let j = r.to_json();
+        assert_eq!(j.get("method").as_str(), Some("sa"));
+    }
+}

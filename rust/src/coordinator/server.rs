@@ -1,0 +1,248 @@
+//! Dynamic-batching prediction server.
+//!
+//! Point queries arrive on a channel; a batcher thread groups them
+//! (flushing at `max_batch` or after `max_wait`) and dispatches batches
+//! to a pool of worker threads sharing the fitted model. Responses go
+//! back through per-request channels. Latency and throughput are
+//! recorded in a shared [`crate::metrics::Registry`]
+//! (`serve.latency.secs`, `serve.batch_size`, counters
+//! `serve.requests` / `serve.batches`).
+//!
+//! This mirrors a standard model-server architecture (request router →
+//! batcher → execution workers) with the Nyström predict block
+//! K(X_q, X_m)·β as the "model forward".
+
+use super::FittedModel;
+use crate::linalg::Mat;
+use crate::metrics::Registry;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub workers: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_batch: 128,
+            max_wait: Duration::from_millis(2),
+            workers: crate::util::default_threads().min(4),
+        }
+    }
+}
+
+struct Request {
+    x: Vec<f64>,
+    resp: Sender<f64>,
+    enqueued: Instant,
+}
+
+/// Handle to a running prediction server.
+pub struct Server {
+    tx: Sender<Request>,
+    pub metrics: Arc<Registry>,
+    shutdown: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    pub fn start(model: Arc<FittedModel>, cfg: ServerConfig) -> Server {
+        let (tx, rx) = channel::<Request>();
+        let metrics = Arc::new(Registry::new());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        // batch channel feeding the worker pool
+        let (btx, brx) = channel::<Vec<Request>>();
+        let brx = Arc::new(std::sync::Mutex::new(brx));
+        let mut threads = Vec::new();
+        // batcher thread
+        {
+            let metrics = metrics.clone();
+            let shutdown = shutdown.clone();
+            let cfg = cfg.clone();
+            threads.push(std::thread::spawn(move || {
+                batcher_loop(rx, btx, &cfg, &metrics, &shutdown);
+            }));
+        }
+        // workers
+        for _ in 0..cfg.workers.max(1) {
+            let model = model.clone();
+            let brx = brx.clone();
+            let metrics = metrics.clone();
+            threads.push(std::thread::spawn(move || loop {
+                let batch = {
+                    let guard = brx.lock().unwrap();
+                    guard.recv()
+                };
+                let Ok(batch) = batch else { break };
+                serve_batch(&model, batch, &metrics);
+            }));
+        }
+        Server { tx, metrics, shutdown, threads }
+    }
+
+    /// Blocking single prediction.
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        self.predict_async(x).recv().expect("server dropped response")
+    }
+
+    /// Submit and get a receiver for the response.
+    pub fn predict_async(&self, x: &[f64]) -> Receiver<f64> {
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Request { x: x.to_vec(), resp: rtx, enqueued: Instant::now() })
+            .expect("server stopped");
+        rrx
+    }
+
+    /// Stop accepting work and join all threads.
+    pub fn shutdown(mut self) -> Arc<Registry> {
+        self.shutdown.store(true, Ordering::SeqCst);
+        drop(self.tx); // closes the request channel; batcher drains + exits
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+        self.metrics.clone()
+    }
+}
+
+fn batcher_loop(
+    rx: Receiver<Request>,
+    btx: Sender<Vec<Request>>,
+    cfg: &ServerConfig,
+    metrics: &Registry,
+    shutdown: &AtomicBool,
+) {
+    let mut pending: Vec<Request> = Vec::new();
+    let mut deadline: Option<Instant> = None;
+    loop {
+        if shutdown.load(Ordering::Relaxed) && pending.is_empty() {
+            // still drain remaining queued requests below via recv errors
+        }
+        let timeout = match deadline {
+            Some(d) => d.saturating_duration_since(Instant::now()),
+            None => Duration::from_millis(50),
+        };
+        match rx.recv_timeout(timeout) {
+            Ok(req) => {
+                if pending.is_empty() {
+                    deadline = Some(Instant::now() + cfg.max_wait);
+                }
+                pending.push(req);
+                if pending.len() >= cfg.max_batch {
+                    metrics.record("serve.batch_size", pending.len() as f64);
+                    metrics.incr("serve.batches", 1);
+                    let _ = btx.send(std::mem::take(&mut pending));
+                    deadline = None;
+                }
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                if !pending.is_empty() {
+                    metrics.record("serve.batch_size", pending.len() as f64);
+                    metrics.incr("serve.batches", 1);
+                    let _ = btx.send(std::mem::take(&mut pending));
+                    deadline = None;
+                }
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                if !pending.is_empty() {
+                    metrics.record("serve.batch_size", pending.len() as f64);
+                    metrics.incr("serve.batches", 1);
+                    let _ = btx.send(std::mem::take(&mut pending));
+                }
+                break; // btx drops → workers exit
+            }
+        }
+    }
+}
+
+fn serve_batch(model: &FittedModel, batch: Vec<Request>, metrics: &Registry) {
+    if batch.is_empty() {
+        return;
+    }
+    let d = batch[0].x.len();
+    let xq = Mat::from_fn(batch.len(), d, |i, j| batch[i].x[j]);
+    let preds = model.predict_batch(&xq);
+    let now = Instant::now();
+    for (req, pred) in batch.into_iter().zip(preds) {
+        metrics.record(
+            "serve.latency.secs",
+            now.saturating_duration_since(req.enqueued).as_secs_f64(),
+        );
+        metrics.incr("serve.requests", 1);
+        let _ = req.resp.send(pred);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{fit_with_backend, FitConfig};
+    use crate::data;
+    use crate::runtime::Backend;
+    use crate::util::rng::Rng;
+
+    fn model() -> Arc<FittedModel> {
+        let mut rng = Rng::seed_from_u64(1);
+        let ds = data::dist1d(data::Dist1d::Uniform, 300, &mut rng);
+        let cfg = FitConfig::default_for(&ds);
+        Arc::new(fit_with_backend(&ds, &cfg, Backend::Native).unwrap())
+    }
+
+    #[test]
+    fn serves_correct_predictions() {
+        let m = model();
+        let server = Server::start(m.clone(), ServerConfig::default());
+        for &x in &[0.1, 0.33, 0.7, 0.95] {
+            let got = server.predict(&[x]);
+            let want = m.predict_one(&[x]);
+            assert!((got - want).abs() < 1e-12, "x={x}");
+        }
+        let reg = server.shutdown();
+        assert_eq!(reg.counter("serve.requests"), 4);
+    }
+
+    #[test]
+    fn batches_concurrent_requests() {
+        let m = model();
+        let server = Arc::new(Server::start(
+            m,
+            ServerConfig { max_batch: 64, max_wait: Duration::from_millis(5), workers: 2 },
+        ));
+        let n_req = 500;
+        let handles: Vec<_> = (0..n_req)
+            .map(|i| {
+                let s = server.clone();
+                std::thread::spawn(move || s.predict(&[i as f64 / n_req as f64]))
+            })
+            .collect();
+        for h in handles {
+            assert!(h.join().unwrap().is_finite());
+        }
+        let server = Arc::try_unwrap(server).ok().expect("sole owner");
+        let reg = server.shutdown();
+        assert_eq!(reg.counter("serve.requests"), n_req as u64);
+        // batching actually happened: far fewer batches than requests
+        assert!(
+            reg.counter("serve.batches") < n_req as u64 / 2,
+            "batches = {}",
+            reg.counter("serve.batches")
+        );
+    }
+
+    #[test]
+    fn shutdown_drains_pending() {
+        let m = model();
+        let server = Server::start(m, ServerConfig::default());
+        let rx = server.predict_async(&[0.5]);
+        let reg = server.shutdown();
+        // request submitted before shutdown must still be answered
+        assert!(rx.recv().unwrap().is_finite());
+        assert!(reg.counter("serve.requests") >= 1);
+    }
+}

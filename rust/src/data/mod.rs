@@ -1,0 +1,379 @@
+//! Datasets: the paper's synthetic designs (App. B) and UCI-like
+//! simulators for Table 1.
+//!
+//! Synthetic designs (exact paper definitions):
+//! * `bimodal3` (§B.1, Figure 1): 3-d, with prob n/(n+n^γ) draw
+//!   Unif[0,1]³, else per-coordinate pdf ∝ (5−2x_j) on [2,2.5]³; γ=0.4.
+//! * `dist1d` (§B.3, Figure 2): Unif[0,1], Beta(15,2), and the 1-d
+//!   bimodal (Unif[0,0.5] vs pdf ∝ (3−2x) on [1,1.5], γ=0.6).
+//! * `bimodal_d` (§B.4, Figure 3): d-dim, Unif[0,1]^d vs per-coordinate
+//!   pdf ∝ (7−2x_j) on [3,3.5]^d; γ=0.4.
+//! * Regression target (§B.1): f*(x) = g(‖x‖₂/d) with
+//!   g(t) = 1.6|(t−0.4)(t−0.6)| − t(t−1)(t−2) − 0.5, plus g(x₁) for §B.4;
+//!   noise N(0, 0.25).
+//!
+//! UCI substitution (Table 1): the real RQC / HTRU2 / CCPP files are not
+//! downloadable in this environment; `uci` ships simulators with the same
+//! (n, d) and qualitatively matched density structure (clusters, class
+//! imbalance, correlated sensors — what drives leverage non-uniformity).
+//! If genuine CSVs exist under `data/uci/<name>.csv` they are loaded
+//! instead. See DESIGN.md "Environment constraints".
+
+pub mod uci;
+
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+/// A regression dataset with optional ground-truth annotations.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    /// Design points, n×d.
+    pub x: Mat,
+    /// Observed responses y_i = f*(x_i) + ε_i.
+    pub y: Vec<f64>,
+    /// Noise-free regression function values (synthetic data only).
+    pub f_true: Vec<f64>,
+    /// True input density p(x_i) at the design points, when known —
+    /// lets tests isolate SA's formula error from the KDE error.
+    pub p_true: Option<Vec<f64>>,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.x.rows
+    }
+
+    pub fn d(&self) -> usize {
+        self.x.cols
+    }
+
+    /// Z-score each column (the paper normalizes the UCI datasets before
+    /// building kernel matrices). Density annotations are dropped (they
+    /// no longer match the transformed space).
+    pub fn normalize(&mut self) {
+        let (n, d) = (self.x.rows, self.x.cols);
+        for j in 0..d {
+            let mut mean = 0.0;
+            for i in 0..n {
+                mean += self.x[(i, j)];
+            }
+            mean /= n as f64;
+            let mut var = 0.0;
+            for i in 0..n {
+                let c = self.x[(i, j)] - mean;
+                var += c * c;
+            }
+            let sd = (var / n as f64).sqrt().max(1e-12);
+            for i in 0..n {
+                self.x[(i, j)] = (self.x[(i, j)] - mean) / sd;
+            }
+        }
+        self.p_true = None;
+    }
+
+    /// Random train/test split.
+    pub fn split(&self, test_frac: f64, rng: &mut Rng) -> (Dataset, Dataset) {
+        let n = self.n();
+        let n_test = ((n as f64) * test_frac).round() as usize;
+        let mut idx: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut idx);
+        let take = |ids: &[usize], tag: &str| Dataset {
+            name: format!("{}[{tag}]", self.name),
+            x: Mat::from_fn(ids.len(), self.d(), |i, j| self.x[(ids[i], j)]),
+            y: ids.iter().map(|&i| self.y[i]).collect(),
+            f_true: ids.iter().map(|&i| self.f_true[i]).collect(),
+            p_true: self.p_true.as_ref().map(|p| ids.iter().map(|&i| p[i]).collect()),
+        };
+        (take(&idx[n_test..], "train"), take(&idx[..n_test], "test"))
+    }
+}
+
+/// The paper's univariate target g (§B.1).
+pub fn g_target(t: f64) -> f64 {
+    1.6 * ((t - 0.4) * (t - 0.6)).abs() - t * (t - 1.0) * (t - 2.0) - 0.5
+}
+
+/// f*(x) = g(‖x‖₂ / d).
+pub fn f_star(x: &[f64]) -> f64 {
+    let norm = x.iter().map(|v| v * v).sum::<f64>().sqrt();
+    g_target(norm / x.len() as f64)
+}
+
+/// f*(x) = g(‖x‖₂/d) + g(x₁) — the §B.4 (Figure 3) target.
+pub fn f_star_fig3(x: &[f64]) -> f64 {
+    f_star(x) + g_target(x[0])
+}
+
+const NOISE_SD: f64 = 0.5; // N(0, 0.25) per the paper
+
+fn finish(name: String, x: Mat, p_true: Vec<f64>, f: impl Fn(&[f64]) -> f64, rng: &mut Rng) -> Dataset {
+    let f_true: Vec<f64> = (0..x.rows).map(|i| f(x.row(i))).collect();
+    let y: Vec<f64> = f_true.iter().map(|&v| v + rng.normal_ms(0.0, NOISE_SD)).collect();
+    Dataset { name, x, y, f_true, p_true: Some(p_true) }
+}
+
+/// Mixture weight of the big mode: w₁ = n/(n + n^γ).
+pub fn big_mode_weight(n: usize, gamma: f64) -> f64 {
+    let nf = n as f64;
+    nf / (nf + nf.powf(gamma))
+}
+
+// ---------------------------------------------------------------------------
+// §B.1 — 3-d bimodal (Figure 1)
+// ---------------------------------------------------------------------------
+
+/// 3-d bimodal design of §B.1 with mixture exponent γ (paper: 0.4).
+pub fn bimodal3(n: usize, gamma: f64, rng: &mut Rng) -> Dataset {
+    bimodal_d(n, 3, gamma, rng)
+}
+
+// ---------------------------------------------------------------------------
+// §B.4 — d-dim bimodal (Figure 3); §B.1 is the special case below.
+// ---------------------------------------------------------------------------
+
+/// d-dim bimodal: Unif[0,1]^d (weight n/(n+n^γ)) vs per-coordinate
+/// linear pdf on a far shifted cube. For d=3 the paper's §B.1 form
+/// ((5−2x) on [2,2.5]) is used; other d uses §B.4 ((7−2x) on [3,3.5]).
+pub fn bimodal_d(n: usize, d: usize, gamma: f64, rng: &mut Rng) -> Dataset {
+    let (c, lo, hi) = if d == 3 { (5.0, 2.0, 2.5) } else { (7.0, 3.0, 3.5) };
+    // per-coordinate normalizer Z = ∫_lo^hi (c−2x) dx
+    let z = c * (hi - lo) - (hi * hi - lo * lo);
+    let w1 = big_mode_weight(n, gamma);
+    let mut x = Mat::zeros(n, d);
+    let mut p = vec![0.0; n];
+    for i in 0..n {
+        if rng.f64() < w1 {
+            let mut dens = w1; // uniform density 1 on [0,1]^d times weight
+            for j in 0..d {
+                x[(i, j)] = rng.f64();
+            }
+            let _ = &mut dens;
+            p[i] = w1;
+        } else {
+            let mut dens = 1.0 - w1;
+            for j in 0..d {
+                let v = rng.linear_pdf(c, lo, hi);
+                x[(i, j)] = v;
+                dens *= (c - 2.0 * v) / z;
+            }
+            p[i] = dens;
+        }
+    }
+    let f = if d == 3 { f_star as fn(&[f64]) -> f64 } else { f_star_fig3 };
+    finish(format!("bimodal{d}(n={n},gamma={gamma})"), x, p, f, rng)
+}
+
+// ---------------------------------------------------------------------------
+// §B.3 — 1-d designs (Figure 2)
+// ---------------------------------------------------------------------------
+
+/// Which 1-d design distribution (Figure 2 panels).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Dist1d {
+    Uniform,
+    Beta15_2,
+    Bimodal,
+}
+
+impl Dist1d {
+    pub fn parse(s: &str) -> Result<Dist1d, String> {
+        match s {
+            "uniform" => Ok(Dist1d::Uniform),
+            "beta" => Ok(Dist1d::Beta15_2),
+            "bimodal" => Ok(Dist1d::Bimodal),
+            _ => Err(format!("unknown 1-d dist '{s}' (uniform|beta|bimodal)")),
+        }
+    }
+
+    /// True density.
+    pub fn density(&self, x: f64, n: usize) -> f64 {
+        match self {
+            Dist1d::Uniform => {
+                if (0.0..=1.0).contains(&x) {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Dist1d::Beta15_2 => {
+                if (0.0..=1.0).contains(&x) {
+                    // 1/B(15,2) = Γ(17)/(Γ(15)Γ(2)) = 16·15 = 240
+                    240.0 * x.powi(14) * (1.0 - x)
+                } else {
+                    0.0
+                }
+            }
+            Dist1d::Bimodal => {
+                let w1 = big_mode_weight(n, 0.6);
+                if (0.0..=0.5).contains(&x) {
+                    w1 * 2.0
+                } else if (1.0..=1.5).contains(&x) {
+                    // Z = ∫_1^1.5 (3−2x) dx = 0.25
+                    (1.0 - w1) * (3.0 - 2.0 * x) / 0.25
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+}
+
+/// 1-d dataset per §B.3 (γ = 0.6 for the bimodal).
+pub fn dist1d(which: Dist1d, n: usize, rng: &mut Rng) -> Dataset {
+    let mut xs = Vec::with_capacity(n);
+    match which {
+        Dist1d::Uniform => {
+            for _ in 0..n {
+                xs.push(rng.f64());
+            }
+        }
+        Dist1d::Beta15_2 => {
+            for _ in 0..n {
+                xs.push(rng.beta(15.0, 2.0));
+            }
+        }
+        Dist1d::Bimodal => {
+            let w1 = big_mode_weight(n, 0.6);
+            for _ in 0..n {
+                if rng.f64() < w1 {
+                    xs.push(0.5 * rng.f64());
+                } else {
+                    xs.push(rng.linear_pdf(3.0, 1.0, 1.5));
+                }
+            }
+        }
+    }
+    let p: Vec<f64> = xs.iter().map(|&x| which.density(x, n)).collect();
+    let x = Mat { rows: n, cols: 1, data: xs };
+    finish(format!("{which:?}(n={n})"), x, p, f_star, rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn g_target_known_points() {
+        // g(0.4) = 0 + 0.4·0.6·1.6... compute: −t(t−1)(t−2)−0.5 at t=0.4:
+        // −0.4·(−0.6)·(−1.6) − 0.5 = −0.384 − 0.5
+        let got = g_target(0.4);
+        assert!((got - (-0.884)).abs() < 1e-12, "{got}");
+        assert!(g_target(0.5).is_finite());
+    }
+
+    #[test]
+    fn bimodal3_structure() {
+        let mut rng = Rng::seed_from_u64(1);
+        let n = 20_000;
+        let ds = bimodal3(n, 0.4, &mut rng);
+        assert_eq!(ds.n(), n);
+        assert_eq!(ds.d(), 3);
+        // count small-mode points: expect ≈ n^0.4/(1+n^{-0.6})·… = n·(1−w1)
+        let w1 = big_mode_weight(n, 0.4);
+        let small = (0..n)
+            .filter(|&i| (0..3).all(|j| ds.x[(i, j)] >= 2.0))
+            .count();
+        let expect = n as f64 * (1.0 - w1);
+        assert!(
+            (small as f64 - expect).abs() < 5.0 * expect.sqrt().max(5.0),
+            "small mode count {small}, expected ≈{expect}"
+        );
+        // every point is in one of the two cubes
+        for i in 0..n {
+            let in_big = (0..3).all(|j| (0.0..=1.0).contains(&ds.x[(i, j)]));
+            let in_small = (0..3).all(|j| (2.0..=2.5).contains(&ds.x[(i, j)]));
+            assert!(in_big || in_small, "row {i} out of support");
+            // density annotation positive
+            assert!(ds.p_true.as_ref().unwrap()[i] > 0.0);
+        }
+    }
+
+    #[test]
+    fn bimodal_d_fig3_support() {
+        let mut rng = Rng::seed_from_u64(2);
+        let ds = bimodal_d(5000, 10, 0.4, &mut rng);
+        assert_eq!(ds.d(), 10);
+        for i in 0..ds.n() {
+            let in_big = (0..10).all(|j| (0.0..=1.0).contains(&ds.x[(i, j)]));
+            let in_small = (0..10).all(|j| (3.0..=3.5).contains(&ds.x[(i, j)]));
+            assert!(in_big || in_small);
+        }
+    }
+
+    #[test]
+    fn beta_density_integrates_to_one() {
+        // Riemann check of the Beta(15,2) density constant.
+        let m = 100_000;
+        let mut s = 0.0;
+        for i in 0..m {
+            let x = (i as f64 + 0.5) / m as f64;
+            s += Dist1d::Beta15_2.density(x, 1000) / m as f64;
+        }
+        assert!((s - 1.0).abs() < 1e-6, "{s}");
+    }
+
+    #[test]
+    fn bimodal1_density_integrates_to_one() {
+        let n = 5000;
+        let m = 200_000;
+        let mut s = 0.0;
+        for i in 0..m {
+            let x = 1.6 * (i as f64 + 0.5) / m as f64; // support ⊂ [0, 1.6]
+            s += Dist1d::Bimodal.density(x, n) * 1.6 / m as f64;
+        }
+        assert!((s - 1.0).abs() < 1e-4, "{s}");
+    }
+
+    #[test]
+    fn dist1d_samples_match_density_support() {
+        let mut rng = Rng::seed_from_u64(3);
+        for which in [Dist1d::Uniform, Dist1d::Beta15_2, Dist1d::Bimodal] {
+            let ds = dist1d(which, 3000, &mut rng);
+            for i in 0..ds.n() {
+                assert!(
+                    which.density(ds.x[(i, 0)], 3000) > 0.0,
+                    "{which:?}: sampled point with zero density"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn normalize_zero_mean_unit_var() {
+        let mut rng = Rng::seed_from_u64(4);
+        let mut ds = bimodal3(2000, 0.4, &mut rng);
+        ds.normalize();
+        for j in 0..3 {
+            let mean: f64 = (0..ds.n()).map(|i| ds.x[(i, j)]).sum::<f64>() / ds.n() as f64;
+            let var: f64 =
+                (0..ds.n()).map(|i| ds.x[(i, j)].powi(2)).sum::<f64>() / ds.n() as f64;
+            assert!(mean.abs() < 1e-10);
+            assert!((var - 1.0).abs() < 1e-8);
+        }
+        assert!(ds.p_true.is_none());
+    }
+
+    #[test]
+    fn split_partitions() {
+        let mut rng = Rng::seed_from_u64(5);
+        let ds = dist1d(Dist1d::Uniform, 1000, &mut rng);
+        let (tr, te) = ds.split(0.2, &mut rng);
+        assert_eq!(tr.n() + te.n(), 1000);
+        assert_eq!(te.n(), 200);
+    }
+
+    #[test]
+    fn noise_level_matches() {
+        let mut rng = Rng::seed_from_u64(6);
+        let ds = bimodal3(30_000, 0.4, &mut rng);
+        let resid_var: f64 = ds
+            .y
+            .iter()
+            .zip(&ds.f_true)
+            .map(|(y, f)| (y - f).powi(2))
+            .sum::<f64>()
+            / ds.n() as f64;
+        assert!((resid_var - 0.25).abs() < 0.01, "sigma^2 = {resid_var}");
+    }
+}

@@ -1,0 +1,243 @@
+//! Kernel k-means via Nyström features (paper §5 future work).
+//!
+//! Lloyd's algorithm with k-means++ seeding in the m-dimensional Nyström
+//! embedding; equivalent to kernel k-means under the Nyström-approximated
+//! kernel at O(n·m·k) per iteration instead of O(n²).
+
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct KMeansResult {
+    pub assignments: Vec<usize>,
+    pub centers: Mat,
+    /// Within-cluster sum of squared feature distances.
+    pub inertia: f64,
+    pub iterations: usize,
+}
+
+/// k-means++ seeding.
+fn seed_pp(phi: &Mat, k: usize, rng: &mut Rng) -> Mat {
+    let n = phi.rows;
+    let mut centers = Mat::zeros(k, phi.cols);
+    let first = rng.usize(n);
+    centers.row_mut(0).copy_from_slice(phi.row(first));
+    let mut d2: Vec<f64> = (0..n)
+        .map(|i| crate::linalg::sqdist(phi.row(i), centers.row(0)))
+        .collect();
+    for c in 1..k {
+        let total: f64 = d2.iter().sum();
+        let pick = if total <= 0.0 {
+            rng.usize(n)
+        } else {
+            let mut u = rng.f64() * total;
+            let mut pick = n - 1;
+            for (i, &w) in d2.iter().enumerate() {
+                u -= w;
+                if u <= 0.0 {
+                    pick = i;
+                    break;
+                }
+            }
+            pick
+        };
+        centers.row_mut(c).copy_from_slice(phi.row(pick));
+        for i in 0..n {
+            d2[i] = d2[i].min(crate::linalg::sqdist(phi.row(i), centers.row(c)));
+        }
+    }
+    centers
+}
+
+/// Lloyd's algorithm over a feature matrix (rows = points).
+pub fn kmeans(phi: &Mat, k: usize, max_iter: usize, rng: &mut Rng) -> KMeansResult {
+    assert!(k >= 1 && k <= phi.rows, "bad k");
+    let n = phi.rows;
+    let d = phi.cols;
+    let mut centers = seed_pp(phi, k, rng);
+    let mut assignments = vec![0usize; n];
+    let mut iterations = 0;
+    for it in 0..max_iter {
+        iterations = it + 1;
+        // assign (parallel)
+        let nt = crate::util::default_threads();
+        let new_assign: Vec<usize> = crate::util::par_ranges(n, nt, |range| {
+            range
+                .map(|i| {
+                    let mut best = 0;
+                    let mut bd = f64::INFINITY;
+                    for c in 0..k {
+                        let dd = crate::linalg::sqdist(phi.row(i), centers.row(c));
+                        if dd < bd {
+                            bd = dd;
+                            best = c;
+                        }
+                    }
+                    best
+                })
+                .collect::<Vec<_>>()
+        })
+        .into_iter()
+        .flatten()
+        .collect();
+        let changed = new_assign
+            .iter()
+            .zip(&assignments)
+            .filter(|(a, b)| a != b)
+            .count();
+        assignments = new_assign;
+        // update
+        let mut sums = Mat::zeros(k, d);
+        let mut counts = vec![0usize; k];
+        for i in 0..n {
+            let c = assignments[i];
+            counts[c] += 1;
+            let row = phi.row(i);
+            let s = sums.row_mut(c);
+            for j in 0..d {
+                s[j] += row[j];
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // re-seed empty cluster at the farthest point
+                let far = (0..n)
+                    .max_by(|&a, &b| {
+                        let da = crate::linalg::sqdist(phi.row(a), centers.row(assignments[a]));
+                        let db = crate::linalg::sqdist(phi.row(b), centers.row(assignments[b]));
+                        da.partial_cmp(&db).unwrap()
+                    })
+                    .unwrap();
+                centers.row_mut(c).copy_from_slice(phi.row(far));
+            } else {
+                let inv = 1.0 / counts[c] as f64;
+                for j in 0..d {
+                    centers[(c, j)] = sums[(c, j)] * inv;
+                }
+            }
+        }
+        if changed == 0 {
+            break;
+        }
+    }
+    let inertia: f64 = (0..n)
+        .map(|i| crate::linalg::sqdist(phi.row(i), centers.row(assignments[i])))
+        .sum();
+    KMeansResult { assignments, centers, inertia, iterations }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blobs(n_per: usize, centers: &[[f64; 2]], sd: f64, rng: &mut Rng) -> (Mat, Vec<usize>) {
+        let n = n_per * centers.len();
+        let mut x = Mat::zeros(n, 2);
+        let mut labels = Vec::with_capacity(n);
+        for (c, ctr) in centers.iter().enumerate() {
+            for i in 0..n_per {
+                let r = c * n_per + i;
+                x[(r, 0)] = ctr[0] + sd * rng.normal();
+                x[(r, 1)] = ctr[1] + sd * rng.normal();
+                labels.push(c);
+            }
+        }
+        (x, labels)
+    }
+
+    fn cluster_agreement(a: &[usize], b: &[usize], k: usize) -> f64 {
+        // best-case matching accuracy via greedy confusion assignment
+        let mut conf = vec![vec![0usize; k]; k];
+        for (&x, &y) in a.iter().zip(b) {
+            conf[x][y] += 1;
+        }
+        let mut used = vec![false; k];
+        let mut correct = 0;
+        for row in &conf {
+            let (best_j, best_v) = row
+                .iter()
+                .enumerate()
+                .filter(|(j, _)| !used[*j])
+                .max_by_key(|(_, v)| **v)
+                .map(|(j, v)| (j, *v))
+                .unwrap();
+            used[best_j] = true;
+            correct += best_v;
+        }
+        correct as f64 / a.len() as f64
+    }
+
+    #[test]
+    fn recovers_well_separated_blobs() {
+        let mut rng = Rng::seed_from_u64(1);
+        let (x, truth) = blobs(
+            120,
+            &[[0.0, 0.0], [6.0, 0.0], [0.0, 6.0]],
+            0.4,
+            &mut rng,
+        );
+        let res = kmeans(&x, 3, 50, &mut rng);
+        let acc = cluster_agreement(&res.assignments, &truth, 3);
+        assert!(acc > 0.98, "accuracy {acc}");
+        assert!(res.iterations < 50);
+    }
+
+    #[test]
+    fn kernel_kmeans_via_nystrom_separates_blob_in_ring() {
+        // dense blob inside a ring — linearly inseparable by 2-means in
+        // input space (centroids collapse to the shared center), but
+        // separable by kernel k-means in the Nyström feature space.
+        use crate::kernels::{Kernel, KernelSpec};
+        use crate::kmethods::NystromFeatures;
+        let mut rng = Rng::seed_from_u64(2);
+        let n_per = 150;
+        let mut x = Mat::zeros(2 * n_per, 2);
+        let mut truth = Vec::new();
+        for i in 0..2 * n_per {
+            let cls = i / n_per;
+            if cls == 0 {
+                x[(i, 0)] = 0.15 * rng.normal();
+                x[(i, 1)] = 0.15 * rng.normal();
+            } else {
+                let th = rng.f64() * std::f64::consts::TAU;
+                x[(i, 0)] = 2.0 * th.cos() + 0.08 * rng.normal();
+                x[(i, 1)] = 2.0 * th.sin() + 0.08 * rng.normal();
+            }
+            truth.push(cls);
+        }
+        let k = Kernel::new(KernelSpec::Gaussian { sigma: 0.6 });
+        let idx = rng.sample_without_replacement(x.rows, 80);
+        let nf = NystromFeatures::new(k, &x, &idx).unwrap();
+        let phi = nf.transform(&x);
+        // best of a few restarts (k-means is seed-sensitive)
+        let best = (0..8)
+            .map(|s| {
+                let mut r = rng.fork(s);
+                let res = kmeans(&phi, 2, 100, &mut r);
+                (cluster_agreement(&res.assignments, &truth, 2), res.inertia)
+            })
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap()) // lowest inertia
+            .unwrap();
+        assert!(best.0 > 0.9, "blob/ring separation accuracy {}", best.0);
+    }
+
+    #[test]
+    fn inertia_nonincreasing_in_k() {
+        let mut rng = Rng::seed_from_u64(3);
+        let (x, _) = blobs(60, &[[0.0, 0.0], [4.0, 4.0]], 1.0, &mut rng);
+        let i2 = kmeans(&x, 2, 50, &mut rng).inertia;
+        let i4 = kmeans(&x, 4, 50, &mut rng).inertia;
+        assert!(i4 <= i2 * 1.05, "inertia k=4 {i4} vs k=2 {i2}");
+    }
+
+    #[test]
+    fn single_cluster_center_is_mean() {
+        let mut rng = Rng::seed_from_u64(4);
+        let x = Mat::from_fn(50, 2, |_, _| rng.normal());
+        let res = kmeans(&x, 1, 10, &mut rng);
+        for j in 0..2 {
+            let mean: f64 = (0..50).map(|i| x[(i, j)]).sum::<f64>() / 50.0;
+            assert!((res.centers[(0, j)] - mean).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,159 @@
+//! Kernel PCA via Nyström features (paper §5 future work).
+//!
+//! Exact kernel PCA eigendecomposes the n×n centered kernel matrix; here
+//! we decompose the m×m covariance of the (centered) Nyström features —
+//! O(n·m² + m³) — and project points onto the top components. With
+//! SA-sampled landmarks, total preprocessing stays Õ(n).
+
+use super::NystromFeatures;
+use crate::linalg::{eigen, Mat};
+
+pub struct KernelPca {
+    pub features: NystromFeatures,
+    /// Feature-space mean (1×m).
+    mean: Vec<f64>,
+    /// Projection matrix (m×k): top eigenvectors of the feature covariance.
+    components: Mat,
+    pub eigenvalues: Vec<f64>,
+}
+
+impl KernelPca {
+    /// Fit on the rows of `x`, keeping `k` components.
+    pub fn fit(features: NystromFeatures, x: &Mat, k: usize) -> KernelPca {
+        let phi = features.transform(x);
+        let (n, m) = (phi.rows, phi.cols);
+        let k = k.min(m);
+        // center
+        let mut mean = vec![0.0; m];
+        for i in 0..n {
+            for (j, mj) in mean.iter_mut().enumerate() {
+                *mj += phi[(i, j)];
+            }
+        }
+        for mj in &mut mean {
+            *mj /= n as f64;
+        }
+        let centered = Mat::from_fn(n, m, |i, j| phi[(i, j)] - mean[j]);
+        // covariance = Φᵀ Φ / n  (m×m)
+        let mut cov = centered.gram();
+        cov.scale(1.0 / n as f64);
+        let (vals, vecs) = eigen::top_k(&cov, k);
+        KernelPca { features, mean, components: vecs, eigenvalues: vals }
+    }
+
+    /// Project rows of `x` onto the top components → (rows, k).
+    pub fn transform(&self, x: &Mat) -> Mat {
+        let phi = self.features.transform(x);
+        let centered =
+            Mat::from_fn(phi.rows, phi.cols, |i, j| phi[(i, j)] - self.mean[j]);
+        centered.matmul(&self.components)
+    }
+
+    /// Fraction of feature-space variance captured by the kept components.
+    pub fn explained_variance_ratio(&self, x: &Mat) -> f64 {
+        let phi = self.features.transform(x);
+        let n = phi.rows;
+        let total: f64 = (0..n)
+            .map(|i| {
+                phi.row(i)
+                    .iter()
+                    .zip(&self.mean)
+                    .map(|(v, m)| (v - m) * (v - m))
+                    .sum::<f64>()
+            })
+            .sum::<f64>()
+            / n as f64;
+        if total <= 0.0 {
+            return 1.0;
+        }
+        self.eigenvalues.iter().sum::<f64>() / total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{Kernel, KernelSpec};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn top_components_separate_blob_in_ring() {
+        // Dense blob inside a ring: some leading kernel-PCA coordinate
+        // (Gaussian kernel) separates the classes even though linear PCA
+        // cannot (both classes share mean ≈ 0).
+        let mut rng = Rng::seed_from_u64(1);
+        let n_per = 120;
+        let mut x = Mat::zeros(2 * n_per, 2);
+        for i in 0..2 * n_per {
+            if i < n_per {
+                x[(i, 0)] = 0.15 * rng.normal();
+                x[(i, 1)] = 0.15 * rng.normal();
+            } else {
+                let th = rng.f64() * std::f64::consts::TAU;
+                x[(i, 0)] = 2.0 * th.cos() + 0.05 * rng.normal();
+                x[(i, 1)] = 2.0 * th.sin() + 0.05 * rng.normal();
+            }
+        }
+        let kern = Kernel::new(KernelSpec::Gaussian { sigma: 0.6 });
+        let idx = rng.sample_without_replacement(x.rows, 60);
+        let nf = NystromFeatures::new(kern, &x, &idx).unwrap();
+        let k = 4;
+        let pca = KernelPca::fit(nf, &x, k);
+        let z = pca.transform(&x);
+        // at least one kept coordinate separates the classes almost
+        // perfectly by a 1-d threshold
+        let best_err = (0..k)
+            .map(|c| {
+                let inner: Vec<f64> = (0..n_per).map(|i| z[(i, c)]).collect();
+                let outer: Vec<f64> = (n_per..2 * n_per).map(|i| z[(i, c)]).collect();
+                let (mi, ma) = (mean(&inner), mean(&outer));
+                let overlap = inner
+                    .iter()
+                    .filter(|&&v| (v - ma).abs() < (v - mi).abs())
+                    .count()
+                    + outer
+                        .iter()
+                        .filter(|&&v| (v - mi).abs() < (v - ma).abs())
+                        .count();
+                overlap as f64 / (2 * n_per) as f64
+            })
+            .fold(1.0, f64::min);
+        assert!(best_err < 0.05, "blob/ring separation error {best_err}");
+    }
+
+    fn mean(v: &[f64]) -> f64 {
+        v.iter().sum::<f64>() / v.len() as f64
+    }
+
+    #[test]
+    fn eigenvalues_descending_nonnegative() {
+        let mut rng = Rng::seed_from_u64(2);
+        let x = Mat::from_fn(80, 3, |_, _| rng.normal());
+        let kern = Kernel::new(KernelSpec::Matern { nu: 1.5, a: 1.0 });
+        let idx = rng.sample_without_replacement(80, 30);
+        let nf = NystromFeatures::new(kern, &x, &idx).unwrap();
+        let pca = KernelPca::fit(nf, &x, 10);
+        for w in pca.eigenvalues.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+        assert!(pca.eigenvalues.iter().all(|&v| v >= -1e-10));
+    }
+
+    #[test]
+    fn explained_variance_increases_with_k() {
+        let mut rng = Rng::seed_from_u64(3);
+        let x = Mat::from_fn(100, 2, |_, _| rng.normal());
+        let kern = Kernel::new(KernelSpec::Gaussian { sigma: 1.0 });
+        let idx = rng.sample_without_replacement(100, 40);
+        let r2 = KernelPca::fit(
+            NystromFeatures::new(kern.clone(), &x, &idx).unwrap(),
+            &x,
+            2,
+        )
+        .explained_variance_ratio(&x);
+        let r10 = KernelPca::fit(NystromFeatures::new(kern, &x, &idx).unwrap(), &x, 10)
+            .explained_variance_ratio(&x);
+        assert!(r10 >= r2 - 1e-9, "{r2} vs {r10}");
+        assert!(r10 <= 1.0 + 1e-6);
+    }
+}

@@ -1,0 +1,112 @@
+//! Leverage-accelerated kernel methods beyond regression — the paper's
+//! §5 future-work directions, built on the same SA-sampled Nyström
+//! substrate: **kernel k-means** and **kernel PCA**.
+//!
+//! Both methods replace the n×n kernel matrix with the Nyström feature
+//! map Φ = K_nJ R^{-T} (K_JJ = R Rᵀ), an n×m embedding whose Gram matrix
+//! is the Nyström approximation L = K_nJ K_JJ^† K_Jn. Landmarks J come
+//! from any [`crate::leverage::LeverageEstimator`]; with SA that makes
+//! the whole preprocessing Õ(n) + O(n·m·d + n·m²).
+
+pub mod kmeans;
+pub mod kpca;
+
+use crate::kernels::Kernel;
+use crate::linalg::{Cholesky, Mat};
+
+/// The Nyström feature map: rows φ(x_i) = R^{-1} k_J(x_i) so that
+/// ⟨φ(x_i), φ(x_j)⟩ = [K_nJ K_JJ^{-1} K_Jn]_ij ≈ K(x_i, x_j).
+pub struct NystromFeatures {
+    pub kernel: Kernel,
+    pub landmarks: Mat,
+    chol_jj: Cholesky,
+    pub m: usize,
+}
+
+impl NystromFeatures {
+    /// Build from landmark indices into `x`.
+    pub fn new(kernel: Kernel, x: &Mat, idx: &[usize]) -> anyhow::Result<NystromFeatures> {
+        anyhow::ensure!(!idx.is_empty(), "need landmarks");
+        let landmarks = Mat::from_fn(idx.len(), x.cols, |i, j| x[(idx[i], j)]);
+        let kjj = kernel.matrix_sym(&landmarks);
+        let chol_jj = Cholesky::factor_jittered(&kjj)
+            .map_err(|e| anyhow::anyhow!("K_JJ factorization: {e}"))?;
+        Ok(NystromFeatures { kernel, m: idx.len(), landmarks, chol_jj })
+    }
+
+    /// Embed the rows of `x` → (rows, m) feature matrix.
+    pub fn transform(&self, x: &Mat) -> Mat {
+        let knj = self.kernel.matrix(x, &self.landmarks);
+        let nt = crate::util::default_threads();
+        let rows = crate::util::par_ranges(x.rows, nt, |range| {
+            let mut out = Vec::with_capacity(range.len() * self.m);
+            for i in range {
+                let mut row = knj.row(i).to_vec();
+                self.chol_jj.solve_lower_in_place(&mut row);
+                out.extend(row);
+            }
+            out
+        });
+        Mat { rows: x.rows, cols: self.m, data: rows.into_iter().flatten().collect() }
+    }
+
+    /// Gram-approximation quality ‖ΦΦᵀ − K‖_max on a subset (diagnostic).
+    pub fn approx_error_on(&self, x: &Mat) -> f64 {
+        let phi = self.transform(x);
+        let gram = phi.matmul(&phi.transpose());
+        let k = self.kernel.matrix_sym(x);
+        gram.max_abs_diff(&k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::KernelSpec;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn full_landmarks_reproduce_kernel_exactly() {
+        let mut rng = Rng::seed_from_u64(1);
+        let x = Mat::from_fn(40, 2, |_, _| rng.normal());
+        let k = Kernel::new(KernelSpec::Gaussian { sigma: 0.8 });
+        let idx: Vec<usize> = (0..x.rows).collect();
+        let nf = NystromFeatures::new(k, &x, &idx).unwrap();
+        assert!(nf.approx_error_on(&x) < 1e-5);
+    }
+
+    #[test]
+    fn leverage_landmarks_beat_few_random_on_bimodal() {
+        // Nyström Gram error with SA-leverage landmarks ≤ uniform ones
+        // (averaged over draws) on the 1-d bimodal design.
+        use crate::leverage::{normalize, LeverageContext, LeverageEstimator};
+        let mut rng = Rng::seed_from_u64(2);
+        let ds = crate::data::dist1d(crate::data::Dist1d::Bimodal, 400, &mut rng);
+        let nu = 1.5;
+        let k = Kernel::new(KernelSpec::Matern { nu, a: (2.0 * nu).sqrt() });
+        let lam = crate::krr::lambda::fig2(ds.n());
+        let sa = crate::leverage::sa::SaEstimator::default();
+        let mut ctx = LeverageContext::new(&ds.x, &k, lam);
+        ctx.p_true = ds.p_true.as_deref();
+        let q_sa = normalize(&sa.estimate(&ctx, &mut rng));
+        let m = 25;
+        let trials = 8;
+        let mut err_sa = 0.0;
+        let mut err_uni = 0.0;
+        for t in 0..trials {
+            let mut r = rng.fork(t);
+            let idx_sa = crate::nystrom::sample_landmarks(&q_sa, m, &mut r);
+            let idx_uni: Vec<usize> = (0..m).map(|_| r.usize(ds.n())).collect();
+            err_sa += NystromFeatures::new(k.clone(), &ds.x, &idx_sa)
+                .unwrap()
+                .approx_error_on(&ds.x);
+            err_uni += NystromFeatures::new(k.clone(), &ds.x, &idx_uni)
+                .unwrap()
+                .approx_error_on(&ds.x);
+        }
+        assert!(
+            err_sa < err_uni * 1.05,
+            "SA landmarks {err_sa} vs uniform {err_uni}"
+        );
+    }
+}

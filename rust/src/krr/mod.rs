@@ -1,0 +1,207 @@
+//! Exact kernel ridge regression and risk metrics.
+//!
+//! The O(n³) reference implementation: used as ground truth against which
+//! the Nyström approximations (and the paper's Theorem 2/6 claims about
+//! R_n(f̂_L) ≤ C·R_n(f̂)) are measured, and to compute exact statistical
+//! leverage scores / the statistical dimension.
+
+use crate::kernels::Kernel;
+use crate::linalg::{Cholesky, Mat};
+
+/// λ rules used by the paper's experiments.
+pub mod tune;
+
+pub mod lambda {
+    /// §B.1 (Figure 1): λ = 0.075·n^{−2/3}.
+    pub fn fig1(n: usize) -> f64 {
+        0.075 * (n as f64).powf(-2.0 / 3.0)
+    }
+
+    /// §B.3 (Figure 2): λ = 0.45·n^{−0.8}.
+    pub fn fig2(n: usize) -> f64 {
+        0.45 * (n as f64).powf(-0.8)
+    }
+
+    /// §B.2 (Table 1): λ = 0.15·n^{−2α/(2α+d)} with α = ν + d/2.
+    pub fn table1(n: usize, alpha: f64, d: usize) -> f64 {
+        let e = 2.0 * alpha / (2.0 * alpha + d as f64);
+        0.15 * (n as f64).powf(-e)
+    }
+
+    /// §B.4 (Figure 3, Gaussian): λ = 0.075·n^{−(d+3)/(2d+3)}.
+    pub fn fig3(n: usize, d: usize) -> f64 {
+        let df = d as f64;
+        0.075 * (n as f64).powf(-(df + 3.0) / (2.0 * df + 3.0))
+    }
+}
+
+/// Exact KRR model: f̂(x) = K(x, X_n) ω with ω = (K_n + nλI)^{−1} y.
+pub struct ExactKrr {
+    pub kernel: Kernel,
+    pub x_train: Mat,
+    pub omega: Vec<f64>,
+    pub lambda: f64,
+    /// Retained factorization (for leverage / statistical-dimension use).
+    pub chol: Cholesky,
+}
+
+impl ExactKrr {
+    /// Solve the full problem. O(n³) time, O(n²) space.
+    pub fn fit(kernel: Kernel, x: &Mat, y: &[f64], lambda: f64) -> anyhow::Result<ExactKrr> {
+        let n = x.rows;
+        anyhow::ensure!(y.len() == n, "y length mismatch");
+        let mut a = kernel.matrix_sym(x);
+        a.add_diag(n as f64 * lambda);
+        let chol = Cholesky::factor_jittered(&a)
+            .map_err(|e| anyhow::anyhow!("KRR factorization failed: {e}"))?;
+        let omega = chol.solve(y);
+        Ok(ExactKrr { kernel, x_train: x.clone(), omega, lambda, chol })
+    }
+
+    pub fn predict_one(&self, x: &[f64]) -> f64 {
+        let mut s = 0.0;
+        for i in 0..self.x_train.rows {
+            s += self.kernel.eval(x, self.x_train.row(i)) * self.omega[i];
+        }
+        s
+    }
+
+    pub fn predict(&self, xq: &Mat) -> Vec<f64> {
+        let kq = self.kernel.matrix(xq, &self.x_train);
+        crate::linalg::matvec(&kq, &self.omega)
+    }
+
+    /// Fitted values at the training points.
+    pub fn fitted(&self) -> Vec<f64> {
+        self.predict(&self.x_train)
+    }
+
+    /// Exact rescaled statistical leverage scores G_λ(x_i, x_i) =
+    /// n·[K(K+nλI)^{−1}]_ii. Uses the identity
+    /// K(K+nλI)^{−1} = I − nλ(K+nλI)^{−1}, so the i-th diagonal is
+    /// 1 − nλ·eᵢᵀ(K+nλI)^{−1}eᵢ = 1 − nλ·‖L^{−1}eᵢ‖².
+    pub fn rescaled_leverage(&self) -> Vec<f64> {
+        let n = self.x_train.rows;
+        let nlam = n as f64 * self.lambda;
+        let nt = crate::util::default_threads();
+        let out = crate::util::par_ranges(n, nt, |range| {
+            let mut v = Vec::with_capacity(range.len());
+            for i in range {
+                let mut e = vec![0.0; n];
+                e[i] = 1.0;
+                let q = self.chol.quad_form(&e);
+                v.push(n as f64 * (1.0 - nlam * q));
+            }
+            v
+        });
+        out.into_iter().flatten().collect()
+    }
+
+    /// Statistical dimension d_stat = Tr(K(K+nλI)^{−1}) = (1/n)Σ G_λ(xᵢ,xᵢ).
+    pub fn statistical_dimension(&self) -> f64 {
+        self.rescaled_leverage().iter().sum::<f64>() / self.x_train.rows as f64
+    }
+}
+
+/// Mean squared error.
+pub fn mse(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    pred.iter().zip(truth).map(|(p, t)| (p - t).powi(2)).sum::<f64>() / pred.len() as f64
+}
+
+/// In-sample prediction risk R_n(f) = ‖f − f*‖²_n (paper §2.3).
+pub fn in_sample_risk(fitted: &[f64], f_true: &[f64]) -> f64 {
+    mse(fitted, f_true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+    use crate::kernels::KernelSpec;
+    use crate::util::rng::Rng;
+
+    fn small_problem(n: usize, seed: u64) -> (data::Dataset, Kernel, f64) {
+        let mut rng = Rng::seed_from_u64(seed);
+        let ds = data::dist1d(data::Dist1d::Uniform, n, &mut rng);
+        let k = Kernel::new(KernelSpec::Matern { nu: 1.5, a: 1.0 });
+        let lam = lambda::fig2(n);
+        (ds, k, lam)
+    }
+
+    #[test]
+    fn krr_interpolates_as_lambda_to_zero() {
+        // ν=1/2 (exponential kernel) keeps K_n well-conditioned enough
+        // for near-interpolation at tiny λ.
+        let mut rng = Rng::seed_from_u64(1);
+        let ds = data::dist1d(data::Dist1d::Uniform, 40, &mut rng);
+        let k = Kernel::new(KernelSpec::Matern { nu: 0.5, a: 1.0 });
+        let m = ExactKrr::fit(k, &ds.x, &ds.y, 1e-9).unwrap();
+        let fitted = m.fitted();
+        for i in 0..ds.n() {
+            assert!((fitted[i] - ds.y[i]).abs() < 1e-2, "i={i}");
+        }
+    }
+
+    #[test]
+    fn krr_shrinks_with_large_lambda() {
+        let (ds, k, _) = small_problem(80, 2);
+        let m = ExactKrr::fit(k, &ds.x, &ds.y, 1e4).unwrap();
+        let fitted = m.fitted();
+        // huge λ → f̂ ≈ 0
+        assert!(fitted.iter().all(|v| v.abs() < 0.05));
+    }
+
+    #[test]
+    fn krr_beats_noise_at_moderate_lambda() {
+        let (ds, k, lam) = small_problem(400, 3);
+        let m = ExactKrr::fit(k, &ds.x, &ds.y, lam).unwrap();
+        let risk = in_sample_risk(&m.fitted(), &ds.f_true);
+        // noise variance is 0.25; smoothing must do much better
+        assert!(risk < 0.05, "risk {risk}");
+    }
+
+    #[test]
+    fn leverage_matches_direct_inverse() {
+        // brute-force check: ℓ = diag(K(K+nλI)^{-1}) via full solve.
+        let (ds, k, lam) = small_problem(40, 4);
+        let m = ExactKrr::fit(k.clone(), &ds.x, &ds.y, lam).unwrap();
+        let lev = m.rescaled_leverage();
+        let n = ds.n();
+        let kn = k.matrix_sym(&ds.x);
+        let mut a = kn.clone();
+        a.add_diag(n as f64 * lam);
+        let ch = Cholesky::factor(&a).unwrap();
+        let inv_cols = ch.solve_mat(&Mat::eye(n));
+        let prod = kn.matmul(&inv_cols);
+        for i in 0..n {
+            let want = n as f64 * prod[(i, i)];
+            assert!(
+                (lev[i] - want).abs() < 1e-6 * want.abs().max(1.0),
+                "i={i}: {} vs {want}",
+                lev[i]
+            );
+        }
+    }
+
+    #[test]
+    fn leverage_in_unit_interval_scaled() {
+        let (ds, k, lam) = small_problem(100, 5);
+        let m = ExactKrr::fit(k, &ds.x, &ds.y, lam).unwrap();
+        for (i, l) in m.rescaled_leverage().iter().enumerate() {
+            // raw leverage ℓ_i = G/n ∈ (0, 1)
+            assert!(*l > 0.0 && *l < ds.n() as f64, "i={i} G={l}");
+        }
+    }
+
+    #[test]
+    fn statistical_dimension_monotone_in_lambda() {
+        let (ds, k, _) = small_problem(120, 6);
+        let d_small =
+            ExactKrr::fit(k.clone(), &ds.x, &ds.y, 1e-6).unwrap().statistical_dimension();
+        let d_big = ExactKrr::fit(k, &ds.x, &ds.y, 1e-1).unwrap().statistical_dimension();
+        assert!(d_small > d_big, "{d_small} vs {d_big}");
+        assert!(d_small <= ds.n() as f64 + 1e-6);
+        assert!(d_big > 0.0);
+    }
+}

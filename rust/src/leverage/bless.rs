@@ -1,0 +1,119 @@
+//! BLESS — Bottom-up Leverage Score Sampling (Rudi et al., 2018).
+//!
+//! Path-following over a geometric regularization schedule
+//! λ_0 = κ² (= 1 for our normalized kernels) down to the target λ:
+//! at each step h the candidate pool is a uniform subsample of size
+//! ∝ min(n, c/λ_h) (the BLESS insight: accurate RLS at level λ_h only
+//! needs that many points), the candidates are scored against the
+//! previous dictionary via [`super::rls::dictionary_rls`], and a new
+//! dictionary of the configured size is resampled proportionally to the
+//! scores. A final pass scores all n points with the converged
+//! dictionary (Table 1 / Figure 1 compare *all* leverage scores, so
+//! every method pays this O(n·m²) output step).
+
+use super::rls::dictionary_rls;
+use super::{LeverageContext, LeverageEstimator};
+use crate::util::rng::{AliasTable, Rng};
+
+#[derive(Clone, Debug)]
+pub struct Bless {
+    /// Geometric step: λ_{h+1} = λ_h / step (paper uses q ≈ 2).
+    pub step: f64,
+    /// Candidate-pool constant: |U_h| = min(n, pool_coef / λ_h).
+    pub pool_coef: f64,
+}
+
+impl Default for Bless {
+    fn default() -> Self {
+        Bless { step: 2.0, pool_coef: 2.0 }
+    }
+}
+
+impl LeverageEstimator for Bless {
+    fn name(&self) -> &'static str {
+        "bless"
+    }
+
+    fn estimate(&self, ctx: &LeverageContext, rng: &mut Rng) -> Vec<f64> {
+        let n = ctx.n();
+        let m_dict = ctx.inner_m.max(4);
+        // Initial dictionary: small uniform sample at λ_0 = 1 (κ² = k(x,x)).
+        let mut dict = rng.sample_without_replacement(n, m_dict.min(n));
+        let mut lam_h = 1.0_f64;
+        let target = ctx.lambda;
+        while lam_h > target {
+            lam_h = (lam_h / self.step).max(target);
+            // candidate pool: uniform subsample of size min(n, c/λ_h)
+            let pool_size = ((self.pool_coef / lam_h) as usize).clamp(m_dict, n);
+            let pool = if pool_size >= n {
+                (0..n).collect::<Vec<_>>()
+            } else {
+                rng.sample_without_replacement(n, pool_size)
+            };
+            // score candidates at level λ_h with the previous dictionary
+            let scores = dictionary_rls(ctx.x, ctx.kernel, lam_h, &dict, Some(&pool));
+            // resample the dictionary ∝ scores
+            let at = AliasTable::new(&scores);
+            let mut new_dict: Vec<usize> =
+                (0..m_dict).map(|_| pool[at.sample(rng)]).collect();
+            new_dict.sort_unstable();
+            new_dict.dedup();
+            dict = new_dict;
+        }
+        // output pass: score everything at the target λ
+        dictionary_rls(ctx.x, ctx.kernel, target, &dict, None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{dist1d, Dist1d};
+    use crate::kernels::{Kernel, KernelSpec};
+    use crate::leverage::exact::rescaled_leverage_exact;
+    use crate::leverage::LeverageContext;
+
+    #[test]
+    fn bless_correlates_with_exact() {
+        let mut rng = Rng::seed_from_u64(1);
+        let n = 400;
+        let ds = dist1d(Dist1d::Bimodal, n, &mut rng);
+        let nu = 1.5;
+        let k = Kernel::new(KernelSpec::Matern { nu, a: (2.0 * nu).sqrt() });
+        let lam = crate::krr::lambda::fig2(n);
+        let exact = rescaled_leverage_exact(&ds.x, &k, lam);
+        let ctx = LeverageContext { x: &ds.x, kernel: &k, lambda: lam, p_true: None, inner_m: 40 };
+        let est = Bless::default().estimate(&ctx, &mut rng);
+        assert_eq!(est.len(), n);
+        let qe = crate::leverage::normalize(&exact);
+        let qa = crate::leverage::normalize(&est);
+        let mut ratios: Vec<f64> = (0..n).map(|i| qa[i] / qe[i]).collect();
+        ratios.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = ratios[ratios.len() / 2];
+        assert!((med - 1.0).abs() < 0.35, "median ratio {med}");
+    }
+
+    #[test]
+    fn bless_handles_tiny_problems() {
+        let mut rng = Rng::seed_from_u64(2);
+        let ds = dist1d(Dist1d::Uniform, 25, &mut rng);
+        let k = Kernel::new(KernelSpec::Matern { nu: 0.5, a: 1.0 });
+        let ctx = LeverageContext { x: &ds.x, kernel: &k, lambda: 1e-3, p_true: None, inner_m: 8 };
+        let s = Bless::default().estimate(&ctx, &mut rng);
+        assert!(s.iter().all(|&v| v > 0.0 && v.is_finite()));
+    }
+
+    #[test]
+    fn bless_deterministic_given_seed() {
+        let mk = || {
+            let mut rng = Rng::seed_from_u64(3);
+            let ds = dist1d(Dist1d::Uniform, 150, &mut rng);
+            let k = Kernel::new(KernelSpec::Matern { nu: 1.5, a: 1.0 });
+            let ctx =
+                LeverageContext { x: &ds.x, kernel: &k, lambda: 1e-3, p_true: None, inner_m: 20 };
+            let mut r2 = Rng::seed_from_u64(99);
+            Bless::default().estimate(&ctx, &mut r2)
+        };
+        assert_eq!(mk(), mk());
+    }
+}

@@ -1,0 +1,114 @@
+//! Exact rescaled leverage scores via Cholesky — O(n³) ground truth.
+
+use super::{LeverageContext, LeverageEstimator};
+use crate::linalg::Cholesky;
+use crate::util::rng::Rng;
+
+/// diag(K(K+nλI)^{−1}) computed exactly. Used as the reference in Table 1
+/// and Figure 2; also the only estimator with no randomness.
+pub struct ExactEstimator;
+
+/// Exact rescaled leverage scores G_λ(x_i,x_i) without needing responses.
+pub fn rescaled_leverage_exact(
+    x: &crate::linalg::Mat,
+    kernel: &crate::kernels::Kernel,
+    lambda: f64,
+) -> Vec<f64> {
+    let n = x.rows;
+    let mut a = kernel.matrix_sym(x);
+    a.add_diag(n as f64 * lambda);
+    let chol = Cholesky::factor_jittered(&a).expect("K + nλI must be PD");
+    let nlam = n as f64 * lambda;
+    let out = crate::util::par_ranges(n, crate::util::default_threads(), |range| {
+        let mut v = Vec::with_capacity(range.len());
+        for i in range {
+            let mut e = vec![0.0; n];
+            e[i] = 1.0;
+            // G_i = n(1 − nλ·eᵢᵀ(K+nλI)^{−1}eᵢ)
+            v.push(n as f64 * (1.0 - nlam * chol.quad_form(&e)));
+        }
+        v
+    });
+    out.into_iter().flatten().collect()
+}
+
+impl LeverageEstimator for ExactEstimator {
+    fn name(&self) -> &'static str {
+        "exact"
+    }
+
+    fn estimate(&self, ctx: &LeverageContext, _rng: &mut Rng) -> Vec<f64> {
+        rescaled_leverage_exact(ctx.x, ctx.kernel, ctx.lambda)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+    use crate::kernels::{Kernel, KernelSpec};
+    use crate::leverage::LeverageContext;
+
+    #[test]
+    fn exact_scores_positive_and_bounded() {
+        let mut rng = Rng::seed_from_u64(1);
+        let ds = data::dist1d(data::Dist1d::Uniform, 120, &mut rng);
+        let k = Kernel::new(KernelSpec::Matern { nu: 1.5, a: 1.0 });
+        let lam = crate::krr::lambda::fig2(ds.n());
+        let ctx = LeverageContext::new(&ds.x, &k, lam);
+        let g = ExactEstimator.estimate(&ctx, &mut rng);
+        for (i, &gi) in g.iter().enumerate() {
+            // ℓ_i = G_i/n ∈ (0,1)
+            assert!(gi > 0.0 && gi < ds.n() as f64, "i={i} G={gi}");
+        }
+        // statistical dimension consistency: Σℓ = d_stat ∈ (0, n)
+        let dstat: f64 = g.iter().sum::<f64>() / ds.n() as f64;
+        assert!(dstat > 1.0 && dstat < ds.n() as f64, "dstat={dstat}");
+    }
+
+    #[test]
+    fn boundary_points_have_higher_leverage_uniform_design() {
+        // For Unif[0,1], exact rescaled leverage is larger near 0/1
+        // (fewer neighbors share the load) — a qualitative invariant the
+        // paper's Figure 2 displays.
+        let mut rng = Rng::seed_from_u64(2);
+        let ds = data::dist1d(data::Dist1d::Uniform, 300, &mut rng);
+        let k = Kernel::new(KernelSpec::Matern { nu: 1.5, a: 1.0 });
+        let lam = crate::krr::lambda::fig2(ds.n());
+        let g = rescaled_leverage_exact(&ds.x, &k, lam);
+        let (mut edge, mut ne, mut mid, mut nm) = (0.0, 0, 0.0, 0);
+        for i in 0..ds.n() {
+            let xi = ds.x[(i, 0)];
+            if xi < 0.02 || xi > 0.98 {
+                edge += g[i];
+                ne += 1;
+            } else if (0.4..0.6).contains(&xi) {
+                mid += g[i];
+                nm += 1;
+            }
+        }
+        if ne > 0 && nm > 0 {
+            assert!(
+                edge / ne as f64 > mid / nm as f64,
+                "edge {} vs mid {}",
+                edge / ne as f64,
+                mid / nm as f64
+            );
+        }
+    }
+
+    #[test]
+    fn matches_krr_leverage_path() {
+        let mut rng = Rng::seed_from_u64(3);
+        let ds = data::dist1d(data::Dist1d::Bimodal, 80, &mut rng);
+        let k = Kernel::new(KernelSpec::Matern { nu: 0.5, a: 1.0 });
+        let lam = 1e-2;
+        let via_krr = crate::krr::ExactKrr::fit(k.clone(), &ds.x, &ds.y, lam)
+            .unwrap()
+            .rescaled_leverage();
+        let direct = rescaled_leverage_exact(&ds.x, &k, lam);
+        for i in 0..ds.n() {
+            assert!((via_krr[i] - direct[i]).abs() < 1e-7);
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! Statistical leverage score estimation.
+//!
+//! The rescaled leverage score of design point x_i is
+//! G_λ(x_i,x_i) = n·[K_n(K_n + nλI)^{−1}]_ii (paper §2.3); importance
+//! sampling the Nyström landmarks proportionally to {G_λ(x_i,x_i)}
+//! preserves the KRR risk up to a constant (Theorem 2).
+//!
+//! Estimators:
+//! * [`sa::SaEstimator`] — **the paper's contribution**: Õ(n) analytic
+//!   approximation via KDE + the spectral integral (Eqn 6).
+//! * [`exact::ExactEstimator`] — O(n³) Cholesky ground truth.
+//! * [`UniformEstimator`] — the "Vanilla" baseline (all-equal scores).
+//! * [`rls::RecursiveRls`] — Musco & Musco (2017), Õ(n·m²).
+//! * [`bless::Bless`] — Rudi et al. (2018) bottom-up path following.
+//!
+//! All estimators return *unnormalized* scores proportional to
+//! G_λ(x_i,x_i) (exact scale for `exact` and `sa`, so Figure 2 can
+//! overlay them); normalize with [`normalize`] to get sampling
+//! probabilities.
+
+pub mod bless;
+pub mod exact;
+pub mod rls;
+pub mod sa;
+
+use crate::kernels::Kernel;
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+/// Everything an estimator may need.
+pub struct LeverageContext<'a> {
+    pub x: &'a Mat,
+    pub kernel: &'a Kernel,
+    pub lambda: f64,
+    /// True input density at the design points, when the generator knows
+    /// it (synthetic designs) — used by SA's oracle mode in tests.
+    pub p_true: Option<&'a [f64]>,
+    /// Internal subsample / dictionary size for the iterative baselines
+    /// (the paper's `s = 1·n^{1/3}`-style setting).
+    pub inner_m: usize,
+}
+
+impl<'a> LeverageContext<'a> {
+    pub fn new(x: &'a Mat, kernel: &'a Kernel, lambda: f64) -> Self {
+        let n = x.rows;
+        LeverageContext {
+            x,
+            kernel,
+            lambda,
+            p_true: None,
+            inner_m: ((n as f64).powf(1.0 / 3.0).round() as usize).max(8),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.x.rows
+    }
+
+    pub fn d(&self) -> usize {
+        self.x.cols
+    }
+}
+
+/// A leverage score estimator.
+pub trait LeverageEstimator: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Unnormalized scores ∝ G_λ(x_i, x_i), length n, all ≥ 0 and finite.
+    fn estimate(&self, ctx: &LeverageContext, rng: &mut Rng) -> Vec<f64>;
+}
+
+/// Normalize scores into a sampling distribution q (Σq = 1).
+pub fn normalize(scores: &[f64]) -> Vec<f64> {
+    let total: f64 = scores.iter().sum();
+    assert!(
+        total > 0.0 && total.is_finite(),
+        "scores must have positive finite total, got {total}"
+    );
+    scores.iter().map(|s| s / total).collect()
+}
+
+/// The "Vanilla" baseline: uniform sampling probabilities.
+pub struct UniformEstimator;
+
+impl LeverageEstimator for UniformEstimator {
+    fn name(&self) -> &'static str {
+        "vanilla"
+    }
+
+    fn estimate(&self, ctx: &LeverageContext, _rng: &mut Rng) -> Vec<f64> {
+        vec![1.0; ctx.n()]
+    }
+}
+
+/// CLI-facing method selector.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LeverageMethod {
+    Exact,
+    Sa,
+    /// SA forced through the numerical-quadrature path (validation mode).
+    SaQuadrature,
+    Uniform,
+    RecursiveRls,
+    Bless,
+}
+
+impl LeverageMethod {
+    pub fn parse(s: &str) -> Result<LeverageMethod, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "exact" => Ok(LeverageMethod::Exact),
+            "sa" => Ok(LeverageMethod::Sa),
+            "sa-quadrature" | "sa-int" => Ok(LeverageMethod::SaQuadrature),
+            "uniform" | "vanilla" => Ok(LeverageMethod::Uniform),
+            "rc" | "recursive-rls" | "rls" => Ok(LeverageMethod::RecursiveRls),
+            "bless" => Ok(LeverageMethod::Bless),
+            _ => Err(format!(
+                "unknown method '{s}' (exact|sa|sa-quadrature|uniform|rc|bless)"
+            )),
+        }
+    }
+
+    pub fn build(self) -> Box<dyn LeverageEstimator> {
+        match self {
+            LeverageMethod::Exact => Box::new(exact::ExactEstimator),
+            LeverageMethod::Sa => Box::new(sa::SaEstimator::default()),
+            LeverageMethod::SaQuadrature => Box::new(sa::SaEstimator {
+                integration: sa::SaIntegration::Quadrature,
+                ..Default::default()
+            }),
+            LeverageMethod::Uniform => Box::new(UniformEstimator),
+            LeverageMethod::RecursiveRls => Box::new(rls::RecursiveRls::default()),
+            LeverageMethod::Bless => Box::new(bless::Bless::default()),
+        }
+    }
+
+    pub fn all_comparison() -> [LeverageMethod; 4] {
+        [
+            LeverageMethod::Sa,
+            LeverageMethod::Uniform,
+            LeverageMethod::RecursiveRls,
+            LeverageMethod::Bless,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::KernelSpec;
+
+    #[test]
+    fn normalize_sums_to_one() {
+        crate::util::prop::check_vec_f64(
+            11,
+            100,
+            |rng| crate::util::prop::gen::weights(rng, 50),
+            |w| {
+                let q = normalize(w);
+                (q.iter().sum::<f64>() - 1.0).abs() < 1e-12 && q.iter().all(|&v| v >= 0.0)
+            },
+        );
+    }
+
+    #[test]
+    fn uniform_is_flat() {
+        let mut rng = Rng::seed_from_u64(1);
+        let x = Mat::zeros(10, 2);
+        let k = Kernel::new(KernelSpec::Matern { nu: 0.5, a: 1.0 });
+        let ctx = LeverageContext::new(&x, &k, 0.1);
+        let s = UniformEstimator.estimate(&ctx, &mut rng);
+        assert_eq!(s, vec![1.0; 10]);
+    }
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for (s, m) in [
+            ("exact", LeverageMethod::Exact),
+            ("sa", LeverageMethod::Sa),
+            ("sa-quadrature", LeverageMethod::SaQuadrature),
+            ("vanilla", LeverageMethod::Uniform),
+            ("rc", LeverageMethod::RecursiveRls),
+            ("bless", LeverageMethod::Bless),
+        ] {
+            assert_eq!(LeverageMethod::parse(s).unwrap(), m);
+        }
+        assert!(LeverageMethod::parse("nope").is_err());
+    }
+}

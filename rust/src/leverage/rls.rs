@@ -1,0 +1,238 @@
+//! Dictionary-based approximate ridge leverage scores (RLS) and the
+//! Recursive-RLS estimator of Musco & Musco (2017).
+//!
+//! Core primitive: given a landmark dictionary J (|J| = m), approximate
+//! G_λ(x_i,x_i) by replacing K_n with its Nyström approximation
+//! L = K_nJ K_JJ^† K_Jn. With B = K_nJ R^{-1} (K_JJ = RᵀR, jittered) the
+//! push-through identity gives
+//!
+//!   [L(L + nλI)^{−1}]_ii = b_iᵀ (BᵀB + nλ I_m)^{−1} b_i,
+//!
+//! computable for all n points in O(n·m² + m³) after the O(n·m·d) kernel
+//! block. This is the inner step of both Recursive-RLS and BLESS.
+//!
+//! Recursive-RLS (Musco & Musco 2017, Algorithm 3, adapted): recursively
+//! halve the data; at each level, use the child's dictionary to score the
+//! current points, then resample a dictionary of the configured size
+//! proportionally to the scores. The final dictionary scores all n
+//! points. We keep the unweighted-dictionary Nyström RLS (the
+//! Alaoui–Mahoney form) rather than the weighted variant — same
+//! complexity and accuracy class; noted in DESIGN.md.
+
+use super::{LeverageContext, LeverageEstimator};
+use crate::kernels::Kernel;
+use crate::linalg::{Cholesky, Mat};
+use crate::util::rng::{AliasTable, Rng};
+
+/// Approximate rescaled leverage scores of the rows of `x` using landmark
+/// rows `dict` (indices into `x`). Returns G-hat (scaled by n like the
+/// exact scores).
+pub fn dictionary_rls(
+    x: &Mat,
+    kernel: &Kernel,
+    lambda: f64,
+    dict: &[usize],
+    subset: Option<&[usize]>,
+) -> Vec<f64> {
+    let n = x.rows;
+    let m = dict.len();
+    assert!(m > 0, "empty dictionary");
+    let nlam = n as f64 * lambda;
+    let landmarks = Mat::from_fn(m, x.cols, |i, j| x[(dict[i], j)]);
+    // K_JJ = R Rᵀ (lower L here) — factor with jitter.
+    let kjj = kernel.matrix_sym(&landmarks);
+    let chol_jj = Cholesky::factor_jittered(&kjj).expect("K_JJ PSD");
+    // rows to score
+    let rows: Vec<usize> = match subset {
+        Some(s) => s.to_vec(),
+        None => (0..n).collect(),
+    };
+    // B rows: b_i = L^{-1} k_{J,i}; accumulate BᵀB and keep b_i
+    let nt = crate::util::default_threads();
+    let chunks = crate::util::par_ranges(rows.len(), nt, |range| {
+        let mut bs = Vec::with_capacity(range.len());
+        for r in range {
+            let i = rows[r];
+            let xi = x.row(i);
+            let mut k_col: Vec<f64> =
+                (0..m).map(|j| kernel.eval(xi, landmarks.row(j))).collect();
+            chol_jj.solve_lower_in_place(&mut k_col);
+            bs.push(k_col);
+        }
+        bs
+    });
+    let b_rows: Vec<Vec<f64>> = chunks.into_iter().flatten().collect();
+    // M = BᵀB + nλ I_m  (note: BᵀB over the *scored subset*; when scoring
+    // a subset we still want the geometry of those points only — this is
+    // the standard subset-Nyström RLS used inside the recursions).
+    let mut mmat = Mat::zeros(m, m);
+    for b in &b_rows {
+        for a in 0..m {
+            let ba = b[a];
+            if ba == 0.0 {
+                continue;
+            }
+            for c in a..m {
+                mmat[(a, c)] += ba * b[c];
+            }
+        }
+    }
+    for a in 0..m {
+        for c in 0..a {
+            mmat[(a, c)] = mmat[(c, a)];
+        }
+    }
+    mmat.add_diag(nlam);
+    let chol_m = Cholesky::factor_jittered(&mmat).expect("M PD");
+    // score_i = n · b_iᵀ M^{−1} b_i  (∈ (0, n))
+    let out = crate::util::par_ranges(b_rows.len(), nt, |range| {
+        range
+            .map(|r| {
+                let q = chol_m.quad_form(&b_rows[r]);
+                (n as f64 * q).clamp(1e-12, n as f64)
+            })
+            .collect::<Vec<_>>()
+    });
+    out.into_iter().flatten().collect()
+}
+
+/// Musco & Musco (2017) Recursive-RLS.
+#[derive(Clone, Debug)]
+pub struct RecursiveRls {
+    /// Oversampling multiplier on the dictionary size at each level.
+    pub oversample: f64,
+}
+
+impl Default for RecursiveRls {
+    fn default() -> Self {
+        RecursiveRls { oversample: 1.0 }
+    }
+}
+
+impl RecursiveRls {
+    /// Returns the dictionary built over `active` (indices into ctx.x).
+    fn build_dictionary(
+        &self,
+        ctx: &LeverageContext,
+        active: &[usize],
+        m_dict: usize,
+        rng: &mut Rng,
+    ) -> Vec<usize> {
+        if active.len() <= (2 * m_dict).max(16) {
+            return active.to_vec();
+        }
+        // random half
+        let half: Vec<usize> = active.iter().copied().filter(|_| rng.f64() < 0.5).collect();
+        let half = if half.is_empty() { vec![active[0]] } else { half };
+        let child = self.build_dictionary(ctx, &half, m_dict, rng);
+        // score the active set with the child dictionary
+        let scores = dictionary_rls(ctx.x, ctx.kernel, ctx.lambda, &child, Some(active));
+        // resample dictionary ∝ scores
+        let at = AliasTable::new(&scores);
+        let take = ((m_dict as f64 * self.oversample).round() as usize).max(4);
+        let mut dict: Vec<usize> = (0..take).map(|_| active[at.sample(rng)]).collect();
+        dict.sort_unstable();
+        dict.dedup();
+        dict
+    }
+}
+
+impl LeverageEstimator for RecursiveRls {
+    fn name(&self) -> &'static str {
+        "recursive-rls"
+    }
+
+    fn estimate(&self, ctx: &LeverageContext, rng: &mut Rng) -> Vec<f64> {
+        let all: Vec<usize> = (0..ctx.n()).collect();
+        let dict = self.build_dictionary(ctx, &all, ctx.inner_m, rng);
+        dictionary_rls(ctx.x, ctx.kernel, ctx.lambda, &dict, None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{dist1d, Dist1d};
+    use crate::kernels::KernelSpec;
+    use crate::leverage::exact::rescaled_leverage_exact;
+
+    fn setup(n: usize, seed: u64) -> (crate::data::Dataset, Kernel, f64) {
+        let mut rng = Rng::seed_from_u64(seed);
+        let ds = dist1d(Dist1d::Bimodal, n, &mut rng);
+        let nu = 1.5;
+        let k = Kernel::new(KernelSpec::Matern { nu, a: (2.0 * nu).sqrt() });
+        let lam = crate::krr::lambda::fig2(n);
+        (ds, k, lam)
+    }
+
+    #[test]
+    fn full_dictionary_recovers_exact() {
+        // dict = all points ⇒ L = K ⇒ scores = exact G.
+        let (ds, k, lam) = setup(90, 1);
+        let exact = rescaled_leverage_exact(&ds.x, &k, lam);
+        let all: Vec<usize> = (0..ds.n()).collect();
+        let approx = dictionary_rls(&ds.x, &k, lam, &all, None);
+        for i in 0..ds.n() {
+            assert!(
+                (approx[i] - exact[i]).abs() < 1e-5 * exact[i].max(1.0),
+                "i={i}: {} vs {}",
+                approx[i],
+                exact[i]
+            );
+        }
+    }
+
+    #[test]
+    fn dictionary_rls_underestimates() {
+        // Nyström approximation L ⪯ K ⇒ approx scores ≤ exact (up to
+        // jitter noise) — the classic one-sided bound.
+        let (ds, k, lam) = setup(150, 2);
+        let exact = rescaled_leverage_exact(&ds.x, &k, lam);
+        let mut rng = Rng::seed_from_u64(7);
+        let dict = rng.sample_without_replacement(ds.n(), 40);
+        let approx = dictionary_rls(&ds.x, &k, lam, &dict, None);
+        let violations = (0..ds.n())
+            .filter(|&i| approx[i] > exact[i] * 1.05 + 1e-6)
+            .count();
+        assert!(
+            violations < ds.n() / 20,
+            "{violations}/{} points exceed the exact score",
+            ds.n()
+        );
+    }
+
+    #[test]
+    fn recursive_rls_correlates_with_exact() {
+        let (ds, k, lam) = setup(400, 3);
+        let exact = rescaled_leverage_exact(&ds.x, &k, lam);
+        let mut rng = Rng::seed_from_u64(11);
+        let ctx = LeverageContext {
+            x: &ds.x,
+            kernel: &k,
+            lambda: lam,
+            p_true: None,
+            inner_m: 40,
+        };
+        let est = RecursiveRls::default().estimate(&ctx, &mut rng);
+        // normalized scores should be close: mean ratio ~1
+        let qe = crate::leverage::normalize(&exact);
+        let qa = crate::leverage::normalize(&est);
+        let mut ratios: Vec<f64> = (0..ds.n()).map(|i| qa[i] / qe[i]).collect();
+        ratios.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = ratios[ratios.len() / 2];
+        assert!((med - 1.0).abs() < 0.35, "median ratio {med}");
+    }
+
+    #[test]
+    fn subset_scoring_matches_full_on_those_rows() {
+        let (ds, k, lam) = setup(120, 4);
+        let mut rng = Rng::seed_from_u64(5);
+        let dict = rng.sample_without_replacement(ds.n(), 30);
+        let subset: Vec<usize> = (0..ds.n()).collect();
+        let full = dictionary_rls(&ds.x, &k, lam, &dict, None);
+        let sub = dictionary_rls(&ds.x, &k, lam, &dict, Some(&subset));
+        for i in 0..ds.n() {
+            assert!((full[i] - sub[i]).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,467 @@
+//! SA — the paper's spectral-analysis leverage score approximation.
+//!
+//! For a stationary kernel with spectral density m(s) and input density
+//! p, the rescaled leverage score G_λ(x_i, x_i) is approximated by
+//!
+//!   K̃_λ(x_i, x_i) = ∫_{R^d} ds / ( p(x_i) + λ / m(s) )          (Eqn 6)
+//!
+//! Pipeline (Algorithm 1): estimate p̂(x_i) by fast KDE, evaluate the
+//! integral per point, normalize. Total Õ(n).
+//!
+//! Integral evaluation (Appendix D):
+//! * **Polar reduction**: isotropy ⇒ Eqn 6 = ω_{d−1}·∫₀^∞ r^{d−1}/(p +
+//!   λ/m(r)) dr, a 1-d integral ([`SaIntegration::Quadrature`]).
+//! * **Matérn closed form** (App. D.2): dropping the +a² spectral shift
+//!   (o(1) relative error as λ→0) gives
+//!   K̃ ≈ ω_{d−1}/(2π)^d · Γ-form · p^{d/(2α)−1} (λ/C_m)^{−d/(2α)},
+//!   the paper's p^{d/(2α)−1} rule of thumb with exact constants so the
+//!   value overlays the true G in Figure 2.
+//! * **Gaussian closed form**: K̃ = −Li_{d/2}(−y)/(p·c), y = p·c/λ,
+//!   c = (2πσ²)^{d/2}, via the polylogarithm in [`crate::special`].
+//!
+//! We use the kernels' true spectral constants (not the paper's C_α=D_α=1
+//! simplification) so K̃ matches G in absolute scale, which Figure 2
+//! requires.
+
+use super::{LeverageContext, LeverageEstimator};
+use crate::kde::{self, KdeMethod};
+use crate::kernels::{Kernel, KernelSpec};
+use crate::quadrature::{integrate_semi_infinite_panels, GaussLegendre};
+use crate::special::{lgamma, polylog_neg, sphere_surface};
+use crate::util::rng::Rng;
+use std::f64::consts::PI;
+
+/// How to evaluate the Eqn-6 integral.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SaIntegration {
+    /// Analytic forms (Matérn power law / Gaussian polylog). Default.
+    ClosedForm,
+    /// Polar-reduced 1-d numerical quadrature (validation path, also the
+    /// route for kernels without a closed form).
+    Quadrature,
+}
+
+/// The SA estimator with its tuning knobs.
+#[derive(Clone, Debug)]
+pub struct SaEstimator {
+    pub kde: KdeMethod,
+    /// KDE bandwidth; None → Scott's rule (benches pass the paper's).
+    pub bandwidth: Option<f64>,
+    pub integration: SaIntegration,
+    /// Use the generator's true density if the context provides it
+    /// (isolates formula error from KDE error in tests/Figure 2).
+    pub use_true_density: bool,
+    /// §B.3 low-density stabilization: p < h₀ ⇒ p ← (0.5h₀ + p)/1.5 with
+    /// h₀ = `stab_coef`·n^{−0.8}.
+    pub stabilize: bool,
+    pub stab_coef: f64,
+    /// Leave-one-out KDE correction (see [`crate::kde::loo_correct`]):
+    /// removes the self-term that otherwise flattens the density profile
+    /// at small bandwidths in moderate d. On by default.
+    pub loo: bool,
+}
+
+impl Default for SaEstimator {
+    fn default() -> Self {
+        SaEstimator {
+            kde: KdeMethod::Auto,
+            bandwidth: None,
+            integration: SaIntegration::ClosedForm,
+            use_true_density: false,
+            stabilize: true,
+            stab_coef: 0.3,
+            loo: true,
+        }
+    }
+}
+
+/// True spectral-density description m(r) = c_m·g(r) for our kernels, in
+/// the e^{−2πi⟨x,s⟩} Fourier convention (∫ m = K(0) = 1).
+pub struct SpectralDensity {
+    pub d: usize,
+    pub spec: KernelSpec,
+    /// Matérn: C_m with m(r) = C_m (a² + 4π²r²)^{−α}.
+    pub matern_cm: f64,
+    pub alpha: f64,
+}
+
+impl SpectralDensity {
+    pub fn new(kernel: &Kernel, d: usize) -> Self {
+        match kernel.spec {
+            KernelSpec::Matern { nu, a } => {
+                let alpha = nu + d as f64 / 2.0;
+                // C_m = 2^d π^{d/2} Γ(α) a^{2ν} / Γ(ν)
+                let ln_cm = d as f64 * std::f64::consts::LN_2
+                    + (d as f64 / 2.0) * PI.ln()
+                    + lgamma(alpha)
+                    + 2.0 * nu * a.ln()
+                    - lgamma(nu);
+                SpectralDensity { d, spec: kernel.spec, matern_cm: ln_cm.exp(), alpha }
+            }
+            KernelSpec::Gaussian { .. } => {
+                SpectralDensity { d, spec: kernel.spec, matern_cm: 0.0, alpha: f64::INFINITY }
+            }
+        }
+    }
+
+    /// m(r) at radial frequency r.
+    pub fn eval(&self, r: f64) -> f64 {
+        match self.spec {
+            KernelSpec::Matern { a, .. } => {
+                self.matern_cm * (a * a + 4.0 * PI * PI * r * r).powf(-self.alpha)
+            }
+            KernelSpec::Gaussian { sigma } => {
+                (2.0 * PI * sigma * sigma).powf(self.d as f64 / 2.0)
+                    * (-2.0 * PI * PI * sigma * sigma * r * r).exp()
+            }
+        }
+    }
+}
+
+/// Evaluate K̃_λ(x,x) for a single density value p — closed form.
+pub fn sa_value_closed_form(p: f64, sd: &SpectralDensity, lambda: f64) -> f64 {
+    let d = sd.d as f64;
+    match sd.spec {
+        KernelSpec::Matern { .. } => {
+            let alpha = sd.alpha;
+            // ∫ r^{d−1}/(p + B r^{2α}) dr with B = λ(2π)^{2α}/C_m, then
+            // × ω_{d−1}:  value = ω_{d−1} p^{d/2α−1} B^{−d/2α} (π/2α)/sin(πd/2α)
+            let b = lambda * (2.0 * PI).powf(2.0 * alpha) / sd.matern_cm;
+            let s = PI / (2.0 * alpha) / (PI * d / (2.0 * alpha)).sin();
+            sphere_surface(sd.d) * p.powf(d / (2.0 * alpha) - 1.0) * b.powf(-d / (2.0 * alpha))
+                * s
+        }
+        KernelSpec::Gaussian { sigma } => {
+            // K̃ = −Li_{d/2}(−y)/(p c), y = p c / λ, c = (2πσ²)^{d/2}
+            let c = (2.0 * PI * sigma * sigma).powf(d / 2.0);
+            let y = p * c / lambda;
+            -polylog_neg(d / 2.0, y) / (p * c)
+        }
+    }
+}
+
+/// Evaluate K̃_λ(x,x) by polar-reduced quadrature (Appendix D.1):
+/// ω_{d−1} ∫₀^∞ r^{d−1}/(p + λ/m(r)) dr.
+pub fn sa_value_quadrature(
+    p: f64,
+    sd: &SpectralDensity,
+    lambda: f64,
+    gl: &GaussLegendre,
+) -> f64 {
+    let d = sd.d as f64;
+    // characteristic radius where λ/m(r) ≈ p — center the panels there
+    let r0 = match sd.spec {
+        KernelSpec::Matern { a, .. } => {
+            let t = (p * sd.matern_cm / lambda).powf(1.0 / (2.0 * sd.alpha));
+            ((t - a * a).max(1.0)).sqrt() / (2.0 * PI)
+        }
+        KernelSpec::Gaussian { sigma } => {
+            let c = (2.0 * PI * sigma * sigma).powf(d / 2.0);
+            let y = (p * c / lambda).max(2.0);
+            (y.ln()).sqrt() / (PI * sigma * 2.0f64.sqrt()) + 1.0
+        }
+    };
+    let f = |r: f64| {
+        let m = sd.eval(r);
+        if m <= 0.0 {
+            return 0.0;
+        }
+        r.powf(d - 1.0) / (p + lambda / m)
+    };
+    sphere_surface(sd.d) * integrate_semi_infinite_panels(gl, r0.max(1e-6), &f, 1e-10, 120)
+}
+
+/// Apply §B.3 stabilization to a density estimate.
+pub fn stabilize_density(p: f64, n: usize, coef: f64) -> f64 {
+    let h0 = coef * (n as f64).powf(-0.8);
+    if p < h0 {
+        (0.5 * h0 + p) / 1.5
+    } else {
+        p
+    }
+}
+
+/// Table-driven polylog for the Gaussian closed form.
+///
+/// One SA estimate needs Li_{d/2}(−y_i) at n different y_i — each a
+/// (cheap but not free) Fermi–Dirac quadrature. F(u) = ln(−Li_s(−e^u))
+/// is smooth and monotone, so 256 knots of linear interpolation over the
+/// observed ln-y range give ~1e-5 relative error at O(1) per point,
+/// turning the Gaussian SA pass from O(n·quad) into O(n) (§Perf: 42s →
+/// sub-second at n=10⁴, d=10).
+struct PolylogTable {
+    s: f64,
+    lo: f64,
+    hi: f64,
+    step: f64,
+    /// F(u) = ln(−Li_s(−e^u)) at the knots.
+    f: Vec<f64>,
+}
+
+impl PolylogTable {
+    fn new(s: f64, y_min: f64, y_max: f64) -> PolylogTable {
+        let lo = y_min.max(1e-290).ln() - 1e-9;
+        let hi = y_max.max(y_min.max(1e-290) * (1.0 + 1e-9)).ln() + 1e-9;
+        let knots = 256usize;
+        let step = (hi - lo) / (knots - 1) as f64;
+        let f = (0..knots)
+            .map(|i| {
+                let y = (lo + i as f64 * step).exp();
+                (-polylog_neg(s, y)).max(1e-300).ln()
+            })
+            .collect();
+        PolylogTable { s, lo, hi, step, f }
+    }
+
+    /// −Li_s(−y) via interpolation (falls back to direct evaluation
+    /// outside the table range).
+    fn neg_li(&self, y: f64) -> f64 {
+        let u = y.max(1e-290).ln();
+        if u < self.lo || u > self.hi {
+            return -polylog_neg(self.s, y);
+        }
+        let t = (u - self.lo) / self.step;
+        let i = (t as usize).min(self.f.len() - 2);
+        let w = t - i as f64;
+        (self.f[i] * (1.0 - w) + self.f[i + 1] * w).exp()
+    }
+}
+
+impl SaEstimator {
+    /// Densities → scores (the post-KDE half of Algorithm 1). Exposed so
+    /// Figure 2 can feed true densities.
+    pub fn scores_from_density(
+        &self,
+        p_hat: &[f64],
+        kernel: &Kernel,
+        lambda: f64,
+        d: usize,
+    ) -> Vec<f64> {
+        let sd = SpectralDensity::new(kernel, d);
+        let n = p_hat.len();
+        let gl = GaussLegendre::new(32);
+        let stab = |p: f64| {
+            let p = p.max(1e-300);
+            if self.stabilize {
+                stabilize_density(p, n, self.stab_coef)
+            } else {
+                p
+            }
+        };
+        match self.integration {
+            SaIntegration::ClosedForm => {
+                // Gaussian fast path: one polylog table, O(1) per point.
+                if let KernelSpec::Gaussian { sigma } = sd.spec {
+                    if n > 64 {
+                        let c = (2.0 * PI * sigma * sigma).powf(d as f64 / 2.0);
+                        let ys: Vec<f64> =
+                            p_hat.iter().map(|&p| stab(p) * c / lambda).collect();
+                        let (y_min, y_max) = ys.iter().fold(
+                            (f64::INFINITY, 0.0_f64),
+                            |(lo, hi), &y| (lo.min(y), hi.max(y)),
+                        );
+                        let table = PolylogTable::new(d as f64 / 2.0, y_min, y_max);
+                        // K̃ = −Li_{d/2}(−y)/(p·c) and p·c = y·λ
+                        return ys.iter().map(|&y| table.neg_li(y) / (y * lambda)).collect();
+                    }
+                }
+                p_hat.iter().map(|&p| sa_value_closed_form(stab(p), &sd, lambda)).collect()
+            }
+            SaIntegration::Quadrature => {
+                let out = crate::util::par_ranges(n, crate::util::default_threads(), |r| {
+                    r.map(|i| sa_value_quadrature(stab(p_hat[i]), &sd, lambda, &gl))
+                        .collect::<Vec<_>>()
+                });
+                out.into_iter().flatten().collect()
+            }
+        }
+    }
+}
+
+impl LeverageEstimator for SaEstimator {
+    fn name(&self) -> &'static str {
+        match self.integration {
+            SaIntegration::ClosedForm => "sa",
+            SaIntegration::Quadrature => "sa-quadrature",
+        }
+    }
+
+    fn estimate(&self, ctx: &LeverageContext, rng: &mut Rng) -> Vec<f64> {
+        let n = ctx.n();
+        let p_hat: Vec<f64> = if self.use_true_density {
+            ctx.p_true
+                .expect("use_true_density requires ctx.p_true")
+                .to_vec()
+        } else {
+            let h = self
+                .bandwidth
+                .unwrap_or_else(|| kde::bandwidth::scott(n, ctx.d()));
+            let mut p = kde::density_at_points(ctx.x, h, self.kde, rng);
+            if self.loo {
+                for pi in &mut p {
+                    *pi = kde::loo_correct(*pi, n, ctx.d(), h);
+                }
+            }
+            p
+        };
+        self.scores_from_density(&p_hat, ctx.kernel, ctx.lambda, ctx.d())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{Kernel, KernelSpec};
+    use crate::quadrature::integrate_semi_infinite;
+
+    fn rel(a: f64, b: f64) -> f64 {
+        (a - b).abs() / b.abs().max(1e-300)
+    }
+
+    #[test]
+    fn spectral_density_integrates_to_one() {
+        // ∫_{R^d} m(s) ds = K(0) = 1 for the true-constant Matérn density.
+        for (nu, d) in [(0.5f64, 1usize), (1.5, 1), (1.5, 3), (2.5, 3), (0.5, 5)] {
+            let a = (2.0 * nu).sqrt();
+            let k = Kernel::new(KernelSpec::Matern { nu, a });
+            let sd = SpectralDensity::new(&k, d);
+            let omega = sphere_surface(d);
+            let got = integrate_semi_infinite(
+                |r| sd.eval(r) * omega * r.powi(d as i32 - 1),
+                1e-12,
+            );
+            assert!(rel(got, 1.0) < 1e-5, "nu={nu} d={d}: ∫m = {got}");
+        }
+    }
+
+    #[test]
+    fn spectral_density_matches_kernel_by_inverse_transform_1d() {
+        // 1-d check: K(u) = ∫ m(r) e^{2πiru} dr = 2∫₀^∞ m(r)cos(2πru) dr.
+        let nu = 1.5f64;
+        let a = (2.0 * nu).sqrt();
+        let k = Kernel::new(KernelSpec::Matern { nu, a });
+        let sd = SpectralDensity::new(&k, 1);
+        for &u in &[0.1, 0.5, 1.0] {
+            let got = integrate_semi_infinite(
+                |r| 2.0 * sd.eval(r) * (2.0 * PI * r * u).cos(),
+                1e-11,
+            );
+            let want = k.eval_sq(u * u);
+            assert!(rel(got, want) < 1e-4, "u={u}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn closed_form_matches_quadrature_matern() {
+        let gl = GaussLegendre::new(32);
+        for (nu, d) in [(1.5f64, 1usize), (1.5, 3), (0.5, 3), (2.5, 2)] {
+            let a = (2.0 * nu).sqrt();
+            let k = Kernel::new(KernelSpec::Matern { nu, a });
+            let sd = SpectralDensity::new(&k, d);
+            let lambda = 1e-5; // closed form is exact as λ→0
+            for &p in &[0.2, 1.0, 5.0] {
+                let cf = sa_value_closed_form(p, &sd, lambda);
+                let q = sa_value_quadrature(p, &sd, lambda, &gl);
+                assert!(
+                    rel(cf, q) < 0.05,
+                    "nu={nu} d={d} p={p}: closed={cf} quad={q}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn closed_form_matches_quadrature_gaussian() {
+        let gl = GaussLegendre::new(48);
+        for d in [1usize, 3] {
+            let k = Kernel::new(KernelSpec::Gaussian { sigma: 0.4 });
+            let sd = SpectralDensity::new(&k, d);
+            for &(p, lambda) in &[(1.0, 1e-3), (0.3, 1e-5), (4.0, 1e-4)] {
+                let cf = sa_value_closed_form(p, &sd, lambda);
+                let q = sa_value_quadrature(p, &sd, lambda, &gl);
+                assert!(rel(cf, q) < 0.02, "d={d} p={p} λ={lambda}: {cf} vs {q}");
+            }
+        }
+    }
+
+    #[test]
+    fn sa_decreasing_in_density() {
+        // The paper's rule of thumb: leverage larger where density smaller.
+        let k = Kernel::new(KernelSpec::Matern { nu: 1.5, a: 1.0 });
+        let sd = SpectralDensity::new(&k, 3);
+        let lambda = 1e-4;
+        let v_low = sa_value_closed_form(0.05, &sd, lambda);
+        let v_hi = sa_value_closed_form(5.0, &sd, lambda);
+        assert!(v_low > v_hi, "{v_low} vs {v_hi}");
+        // exponent check: K̃ ∝ p^{d/2α−1} ⇒ ratio = (p1/p2)^{d/2α−1}
+        let alpha = 1.5 + 1.5;
+        let want = (0.05f64 / 5.0).powf(3.0 / (2.0 * alpha) - 1.0);
+        assert!(rel(v_low / v_hi, want) < 1e-9);
+    }
+
+    #[test]
+    fn stabilization_only_lifts_small_densities() {
+        let n = 10_000;
+        let h0 = 0.3 * (n as f64).powf(-0.8);
+        assert_eq!(stabilize_density(1.0, n, 0.3), 1.0);
+        let tiny = h0 / 10.0;
+        let s = stabilize_density(tiny, n, 0.3);
+        assert!(s > tiny && s < h0, "{tiny} → {s} (h0={h0})");
+    }
+
+    #[test]
+    fn gaussian_table_fast_path_matches_direct() {
+        // The polylog interpolation table must agree with per-point
+        // closed-form evaluation to ≪ KDE error.
+        let k = Kernel::new(KernelSpec::Gaussian { sigma: 0.9 });
+        let d = 5;
+        let sd = SpectralDensity::new(&k, d);
+        let lambda = 3e-4;
+        let est = SaEstimator { stabilize: false, ..Default::default() };
+        let mut rng = Rng::seed_from_u64(3);
+        let p_hat: Vec<f64> = (0..500).map(|_| 10f64.powf(rng.range(-6.0, 2.0))).collect();
+        let fast = est.scores_from_density(&p_hat, &k, lambda, d);
+        for (i, &p) in p_hat.iter().enumerate() {
+            let direct = sa_value_closed_form(p, &sd, lambda);
+            assert!(
+                rel(fast[i], direct) < 1e-4,
+                "i={i} p={p}: fast {} vs direct {direct}",
+                fast[i]
+            );
+        }
+    }
+
+    #[test]
+    fn sa_tracks_exact_leverage_1d_uniform() {
+        // Mini Figure-2: SA with true density vs exact G on Unif[0,1].
+        // Interior points (away from the boundary, where Assumption 4
+        // holds comfortably) must agree within ~20% at n=1500.
+        use crate::data::{dist1d, Dist1d};
+        let mut rng = Rng::seed_from_u64(4);
+        let n = 1500;
+        let ds = dist1d(Dist1d::Uniform, n, &mut rng);
+        let nu = 1.5f64;
+        let k = Kernel::new(KernelSpec::Matern { nu, a: (2.0 * nu).sqrt() });
+        let lam = crate::krr::lambda::fig2(n);
+        let g = crate::leverage::exact::rescaled_leverage_exact(&ds.x, &k, lam);
+        let est = SaEstimator { use_true_density: true, ..Default::default() };
+        let ctx = crate::leverage::LeverageContext {
+            x: &ds.x,
+            kernel: &k,
+            lambda: lam,
+            p_true: ds.p_true.as_deref(),
+            inner_m: 16,
+        };
+        let sa = est.estimate(&ctx, &mut rng);
+        let mut rels = Vec::new();
+        for i in 0..n {
+            let xi = ds.x[(i, 0)];
+            if (0.15..=0.85).contains(&xi) {
+                rels.push(rel(sa[i], g[i]));
+            }
+        }
+        rels.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = rels[rels.len() / 2];
+        assert!(med < 0.2, "median interior relative error {med}");
+    }
+}

@@ -1,0 +1,77 @@
+//! # leverkrr
+//!
+//! A kernel-ridge-regression framework built around the paper
+//! *Fast Statistical Leverage Score Approximation in Kernel Ridge
+//! Regression* (Chen & Yang, 2021).
+//!
+//! The headline feature is the paper's **SA (spectral-analysis) leverage
+//! score estimator**: for a stationary kernel with spectral density `m(s)`
+//! and input density `p`, the rescaled statistical leverage score
+//! `G_λ(x_i, x_i)` (the i-th diagonal of `n·K(K+nλI)^{-1}`) is approximated
+//! by the analytic formula
+//!
+//! ```text
+//! K̃_λ(x_i, x_i) = ∫_{R^d}  ds / ( p(x_i) + λ / m(s) )
+//! ```
+//!
+//! which needs only (a) a kernel-density estimate of `p` at the design
+//! points and (b) a one-dimensional integral (after polar reduction) — an
+//! Õ(n) total, versus O(n³) for exact scores and Õ(n·d_stat²) for the
+//! algebraic approximations (Recursive-RLS, BLESS) the paper compares
+//! against. The scores drive importance-sampled Nyström approximation of
+//! KRR with provably optimal in-sample risk (paper Thms 5–6).
+//!
+//! ## Crate layout
+//!
+//! * [`util`] — zero-dependency substrates: RNG, JSON, CLI, property tests.
+//! * [`metrics`] — timers / counters / streaming summaries.
+//! * [`linalg`] — dense row-major matrices, blocked matmul, Cholesky.
+//! * [`special`] — Γ, erf, modified Bessel K_ν, polylogarithm Li_s.
+//! * [`quadrature`] — Gauss–Legendre and adaptive rules.
+//! * [`kernels`] — Matérn / Gaussian kernels and their spectral densities.
+//! * [`kde`] — exact and fast kernel density estimation.
+//! * [`data`] — the paper's synthetic designs + UCI-like dataset simulators.
+//! * [`leverage`] — SA (this paper), exact, uniform, Recursive-RLS, BLESS.
+//! * [`nystrom`] — importance-sampled Nyström KRR solver.
+//! * [`krr`] — exact KRR (ground truth) and risk metrics.
+//! * [`runtime`] — PJRT engine executing AOT-lowered JAX/Pallas artifacts.
+//! * [`coordinator`] — fit pipeline + dynamic-batching predict server.
+//! * [`bench_harness`] — timing harness used by `rust/benches/*`.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use leverkrr::prelude::*;
+//!
+//! let mut rng = Rng::seed_from_u64(0);
+//! let ds = leverkrr::data::bimodal3(4000, 0.4, &mut rng);
+//! let cfg = FitConfig::default_for(&ds);
+//! let model = leverkrr::coordinator::fit(&ds, &cfg).unwrap();
+//! let pred = model.predict_batch(&ds.x);
+//! println!("in-sample mse = {}", leverkrr::krr::mse(&pred, &ds.f_true));
+//! ```
+
+pub mod util;
+pub mod metrics;
+pub mod linalg;
+pub mod special;
+pub mod quadrature;
+pub mod kernels;
+pub mod kde;
+pub mod data;
+pub mod leverage;
+pub mod nystrom;
+pub mod krr;
+pub mod kmethods;
+pub mod runtime;
+pub mod coordinator;
+pub mod bench_harness;
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::coordinator::{fit, FitConfig, FittedModel};
+    pub use crate::data::Dataset;
+    pub use crate::kernels::{Kernel, KernelSpec};
+    pub use crate::leverage::{LeverageEstimator, LeverageMethod};
+    pub use crate::util::rng::Rng;
+}

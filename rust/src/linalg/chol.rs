@@ -1,0 +1,294 @@
+//! Cholesky factorization and SPD solves.
+//!
+//! The workhorse of the whole stack:
+//! * exact KRR: solve (K_n + nλI)ω = y,
+//! * exact leverage scores: diag(K(K+nλI)^{-1}) via forward solves,
+//! * Nyström: factor K_mm and the m×m normal-equations matrix,
+//! * approximate-RLS dictionaries (Recursive-RLS / BLESS inner step).
+//!
+//! `Cholesky::factor_jittered` retries with growing diagonal jitter — the
+//! Nyström K_JJ block is PSD but frequently numerically singular when the
+//! same column is sampled twice (sampling is with replacement).
+
+use super::mat::Mat;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct CholError {
+    /// Index of the first non-positive pivot.
+    pub pivot: usize,
+    pub value: f64,
+}
+
+impl std::fmt::Display for CholError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "cholesky failed: pivot {} = {:.3e} not positive", self.pivot, self.value)
+    }
+}
+
+impl std::error::Error for CholError {}
+
+/// In-place lower Cholesky of row-major `a` (n×n). On success `a` holds L
+/// in its lower triangle (upper triangle untouched).
+pub fn chol_in_place(a: &mut [f64], n: usize) -> Result<(), CholError> {
+    assert_eq!(a.len(), n * n);
+    for j in 0..n {
+        // d = a[j][j] - sum_k L[j][k]^2
+        let mut d = a[j * n + j];
+        for k in 0..j {
+            let l = a[j * n + k];
+            d -= l * l;
+        }
+        if d <= 0.0 || !d.is_finite() {
+            return Err(CholError { pivot: j, value: d });
+        }
+        let djj = d.sqrt();
+        a[j * n + j] = djj;
+        let inv = 1.0 / djj;
+        // update column j below the diagonal: L[i][j] = (a[i][j] - Σ L[i][k]L[j][k]) / L[j][j]
+        for i in (j + 1)..n {
+            let mut s = a[i * n + j];
+            // dot of rows i and j over [0, j)
+            let (ri, rj) = (&a[i * n..i * n + j], &a[j * n..j * n + j]);
+            s -= super::dot(ri, rj);
+            a[i * n + j] = s * inv;
+        }
+    }
+    Ok(())
+}
+
+/// Lower-triangular Cholesky factor with solve helpers.
+#[derive(Clone, Debug)]
+pub struct Cholesky {
+    /// L stored row-major in the lower triangle of an n×n buffer.
+    l: Vec<f64>,
+    n: usize,
+    /// Jitter actually applied to the diagonal (0.0 if none was needed).
+    pub jitter: f64,
+}
+
+impl Cholesky {
+    /// Factor a (copied) SPD matrix.
+    pub fn factor(a: &Mat) -> Result<Cholesky, CholError> {
+        assert_eq!(a.rows, a.cols, "cholesky needs a square matrix");
+        let n = a.rows;
+        let mut l = a.data.clone();
+        chol_in_place(&mut l, n)?;
+        Ok(Cholesky { l, n, jitter: 0.0 })
+    }
+
+    /// Factor with escalating diagonal jitter: tries τ·scale for
+    /// τ ∈ {0, 1e-12, 1e-10, …, 1e-2}, scale = mean diagonal magnitude.
+    pub fn factor_jittered(a: &Mat) -> Result<Cholesky, CholError> {
+        let n = a.rows;
+        let scale = (0..n).map(|i| a[(i, i)].abs()).sum::<f64>() / n.max(1) as f64;
+        let scale = if scale > 0.0 { scale } else { 1.0 };
+        let mut last_err = None;
+        for &tau in &[0.0, 1e-12, 1e-10, 1e-8, 1e-6, 1e-4, 1e-2] {
+            let mut l = a.data.clone();
+            if tau > 0.0 {
+                for i in 0..n {
+                    l[i * n + i] += tau * scale;
+                }
+            }
+            match chol_in_place(&mut l, n) {
+                Ok(()) => return Ok(Cholesky { l, n, jitter: tau * scale }),
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(last_err.unwrap())
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    fn l(&self, i: usize, j: usize) -> f64 {
+        self.l[i * self.n + j]
+    }
+
+    /// Solve L z = b (forward substitution), in place.
+    pub fn solve_lower_in_place(&self, b: &mut [f64]) {
+        let n = self.n;
+        assert_eq!(b.len(), n);
+        for i in 0..n {
+            let s = super::dot(&self.l[i * n..i * n + i], &b[..i]);
+            b[i] = (b[i] - s) / self.l(i, i);
+        }
+    }
+
+    /// Solve Lᵀ z = b (backward substitution), in place.
+    pub fn solve_upper_in_place(&self, b: &mut [f64]) {
+        let n = self.n;
+        assert_eq!(b.len(), n);
+        for i in (0..n).rev() {
+            let mut s = b[i];
+            for k in (i + 1)..n {
+                s -= self.l(k, i) * b[k];
+            }
+            b[i] = s / self.l(i, i);
+        }
+    }
+
+    /// Solve A x = b.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let mut x = b.to_vec();
+        self.solve_lower_in_place(&mut x);
+        self.solve_upper_in_place(&mut x);
+        x
+    }
+
+    /// Solve A X = B column-wise for row-major B (n×k). Multithreaded
+    /// over columns for wide right-hand sides (the exact-leverage path
+    /// solves n right-hand sides).
+    pub fn solve_mat(&self, b: &Mat) -> Mat {
+        assert_eq!(b.rows, self.n);
+        let bt = b.transpose(); // columns become contiguous rows
+        let nt = crate::util::default_threads();
+        let solved = crate::util::par_ranges(bt.rows, nt, |range| {
+            let mut out = Vec::with_capacity(range.len() * self.n);
+            for c in range {
+                let mut col = bt.row(c).to_vec();
+                self.solve_lower_in_place(&mut col);
+                self.solve_upper_in_place(&mut col);
+                out.extend(col);
+            }
+            out
+        });
+        let mut xt = Mat { rows: bt.rows, cols: self.n, data: solved.into_iter().flatten().collect() };
+        xt = xt.transpose();
+        xt
+    }
+
+    /// log det A = 2 Σ log L_ii.
+    pub fn logdet(&self) -> f64 {
+        (0..self.n).map(|i| self.l(i, i).ln()).sum::<f64>() * 2.0
+    }
+
+    /// ‖L^{-1} b‖² — the quadratic form bᵀ A^{-1} b.
+    pub fn quad_form(&self, b: &[f64]) -> f64 {
+        let mut z = b.to_vec();
+        self.solve_lower_in_place(&mut z);
+        z.iter().map(|x| x * x).sum()
+    }
+
+    /// Reconstruct A = L Lᵀ (test helper).
+    pub fn reconstruct(&self) -> Mat {
+        let n = self.n;
+        Mat::from_fn(n, n, |i, j| {
+            let m = i.min(j);
+            (0..=m).map(|k| self.l(i, k) * self.l(j, k)).sum()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::gen;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn factor_reconstructs() {
+        let mut rng = Rng::seed_from_u64(10);
+        for &n in &[1usize, 2, 5, 20, 60] {
+            let a = Mat { rows: n, cols: n, data: gen::spd(&mut rng, n, 0.5) };
+            let ch = Cholesky::factor(&a).unwrap();
+            let back = ch.reconstruct();
+            assert!(back.max_abs_diff(&a) < 1e-8 * (1.0 + a.fro()), "n={n}");
+        }
+    }
+
+    #[test]
+    fn solve_inverts() {
+        let mut rng = Rng::seed_from_u64(12);
+        for &n in &[1usize, 3, 10, 50] {
+            let a = Mat { rows: n, cols: n, data: gen::spd(&mut rng, n, 1.0) };
+            let ch = Cholesky::factor(&a).unwrap();
+            let x_true: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b = super::super::matvec(&a, &x_true);
+            let x = ch.solve(&b);
+            for i in 0..n {
+                assert!((x[i] - x_true[i]).abs() < 1e-6, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn solve_mat_matches_columnwise() {
+        let mut rng = Rng::seed_from_u64(13);
+        let n = 12;
+        let k = 7;
+        let a = Mat { rows: n, cols: n, data: gen::spd(&mut rng, n, 1.0) };
+        let b = Mat::from_fn(n, k, |_, _| rng.normal());
+        let ch = Cholesky::factor(&a).unwrap();
+        let x = ch.solve_mat(&b);
+        for j in 0..k {
+            let col: Vec<f64> = (0..n).map(|i| b[(i, j)]).collect();
+            let want = ch.solve(&col);
+            for i in 0..n {
+                assert!((x[(i, j)] - want[i]).abs() < 1e-10);
+            }
+        }
+        // A·X ≈ B
+        let ax = a.matmul(&x);
+        assert!(ax.max_abs_diff(&b) < 1e-6);
+    }
+
+    #[test]
+    fn fails_on_indefinite() {
+        let a = Mat::from_rows(vec![vec![1.0, 2.0], vec![2.0, 1.0]]); // eigvals 3, -1
+        assert!(Cholesky::factor(&a).is_err());
+    }
+
+    #[test]
+    fn jitter_rescues_singular_psd() {
+        // rank-1 PSD matrix: plain factor fails at pivot 1, jittered works.
+        let a = Mat::from_rows(vec![vec![1.0, 1.0], vec![1.0, 1.0]]);
+        assert!(Cholesky::factor(&a).is_err());
+        let ch = Cholesky::factor_jittered(&a).unwrap();
+        assert!(ch.jitter > 0.0);
+        let x = ch.solve(&[1.0, 1.0]);
+        // solution of (A + τI)x = b stays finite
+        assert!(x.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn logdet_matches_2x2() {
+        let a = Mat::from_rows(vec![vec![4.0, 1.0], vec![1.0, 3.0]]);
+        let ch = Cholesky::factor(&a).unwrap();
+        assert!((ch.logdet() - (4.0f64 * 3.0 - 1.0).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quad_form_matches_solve() {
+        let mut rng = Rng::seed_from_u64(14);
+        let n = 9;
+        let a = Mat { rows: n, cols: n, data: gen::spd(&mut rng, n, 1.0) };
+        let ch = Cholesky::factor(&a).unwrap();
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let q = ch.quad_form(&b);
+        let x = ch.solve(&b);
+        let want: f64 = b.iter().zip(&x).map(|(bi, xi)| bi * xi).sum();
+        assert!((q - want).abs() < 1e-8);
+    }
+
+    #[test]
+    fn prop_chol_diag_positive() {
+        crate::util::prop::check(
+            77,
+            60,
+            |rng| {
+                let n = 1 + rng.usize(12);
+                (n, gen::spd(rng, n, 0.3))
+            },
+            |(n, data)| {
+                let a = Mat { rows: *n, cols: *n, data: data.clone() };
+                match Cholesky::factor(&a) {
+                    Ok(ch) => (0..*n).all(|i| ch.l(i, i) > 0.0),
+                    Err(_) => false,
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,170 @@
+//! Symmetric eigendecomposition (cyclic Jacobi) — substrate for kernel
+//! PCA and for spectrum diagnostics (statistical-dimension ablations).
+//!
+//! Jacobi is O(n³) per sweep with quadratic convergence; for the m×m
+//! matrices we decompose (Nyström landmark blocks, m ≤ a few thousand)
+//! it is simple, robust, and accurate to machine precision.
+
+use super::mat::Mat;
+
+/// Eigendecomposition A = V diag(w) Vᵀ of a symmetric matrix.
+/// Eigenvalues are returned in descending order with matching columns
+/// of V.
+pub struct SymEigen {
+    pub values: Vec<f64>,
+    /// Column-eigenvector matrix (n×n), `values[k]` ↔ column k.
+    pub vectors: Mat,
+}
+
+/// Cyclic Jacobi with threshold sweeps. `a` must be symmetric.
+pub fn sym_eigen(a: &Mat) -> SymEigen {
+    assert_eq!(a.rows, a.cols, "sym_eigen needs a square matrix");
+    let n = a.rows;
+    let mut m = a.clone();
+    let mut v = Mat::eye(n);
+    if n <= 1 {
+        return SymEigen { values: m.diag(), vectors: v };
+    }
+    let off = |m: &Mat| -> f64 {
+        let mut s = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                s += m[(i, j)] * m[(i, j)];
+            }
+        }
+        s
+    };
+    let fro2: f64 = m.data.iter().map(|x| x * x).sum();
+    let tol = 1e-28 * fro2.max(1e-300);
+    for _sweep in 0..100 {
+        if off(&m) <= tol {
+            break;
+        }
+        for p in 0..n - 1 {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p, q of M and columns of V
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    // sort descending
+    let mut order: Vec<usize> = (0..n).collect();
+    let diag = m.diag();
+    order.sort_by(|&i, &j| diag[j].partial_cmp(&diag[i]).unwrap());
+    let values: Vec<f64> = order.iter().map(|&i| diag[i]).collect();
+    let vectors = Mat::from_fn(n, n, |i, k| v[(i, order[k])]);
+    SymEigen { values, vectors }
+}
+
+/// Top-k eigenpairs (convenience wrapper).
+pub fn top_k(a: &Mat, k: usize) -> (Vec<f64>, Mat) {
+    let e = sym_eigen(a);
+    let k = k.min(a.rows);
+    let vals = e.values[..k].to_vec();
+    let vecs = Mat::from_fn(a.rows, k, |i, j| e.vectors[(i, j)]);
+    (vals, vecs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::gen;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn diagonal_matrix_eigen() {
+        let mut a = Mat::zeros(3, 3);
+        a[(0, 0)] = 1.0;
+        a[(1, 1)] = 5.0;
+        a[(2, 2)] = 3.0;
+        let e = sym_eigen(&a);
+        assert!((e.values[0] - 5.0).abs() < 1e-12);
+        assert!((e.values[1] - 3.0).abs() < 1e-12);
+        assert!((e.values[2] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reconstructs_random_spd() {
+        let mut rng = Rng::seed_from_u64(1);
+        for &n in &[2usize, 5, 12, 30] {
+            let a = Mat { rows: n, cols: n, data: gen::spd(&mut rng, n, 0.1) };
+            let e = sym_eigen(&a);
+            // A v_k = w_k v_k
+            for k in 0..n {
+                let vk: Vec<f64> = (0..n).map(|i| e.vectors[(i, k)]).collect();
+                let av = crate::linalg::matvec(&a, &vk);
+                for i in 0..n {
+                    assert!(
+                        (av[i] - e.values[k] * vk[i]).abs() < 1e-7 * (1.0 + a.fro()),
+                        "n={n} k={k} i={i}"
+                    );
+                }
+            }
+            // descending order, PSD-ish values
+            for k in 1..n {
+                assert!(e.values[k - 1] >= e.values[k] - 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal() {
+        let mut rng = Rng::seed_from_u64(2);
+        let n = 15;
+        let a = Mat { rows: n, cols: n, data: gen::spd(&mut rng, n, 0.5) };
+        let e = sym_eigen(&a);
+        let vtv = e.vectors.transpose().matmul(&e.vectors);
+        assert!(vtv.max_abs_diff(&Mat::eye(n)) < 1e-9);
+    }
+
+    #[test]
+    fn trace_and_logdet_invariants() {
+        let mut rng = Rng::seed_from_u64(3);
+        let n = 10;
+        let a = Mat { rows: n, cols: n, data: gen::spd(&mut rng, n, 1.0) };
+        let e = sym_eigen(&a);
+        let tr: f64 = a.diag().iter().sum();
+        let sum_w: f64 = e.values.iter().sum();
+        assert!((tr - sum_w).abs() < 1e-9 * tr.abs());
+        let chol = crate::linalg::Cholesky::factor(&a).unwrap();
+        let logdet_w: f64 = e.values.iter().map(|w| w.ln()).sum();
+        assert!((chol.logdet() - logdet_w).abs() < 1e-8 * logdet_w.abs().max(1.0));
+    }
+
+    #[test]
+    fn top_k_truncates() {
+        let mut rng = Rng::seed_from_u64(4);
+        let n = 8;
+        let a = Mat { rows: n, cols: n, data: gen::spd(&mut rng, n, 0.2) };
+        let (vals, vecs) = top_k(&a, 3);
+        assert_eq!(vals.len(), 3);
+        assert_eq!((vecs.rows, vecs.cols), (n, 3));
+    }
+}

@@ -1,0 +1,258 @@
+//! Row-major dense matrix and blocked multithreaded products.
+
+use std::ops::{Index, IndexMut};
+
+/// Row-major dense f64 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f64>>) -> Self {
+        let r = rows.len();
+        let c = rows.first().map(|x| x.len()).unwrap_or(0);
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    pub fn diag(&self) -> Vec<f64> {
+        (0..self.rows.min(self.cols)).map(|i| self[(i, i)]).collect()
+    }
+
+    /// Add `v` to the diagonal in place.
+    pub fn add_diag(&mut self, v: f64) {
+        for i in 0..self.rows.min(self.cols) {
+            self[(i, i)] += v;
+        }
+    }
+
+    pub fn scale(&mut self, s: f64) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn fro(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Max |a_ij − b_ij|.
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// C = A · B, blocked over rows of A with one thread per row range and
+    /// an ikj inner ordering (streams B rows; vectorizes the j loop).
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, b.cols);
+        let nt = if m * k * n > 64 * 64 * 64 { crate::util::default_threads() } else { 1 };
+        let row_blocks = crate::util::par_ranges(m, nt, |range| {
+            let mut block = vec![0.0; range.len() * n];
+            for (bi, i) in range.clone().enumerate() {
+                let a_row = self.row(i);
+                let out = &mut block[bi * n..(bi + 1) * n];
+                for (kk, &aik) in a_row.iter().enumerate().take(k) {
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let b_row = b.row(kk);
+                    for j in 0..n {
+                        out[j] += aik * b_row[j];
+                    }
+                }
+            }
+            block
+        });
+        let mut data = Vec::with_capacity(m * n);
+        for blk in row_blocks {
+            data.extend(blk);
+        }
+        Mat { rows: m, cols: n, data }
+    }
+
+    /// C = Aᵀ · A  (m×m from n×m input), symmetric; computes the upper
+    /// triangle and mirrors. Multithreaded over column pairs.
+    pub fn gram(&self) -> Mat {
+        let (n, m) = (self.rows, self.cols);
+        let nt = if n * m * m > 64 * 64 * 64 { crate::util::default_threads() } else { 1 };
+        // accumulate per-thread partial Grams over row ranges, then reduce:
+        // cache-friendlier than the column-pair loop for row-major data.
+        let partials = crate::util::par_ranges(n, nt, |range| {
+            let mut g = vec![0.0; m * m];
+            for i in range {
+                let r = self.row(i);
+                for a in 0..m {
+                    let ra = r[a];
+                    if ra == 0.0 {
+                        continue;
+                    }
+                    let row_out = &mut g[a * m..(a + 1) * m];
+                    for bcol in a..m {
+                        row_out[bcol] += ra * r[bcol];
+                    }
+                }
+            }
+            g
+        });
+        let mut g = vec![0.0; m * m];
+        for p in partials {
+            for (gi, pi) in g.iter_mut().zip(&p) {
+                *gi += pi;
+            }
+        }
+        // mirror upper → lower
+        for a in 0..m {
+            for b in 0..a {
+                g[a * m + b] = g[b * m + a];
+            }
+        }
+        Mat { rows: m, cols: m, data: g }
+    }
+}
+
+impl Index<(usize, usize)> for Mat {
+    type Output = f64;
+
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for k in 0..a.cols {
+                    s += a[(i, k)] * b[(k, j)];
+                }
+                c[(i, j)] = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive_various_shapes() {
+        let mut rng = Rng::seed_from_u64(2);
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (2, 3, 4), (17, 9, 23), (70, 70, 70)] {
+            let a = Mat::from_fn(m, k, |_, _| rng.normal());
+            let b = Mat::from_fn(k, n, |_, _| rng.normal());
+            let c = a.matmul(&b);
+            let want = naive_matmul(&a, &b);
+            assert!(c.max_abs_diff(&want) < 1e-9, "shape ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::seed_from_u64(3);
+        let a = Mat::from_fn(5, 5, |_, _| rng.normal());
+        let i = Mat::eye(5);
+        assert!(a.matmul(&i).max_abs_diff(&a) < 1e-14);
+        assert!(i.matmul(&a).max_abs_diff(&a) < 1e-14);
+    }
+
+    #[test]
+    fn gram_matches_at_a() {
+        let mut rng = Rng::seed_from_u64(4);
+        for &(n, m) in &[(5usize, 3usize), (40, 17), (100, 8)] {
+            let a = Mat::from_fn(n, m, |_, _| rng.normal());
+            let g = a.gram();
+            let want = naive_matmul(&a.transpose(), &a);
+            assert!(g.max_abs_diff(&want) < 1e-9, "({n},{m})");
+            // symmetry
+            for i in 0..m {
+                for j in 0..m {
+                    assert!((g[(i, j)] - g[(j, i)]).abs() < 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::seed_from_u64(6);
+        let a = Mat::from_fn(7, 4, |_, _| rng.normal());
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn diag_and_add_diag() {
+        let mut a = Mat::eye(3);
+        a.add_diag(2.0);
+        assert_eq!(a.diag(), vec![3.0, 3.0, 3.0]);
+        assert_eq!(a[(0, 1)], 0.0);
+    }
+}

@@ -1,0 +1,415 @@
+//! `leverkrr` — CLI entrypoint.
+//!
+//! Subcommands:
+//! * `fit`        — fit a Nyström-KRR model on a dataset and report risk.
+//! * `leverage`   — estimate leverage scores and dump them (JSON).
+//! * `serve`      — fit then run the batched predict server demo.
+//! * `gen-data`   — write a synthetic dataset to CSV.
+//! * `bench-fig1` / `bench-table1` / `bench-fig2` / `bench-fig3` /
+//!   `bench-perf` — regenerate the paper's tables & figures.
+//! * `selftest`   — quick end-to-end sanity run (native + XLA if built).
+
+use leverkrr::bench_harness::{experiments, ExpOptions};
+use leverkrr::coordinator::{fit_with_backend, FitConfig, Server, ServerConfig};
+use leverkrr::data::{self, Dataset};
+use leverkrr::kernels::KernelSpec;
+use leverkrr::leverage::{LeverageContext, LeverageMethod};
+use leverkrr::runtime::Backend;
+use leverkrr::util::cli::Command;
+use leverkrr::util::json::Json;
+use leverkrr::util::rng::Rng;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = args.split_first() else {
+        print_usage();
+        std::process::exit(2);
+    };
+    let rest = rest.to_vec();
+    let code = match cmd.as_str() {
+        "fit" => cmd_fit(&rest),
+        "run" => cmd_run_config(&rest),
+        "tune" => cmd_tune(&rest),
+        "leverage" => cmd_leverage(&rest),
+        "serve" => cmd_serve(&rest),
+        "gen-data" => cmd_gen_data(&rest),
+        "bench-fig1" => {
+            experiments::fig1::run(&exp_opts("bench-fig1", &rest));
+            0
+        }
+        "bench-table1" => {
+            experiments::table1::run(&exp_opts("bench-table1", &rest));
+            0
+        }
+        "bench-fig2" => {
+            experiments::fig2::run(&exp_opts("bench-fig2", &rest));
+            0
+        }
+        "bench-fig3" => {
+            experiments::fig3::run(&exp_opts("bench-fig3", &rest));
+            0
+        }
+        "bench-perf" => {
+            experiments::perf::run(&exp_opts("bench-perf", &rest));
+            0
+        }
+        "bench-ablation" => {
+            experiments::ablation::run(&exp_opts("bench-ablation", &rest));
+            0
+        }
+        "selftest" => cmd_selftest(),
+        "--help" | "-h" | "help" => {
+            print_usage();
+            0
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n");
+            print_usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_usage() {
+    println!(
+        "leverkrr — fast statistical leverage score approximation for KRR (Chen & Yang 2021)
+
+usage: leverkrr <command> [flags]   (each command supports --help)
+
+commands:
+  fit          fit Nyström-KRR with a chosen leverage method, report risk
+  run          fit + serve from a JSON config file
+  tune         cross-validated λ grid search over fixed landmarks
+  leverage     estimate leverage scores, dump JSON
+  serve        fit + run the dynamic-batching predict server demo
+  gen-data     write a synthetic dataset (CSV)
+  bench-fig1   Figure 1: runtime vs error trade-off (3-d bimodal)
+  bench-table1 Table 1: leverage approximation accuracy (UCI-like)
+  bench-fig2   Figure 2: SA vs exact rescaled leverage (1-d)
+  bench-fig3   Figure 3: Gaussian kernels, growing dimension
+  bench-perf   §Perf hot-path microbenches
+  bench-ablation SA design-choice ablations
+  selftest     quick end-to-end sanity run"
+    );
+}
+
+fn exp_opts(name: &'static str, argv: &[String]) -> ExpOptions {
+    match ExpOptions::command(name, "see module docs").parse(argv) {
+        Ok(a) => ExpOptions::from_args(&a),
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Shared dataset flags → Dataset.
+fn dataset_from(a: &leverkrr::util::cli::Args) -> (Dataset, Rng) {
+    let seed = a.get_u64("seed").unwrap_or(0);
+    let mut rng = Rng::seed_from_u64(seed);
+    let n = a.get_usize("n").unwrap_or(5000);
+    let ds = match a.get("data").unwrap_or("bimodal3") {
+        "bimodal3" => data::bimodal3(n, 0.4, &mut rng),
+        "uniform1" => data::dist1d(data::Dist1d::Uniform, n, &mut rng),
+        "beta1" => data::dist1d(data::Dist1d::Beta15_2, n, &mut rng),
+        "bimodal1" => data::dist1d(data::Dist1d::Bimodal, n, &mut rng),
+        "rqc" | "htru2" | "ccpp" => {
+            let name = data::uci::UciName::parse(a.get("data").unwrap()).unwrap();
+            data::uci::load(name, "data/uci", Some(n), &mut rng)
+        }
+        other if other.starts_with("bimodal") => {
+            let d: usize = other["bimodal".len()..].parse().expect("bimodalD");
+            data::bimodal_d(n, d, 0.4, &mut rng)
+        }
+        other if std::path::Path::new(other).exists() => {
+            data::uci::load_csv(other, other).expect("csv load")
+        }
+        other => {
+            eprintln!("unknown --data '{other}'");
+            std::process::exit(2);
+        }
+    };
+    (ds, rng)
+}
+
+fn data_flags(c: Command) -> Command {
+    c.flag("data", "bimodal3", "dataset: bimodal3|uniform1|beta1|bimodal1|bimodalD|rqc|htru2|ccpp|<csv path>")
+        .flag("n", "5000", "sample size")
+        .flag("seed", "0", "RNG seed")
+        .flag("kernel", "matern:nu=1.5,a=1.732", "kernel spec (matern:nu=..,a=.. | gaussian:sigma=..)")
+        .flag("lambda", "", "regularization λ (default: paper rule)")
+        .flag("method", "sa", "leverage method: sa|sa-quadrature|uniform|rc|bless|exact")
+        .flag("m", "", "Nyström landmarks (default: paper rule)")
+        .switch("xla", "use AOT/PJRT backend (requires `make artifacts`)")
+}
+
+fn build_cfg(a: &leverkrr::util::cli::Args, ds: &Dataset) -> FitConfig {
+    let mut cfg = FitConfig::default_for(ds);
+    if let Some(k) = a.get("kernel") {
+        cfg.kernel = KernelSpec::parse(k).expect("kernel spec");
+    }
+    if let Some(l) = a.get_f64("lambda") {
+        cfg.lambda = l;
+    }
+    if let Some(m) = a.get("method") {
+        cfg.method = LeverageMethod::parse(m).expect("method");
+    }
+    if let Some(m) = a.get_usize("m") {
+        cfg.m_sub = m;
+    }
+    cfg.seed = a.get_u64("seed").unwrap_or(0);
+    cfg
+}
+
+fn backend_from(a: &leverkrr::util::cli::Args) -> Backend {
+    if a.get_bool("xla") {
+        Backend::auto()
+    } else {
+        Backend::Native
+    }
+}
+
+fn cmd_fit(argv: &[String]) -> i32 {
+    let cmd = data_flags(Command::new("fit", "fit Nyström-KRR and report in-sample risk"));
+    let a = match cmd.parse(argv) {
+        Ok(a) => a,
+        Err(m) => {
+            eprintln!("{m}");
+            return 2;
+        }
+    };
+    let (ds, _) = dataset_from(&a);
+    let cfg = build_cfg(&a, &ds);
+    let backend = backend_from(&a);
+    println!(
+        "fitting {} (n={}, d={}) kernel={} λ={:.3e} m={} method={:?} backend={}",
+        ds.name,
+        ds.n(),
+        ds.d(),
+        cfg.kernel.name(),
+        cfg.lambda,
+        cfg.m_sub,
+        cfg.method,
+        backend.name()
+    );
+    let model = fit_with_backend(&ds, &cfg, backend).expect("fit failed");
+    let fitted = model.predict_batch(&ds.x);
+    let risk = leverkrr::krr::in_sample_risk(&fitted, &ds.f_true);
+    let train_mse = leverkrr::krr::mse(&fitted, &ds.y);
+    println!("report: {}", model.report.to_json());
+    println!("in-sample risk ‖f̂−f*‖²_n = {risk:.6}   train mse = {train_mse:.6}");
+    0
+}
+
+fn cmd_leverage(argv: &[String]) -> i32 {
+    let cmd = data_flags(Command::new("leverage", "estimate leverage scores, dump JSON"))
+        .flag("out", "", "write scores JSON here (default stdout summary)");
+    let a = match cmd.parse(argv) {
+        Ok(a) => a,
+        Err(m) => {
+            eprintln!("{m}");
+            return 2;
+        }
+    };
+    let (ds, mut rng) = dataset_from(&a);
+    let cfg = build_cfg(&a, &ds);
+    let kernel = cfg.kernel.build();
+    let est = cfg.method.build();
+    let mut ctx = LeverageContext::new(&ds.x, &kernel, cfg.lambda);
+    ctx.p_true = ds.p_true.as_deref();
+    ctx.inner_m = cfg.inner_m;
+    let (scores, secs) = leverkrr::metrics::time_it(|| est.estimate(&ctx, &mut rng));
+    let q = leverkrr::leverage::normalize(&scores);
+    let dstat: f64 = scores.iter().sum::<f64>() / ds.n() as f64;
+    println!(
+        "method={} n={} time={:.4}s  Σscores/n (≈d_stat for exact/sa) = {:.3}",
+        est.name(),
+        ds.n(),
+        secs,
+        dstat
+    );
+    if let Some(path) = a.get("out").filter(|s| !s.is_empty()) {
+        let doc = Json::obj(vec![
+            ("method", Json::Str(est.name().into())),
+            ("n", Json::Num(ds.n() as f64)),
+            ("secs", Json::Num(secs)),
+            ("scores", Json::arr_f64(&scores)),
+            ("q", Json::arr_f64(&q)),
+        ]);
+        std::fs::write(path, doc.to_string()).expect("write scores");
+        println!("wrote {path}");
+    }
+    0
+}
+
+fn cmd_serve(argv: &[String]) -> i32 {
+    let cmd = data_flags(Command::new("serve", "fit + run the predict server demo"))
+        .flag("requests", "10000", "number of demo requests")
+        .flag("max-batch", "128", "batcher max batch size")
+        .flag("max-wait-ms", "2", "batcher max wait (ms)");
+    let a = match cmd.parse(argv) {
+        Ok(a) => a,
+        Err(m) => {
+            eprintln!("{m}");
+            return 2;
+        }
+    };
+    let (ds, _) = dataset_from(&a);
+    let cfg = build_cfg(&a, &ds);
+    let backend = backend_from(&a);
+    let model =
+        std::sync::Arc::new(fit_with_backend(&ds, &cfg, backend).expect("fit failed"));
+    let scfg = ServerConfig {
+        max_batch: a.get_usize("max-batch").unwrap_or(128),
+        max_wait: std::time::Duration::from_millis(a.get_u64("max-wait-ms").unwrap_or(2)),
+        workers: leverkrr::util::default_threads().min(4),
+    };
+    let server = Server::start(model, scfg);
+    let n_req = a.get_usize("requests").unwrap_or(10_000);
+    let d = ds.d();
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for w in 0..8u64 {
+            let server = &server;
+            s.spawn(move || {
+                let mut rng = Rng::seed_from_u64(w);
+                for _ in 0..n_req / 8 {
+                    let q: Vec<f64> = (0..d).map(|_| rng.f64()).collect();
+                    std::hint::black_box(server.predict(&q));
+                }
+            });
+        }
+    });
+    let secs = t0.elapsed().as_secs_f64();
+    let reg = server.shutdown();
+    println!(
+        "served {} requests in {:.2}s → {:.0} req/s; mean latency {:.3} ms; {} batches (mean size {:.1})",
+        reg.counter("serve.requests"),
+        secs,
+        reg.counter("serve.requests") as f64 / secs,
+        reg.timer_mean("serve.latency.secs") * 1e3,
+        reg.counter("serve.batches"),
+        reg.counter("serve.requests") as f64 / reg.counter("serve.batches").max(1) as f64,
+    );
+    0
+}
+
+fn cmd_gen_data(argv: &[String]) -> i32 {
+    let cmd = data_flags(Command::new("gen-data", "write a synthetic dataset to CSV"))
+        .flag_req("out", "output CSV path");
+    let a = match cmd.parse(argv) {
+        Ok(a) => a,
+        Err(m) => {
+            eprintln!("{m}");
+            return 2;
+        }
+    };
+    let (ds, _) = dataset_from(&a);
+    let mut s = String::new();
+    for i in 0..ds.n() {
+        for j in 0..ds.d() {
+            s.push_str(&format!("{},", ds.x[(i, j)]));
+        }
+        s.push_str(&format!("{}\n", ds.y[i]));
+    }
+    let path = a.get("out").unwrap();
+    std::fs::write(path, s).expect("write csv");
+    println!("wrote {} rows to {path}", ds.n());
+    0
+}
+
+fn cmd_run_config(argv: &[String]) -> i32 {
+    let cmd = Command::new("run", "fit + serve from a JSON config file")
+        .flag_req("config", "path to the JSON config")
+        .switch("xla", "use AOT/PJRT backend");
+    let a = match cmd.parse(argv) {
+        Ok(a) => a,
+        Err(m) => {
+            eprintln!("{m}");
+            return 2;
+        }
+    };
+    let rc = leverkrr::coordinator::RunConfig::from_file(a.get("config").unwrap())
+        .expect("config");
+    let ds = rc.build_dataset().expect("dataset");
+    let cfg = rc.fit_config(&ds);
+    let backend = backend_from(&a);
+    println!(
+        "run: {} n={} method={:?} λ={:.3e} m={} backend={}",
+        ds.name, ds.n(), cfg.method, cfg.lambda, cfg.m_sub, backend.name()
+    );
+    let model = fit_with_backend(&ds, &cfg, backend).expect("fit");
+    let risk = leverkrr::krr::in_sample_risk(&model.predict_batch(&ds.x), &ds.f_true);
+    println!("report: {}  risk={risk:.6}", model.report.to_json());
+    0
+}
+
+fn cmd_tune(argv: &[String]) -> i32 {
+    let cmd = data_flags(Command::new("tune", "cross-validated λ grid search"))
+        .flag("folds", "5", "CV folds")
+        .flag("grid", "9", "λ grid points");
+    let a = match cmd.parse(argv) {
+        Ok(a) => a,
+        Err(m) => {
+            eprintln!("{m}");
+            return 2;
+        }
+    };
+    let (ds, mut rng) = dataset_from(&a);
+    let cfg = build_cfg(&a, &ds);
+    let kernel = cfg.kernel.build();
+    let alpha = cfg.kernel.alpha(ds.d()).min(20.0);
+    let grid = leverkrr::krr::tune::lambda_grid(
+        ds.n(),
+        alpha,
+        ds.d(),
+        a.get_usize("grid").unwrap_or(9),
+    );
+    let landmarks = rng.sample_without_replacement(ds.n(), cfg.m_sub.min(ds.n()));
+    let res = leverkrr::krr::tune::tune_lambda(
+        &kernel,
+        &ds.x,
+        &ds.y,
+        &landmarks,
+        &grid,
+        a.get_usize("folds").unwrap_or(5),
+        &mut rng,
+    )
+    .expect("tune");
+    println!("λ grid (λ, cv mse):");
+    for (l, m) in &res.path {
+        let marker = if *l == res.best_lambda { "  <-- best" } else { "" };
+        println!("  {l:.4e}  {m:.6}{marker}");
+    }
+    println!("paper-rule λ would be {:.4e}", cfg.lambda);
+    0
+}
+
+fn cmd_selftest() -> i32 {
+    let mut rng = Rng::seed_from_u64(0);
+    let ds = data::bimodal3(3000, 0.4, &mut rng);
+    let cfg = FitConfig::default_for(&ds);
+    // native
+    let m = fit_with_backend(&ds, &cfg, Backend::Native).expect("native fit");
+    let risk = leverkrr::krr::in_sample_risk(&m.predict_batch(&ds.x), &ds.f_true);
+    println!("native: risk={risk:.5} report={}", m.report.to_json());
+    // xla if available
+    match leverkrr::runtime::Engine::load_default() {
+        Ok(engine) => {
+            let backend = Backend::Xla(std::sync::Arc::new(engine));
+            let m2 = fit_with_backend(&ds, &cfg, backend).expect("xla fit");
+            let risk2 = leverkrr::krr::in_sample_risk(&m2.predict_batch(&ds.x), &ds.f_true);
+            println!("xla:    risk={risk2:.5} report={}", m2.report.to_json());
+            let dev = (risk - risk2).abs() / risk.max(1e-12);
+            println!("risk deviation native↔xla: {dev:.2e}");
+            if dev > 0.05 {
+                eprintln!("FAIL: backends disagree");
+                return 1;
+            }
+        }
+        Err(e) => println!("xla engine unavailable ({e}); native-only selftest"),
+    }
+    println!("selftest OK");
+    0
+}

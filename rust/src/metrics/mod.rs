@@ -1,0 +1,298 @@
+//! Lightweight metrics: wall timers, counters, streaming summaries,
+//! quantile estimation, and throughput meters.
+//!
+//! Every pipeline stage in the coordinator and every bench driver records
+//! through these types; `Registry` snapshots serialize to JSON so bench
+//! outputs are machine-readable.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Measure the wall time of a closure in seconds.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Streaming mean/variance/min/max via Welford's algorithm.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n", Json::Num(self.n as f64)),
+            ("mean", Json::Num(self.mean())),
+            ("std", Json::Num(self.std())),
+            ("min", Json::Num(if self.n == 0 { f64::NAN } else { self.min })),
+            ("max", Json::Num(if self.n == 0 { f64::NAN } else { self.max })),
+        ])
+    }
+}
+
+/// Exact small-sample quantiles (stores samples; fine for bench scale).
+#[derive(Clone, Debug, Default)]
+pub struct Quantiles {
+    xs: Vec<f64>,
+}
+
+impl Quantiles {
+    pub fn add(&mut self, x: f64) {
+        self.xs.push(x);
+    }
+
+    pub fn extend(&mut self, xs: &[f64]) {
+        self.xs.extend_from_slice(xs);
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    /// Linear-interpolation quantile, q in [0,1].
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        let mut v = self.xs.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        quantile_sorted(&v, q)
+    }
+}
+
+/// Quantile of an already-sorted slice with linear interpolation.
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = pos - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Thread-safe named counters + timing summaries.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, AtomicU64>>,
+    timers: Mutex<BTreeMap<String, Summary>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn incr(&self, name: &str, by: u64) {
+        let mut m = self.counters.lock().unwrap();
+        m.entry(name.to_string())
+            .or_insert_with(|| AtomicU64::new(0))
+            .fetch_add(by, Ordering::Relaxed);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Record a duration (seconds) under a named timer.
+    pub fn record(&self, name: &str, secs: f64) {
+        let mut m = self.timers.lock().unwrap();
+        m.entry(name.to_string()).or_insert_with(Summary::new).add(secs);
+    }
+
+    /// Time a closure and record under `name`.
+    pub fn timed<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let (out, secs) = time_it(f);
+        self.record(name, secs);
+        out
+    }
+
+    pub fn timer_mean(&self, name: &str) -> f64 {
+        self.timers.lock().unwrap().get(name).map(|s| s.mean()).unwrap_or(f64::NAN)
+    }
+
+    pub fn timer_total(&self, name: &str) -> f64 {
+        self.timers
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|s| s.mean() * s.count() as f64)
+            .unwrap_or(0.0)
+    }
+
+    pub fn snapshot(&self) -> Json {
+        let counters = self.counters.lock().unwrap();
+        let timers = self.timers.lock().unwrap();
+        let mut obj = BTreeMap::new();
+        let mut cj = BTreeMap::new();
+        for (k, v) in counters.iter() {
+            cj.insert(k.clone(), Json::Num(v.load(Ordering::Relaxed) as f64));
+        }
+        let mut tj = BTreeMap::new();
+        for (k, v) in timers.iter() {
+            tj.insert(k.clone(), v.to_json());
+        }
+        obj.insert("counters".to_string(), Json::Obj(cj));
+        obj.insert("timers".to_string(), Json::Obj(tj));
+        Json::Obj(obj)
+    }
+}
+
+/// Throughput meter: items processed per second over a window.
+pub struct Throughput {
+    start: Instant,
+    items: AtomicU64,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Throughput {
+    pub fn new() -> Self {
+        Throughput { start: Instant::now(), items: AtomicU64::new(0) }
+    }
+
+    pub fn add(&self, n: u64) {
+        self.items.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn per_sec(&self) -> f64 {
+        let secs = self.start.elapsed().as_secs_f64();
+        if secs <= 0.0 {
+            return 0.0;
+        }
+        self.items.load(Ordering::Relaxed) as f64 / secs
+    }
+
+    pub fn total(&self) -> u64 {
+        self.items.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_matches_closed_form() {
+        let mut s = Summary::new();
+        for x in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.add(x);
+        }
+        assert_eq!(s.count(), 5);
+        assert!((s.mean() - 3.0).abs() < 1e-12);
+        assert!((s.var() - 2.5).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+    }
+
+    #[test]
+    fn quantiles_interpolate() {
+        let mut q = Quantiles::default();
+        q.extend(&[4.0, 1.0, 3.0, 2.0]);
+        assert!((q.quantile(0.0) - 1.0).abs() < 1e-12);
+        assert!((q.quantile(1.0) - 4.0).abs() < 1e-12);
+        assert!((q.quantile(0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn registry_counts_and_times() {
+        let r = Registry::new();
+        r.incr("requests", 3);
+        r.incr("requests", 2);
+        assert_eq!(r.counter("requests"), 5);
+        let x = r.timed("work", || 21 * 2);
+        assert_eq!(x, 42);
+        assert!(r.timer_mean("work") >= 0.0);
+        let snap = r.snapshot();
+        assert_eq!(snap.get("counters").get("requests").as_f64(), Some(5.0));
+    }
+
+    #[test]
+    fn registry_thread_safe() {
+        let r = std::sync::Arc::new(Registry::new());
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let r = r.clone();
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        r.incr("n", 1);
+                    }
+                });
+            }
+        });
+        assert_eq!(r.counter("n"), 8000);
+    }
+}

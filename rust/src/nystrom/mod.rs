@@ -1,0 +1,244 @@
+//! Importance-sampled Nyström approximation of KRR (paper §2.3).
+//!
+//! Given sampling probabilities {q_i} (from any leverage estimator), draw
+//! `d_sub` columns with replacement (Alaoui & Mahoney's construction,
+//! Theorem 2), and solve the Nyström-restricted problem: with landmarks
+//! J (|J| = m) and K_nm = K(X, X_J), K_mm = K(X_J, X_J), the approximate
+//! KRR solution in span{K(·, x_j)} is
+//!
+//!   f̂_L(x) = K(x, X_J) β,   β = (K_mnK_nm + nλ·K_mm)^† K_mn y,
+//!
+//! which equals substituting L_n = K_nm K_mm^† K_mn into the KRR normal
+//! equations. The m×m system is factored with jittered Cholesky (columns
+//! drawn with replacement make K_mm frequently rank-deficient).
+//!
+//! Complexity: O(n·m·d) kernel evaluations (run through
+//! [`crate::runtime::KernelEngine`] on the hot path) + O(n·m²) for the
+//! normal equations + O(m³) to factor.
+
+use crate::kernels::Kernel;
+use crate::linalg::{Cholesky, Mat};
+use crate::util::rng::{AliasTable, Rng};
+
+/// Sub-sample size rules used by the paper's experiments.
+pub mod subsize {
+    /// Projection dimension for Figure 1: 5·n^{1/3}.
+    pub fn fig1(n: usize) -> usize {
+        (5.0 * (n as f64).powf(1.0 / 3.0)).round() as usize
+    }
+
+    /// Table 1 projection dimension: ⌊2·n^{d/(2α+d)}⌋.
+    pub fn table1(n: usize, alpha: f64, d: usize) -> usize {
+        (2.0 * (n as f64).powf(d as f64 / (2.0 * alpha + d as f64))).floor() as usize
+    }
+
+    /// Internal subsample for iterative methods (RC/BLESS), Table 1:
+    /// ⌊1·n^{d/(2α+d)}⌋.
+    pub fn table1_inner(n: usize, alpha: f64, d: usize) -> usize {
+        (n as f64).powf(d as f64 / (2.0 * alpha + d as f64)).floor() as usize
+    }
+
+    /// Figure 3 projection dimension: 5·n^{d/(2d+3)}.
+    pub fn fig3(n: usize, d: usize) -> usize {
+        let df = d as f64;
+        (5.0 * (n as f64).powf(df / (2.0 * df + 3.0))).round() as usize
+    }
+
+    /// Figure 3 internal subsample: 1·n^{d/(2d+3)}.
+    pub fn fig3_inner(n: usize, d: usize) -> usize {
+        let df = d as f64;
+        (n as f64).powf(df / (2.0 * df + 3.0)).round() as usize
+    }
+}
+
+/// Draw `m` landmark indices with replacement from probabilities `q`
+/// (need not be normalized).
+pub fn sample_landmarks(q: &[f64], m: usize, rng: &mut Rng) -> Vec<usize> {
+    let at = AliasTable::new(q);
+    at.sample_many(m, rng)
+}
+
+/// A fitted Nyström-KRR model.
+pub struct NystromKrr {
+    pub kernel: Kernel,
+    /// Landmark points (m×d).
+    pub landmarks: Mat,
+    /// Landmark indices into the training set.
+    pub idx: Vec<usize>,
+    pub beta: Vec<f64>,
+    pub lambda: f64,
+}
+
+/// How to compute K_nm (native fallback vs the AOT/PJRT engine).
+pub trait KernelBackend {
+    fn cross_matrix(&self, kernel: &Kernel, x: &Mat, y: &Mat) -> Mat;
+}
+
+/// Pure-Rust backend (always available; oracle for the XLA path).
+pub struct NativeBackend;
+
+impl KernelBackend for NativeBackend {
+    fn cross_matrix(&self, kernel: &Kernel, x: &Mat, y: &Mat) -> Mat {
+        kernel.matrix(x, y)
+    }
+}
+
+impl NystromKrr {
+    /// Fit with the given landmark indices.
+    pub fn fit_with_landmarks(
+        kernel: Kernel,
+        x: &Mat,
+        y: &[f64],
+        lambda: f64,
+        idx: &[usize],
+        backend: &dyn KernelBackend,
+    ) -> anyhow::Result<NystromKrr> {
+        let n = x.rows;
+        anyhow::ensure!(y.len() == n, "y length mismatch");
+        anyhow::ensure!(!idx.is_empty(), "need at least one landmark");
+        let m = idx.len();
+        let landmarks = Mat::from_fn(m, x.cols, |i, j| x[(idx[i], j)]);
+        // K_nm (n×m): the hot block — via the pluggable backend.
+        let knm = backend.cross_matrix(&kernel, x, &landmarks);
+        let kmm = kernel.matrix_sym(&landmarks);
+        // normal matrix  A = K_mn K_nm + nλ K_mm
+        let mut a = knm.gram();
+        for i in 0..m {
+            for j in 0..m {
+                a[(i, j)] += n as f64 * lambda * kmm[(i, j)];
+            }
+        }
+        let chol = Cholesky::factor_jittered(&a)
+            .map_err(|e| anyhow::anyhow!("Nyström normal equations singular: {e}"))?;
+        // rhs = K_mn y
+        let mut rhs = vec![0.0; m];
+        for i in 0..n {
+            let row = knm.row(i);
+            let yi = y[i];
+            for j in 0..m {
+                rhs[j] += row[j] * yi;
+            }
+        }
+        let beta = chol.solve(&rhs);
+        Ok(NystromKrr { kernel, landmarks, idx: idx.to_vec(), beta, lambda })
+    }
+
+    /// Fit by sampling `m` landmarks from probabilities `q`.
+    pub fn fit(
+        kernel: Kernel,
+        x: &Mat,
+        y: &[f64],
+        lambda: f64,
+        q: &[f64],
+        m: usize,
+        rng: &mut Rng,
+        backend: &dyn KernelBackend,
+    ) -> anyhow::Result<NystromKrr> {
+        let idx = sample_landmarks(q, m, rng);
+        Self::fit_with_landmarks(kernel, x, y, lambda, &idx, backend)
+    }
+
+    pub fn predict_one(&self, x: &[f64]) -> f64 {
+        let mut s = 0.0;
+        for j in 0..self.landmarks.rows {
+            s += self.kernel.eval(x, self.landmarks.row(j)) * self.beta[j];
+        }
+        s
+    }
+
+    pub fn predict(&self, xq: &Mat) -> Vec<f64> {
+        let kq = self.kernel.matrix(xq, &self.landmarks);
+        crate::linalg::matvec(&kq, &self.beta)
+    }
+
+    pub fn predict_with(&self, xq: &Mat, backend: &dyn KernelBackend) -> Vec<f64> {
+        let kq = backend.cross_matrix(&self.kernel, xq, &self.landmarks);
+        crate::linalg::matvec(&kq, &self.beta)
+    }
+
+    pub fn m(&self) -> usize {
+        self.landmarks.rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+    use crate::kernels::KernelSpec;
+    use crate::krr::{self, ExactKrr};
+
+    #[test]
+    fn landmark_sampling_follows_q() {
+        let mut rng = Rng::seed_from_u64(1);
+        let q = vec![0.0, 1.0, 3.0, 0.5];
+        let draws = sample_landmarks(&q, 40_000, &mut rng);
+        let mut c = [0usize; 4];
+        for d in &draws {
+            c[*d] += 1;
+        }
+        assert_eq!(c[0], 0);
+        let r = c[2] as f64 / c[1] as f64;
+        assert!((r - 3.0).abs() < 0.2, "ratio {r}");
+    }
+
+    #[test]
+    fn full_landmarks_recover_exact_krr() {
+        // With J = all points, Nyström is algebraically exact KRR.
+        let mut rng = Rng::seed_from_u64(2);
+        let ds = data::dist1d(data::Dist1d::Uniform, 60, &mut rng);
+        let k = Kernel::new(KernelSpec::Matern { nu: 1.5, a: 1.0 });
+        let lam = 1e-3;
+        let exact = ExactKrr::fit(k.clone(), &ds.x, &ds.y, lam).unwrap();
+        let idx: Vec<usize> = (0..ds.n()).collect();
+        let nys =
+            NystromKrr::fit_with_landmarks(k, &ds.x, &ds.y, lam, &idx, &NativeBackend).unwrap();
+        let fe = exact.fitted();
+        let fn_ = nys.predict(&ds.x);
+        for i in 0..ds.n() {
+            assert!((fe[i] - fn_[i]).abs() < 1e-4, "i={i}: {} vs {}", fe[i], fn_[i]);
+        }
+    }
+
+    #[test]
+    fn nystrom_risk_close_to_exact_with_leverage_sampling() {
+        // Theorem 2 sanity: leverage-proportional sampling with m ≈
+        // d_stat·log n keeps the in-sample risk within a small factor.
+        let mut rng = Rng::seed_from_u64(3);
+        let ds = data::dist1d(data::Dist1d::Bimodal, 800, &mut rng);
+        let k = Kernel::new(KernelSpec::Matern { nu: 1.5, a: 1.0 });
+        let lam = krr::lambda::fig2(ds.n());
+        let exact = ExactKrr::fit(k.clone(), &ds.x, &ds.y, lam).unwrap();
+        let risk_exact = krr::in_sample_risk(&exact.fitted(), &ds.f_true);
+        let lev = exact.rescaled_leverage();
+        let dstat = exact.statistical_dimension();
+        let m = ((dstat * (ds.n() as f64).ln()) as usize).clamp(20, 400);
+        let nys =
+            NystromKrr::fit(k, &ds.x, &ds.y, lam, &lev, m, &mut rng, &NativeBackend).unwrap();
+        let risk_nys = krr::in_sample_risk(&nys.predict(&ds.x), &ds.f_true);
+        assert!(
+            risk_nys < 4.0 * risk_exact + 1e-4,
+            "nystrom risk {risk_nys} vs exact {risk_exact} (m={m}, dstat={dstat:.1})"
+        );
+    }
+
+    #[test]
+    fn duplicate_landmarks_do_not_crash() {
+        // with-replacement sampling yields duplicates → K_mm singular →
+        // jittered Cholesky must rescue.
+        let mut rng = Rng::seed_from_u64(4);
+        let ds = data::dist1d(data::Dist1d::Uniform, 50, &mut rng);
+        let k = Kernel::new(KernelSpec::Matern { nu: 0.5, a: 1.0 });
+        let idx = vec![3, 3, 3, 10, 10, 20];
+        let nys =
+            NystromKrr::fit_with_landmarks(k, &ds.x, &ds.y, 1e-3, &idx, &NativeBackend)
+                .unwrap();
+        assert!(nys.predict(&ds.x).iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn subsize_rules() {
+        assert_eq!(subsize::fig1(1000), 50);
+        assert!(subsize::table1(10_000, 2.0, 3) >= subsize::table1_inner(10_000, 2.0, 3));
+    }
+}

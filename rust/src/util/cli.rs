@@ -1,0 +1,217 @@
+//! Declarative command-line flag parsing (clap replacement).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional arguments, with generated `--help` text. Used by
+//! `rust/src/main.rs` and by every bench driver (benches accept
+//! `--full`, `--seed`, `--out` etc. after the `--` cargo separator).
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub is_bool: bool,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    bools: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, name: &str) -> Option<f64> {
+        self.get(name).and_then(|s| s.parse().ok())
+    }
+
+    pub fn get_usize(&self, name: &str) -> Option<usize> {
+        self.get(name).and_then(|s| s.parse().ok())
+    }
+
+    pub fn get_u64(&self, name: &str) -> Option<u64> {
+        self.get(name).and_then(|s| s.parse().ok())
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.bools.get(name).copied().unwrap_or(false)
+    }
+
+    /// Parse comma-separated usize list, e.g. `--ns 2000,8000,32000`.
+    pub fn get_usize_list(&self, name: &str) -> Option<Vec<usize>> {
+        self.get(name).map(|s| {
+            s.split(',')
+                .filter(|t| !t.is_empty())
+                .map(|t| t.trim().parse().expect("bad integer list"))
+                .collect()
+        })
+    }
+}
+
+/// A command with declared flags.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    flags: Vec<FlagSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, flags: Vec::new() }
+    }
+
+    pub fn flag(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_bool: false,
+        });
+        self
+    }
+
+    pub fn flag_req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec { name, help, default: None, is_bool: false });
+        self
+    }
+
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec { name, help, default: None, is_bool: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nflags:\n", self.name, self.about);
+        for f in &self.flags {
+            let d = match (&f.default, f.is_bool) {
+                (_, true) => "(switch)".to_string(),
+                (Some(d), _) if !d.is_empty() => format!("[default: {d}]"),
+                _ => "(required)".to_string(),
+            };
+            s.push_str(&format!("  --{:<18} {} {}\n", f.name, f.help, d));
+        }
+        s
+    }
+
+    /// Parse a raw argv slice (not including the command name itself).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, String> {
+        let mut args = Args::default();
+        // seed defaults
+        for f in &self.flags {
+            if let Some(d) = &f.default {
+                if !d.is_empty() {
+                    args.values.insert(f.name.to_string(), d.clone());
+                }
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| format!("unknown flag --{name}\n\n{}", self.usage()))?;
+                if spec.is_bool {
+                    if inline_val.is_some() {
+                        return Err(format!("--{name} is a switch, takes no value"));
+                    }
+                    args.bools.insert(name.to_string(), true);
+                } else {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{name} needs a value"))?
+                        }
+                    };
+                    args.values.insert(name.to_string(), v);
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        // check required
+        for f in &self.flags {
+            if !f.is_bool && f.default.is_none() && args.get(f.name).is_none() {
+                return Err(format!("missing required --{}\n\n{}", f.name, self.usage()));
+            }
+        }
+        Ok(args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("fit", "fit a model")
+            .flag("n", "1000", "sample size")
+            .flag("lambda", "", "regularization")
+            .flag_req("method", "leverage method")
+            .switch("full", "run the full sweep")
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = cmd().parse(&sv(&["--method", "sa"])).unwrap();
+        assert_eq!(a.get_usize("n"), Some(1000));
+        assert_eq!(a.get("method"), Some("sa"));
+        assert_eq!(a.get("lambda"), None);
+        assert!(!a.get_bool("full"));
+
+        let a = cmd()
+            .parse(&sv(&["--method=bless", "--n=42", "--full", "pos1"]))
+            .unwrap();
+        assert_eq!(a.get_usize("n"), Some(42));
+        assert_eq!(a.get("method"), Some("bless"));
+        assert!(a.get_bool("full"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(cmd().parse(&sv(&[])).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(cmd().parse(&sv(&["--method", "sa", "--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn usize_list() {
+        let c = Command::new("b", "").flag("ns", "1,2,3", "sizes");
+        let a = c.parse(&sv(&["--ns", "2000, 8000,32000"])).unwrap();
+        assert_eq!(a.get_usize_list("ns"), Some(vec![2000, 8000, 32000]));
+    }
+
+    #[test]
+    fn help_is_an_err_with_usage() {
+        let e = cmd().parse(&sv(&["-h"])).unwrap_err();
+        assert!(e.contains("sample size"));
+    }
+}

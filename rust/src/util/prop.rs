@@ -1,0 +1,146 @@
+//! Tiny property-test harness (proptest replacement).
+//!
+//! `check(seed, cases, gen, prop)` draws `cases` random inputs from `gen`
+//! and asserts `prop` on each, reporting the failing input and its case
+//! index (every generator is deterministic in the seed, so a failing case
+//! is reproducible by rerunning the same test). A lightweight "shrink" is
+//! provided for numeric vectors: on failure we retry with truncated /
+//! zeroed variants and report the smallest failing input found.
+
+use crate::util::rng::Rng;
+
+/// Run a property over `cases` randomly generated inputs.
+///
+/// Panics (test failure) with the debug representation of the first
+/// failing input.
+pub fn check<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut generate: impl FnMut(&mut Rng) -> T,
+    mut property: impl FnMut(&T) -> bool,
+) {
+    let mut rng = Rng::seed_from_u64(seed);
+    for case in 0..cases {
+        let input = generate(&mut rng);
+        if !property(&input) {
+            panic!("property failed at case {case} with input: {input:#?}");
+        }
+    }
+}
+
+/// Like [`check`] but for `Vec<f64>` inputs, with shrinking: when a case
+/// fails, smaller failing variants (prefix truncations, element zeroing)
+/// are searched and the minimal one reported.
+pub fn check_vec_f64(
+    seed: u64,
+    cases: usize,
+    mut generate: impl FnMut(&mut Rng) -> Vec<f64>,
+    property: impl Fn(&[f64]) -> bool,
+) {
+    let mut rng = Rng::seed_from_u64(seed);
+    for case in 0..cases {
+        let input = generate(&mut rng);
+        if !property(&input) {
+            let minimal = shrink_vec(&input, &property);
+            panic!(
+                "property failed at case {case}; minimal failing input ({} elems): {minimal:?}",
+                minimal.len()
+            );
+        }
+    }
+}
+
+fn shrink_vec(failing: &[f64], property: &impl Fn(&[f64]) -> bool) -> Vec<f64> {
+    let mut cur = failing.to_vec();
+    loop {
+        let mut improved = false;
+        // try halving length
+        let mut len = cur.len() / 2;
+        while len >= 1 {
+            let cand = cur[..len].to_vec();
+            if !cand.is_empty() && !property(&cand) {
+                cur = cand;
+                improved = true;
+                break;
+            }
+            len /= 2;
+        }
+        if improved {
+            continue;
+        }
+        // try zeroing single elements
+        for i in 0..cur.len() {
+            if cur[i] != 0.0 {
+                let mut cand = cur.clone();
+                cand[i] = 0.0;
+                if !property(&cand) {
+                    cur = cand;
+                    improved = true;
+                    break;
+                }
+            }
+        }
+        if !improved {
+            return cur;
+        }
+    }
+}
+
+/// Generator helpers shared by property tests across the crate.
+pub mod gen {
+    use crate::util::rng::Rng;
+
+    /// Vector of length in [1, max_len] with entries uniform in [lo, hi).
+    pub fn vec_in(rng: &mut Rng, max_len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        let n = 1 + rng.usize(max_len);
+        (0..n).map(|_| rng.range(lo, hi)).collect()
+    }
+
+    /// Vector of strictly positive entries (weights).
+    pub fn weights(rng: &mut Rng, max_len: usize) -> Vec<f64> {
+        let n = 1 + rng.usize(max_len);
+        (0..n).map(|_| rng.f64() + 1e-6).collect()
+    }
+
+    /// Random SPD matrix data (row-major n×n): A = B Bᵀ + eps·I.
+    pub fn spd(rng: &mut Rng, n: usize, eps: f64) -> Vec<f64> {
+        let b: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += b[i * n + k] * b[j * n + k];
+                }
+                a[i * n + j] = s + if i == j { eps } else { 0.0 };
+            }
+        }
+        a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(1, 100, |rng| rng.f64(), |&x| (0.0..1.0).contains(&x));
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check(1, 100, |rng| rng.f64(), |&x| x < 0.5);
+    }
+
+    #[test]
+    fn shrinker_finds_small_case() {
+        // property: "no element exceeds 10" — fails; shrinker should find a
+        // single-ish element counterexample.
+        let failing: Vec<f64> = (0..64).map(|i| if i == 37 { 11.0 } else { 1.0 }).collect();
+        let min = shrink_vec(&failing, &|v: &[f64]| v.iter().all(|&x| x <= 10.0));
+        assert!(min.len() <= failing.len());
+        assert!(!min.iter().all(|&x| x <= 10.0));
+    }
+}

@@ -1,0 +1,420 @@
+//! Deterministic pseudo-random number generation and samplers.
+//!
+//! `Rng` is xoshiro256++ seeded through splitmix64 — fast, high quality,
+//! and reproducible across platforms (all experiment drivers take explicit
+//! seeds so every table/figure regenerates identically).
+//!
+//! Samplers implemented here are exactly the ones the paper's experiments
+//! need: uniform, Gaussian (Box–Muller-free polar method), Gamma
+//! (Marsaglia–Tsang), Beta (via two Gammas, for the Beta(15,2) design of
+//! Figure 2), the linear-pdf component of the bimodal designs (inverse
+//! CDF), and Walker alias tables for O(1) categorical draws used by the
+//! Nyström column sampler.
+
+/// splitmix64 — used for seeding and as a cheap stateless mixer.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256++ PRNG.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// cached second normal variate from the polar method
+    gauss_spare: Option<f64>,
+}
+
+impl Rng {
+    /// Seed deterministically from a single u64 via splitmix64.
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, gauss_spare: None }
+    }
+
+    /// Derive an independent stream (for per-thread RNGs).
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        let mut sm = self.next_u64() ^ stream.wrapping_mul(0xA24BAED4963EE407);
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, gauss_spare: None }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1) with 53-bit resolution.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [0, n). Lemire-style rejection for unbiasedness.
+    #[inline]
+    pub fn usize(&mut self, n: usize) -> usize {
+        assert!(n > 0, "usize(0)");
+        let n = n as u64;
+        loop {
+            let x = self.next_u64();
+            let hi = ((x as u128 * n as u128) >> 64) as u64;
+            let lo = x.wrapping_mul(n);
+            if lo >= n || lo >= n.wrapping_neg() % n {
+                return hi as usize;
+            }
+        }
+    }
+
+    /// Standard normal via the Marsaglia polar method (caches the spare).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.gauss_spare.take() {
+            return z;
+        }
+        loop {
+            let u = 2.0 * self.f64() - 1.0;
+            let v = 2.0 * self.f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let m = (-2.0 * s.ln() / s).sqrt();
+                self.gauss_spare = Some(v * m);
+                return u * m;
+            }
+        }
+    }
+
+    /// N(mu, sigma^2).
+    #[inline]
+    pub fn normal_ms(&mut self, mu: f64, sigma: f64) -> f64 {
+        mu + sigma * self.normal()
+    }
+
+    /// Gamma(shape k, scale 1) via Marsaglia–Tsang; boosts k<1.
+    pub fn gamma(&mut self, k: f64) -> f64 {
+        assert!(k > 0.0, "gamma shape must be positive");
+        if k < 1.0 {
+            // boost: Gamma(k) = Gamma(k+1) * U^{1/k}
+            let g = self.gamma(k + 1.0);
+            let u = self.f64().max(f64::MIN_POSITIVE);
+            return g * u.powf(1.0 / k);
+        }
+        let d = k - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v = v * v * v;
+            let u = self.f64();
+            if u < 1.0 - 0.0331 * x * x * x * x {
+                return d * v;
+            }
+            if u > 0.0 && u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+                return d * v;
+            }
+        }
+    }
+
+    /// Beta(a, b) via two Gammas. Used for the Beta(15,2) design (Fig. 2).
+    pub fn beta(&mut self, a: f64, b: f64) -> f64 {
+        let x = self.gamma(a);
+        let y = self.gamma(b);
+        x / (x + y)
+    }
+
+    /// Sample from the linear pdf  f(x) ∝ (c − 2x)  on [lo, hi]
+    /// (the small-mode component of the paper's bimodal designs, e.g.
+    /// pdf (3−2x) on [1,1.5] or per-coordinate (5−2x_j) on [2,2.5]).
+    ///
+    /// Inverse CDF: with A = c·lo − lo², the normalized CDF on [lo,hi] is
+    /// F(x) = (c·x − x² − A)/Z, Z = c(hi−lo) − (hi²−lo²); solve the
+    /// quadratic x² − c·x + (A + Z·u) = 0 taking the root inside [lo,hi].
+    pub fn linear_pdf(&mut self, c: f64, lo: f64, hi: f64) -> f64 {
+        debug_assert!(c - 2.0 * hi >= -1e-12, "pdf must stay nonnegative");
+        let a0 = c * lo - lo * lo;
+        let z = c * (hi - lo) - (hi * hi - lo * lo);
+        let u = self.f64();
+        // x = [c - sqrt(c² − 4(A + Z u))]/2  (the decreasing-density root)
+        let disc = c * c - 4.0 * (a0 + z * u);
+        let x = 0.5 * (c - disc.max(0.0).sqrt());
+        x.clamp(lo, hi)
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.usize(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` indices from `0..n` without replacement (partial F–Y).
+    pub fn sample_without_replacement(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.usize(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+/// Walker alias table: O(n) build, O(1) categorical sampling.
+///
+/// This is the hot path of leverage-based Nyström sampling — we draw
+/// `d_sub = O(d_stat log n)` columns with replacement from `{q_i}`.
+#[derive(Clone, Debug)]
+pub struct AliasTable {
+    prob: Vec<f64>,
+    alias: Vec<usize>,
+}
+
+impl AliasTable {
+    /// Build from unnormalized nonnegative weights.
+    pub fn new(weights: &[f64]) -> Self {
+        let n = weights.len();
+        assert!(n > 0, "alias table over empty weights");
+        let total: f64 = weights.iter().sum();
+        assert!(
+            total > 0.0 && total.is_finite(),
+            "alias table needs positive finite total weight, got {total}"
+        );
+        let mut prob: Vec<f64> = weights.iter().map(|w| w * n as f64 / total).collect();
+        let mut alias = vec![0usize; n];
+        let mut small: Vec<usize> = Vec::with_capacity(n);
+        let mut large: Vec<usize> = Vec::with_capacity(n);
+        for (i, &p) in prob.iter().enumerate() {
+            if p < 1.0 {
+                small.push(i)
+            } else {
+                large.push(i)
+            }
+        }
+        while let (Some(&s), Some(&l)) = (small.last(), large.last()) {
+            small.pop();
+            alias[s] = l;
+            prob[l] = (prob[l] + prob[s]) - 1.0;
+            if prob[l] < 1.0 {
+                large.pop();
+                small.push(l);
+            }
+        }
+        // Leftovers are 1.0 up to FP error.
+        for &i in small.iter().chain(large.iter()) {
+            prob[i] = 1.0;
+        }
+        AliasTable { prob, alias }
+    }
+
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let i = rng.usize(self.prob.len());
+        if rng.f64() < self.prob[i] {
+            i
+        } else {
+            self.alias[i]
+        }
+    }
+
+    /// Draw `k` samples with replacement.
+    pub fn sample_many(&self, k: usize, rng: &mut Rng) -> Vec<usize> {
+        (0..k).map(|_| self.sample(rng)).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Rng::seed_from_u64(42);
+        let mut b = Rng::seed_from_u64(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn forked_streams_differ() {
+        let mut a = Rng::seed_from_u64(42);
+        let mut f1 = a.fork(1);
+        let mut f2 = a.fork(2);
+        let same = (0..64).filter(|_| f1.next_u64() == f2.next_u64()).count();
+        assert!(same < 3);
+    }
+
+    #[test]
+    fn uniform_bounds_and_mean() {
+        let mut rng = Rng::seed_from_u64(7);
+        let n = 200_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.005);
+    }
+
+    #[test]
+    fn usize_unbiased_small_n() {
+        let mut rng = Rng::seed_from_u64(3);
+        let mut counts = [0usize; 7];
+        let trials = 700_000;
+        for _ in 0..trials {
+            counts[rng.usize(7)] += 1;
+        }
+        for c in counts {
+            let p = c as f64 / trials as f64;
+            assert!((p - 1.0 / 7.0).abs() < 0.005, "p={p}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::seed_from_u64(11);
+        let n = 400_000;
+        let (mut m1, mut m2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = rng.normal();
+            m1 += z;
+            m2 += z * z;
+        }
+        m1 /= n as f64;
+        m2 /= n as f64;
+        assert!(m1.abs() < 0.01, "mean {m1}");
+        assert!((m2 - 1.0).abs() < 0.02, "var {m2}");
+    }
+
+    #[test]
+    fn gamma_mean_variance() {
+        let mut rng = Rng::seed_from_u64(5);
+        for &k in &[0.5, 1.0, 2.5, 15.0] {
+            let n = 120_000;
+            let (mut m1, mut m2) = (0.0, 0.0);
+            for _ in 0..n {
+                let g = rng.gamma(k);
+                m1 += g;
+                m2 += g * g;
+            }
+            m1 /= n as f64;
+            m2 = m2 / n as f64 - m1 * m1;
+            assert!((m1 - k).abs() < 0.05 * k.max(1.0), "k={k} mean={m1}");
+            assert!((m2 - k).abs() < 0.12 * k.max(1.0), "k={k} var={m2}");
+        }
+    }
+
+    #[test]
+    fn beta_15_2_moments() {
+        // The Figure-2 design distribution.
+        let mut rng = Rng::seed_from_u64(9);
+        let n = 120_000;
+        let mut m1 = 0.0;
+        for _ in 0..n {
+            let b = rng.beta(15.0, 2.0);
+            assert!((0.0..=1.0).contains(&b));
+            m1 += b;
+        }
+        m1 /= n as f64;
+        assert!((m1 - 15.0 / 17.0).abs() < 0.005, "mean {m1}");
+    }
+
+    #[test]
+    fn linear_pdf_matches_density() {
+        // pdf (3 - 2x) on [1, 1.5] — the 1-d bimodal small mode.
+        let mut rng = Rng::seed_from_u64(13);
+        let n = 300_000;
+        let mut hist = [0usize; 5];
+        for _ in 0..n {
+            let x = rng.linear_pdf(3.0, 1.0, 1.5);
+            assert!((1.0..=1.5).contains(&x));
+            hist[(((x - 1.0) / 0.1) as usize).min(4)] += 1;
+        }
+        // expected mass of bin [a,b]: ∫ (3-2x) dx / Z with Z = 0.25... check
+        // first bin is the heaviest and last the lightest, ratios roughly match.
+        let z: f64 = 3.0 * 0.5 - (1.5 * 1.5 - 1.0);
+        for (b, &c) in hist.iter().enumerate() {
+            let a = 1.0 + 0.1 * b as f64;
+            let bb = a + 0.1;
+            let mass = (3.0 * (bb - a) - (bb * bb - a * a)) / z;
+            let got = c as f64 / n as f64;
+            assert!((got - mass).abs() < 0.01, "bin {b}: got {got} want {mass}");
+        }
+    }
+
+    #[test]
+    fn alias_table_matches_weights() {
+        let mut rng = Rng::seed_from_u64(17);
+        let w = [0.1, 0.0, 3.0, 1.5, 0.4];
+        let at = AliasTable::new(&w);
+        let total: f64 = w.iter().sum();
+        let trials = 500_000;
+        let mut counts = [0usize; 5];
+        for _ in 0..trials {
+            counts[at.sample(&mut rng)] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            let want = w[i] / total;
+            let got = c as f64 / trials as f64;
+            assert!((got - want).abs() < 0.01, "i={i} got={got} want={want}");
+        }
+        assert_eq!(counts[1], 0, "zero-weight category must never be drawn");
+    }
+
+    #[test]
+    fn sample_without_replacement_is_a_subset() {
+        let mut rng = Rng::seed_from_u64(23);
+        let s = rng.sample_without_replacement(100, 30);
+        assert_eq!(s.len(), 30);
+        let mut sorted = s.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 30, "duplicates found");
+        assert!(sorted.iter().all(|&i| i < 100));
+    }
+}

@@ -1,0 +1,115 @@
+//! Integration: the AOT/PJRT engine must agree with the native Rust
+//! kernels on every supported kernel and on the KDE path, across
+//! padding patterns — closing the loop L1(Pallas)→L2(jax)→HLO→rust.
+//!
+//! Requires `make artifacts`; tests self-skip when the artifact dir is
+//! missing so `cargo test` is meaningful pre-build.
+
+use leverkrr::kde;
+use leverkrr::kernels::{Kernel, KernelSpec};
+use leverkrr::linalg::Mat;
+use leverkrr::runtime::Engine;
+use leverkrr::util::rng::Rng;
+
+fn engine() -> Option<Engine> {
+    match Engine::load_default() {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("SKIP (run `make artifacts`): {err}");
+            None
+        }
+    }
+}
+
+/// Worst-case |XLA − native|: f32 tiles + the ‖x‖²+‖y‖²−2xy expansion
+/// leave O(1e-4·scale²) distance residuals; √-nonsmooth Matérn kernels
+/// amplify to ~5e-3 absolute near r=0 (see python/tests, same bound).
+const TOL_ABS: f64 = 5e-3;
+
+#[test]
+fn kernel_blocks_match_native_all_kernels() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Rng::seed_from_u64(1);
+    for spec in [
+        KernelSpec::Matern { nu: 0.5, a: 1.0 },
+        KernelSpec::Matern { nu: 1.5, a: 1.7320508 },
+        KernelSpec::Matern { nu: 2.5, a: 2.2360680 },
+        KernelSpec::Gaussian { sigma: 0.8 },
+    ] {
+        let k = Kernel::new(spec);
+        // deliberately awkward shapes: not multiples of the tile size
+        let x = Mat::from_fn(301, 3, |_, _| rng.normal());
+        let y = Mat::from_fn(157, 3, |_, _| rng.normal());
+        let xla = engine.kernel_matrix(&k, &x, &y).expect("xla path");
+        let native = k.matrix(&x, &y);
+        let dev = xla.max_abs_diff(&native);
+        assert!(dev < TOL_ABS, "{spec:?}: max abs deviation {dev}");
+    }
+}
+
+#[test]
+fn kernel_blocks_match_native_full_d() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Rng::seed_from_u64(2);
+    let k = Kernel::new(KernelSpec::Matern { nu: 1.5, a: 1.0 });
+    // d = d_max exactly (no feature padding)
+    let x = Mat::from_fn(140, engine.d_max, |_, _| 0.5 * rng.normal());
+    let xla = engine.kernel_matrix(&k, &x, &x).expect("xla path");
+    let native = k.matrix(&x, &x);
+    assert!(xla.max_abs_diff(&native) < TOL_ABS);
+}
+
+#[test]
+fn kernel_block_tiny_input() {
+    // n, m ≪ tile: everything is padding except a corner.
+    let Some(engine) = engine() else { return };
+    let k = Kernel::new(KernelSpec::Gaussian { sigma: 1.0 });
+    let x = Mat::from_rows(vec![vec![0.0, 0.0], vec![1.0, 0.0]]);
+    let y = Mat::from_rows(vec![vec![0.0, 1.0]]);
+    let xla = engine.kernel_matrix(&k, &x, &y).expect("xla path");
+    let native = k.matrix(&x, &y);
+    assert_eq!((xla.rows, xla.cols), (2, 1));
+    assert!(xla.max_abs_diff(&native) < 1e-5);
+}
+
+#[test]
+fn kde_matches_native_exact() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Rng::seed_from_u64(3);
+    let ds = leverkrr::data::bimodal3(700, 0.4, &mut rng);
+    let h = kde::bandwidth::fig1(ds.n());
+    let xla = engine.kde_at_points(&ds.x, &ds.x, h).expect("xla kde");
+    let native = kde::exact(&ds.x, &ds.x, h);
+    for i in 0..ds.n() {
+        let rel = (xla[i] - native[i]).abs() / native[i].max(1e-12);
+        assert!(rel < 1e-3, "i={i}: {} vs {} (rel {rel})", xla[i], native[i]);
+    }
+}
+
+#[test]
+fn nystrom_fit_same_quality_on_both_backends() {
+    let Some(engine) = engine() else { return };
+    use leverkrr::coordinator::{fit_with_backend, FitConfig};
+    use leverkrr::runtime::Backend;
+    let mut rng = Rng::seed_from_u64(4);
+    let ds = leverkrr::data::bimodal3(2500, 0.4, &mut rng);
+    let cfg = FitConfig::default_for(&ds);
+    let m_native = fit_with_backend(&ds, &cfg, Backend::Native).unwrap();
+    let m_xla =
+        fit_with_backend(&ds, &cfg, Backend::Xla(std::sync::Arc::new(engine))).unwrap();
+    let r_native =
+        leverkrr::krr::in_sample_risk(&m_native.predict_batch(&ds.x), &ds.f_true);
+    let r_xla = leverkrr::krr::in_sample_risk(&m_xla.predict_batch(&ds.x), &ds.f_true);
+    let rel = (r_native - r_xla).abs() / r_native.max(1e-12);
+    assert!(rel < 0.05, "risk native {r_native} vs xla {r_xla}");
+    // identical landmark draws (same seed, backend-independent sampling)
+    assert_eq!(m_native.nystrom.idx, m_xla.nystrom.idx);
+}
+
+#[test]
+fn engine_rejects_oversized_d() {
+    let Some(engine) = engine() else { return };
+    let k = Kernel::new(KernelSpec::Gaussian { sigma: 1.0 });
+    let x = Mat::zeros(4, engine.d_max + 1);
+    assert!(engine.kernel_matrix(&k, &x, &x).is_err());
+}
