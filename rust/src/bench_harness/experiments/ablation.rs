@@ -30,6 +30,7 @@ struct Variant {
 }
 
 pub fn run(opts: &ExpOptions) {
+    let _pool = opts.pool_guard();
     let n = if opts.full { 6000 } else { 2000 };
     let nu = 1.5;
     let kernel = Kernel::new(KernelSpec::Matern { nu, a: (2.0 * nu).sqrt() });

@@ -43,6 +43,7 @@ pub struct Row {
 }
 
 pub fn run(opts: &ExpOptions) -> Vec<Row> {
+    let _pool = opts.pool_guard();
     let ns = opts.ns.clone().unwrap_or_else(|| default_ns(opts.full));
     let nu = 1.5;
     let kernel = Kernel::new(KernelSpec::Matern { nu, a: (2.0 * nu).sqrt() });

@@ -45,6 +45,7 @@ pub struct Row {
 }
 
 pub fn run(opts: &ExpOptions) -> Vec<Row> {
+    let _pool = opts.pool_guard();
     let ns = opts.ns.clone().unwrap_or_else(|| default_ns(opts.full));
     let ds_dims = default_ds(opts.full);
     let backend = opts.backend();

@@ -20,6 +20,7 @@ use crate::util::rng::{AliasTable, Rng};
 use std::sync::Arc;
 
 pub fn run(opts: &ExpOptions) {
+    let _pool = opts.pool_guard();
     let mut rng = Rng::seed_from_u64(opts.seed);
     let reps = opts.reps.max(3);
     println!("# §Perf microbenches (reps={reps})\n");
@@ -40,6 +41,35 @@ pub fn run(opts: &ExpOptions) {
         "    ~{:.2} Gflop-equiv/s (dist part)",
         flops / t[0] / 1e9
     );
+
+    // ---- pool scaling: kernel-matrix assembly at 1 vs N threads -----------
+    // The headline knob of the parallel compute core: same inputs, same
+    // (bit-identical) output, wall-clock only. n ≥ 4000 so the speedup is
+    // not dominated by spawn overhead.
+    {
+        let n_sc = n.max(4096);
+        let m_sc = 1024;
+        let xs = Mat::from_fn(n_sc, d, |_, _| rng.normal());
+        let ys = Mat::from_fn(m_sc, d, |_, _| rng.normal());
+        let nt_max = crate::util::pool::current_threads().max(2);
+        let mut secs_by_nt = Vec::new();
+        for nt in [1usize, nt_max] {
+            let guard = crate::util::pool::override_threads(nt);
+            let t = bench_reps(1, reps, || {
+                std::hint::black_box(kernel.matrix(&xs, &ys));
+            });
+            drop(guard);
+            println!(
+                "{}",
+                timing_row(&format!("native K_nm ({n_sc}x{m_sc}) threads={nt}"), &t)
+            );
+            secs_by_nt.push(t[0]);
+        }
+        println!(
+            "    kernel-matrix speedup {nt_max} threads vs 1: {:.2}x",
+            secs_by_nt[0] / secs_by_nt[1].max(1e-12)
+        );
+    }
 
     // gaussian kernel assembly (cheaper per-element path)
     let kg = Kernel::new(KernelSpec::Gaussian { sigma: 1.0 });

@@ -43,6 +43,7 @@ const METHODS: [LeverageMethod; 4] = [
 ];
 
 pub fn run(opts: &ExpOptions) -> Vec<Row> {
+    let _pool = opts.pool_guard();
     let datasets = [
         ("RQC", UciName::Rqc),
         ("HTRU2", UciName::Htru2),

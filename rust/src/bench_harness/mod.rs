@@ -23,6 +23,10 @@ pub struct ExpOptions {
     pub ns: Option<Vec<usize>>,
     pub out: Option<String>,
     pub use_xla: bool,
+    /// Worker threads for the compute pool (None → env / machine default).
+    /// Speedup curves come from rerunning with `--threads 1`, `--threads N`;
+    /// results are bit-identical across settings (`util::pool`).
+    pub threads: Option<usize>,
 }
 
 impl ExpOptions {
@@ -33,6 +37,7 @@ impl ExpOptions {
             .flag("seed", "0", "base RNG seed")
             .flag("ns", "", "comma-separated sample sizes (overrides default sweep)")
             .flag("out", "", "write results JSON to this path")
+            .flag("threads", "", "compute-pool workers (default: LEVERKRR_THREADS or all cores)")
             .switch("xla", "use the AOT/PJRT backend (requires `make artifacts`)")
             .switch("bench", "ignored (cargo bench passes --bench)")
     }
@@ -45,7 +50,14 @@ impl ExpOptions {
             ns: a.get_usize_list("ns").filter(|v| !v.is_empty()),
             out: a.get("out").map(|s| s.to_string()).filter(|s| !s.is_empty()),
             use_xla: a.get_bool("xla"),
+            threads: a.get_usize("threads"),
         }
+    }
+
+    /// Apply the `--threads` knob for the duration of a driver run.
+    /// Keep the guard alive: `let _g = opts.pool_guard();`.
+    pub fn pool_guard(&self) -> Option<crate::util::pool::ThreadGuard> {
+        self.threads.map(crate::util::pool::override_threads)
     }
 
     /// Parse process args (for bench binaries: everything after `--`).

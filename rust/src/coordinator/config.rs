@@ -11,6 +11,7 @@
 //!   "method": "sa",
 //!   "m_sub": 180,
 //!   "kde_bandwidth": 0.031,
+//!   "threads": 8,
 //!   "serve": {"max_batch": 256, "max_wait_ms": 4, "workers": 4}
 //! }
 //! ```
@@ -34,6 +35,8 @@ pub struct RunConfig {
     pub method: Option<LeverageMethod>,
     pub m_sub: Option<usize>,
     pub kde_bandwidth: Option<f64>,
+    /// Worker threads for the compute pool (`util::pool`).
+    pub threads: Option<usize>,
     pub serve: ServerConfig,
 }
 
@@ -71,6 +74,7 @@ impl RunConfig {
             method,
             m_sub: doc.get("m_sub").as_usize(),
             kde_bandwidth: doc.get("kde_bandwidth").as_f64(),
+            threads: doc.get("threads").as_usize(),
             serve: ServerConfig {
                 max_batch: serve
                     .get("max_batch")
@@ -132,6 +136,9 @@ impl RunConfig {
         }
         if let Some(h) = self.kde_bandwidth {
             cfg.kde_bandwidth = Some(h);
+        }
+        if self.threads.is_some() {
+            cfg.threads = self.threads;
         }
         cfg
     }

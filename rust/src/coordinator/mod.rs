@@ -46,6 +46,10 @@ pub struct FitConfig {
     /// KDE bandwidth for SA (None → Scott's rule).
     pub kde_bandwidth: Option<f64>,
     pub seed: u64,
+    /// Worker threads for the compute pool during this fit
+    /// (None → `LEVERKRR_THREADS` / available parallelism). Results are
+    /// bit-identical for every value — see `util::pool`.
+    pub threads: Option<usize>,
 }
 
 impl FitConfig {
@@ -64,6 +68,7 @@ impl FitConfig {
             inner_m: crate::nystrom::subsize::table1_inner(n, alpha, d).max(8),
             kde_bandwidth: Some(crate::kde::bandwidth::table1(n)),
             seed: 0,
+            threads: None,
         }
     }
 }
@@ -121,6 +126,10 @@ pub fn fit_with_backend(
 ) -> anyhow::Result<FittedModel> {
     let kernel = Kernel::new(cfg.kernel);
     let mut rng = Rng::seed_from_u64(cfg.seed);
+    // Scope the pool to the requested thread count for the whole fit
+    // (restored on drop). Purely a wall-clock knob: scores, landmarks and
+    // β are identical at any setting.
+    let _pool_guard = cfg.threads.map(crate::util::pool::override_threads);
     let t_total = std::time::Instant::now();
 
     // Stage 1+2: density estimation + leverage scores.

@@ -32,7 +32,10 @@ impl Default for ServerConfig {
         ServerConfig {
             max_batch: 128,
             max_wait: Duration::from_millis(2),
-            workers: crate::util::default_threads().min(4),
+            // serving concurrency, not compute-pool width: deliberately
+            // ignores LEVERKRR_THREADS / pool overrides so a compute
+            // knob can't change serve-throughput numbers
+            workers: crate::util::pool::machine_threads().min(4),
         }
     }
 }

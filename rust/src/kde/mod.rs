@@ -111,12 +111,14 @@ pub fn density_at_points(x: &Mat, h: f64, method: KdeMethod, rng: &mut Rng) -> V
 }
 
 /// Exact Gaussian KDE of the rows of `data`, evaluated at rows of `q`.
+/// O(n·m·d), pool-parallel over query points; every query's sum runs over
+/// the data in the same fixed order, so results are thread-count
+/// invariant.
 pub fn exact(q: &Mat, data: &Mat, h: f64) -> Vec<f64> {
     assert_eq!(q.cols, data.cols);
     let inv2h2 = 1.0 / (2.0 * h * h);
     let c = norm_const(data.cols, h) / data.rows as f64;
-    let nt = crate::util::default_threads();
-    let out = crate::util::par_ranges(q.rows, nt, |range| {
+    let out = crate::util::pool::par_chunks(q.rows, |range| {
         let mut v = Vec::with_capacity(range.len());
         for i in range {
             let qi = q.row(i);
@@ -140,8 +142,7 @@ pub fn subsampled(x: &Mat, h: f64, m: usize, rng: &mut Rng) -> Vec<f64> {
     let centers = Mat::from_fn(m, x.cols, |i, j| x[(centers_idx[i], j)]);
     let inv2h2 = 1.0 / (2.0 * h * h);
     let c = norm_const(x.cols, h) / m as f64;
-    let nt = crate::util::default_threads();
-    let out = crate::util::par_ranges(n, nt, |range| {
+    let out = crate::util::pool::par_chunks(n, |range| {
         let mut v = Vec::with_capacity(range.len());
         for i in range {
             let xi = x.row(i);

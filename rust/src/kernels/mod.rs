@@ -125,18 +125,20 @@ impl Kernel {
         self.eval_sq(sqdist(x, y))
     }
 
-    /// Assemble the (rows(x) × rows(y)) kernel matrix natively
-    /// (multithreaded fallback path; the production path is
-    /// `runtime::KernelEngine`).
+    /// Assemble the (rows(x) × rows(y)) kernel matrix natively, tiled
+    /// over row ranges on the shared worker pool (the production path is
+    /// the AOT/PJRT engine in `runtime`). Each output row is evaluated by
+    /// one worker with a fixed column order — bit-identical results for
+    /// every thread count.
     pub fn matrix(&self, x: &Mat, y: &Mat) -> Mat {
         assert_eq!(x.cols, y.cols, "dimension mismatch");
         let (n, m) = (x.rows, y.rows);
         let nt = if n * m * x.cols > 32 * 32 * 32 {
-            crate::util::default_threads()
+            crate::util::pool::current_threads()
         } else {
             1
         };
-        let blocks = crate::util::par_ranges(n, nt, |range| {
+        let blocks = crate::util::pool::par_chunks_with(nt, n, |range| {
             let mut out = Vec::with_capacity(range.len() * m);
             for i in range {
                 let xi = x.row(i);
@@ -149,16 +151,17 @@ impl Kernel {
         Mat { rows: n, cols: m, data: blocks.into_iter().flatten().collect() }
     }
 
-    /// Symmetric kernel matrix K(X, X) — computes the upper triangle only.
+    /// Symmetric kernel matrix K(X, X) — computes the upper triangle only
+    /// (pool-parallel over row ranges; mirror is a deterministic copy).
     pub fn matrix_sym(&self, x: &Mat) -> Mat {
         let n = x.rows;
         let nt = if n * n * x.cols > 32 * 32 * 32 {
-            crate::util::default_threads()
+            crate::util::pool::current_threads()
         } else {
             1
         };
         // parallel over row ranges; each fills its rows' upper part
-        let blocks = crate::util::par_ranges(n, nt, |range| {
+        let blocks = crate::util::pool::par_chunks_with(nt, n, |range| {
             let mut rows = Vec::with_capacity(range.len());
             for i in range {
                 let xi = x.row(i);

@@ -59,27 +59,19 @@ pub fn kmeans(phi: &Mat, k: usize, max_iter: usize, rng: &mut Rng) -> KMeansResu
     let mut iterations = 0;
     for it in 0..max_iter {
         iterations = it + 1;
-        // assign (parallel)
-        let nt = crate::util::default_threads();
-        let new_assign: Vec<usize> = crate::util::par_ranges(n, nt, |range| {
-            range
-                .map(|i| {
-                    let mut best = 0;
-                    let mut bd = f64::INFINITY;
-                    for c in 0..k {
-                        let dd = crate::linalg::sqdist(phi.row(i), centers.row(c));
-                        if dd < bd {
-                            bd = dd;
-                            best = c;
-                        }
-                    }
-                    best
-                })
-                .collect::<Vec<_>>()
-        })
-        .into_iter()
-        .flatten()
-        .collect();
+        // assign (pool-parallel; per-point argmin → thread-count invariant)
+        let new_assign: Vec<usize> = crate::util::pool::par_rows(n, |i| {
+            let mut best = 0;
+            let mut bd = f64::INFINITY;
+            for c in 0..k {
+                let dd = crate::linalg::sqdist(phi.row(i), centers.row(c));
+                if dd < bd {
+                    bd = dd;
+                    best = c;
+                }
+            }
+            best
+        });
         let changed = new_assign
             .iter()
             .zip(&assignments)

@@ -34,11 +34,11 @@ impl NystromFeatures {
         Ok(NystromFeatures { kernel, m: idx.len(), landmarks, chol_jj })
     }
 
-    /// Embed the rows of `x` → (rows, m) feature matrix.
+    /// Embed the rows of `x` → (rows, m) feature matrix (pool-parallel
+    /// over rows; each row is an independent triangular solve).
     pub fn transform(&self, x: &Mat) -> Mat {
         let knj = self.kernel.matrix(x, &self.landmarks);
-        let nt = crate::util::default_threads();
-        let rows = crate::util::par_ranges(x.rows, nt, |range| {
+        let rows = crate::util::pool::par_chunks(x.rows, |range| {
             let mut out = Vec::with_capacity(range.len() * self.m);
             for i in range {
                 let mut row = knj.row(i).to_vec();

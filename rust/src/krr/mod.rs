@@ -83,8 +83,7 @@ impl ExactKrr {
     pub fn rescaled_leverage(&self) -> Vec<f64> {
         let n = self.x_train.rows;
         let nlam = n as f64 * self.lambda;
-        let nt = crate::util::default_threads();
-        let out = crate::util::par_ranges(n, nt, |range| {
+        let out = crate::util::pool::par_chunks(n, |range| {
             let mut v = Vec::with_capacity(range.len());
             for i in range {
                 let mut e = vec![0.0; n];

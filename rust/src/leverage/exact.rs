@@ -19,7 +19,9 @@ pub fn rescaled_leverage_exact(
     a.add_diag(n as f64 * lambda);
     let chol = Cholesky::factor_jittered(&a).expect("K + nλI must be PD");
     let nlam = n as f64 * lambda;
-    let out = crate::util::par_ranges(n, crate::util::default_threads(), |range| {
+    // pool-parallel over diagonal entries: each e_i solve is independent,
+    // so scores are bit-identical for any thread count.
+    let out = crate::util::pool::par_chunks(n, |range| {
         let mut v = Vec::with_capacity(range.len());
         for i in range {
             let mut e = vec![0.0; n];

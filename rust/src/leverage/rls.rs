@@ -48,8 +48,8 @@ pub fn dictionary_rls(
         None => (0..n).collect(),
     };
     // B rows: b_i = L^{-1} k_{J,i}; accumulate BᵀB and keep b_i
-    let nt = crate::util::default_threads();
-    let chunks = crate::util::par_ranges(rows.len(), nt, |range| {
+    // (pool-parallel; each b_i is an independent triangular solve)
+    let chunks = crate::util::pool::par_chunks(rows.len(), |range| {
         let mut bs = Vec::with_capacity(range.len());
         for r in range {
             let i = rows[r];
@@ -85,7 +85,7 @@ pub fn dictionary_rls(
     mmat.add_diag(nlam);
     let chol_m = Cholesky::factor_jittered(&mmat).expect("M PD");
     // score_i = n · b_iᵀ M^{−1} b_i  (∈ (0, n))
-    let out = crate::util::par_ranges(b_rows.len(), nt, |range| {
+    let out = crate::util::pool::par_chunks(b_rows.len(), |range| {
         range
             .map(|r| {
                 let q = chol_m.quad_form(&b_rows[r]);

@@ -268,11 +268,12 @@ impl SaEstimator {
                 p_hat.iter().map(|&p| sa_value_closed_form(stab(p), &sd, lambda)).collect()
             }
             SaIntegration::Quadrature => {
-                let out = crate::util::par_ranges(n, crate::util::default_threads(), |r| {
-                    r.map(|i| sa_value_quadrature(stab(p_hat[i]), &sd, lambda, &gl))
-                        .collect::<Vec<_>>()
-                });
-                out.into_iter().flatten().collect()
+                // per-point quadrature on the shared pool (each point's
+                // panels are evaluated independently → thread-count
+                // invariant)
+                crate::util::pool::par_rows(n, |i| {
+                    sa_value_quadrature(stab(p_hat[i]), &sd, lambda, &gl)
+                })
             }
         }
     }

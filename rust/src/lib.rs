@@ -21,9 +21,29 @@
 //! against. The scores drive importance-sampled Nyström approximation of
 //! KRR with provably optimal in-sample risk (paper Thms 5–6).
 //!
+//! ## Parallel compute core
+//!
+//! Every quadratic hot path — [`linalg::Mat::matmul`] / `gram`, kernel
+//! matrix assembly, KDE sums, exact-leverage diagonals, per-point SA
+//! quadrature, and Nyström block assembly — runs on the shared worker
+//! pool in [`util::pool`]. The pool guarantees **bit-identical results
+//! for every thread count**: per-element work is partitioned so each
+//! output is produced by exactly one worker in a fixed order, and
+//! sum-reductions (`Mat::gram`, the Nyström right-hand side) fold
+//! fixed-size blocks in block order, so the floating-point evaluation
+//! tree never depends on how many workers ran. The thread count comes
+//! from (highest priority first) a scoped [`util::pool::override_threads`]
+//! guard (the [`coordinator::FitConfig::threads`] knob and the bench
+//! harness's `--threads` flag), the `LEVERKRR_THREADS` environment
+//! variable, or the machine's available parallelism capped at 16; a
+//! count of 1 short-circuits to a serial reference path on the caller's
+//! thread. `rust/tests/parallel_parity.rs` pins the guarantee down with
+//! bitwise 1-vs-4-thread comparisons across every parallelized path.
+//!
 //! ## Crate layout
 //!
-//! * [`util`] — zero-dependency substrates: RNG, JSON, CLI, property tests.
+//! * [`util`] — zero-dependency substrates: RNG, JSON, CLI, property
+//!   tests, and the [`util::pool`] worker pool described above.
 //! * [`metrics`] — timers / counters / streaming summaries.
 //! * [`linalg`] — dense row-major matrices, blocked matmul, Cholesky.
 //! * [`special`] — Γ, erf, modified Bessel K_ν, polylogarithm Li_s.
@@ -34,7 +54,8 @@
 //! * [`leverage`] — SA (this paper), exact, uniform, Recursive-RLS, BLESS.
 //! * [`nystrom`] — importance-sampled Nyström KRR solver.
 //! * [`krr`] — exact KRR (ground truth) and risk metrics.
-//! * [`runtime`] — PJRT engine executing AOT-lowered JAX/Pallas artifacts.
+//! * [`runtime`] — PJRT engine executing AOT-lowered JAX/Pallas artifacts
+//!   (behind the `xla-runtime` feature; an API-compatible stub otherwise).
 //! * [`coordinator`] — fit pipeline + dynamic-batching predict server.
 //! * [`bench_harness`] — timing harness used by `rust/benches/*`.
 //!

@@ -138,14 +138,14 @@ impl Cholesky {
         x
     }
 
-    /// Solve A X = B column-wise for row-major B (n×k). Multithreaded
+    /// Solve A X = B column-wise for row-major B (n×k). Pool-parallel
     /// over columns for wide right-hand sides (the exact-leverage path
-    /// solves n right-hand sides).
+    /// solves n right-hand sides); each column is an independent solve,
+    /// so the result is thread-count invariant.
     pub fn solve_mat(&self, b: &Mat) -> Mat {
         assert_eq!(b.rows, self.n);
         let bt = b.transpose(); // columns become contiguous rows
-        let nt = crate::util::default_threads();
-        let solved = crate::util::par_ranges(bt.rows, nt, |range| {
+        let solved = crate::util::pool::par_chunks(bt.rows, |range| {
             let mut out = Vec::with_capacity(range.len() * self.n);
             for c in range {
                 let mut col = bt.row(c).to_vec();

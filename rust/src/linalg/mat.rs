@@ -96,13 +96,16 @@ impl Mat {
             .fold(0.0, f64::max)
     }
 
-    /// C = A · B, blocked over rows of A with one thread per row range and
-    /// an ikj inner ordering (streams B rows; vectorizes the j loop).
+    /// C = A · B, blocked over rows of A with one pool worker per row
+    /// range and an ikj inner ordering (streams B rows; vectorizes the j
+    /// loop). Each output row is produced by exactly one worker with a
+    /// fixed inner order, so the result is bit-identical for every
+    /// thread count (see `util::pool`).
     pub fn matmul(&self, b: &Mat) -> Mat {
         assert_eq!(self.cols, b.rows, "matmul shape mismatch");
         let (m, k, n) = (self.rows, self.cols, b.cols);
-        let nt = if m * k * n > 64 * 64 * 64 { crate::util::default_threads() } else { 1 };
-        let row_blocks = crate::util::par_ranges(m, nt, |range| {
+        let nt = if m * k * n > 64 * 64 * 64 { crate::util::pool::current_threads() } else { 1 };
+        let row_blocks = crate::util::pool::par_chunks_with(nt, m, |range| {
             let mut block = vec![0.0; range.len() * n];
             for (bi, i) in range.clone().enumerate() {
                 let a_row = self.row(i);
@@ -127,13 +130,27 @@ impl Mat {
     }
 
     /// C = Aᵀ · A  (m×m from n×m input), symmetric; computes the upper
-    /// triangle and mirrors. Multithreaded over column pairs.
+    /// triangle and mirrors.
+    ///
+    /// Partial Grams are accumulated over *fixed-size* row blocks and
+    /// folded in block order, so the floating-point reduction tree — and
+    /// therefore the result, bit for bit — is independent of the worker
+    /// count (`util::pool::par_blocks`). Cache-friendlier than the
+    /// column-pair loop for row-major data.
     pub fn gram(&self) -> Mat {
         let (n, m) = (self.rows, self.cols);
-        let nt = if n * m * m > 64 * 64 * 64 { crate::util::default_threads() } else { 1 };
-        // accumulate per-thread partial Grams over row ranges, then reduce:
-        // cache-friendlier than the column-pair loop for row-major data.
-        let partials = crate::util::par_ranges(n, nt, |range| {
+        // The block size is a pure function of the input shape (never of
+        // the thread count), so the partition and fold order — and
+        // therefore the result, bit for bit — are identical at any
+        // worker count. Up to 64 blocks for parallelism, capped so the
+        // live m×m partials stay within ~64 MB before the fold (each is
+        // m²·8 bytes; at m=1000 that's 8 blocks, not one per 256 rows).
+        // Changing the partition is numerically valid but not
+        // parity-stable across versions.
+        let max_blocks_by_mem = (64 * 1024 * 1024 / (m * m * 8 + 1)).max(1);
+        let block = n.div_ceil(max_blocks_by_mem.min(64)).max(256);
+        let nt = if n * m * m > 64 * 64 * 64 { crate::util::pool::current_threads() } else { 1 };
+        let partials = crate::util::pool::par_blocks_with(nt, n, block, |range| {
             let mut g = vec![0.0; m * m];
             for i in range {
                 let r = self.row(i);

@@ -17,18 +17,14 @@ pub use chol::{chol_in_place, CholError, Cholesky};
 pub use eigen::{sym_eigen, SymEigen};
 pub use mat::Mat;
 
-/// y ← A x for row-major `a` of shape (rows, cols). Multithreaded for
-/// large matrices.
+/// y ← A x for row-major `a` of shape (rows, cols). Pool-parallel over
+/// rows for large matrices (per-row outputs, so thread-count invariant).
 pub fn matvec(a: &Mat, x: &[f64]) -> Vec<f64> {
     assert_eq!(a.cols, x.len(), "matvec shape mismatch");
-    let nt = crate::util::default_threads();
     if a.rows * a.cols < 64 * 64 {
         return (0..a.rows).map(|i| dot(a.row(i), x)).collect();
     }
-    let rows = crate::util::par_ranges(a.rows, nt, |r| {
-        r.map(|i| dot(a.row(i), x)).collect::<Vec<f64>>()
-    });
-    rows.into_iter().flatten().collect()
+    crate::util::pool::par_rows(a.rows, |i| dot(a.row(i), x))
 }
 
 #[inline]

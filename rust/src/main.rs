@@ -141,6 +141,7 @@ fn data_flags(c: Command) -> Command {
         .flag("lambda", "", "regularization λ (default: paper rule)")
         .flag("method", "sa", "leverage method: sa|sa-quadrature|uniform|rc|bless|exact")
         .flag("m", "", "Nyström landmarks (default: paper rule)")
+        .flag("threads", "", "compute-pool workers (default: LEVERKRR_THREADS or all cores)")
         .switch("xla", "use AOT/PJRT backend (requires `make artifacts`)")
 }
 
@@ -158,6 +159,7 @@ fn build_cfg(a: &leverkrr::util::cli::Args, ds: &Dataset) -> FitConfig {
     if let Some(m) = a.get_usize("m") {
         cfg.m_sub = m;
     }
+    cfg.threads = a.get_usize("threads");
     cfg.seed = a.get_u64("seed").unwrap_or(0);
     cfg
 }
@@ -219,6 +221,7 @@ fn cmd_leverage(argv: &[String]) -> i32 {
     let mut ctx = LeverageContext::new(&ds.x, &kernel, cfg.lambda);
     ctx.p_true = ds.p_true.as_deref();
     ctx.inner_m = cfg.inner_m;
+    let _pool = cfg.threads.map(leverkrr::util::pool::override_threads);
     let (scores, secs) = leverkrr::metrics::time_it(|| est.estimate(&ctx, &mut rng));
     let q = leverkrr::leverage::normalize(&scores);
     let dstat: f64 = scores.iter().sum::<f64>() / ds.n() as f64;
@@ -263,7 +266,7 @@ fn cmd_serve(argv: &[String]) -> i32 {
     let scfg = ServerConfig {
         max_batch: a.get_usize("max-batch").unwrap_or(128),
         max_wait: std::time::Duration::from_millis(a.get_u64("max-wait-ms").unwrap_or(2)),
-        workers: leverkrr::util::default_threads().min(4),
+        workers: leverkrr::util::pool::machine_threads().min(4),
     };
     let server = Server::start(model, scfg);
     let n_req = a.get_usize("requests").unwrap_or(10_000);

@@ -110,13 +110,27 @@ impl NystromKrr {
         }
         let chol = Cholesky::factor_jittered(&a)
             .map_err(|e| anyhow::anyhow!("Nyström normal equations singular: {e}"))?;
-        // rhs = K_mn y
+        // rhs = K_mn y — fixed-block partial sums folded in block order,
+        // so the accumulation is bit-identical for any pool size (serial
+        // dispatch below the parallel-worthwhile threshold).
+        const RHS_BLOCK: usize = 1024;
+        let nt =
+            if n * m > 64 * 64 { crate::util::pool::current_threads() } else { 1 };
+        let partials = crate::util::pool::par_blocks_with(nt, n, RHS_BLOCK, |range| {
+            let mut acc = vec![0.0; m];
+            for i in range {
+                let row = knm.row(i);
+                let yi = y[i];
+                for (aj, &kij) in acc.iter_mut().zip(row) {
+                    *aj += kij * yi;
+                }
+            }
+            acc
+        });
         let mut rhs = vec![0.0; m];
-        for i in 0..n {
-            let row = knm.row(i);
-            let yi = y[i];
-            for j in 0..m {
-                rhs[j] += row[j] * yi;
+        for p in partials {
+            for (rj, pj) in rhs.iter_mut().zip(&p) {
+                *rj += pj;
             }
         }
         let beta = chol.solve(&rhs);

@@ -2,7 +2,7 @@
 //!
 //! `make artifacts` lowers the L2 JAX graphs (which call the L1 Pallas
 //! kernels) to HLO **text** under `artifacts/`, described by
-//! `artifacts/manifest.json`. This module loads them once into a
+//! `artifacts/manifest.json`. This module loads them once into an
 //! [`Engine`] (PJRT CPU client) and exposes tiled, padded execution:
 //!
 //! * [`Engine::kernel_matrix`] — assemble K(X, Y) from fixed-shape
@@ -18,279 +18,365 @@
 //! [`Backend`] is the pluggable switch between this engine and the native
 //! Rust fallback ([`crate::kernels::Kernel::matrix`]), with byte-level
 //! parity tests in `rust/tests/`.
+//!
+//! # The `xla-runtime` feature
+//!
+//! The PJRT path needs the vendored `xla` crate closure, which not every
+//! build environment ships. The engine proper is therefore compiled only
+//! with the `xla-runtime` cargo feature; without it this module exposes a
+//! stub [`Engine`] with the same API whose `load` always errors, so
+//! [`Backend::auto`] falls back to the native kernels and the runtime
+//! parity tests self-skip. Everything downstream (coordinator, benches,
+//! CLI) is feature-agnostic.
 
 use crate::kernels::{Kernel, KernelSpec};
 use crate::linalg::Mat;
-use crate::util::json::Json;
-use anyhow::{anyhow, bail, Context, Result};
-use std::collections::BTreeMap;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 /// Default artifact directory (relative to the repo root / CWD).
 pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
 
-/// One compiled executable plus its IO description.
-struct Entry {
-    exe: xla::PjRtLoadedExecutable,
-    kind: String,
-    tm: usize,
-    tn: usize,
+/// Artifact entry name for a kernel spec (None → no AOT kernel; use the
+/// native fallback, e.g. general-ν Matérn). Shared by the real engine and
+/// the stub so `Engine::entry_for` behaves identically in both builds.
+fn entry_name_for(spec: &KernelSpec) -> Option<&'static str> {
+    match spec {
+        KernelSpec::Matern { nu, .. } if (nu - 0.5).abs() < 1e-12 => Some("matern05_block"),
+        KernelSpec::Matern { nu, .. } if (nu - 1.5).abs() < 1e-12 => Some("matern15_block"),
+        KernelSpec::Matern { nu, .. } if (nu - 2.5).abs() < 1e-12 => Some("matern25_block"),
+        KernelSpec::Matern { .. } => None,
+        KernelSpec::Gaussian { .. } => Some("gaussian_block"),
+    }
 }
 
-/// The PJRT state: client + executables. The `xla` crate's handles hold
-/// `Rc`s internally, so they are not `Send`; we move the whole state
-/// behind one `Mutex` and never let a buffer/literal handle escape the
-/// critical section (results are copied into plain `Vec<f32>` before the
-/// lock is released). Under that discipline cross-thread transfer of the
-/// *locked container* is sound, which the `unsafe impl Send` below
-/// asserts. The PJRT CPU client itself is thread-safe; the `Rc` is only
-/// an artifact of the wrapper.
-struct PjrtState {
-    _client: xla::PjRtClient,
-    entries: BTreeMap<String, Entry>,
+/// Artifact directory: `LEVERKRR_ARTIFACTS` or the default.
+fn resolve_artifact_dir() -> String {
+    std::env::var("LEVERKRR_ARTIFACTS").unwrap_or_else(|_| DEFAULT_ARTIFACT_DIR.to_string())
 }
 
-// SAFETY: see `PjrtState` docs — all access is serialized by the Mutex in
-// `Engine`, no Rc handle is ever cloned or dropped concurrently.
-unsafe impl Send for PjrtState {}
+#[cfg(feature = "xla-runtime")]
+mod pjrt {
+    use super::{entry_name_for, resolve_artifact_dir};
+    use crate::kernels::{Kernel, KernelSpec};
+    use crate::linalg::Mat;
+    use crate::util::json::Json;
+    use anyhow::{anyhow, bail, Context, Result};
+    use std::collections::BTreeMap;
+    use std::sync::Mutex;
 
-/// The PJRT engine: one compiled executable per artifact.
-pub struct Engine {
-    /// PJRT executables are not Sync; serialize dispatch through a mutex.
-    entries: Mutex<PjrtState>,
-    pub tm: usize,
-    pub tn: usize,
-    pub d_max: usize,
-    pub dir: String,
-    /// Execution counters for the perf harness.
-    pub metrics: crate::metrics::Registry,
-}
+    /// One compiled executable plus its IO description.
+    struct Entry {
+        exe: xla::PjRtLoadedExecutable,
+        kind: String,
+        tm: usize,
+        tn: usize,
+    }
 
-impl Engine {
-    /// Load every artifact listed in `<dir>/manifest.json`.
-    pub fn load(dir: &str) -> Result<Engine> {
-        let manifest_path = format!("{dir}/manifest.json");
-        let text = std::fs::read_to_string(&manifest_path)
-            .with_context(|| format!("reading {manifest_path} (run `make artifacts`)"))?;
-        let manifest = Json::parse(&text).map_err(|e| anyhow!("bad manifest: {e}"))?;
-        let tm = manifest.get("tm").as_usize().context("manifest.tm")?;
-        let tn = manifest.get("tn").as_usize().context("manifest.tn")?;
-        let d_max = manifest.get("d").as_usize().context("manifest.d")?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        let mut entries = BTreeMap::new();
-        let obj = manifest.get("entries").as_obj().context("manifest.entries")?;
-        for (name, meta) in obj {
-            let file = meta.get("file").as_str().context("entry.file")?;
-            let kind = meta.get("kind").as_str().context("entry.kind")?.to_string();
-            let etm = meta.get("tm").as_usize().unwrap_or(tm);
-            let etn = meta.get("tn").as_usize().unwrap_or(tn);
-            let path = format!("{dir}/{file}");
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .map_err(|e| anyhow!("loading {path}: {e:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
-            entries.insert(name.clone(), Entry { exe, kind, tm: etm, tn: etn });
+    /// The PJRT state: client + executables. The `xla` crate's handles hold
+    /// `Rc`s internally, so they are not `Send`; we move the whole state
+    /// behind one `Mutex` and never let a buffer/literal handle escape the
+    /// critical section (results are copied into plain `Vec<f32>` before the
+    /// lock is released). Under that discipline cross-thread transfer of the
+    /// *locked container* is sound, which the `unsafe impl Send` below
+    /// asserts. The PJRT CPU client itself is thread-safe; the `Rc` is only
+    /// an artifact of the wrapper.
+    struct PjrtState {
+        _client: xla::PjRtClient,
+        entries: BTreeMap<String, Entry>,
+    }
+
+    // SAFETY: see `PjrtState` docs — all access is serialized by the Mutex in
+    // `Engine`, no Rc handle is ever cloned or dropped concurrently.
+    unsafe impl Send for PjrtState {}
+
+    /// The PJRT engine: one compiled executable per artifact.
+    pub struct Engine {
+        /// PJRT executables are not Sync; serialize dispatch through a mutex.
+        entries: Mutex<PjrtState>,
+        pub tm: usize,
+        pub tn: usize,
+        pub d_max: usize,
+        pub dir: String,
+        /// Execution counters for the perf harness.
+        pub metrics: crate::metrics::Registry,
+    }
+
+    impl Engine {
+        /// Load every artifact listed in `<dir>/manifest.json`.
+        pub fn load(dir: &str) -> Result<Engine> {
+            let manifest_path = format!("{dir}/manifest.json");
+            let text = std::fs::read_to_string(&manifest_path)
+                .with_context(|| format!("reading {manifest_path} (run `make artifacts`)"))?;
+            let manifest = Json::parse(&text).map_err(|e| anyhow!("bad manifest: {e}"))?;
+            let tm = manifest.get("tm").as_usize().context("manifest.tm")?;
+            let tn = manifest.get("tn").as_usize().context("manifest.tn")?;
+            let d_max = manifest.get("d").as_usize().context("manifest.d")?;
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+            let mut entries = BTreeMap::new();
+            let obj = manifest.get("entries").as_obj().context("manifest.entries")?;
+            for (name, meta) in obj {
+                let file = meta.get("file").as_str().context("entry.file")?;
+                let kind = meta.get("kind").as_str().context("entry.kind")?.to_string();
+                let etm = meta.get("tm").as_usize().unwrap_or(tm);
+                let etn = meta.get("tn").as_usize().unwrap_or(tn);
+                let path = format!("{dir}/{file}");
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .map_err(|e| anyhow!("loading {path}: {e:?}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+                entries.insert(name.clone(), Entry { exe, kind, tm: etm, tn: etn });
+            }
+            Ok(Engine {
+                entries: Mutex::new(PjrtState { _client: client, entries }),
+                tm,
+                tn,
+                d_max,
+                dir: dir.to_string(),
+                metrics: crate::metrics::Registry::new(),
+            })
         }
-        Ok(Engine {
-            entries: Mutex::new(PjrtState { _client: client, entries }),
-            tm,
-            tn,
-            d_max,
-            dir: dir.to_string(),
-            metrics: crate::metrics::Registry::new(),
-        })
-    }
 
-    /// Try the default artifact dir (respecting `LEVERKRR_ARTIFACTS`).
-    pub fn load_default() -> Result<Engine> {
-        let dir = std::env::var("LEVERKRR_ARTIFACTS")
-            .unwrap_or_else(|_| DEFAULT_ARTIFACT_DIR.to_string());
-        Engine::load(&dir)
-    }
-
-    /// Artifact entry name for a kernel spec (None → no AOT kernel; use
-    /// the native fallback, e.g. general-ν Matérn).
-    pub fn entry_for(spec: &KernelSpec) -> Option<&'static str> {
-        match spec {
-            KernelSpec::Matern { nu, .. } if (nu - 0.5).abs() < 1e-12 => Some("matern05_block"),
-            KernelSpec::Matern { nu, .. } if (nu - 1.5).abs() < 1e-12 => Some("matern15_block"),
-            KernelSpec::Matern { nu, .. } if (nu - 2.5).abs() < 1e-12 => Some("matern25_block"),
-            KernelSpec::Matern { .. } => None,
-            KernelSpec::Gaussian { .. } => Some("gaussian_block"),
+        /// Try the default artifact dir (respecting `LEVERKRR_ARTIFACTS`).
+        pub fn load_default() -> Result<Engine> {
+            Engine::load(&resolve_artifact_dir())
         }
-    }
 
-    pub fn supports(&self, spec: &KernelSpec) -> bool {
-        match Self::entry_for(spec) {
-            Some(name) => self.entries.lock().unwrap().entries.contains_key(name),
-            None => false,
+        /// Artifact entry name for a kernel spec (None → no AOT kernel; use
+        /// the native fallback, e.g. general-ν Matérn).
+        pub fn entry_for(spec: &KernelSpec) -> Option<&'static str> {
+            entry_name_for(spec)
         }
-    }
 
-    /// Scale parameter passed to the kernel-block executable.
-    fn scale_param(spec: &KernelSpec) -> f32 {
-        match spec {
-            KernelSpec::Matern { a, .. } => *a as f32,
-            KernelSpec::Gaussian { sigma } => *sigma as f32,
-        }
-    }
-
-    /// Pack rows [lo, hi) of `m` into a zero-padded f32 tile buffer of
-    /// shape (tile_rows, d_max).
-    fn pack_tile(&self, m: &Mat, lo: usize, hi: usize, tile_rows: usize) -> Vec<f32> {
-        let mut buf = vec![0.0f32; tile_rows * self.d_max];
-        for (bi, i) in (lo..hi).enumerate() {
-            let row = m.row(i);
-            for (j, &v) in row.iter().enumerate() {
-                buf[bi * self.d_max + j] = v as f32;
+        pub fn supports(&self, spec: &KernelSpec) -> bool {
+            match Self::entry_for(spec) {
+                Some(name) => self.entries.lock().unwrap().entries.contains_key(name),
+                None => false,
             }
         }
-        buf
-    }
 
-    /// Pick the large-tile variant when the problem amortizes it:
-    /// dispatch overhead is ~100–300 µs/tile on CPU PJRT, so fewer,
-    /// fatter tiles win once the matrix exceeds one small tile in each
-    /// dimension (§Perf records the measured effect).
-    fn pick_variant<'a>(
-        state: &'a PjrtState,
-        base: &str,
-        n: usize,
-        m: usize,
-    ) -> Option<(&'a Entry, String)> {
-        let large = format!("{base}_l");
-        if let Some(e) = state.entries.get(&large) {
-            if n * m >= e.tm * e.tn / 2 {
-                return Some((e, large));
+        /// Scale parameter passed to the kernel-block executable.
+        fn scale_param(spec: &KernelSpec) -> f32 {
+            match spec {
+                KernelSpec::Matern { a, .. } => *a as f32,
+                KernelSpec::Gaussian { sigma } => *sigma as f32,
             }
         }
-        state.entries.get(base).map(|e| (e, base.to_string()))
-    }
 
-    /// Assemble the full K(X, Y) through tiled executions of the AOT
-    /// kernel block.
-    pub fn kernel_matrix(&self, kernel: &Kernel, x: &Mat, y: &Mat) -> Result<Mat> {
-        let name = Self::entry_for(&kernel.spec)
-            .ok_or_else(|| anyhow!("no AOT kernel for {:?}", kernel.spec))?;
-        if x.cols > self.d_max {
-            bail!("d={} exceeds artifact d_max={}", x.cols, self.d_max);
+        /// Pack rows [lo, hi) of `m` into a zero-padded f32 tile buffer of
+        /// shape (tile_rows, d_max).
+        fn pack_tile(&self, m: &Mat, lo: usize, hi: usize, tile_rows: usize) -> Vec<f32> {
+            let mut buf = vec![0.0f32; tile_rows * self.d_max];
+            for (bi, i) in (lo..hi).enumerate() {
+                let row = m.row(i);
+                for (j, &v) in row.iter().enumerate() {
+                    buf[bi * self.d_max + j] = v as f32;
+                }
+            }
+            buf
         }
-        assert_eq!(x.cols, y.cols);
-        let (n, m) = (x.rows, y.rows);
-        let scale = xla::Literal::vec1(&[Self::scale_param(&kernel.spec)]);
-        let mut out = Mat::zeros(n, m);
-        let state = self.entries.lock().unwrap();
-        let (entry, variant) = Self::pick_variant(&state, name, n, m)
-            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
-        let (tm, tn) = (entry.tm, entry.tn);
-        let t0 = std::time::Instant::now();
-        let mut row = 0;
-        while row < n {
-            let row_hi = (row + tm).min(n);
-            let xt = self.pack_tile(x, row, row_hi, tm);
-            let x_lit = xla::Literal::vec1(&xt)
-                .reshape(&[tm as i64, self.d_max as i64])
-                .map_err(|e| anyhow!("{e:?}"))?;
-            let mut col = 0;
-            while col < m {
-                let col_hi = (col + tn).min(m);
-                let yt = self.pack_tile(y, col, col_hi, tn);
-                let y_lit = xla::Literal::vec1(&yt)
-                    .reshape(&[tn as i64, self.d_max as i64])
+
+        /// Pick the large-tile variant when the problem amortizes it:
+        /// dispatch overhead is ~100–300 µs/tile on CPU PJRT, so fewer,
+        /// fatter tiles win once the matrix exceeds one small tile in each
+        /// dimension (§Perf records the measured effect).
+        fn pick_variant<'a>(
+            state: &'a PjrtState,
+            base: &str,
+            n: usize,
+            m: usize,
+        ) -> Option<(&'a Entry, String)> {
+            let large = format!("{base}_l");
+            if let Some(e) = state.entries.get(&large) {
+                if n * m >= e.tm * e.tn / 2 {
+                    return Some((e, large));
+                }
+            }
+            state.entries.get(base).map(|e| (e, base.to_string()))
+        }
+
+        /// Assemble the full K(X, Y) through tiled executions of the AOT
+        /// kernel block.
+        pub fn kernel_matrix(&self, kernel: &Kernel, x: &Mat, y: &Mat) -> Result<Mat> {
+            let name = Self::entry_for(&kernel.spec)
+                .ok_or_else(|| anyhow!("no AOT kernel for {:?}", kernel.spec))?;
+            if x.cols > self.d_max {
+                bail!("d={} exceeds artifact d_max={}", x.cols, self.d_max);
+            }
+            assert_eq!(x.cols, y.cols);
+            let (n, m) = (x.rows, y.rows);
+            let scale = xla::Literal::vec1(&[Self::scale_param(&kernel.spec)]);
+            let mut out = Mat::zeros(n, m);
+            let state = self.entries.lock().unwrap();
+            let (entry, variant) = Self::pick_variant(&state, name, n, m)
+                .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
+            let (tm, tn) = (entry.tm, entry.tn);
+            let t0 = std::time::Instant::now();
+            let mut row = 0;
+            while row < n {
+                let row_hi = (row + tm).min(n);
+                let xt = self.pack_tile(x, row, row_hi, tm);
+                let x_lit = xla::Literal::vec1(&xt)
+                    .reshape(&[tm as i64, self.d_max as i64])
                     .map_err(|e| anyhow!("{e:?}"))?;
-                let result = entry
-                    .exe
-                    .execute::<xla::Literal>(&[x_lit.clone(), y_lit, scale.clone()])
-                    .map_err(|e| anyhow!("execute {variant}: {e:?}"))?;
-                let lit = result[0][0]
-                    .to_literal_sync()
-                    .map_err(|e| anyhow!("{e:?}"))?
-                    .to_tuple1()
-                    .map_err(|e| anyhow!("{e:?}"))?;
-                let vals: Vec<f32> = lit.to_vec().map_err(|e| anyhow!("{e:?}"))?;
-                // copy the valid region (mask out padded rows/cols)
-                for bi in 0..(row_hi - row) {
-                    let src = &vals[bi * tn..bi * tn + (col_hi - col)];
-                    let dst_row = out.row_mut(row + bi);
-                    for (bj, &v) in src.iter().enumerate() {
-                        dst_row[col + bj] = v as f64;
+                let mut col = 0;
+                while col < m {
+                    let col_hi = (col + tn).min(m);
+                    let yt = self.pack_tile(y, col, col_hi, tn);
+                    let y_lit = xla::Literal::vec1(&yt)
+                        .reshape(&[tn as i64, self.d_max as i64])
+                        .map_err(|e| anyhow!("{e:?}"))?;
+                    let result = entry
+                        .exe
+                        .execute::<xla::Literal>(&[x_lit.clone(), y_lit, scale.clone()])
+                        .map_err(|e| anyhow!("execute {variant}: {e:?}"))?;
+                    let lit = result[0][0]
+                        .to_literal_sync()
+                        .map_err(|e| anyhow!("{e:?}"))?
+                        .to_tuple1()
+                        .map_err(|e| anyhow!("{e:?}"))?;
+                    let vals: Vec<f32> = lit.to_vec().map_err(|e| anyhow!("{e:?}"))?;
+                    // copy the valid region (mask out padded rows/cols)
+                    for bi in 0..(row_hi - row) {
+                        let src = &vals[bi * tn..bi * tn + (col_hi - col)];
+                        let dst_row = out.row_mut(row + bi);
+                        for (bj, &v) in src.iter().enumerate() {
+                            dst_row[col + bj] = v as f64;
+                        }
                     }
+                    self.metrics.incr("xla.kernel_block.execs", 1);
+                    col = col_hi;
                 }
-                self.metrics.incr("xla.kernel_block.execs", 1);
-                col = col_hi;
+                row = row_hi;
             }
-            row = row_hi;
+            self.metrics.record("xla.kernel_matrix.secs", t0.elapsed().as_secs_f64());
+            Ok(out)
         }
-        self.metrics.record("xla.kernel_matrix.secs", t0.elapsed().as_secs_f64());
-        Ok(out)
-    }
 
-    /// Gaussian-KDE densities of the rows of `x` at the rows of `q`,
-    /// through the masked AOT kde block.
-    pub fn kde_at_points(&self, q: &Mat, data: &Mat, h: f64) -> Result<Vec<f64>> {
-        if q.cols > self.d_max {
-            bail!("d={} exceeds artifact d_max={}", q.cols, self.d_max);
-        }
-        let state = self.entries.lock().unwrap();
-        let (nq, nd) = (q.rows, data.rows);
-        let (entry, _variant) = Self::pick_variant(&state, "kde_block", nq, nd)
-            .ok_or_else(|| anyhow!("artifact 'kde_block' not in manifest"))?;
-        anyhow::ensure!(entry.kind == "kde_block", "wrong artifact kind");
-        let h_lit = xla::Literal::vec1(&[h as f32]);
-        let norm = 1.0
-            / ((2.0 * std::f64::consts::PI).powf(data.cols as f64 / 2.0)
-                * h.powf(data.cols as f64))
-            / nd as f64;
-        let mut out = vec![0.0f64; nq];
-        let t0 = std::time::Instant::now();
-        let (tm, tn) = (entry.tm, entry.tn);
-        let mut row = 0;
-        while row < nq {
-            let row_hi = (row + tm).min(nq);
-            let qt = self.pack_tile(q, row, row_hi, tm);
-            let q_lit = xla::Literal::vec1(&qt)
-                .reshape(&[tm as i64, self.d_max as i64])
-                .map_err(|e| anyhow!("{e:?}"))?;
-            let mut col = 0;
-            while col < nd {
-                let col_hi = (col + tn).min(nd);
-                let dt = self.pack_tile(data, col, col_hi, tn);
-                let d_lit = xla::Literal::vec1(&dt)
-                    .reshape(&[tn as i64, self.d_max as i64])
-                    .map_err(|e| anyhow!("{e:?}"))?;
-                // mask: 1 for real rows, 0 for padding
-                let mut w = vec![0.0f32; tn];
-                for wi in w.iter_mut().take(col_hi - col) {
-                    *wi = 1.0;
-                }
-                let w_lit = xla::Literal::vec1(&w);
-                let result = entry
-                    .exe
-                    .execute::<xla::Literal>(&[q_lit.clone(), d_lit, w_lit, h_lit.clone()])
-                    .map_err(|e| anyhow!("execute kde_block: {e:?}"))?;
-                let lit = result[0][0]
-                    .to_literal_sync()
-                    .map_err(|e| anyhow!("{e:?}"))?
-                    .to_tuple1()
-                    .map_err(|e| anyhow!("{e:?}"))?;
-                let vals: Vec<f32> = lit.to_vec().map_err(|e| anyhow!("{e:?}"))?;
-                for bi in 0..(row_hi - row) {
-                    out[row + bi] += vals[bi] as f64;
-                }
-                self.metrics.incr("xla.kde_block.execs", 1);
-                col = col_hi;
+        /// Gaussian-KDE densities of the rows of `x` at the rows of `q`,
+        /// through the masked AOT kde block.
+        pub fn kde_at_points(&self, q: &Mat, data: &Mat, h: f64) -> Result<Vec<f64>> {
+            if q.cols > self.d_max {
+                bail!("d={} exceeds artifact d_max={}", q.cols, self.d_max);
             }
-            row = row_hi;
+            let state = self.entries.lock().unwrap();
+            let (nq, nd) = (q.rows, data.rows);
+            let (entry, _variant) = Self::pick_variant(&state, "kde_block", nq, nd)
+                .ok_or_else(|| anyhow!("artifact 'kde_block' not in manifest"))?;
+            anyhow::ensure!(entry.kind == "kde_block", "wrong artifact kind");
+            let h_lit = xla::Literal::vec1(&[h as f32]);
+            let norm = 1.0
+                / ((2.0 * std::f64::consts::PI).powf(data.cols as f64 / 2.0)
+                    * h.powf(data.cols as f64))
+                / nd as f64;
+            let mut out = vec![0.0f64; nq];
+            let t0 = std::time::Instant::now();
+            let (tm, tn) = (entry.tm, entry.tn);
+            let mut row = 0;
+            while row < nq {
+                let row_hi = (row + tm).min(nq);
+                let qt = self.pack_tile(q, row, row_hi, tm);
+                let q_lit = xla::Literal::vec1(&qt)
+                    .reshape(&[tm as i64, self.d_max as i64])
+                    .map_err(|e| anyhow!("{e:?}"))?;
+                let mut col = 0;
+                while col < nd {
+                    let col_hi = (col + tn).min(nd);
+                    let dt = self.pack_tile(data, col, col_hi, tn);
+                    let d_lit = xla::Literal::vec1(&dt)
+                        .reshape(&[tn as i64, self.d_max as i64])
+                        .map_err(|e| anyhow!("{e:?}"))?;
+                    // mask: 1 for real rows, 0 for padding
+                    let mut w = vec![0.0f32; tn];
+                    for wi in w.iter_mut().take(col_hi - col) {
+                        *wi = 1.0;
+                    }
+                    let w_lit = xla::Literal::vec1(&w);
+                    let result = entry
+                        .exe
+                        .execute::<xla::Literal>(&[q_lit.clone(), d_lit, w_lit, h_lit.clone()])
+                        .map_err(|e| anyhow!("execute kde_block: {e:?}"))?;
+                    let lit = result[0][0]
+                        .to_literal_sync()
+                        .map_err(|e| anyhow!("{e:?}"))?
+                        .to_tuple1()
+                        .map_err(|e| anyhow!("{e:?}"))?;
+                    let vals: Vec<f32> = lit.to_vec().map_err(|e| anyhow!("{e:?}"))?;
+                    for bi in 0..(row_hi - row) {
+                        out[row + bi] += vals[bi] as f64;
+                    }
+                    self.metrics.incr("xla.kde_block.execs", 1);
+                    col = col_hi;
+                }
+                row = row_hi;
+            }
+            self.metrics.record("xla.kde.secs", t0.elapsed().as_secs_f64());
+            for v in &mut out {
+                *v *= norm;
+            }
+            Ok(out)
         }
-        self.metrics.record("xla.kde.secs", t0.elapsed().as_secs_f64());
-        for v in &mut out {
-            *v *= norm;
-        }
-        Ok(out)
     }
 }
+
+#[cfg(feature = "xla-runtime")]
+pub use pjrt::Engine;
+
+#[cfg(not(feature = "xla-runtime"))]
+mod stub {
+    use super::{entry_name_for, resolve_artifact_dir};
+    use crate::kernels::{Kernel, KernelSpec};
+    use crate::linalg::Mat;
+    use anyhow::{anyhow, Result};
+
+    /// API-compatible stand-in for the PJRT engine when the `xla-runtime`
+    /// feature is off. Never constructible through the public API:
+    /// [`Engine::load`] always errors, so callers take the documented
+    /// native fallback.
+    pub struct Engine {
+        pub tm: usize,
+        pub tn: usize,
+        pub d_max: usize,
+        pub dir: String,
+        pub metrics: crate::metrics::Registry,
+    }
+
+    impl Engine {
+        pub fn load(dir: &str) -> Result<Engine> {
+            Err(anyhow!(
+                "XLA/PJRT runtime not compiled into this build (artifact dir \
+                 '{dir}'); falling back to the native backend. The engine \
+                 needs the vendored `xla` crate closure added as a dependency \
+                 before `--features xla-runtime` can build."
+            ))
+        }
+
+        pub fn load_default() -> Result<Engine> {
+            Engine::load(&resolve_artifact_dir())
+        }
+
+        /// Artifact entry name for a kernel spec (None → no AOT kernel).
+        pub fn entry_for(spec: &KernelSpec) -> Option<&'static str> {
+            entry_name_for(spec)
+        }
+
+        pub fn supports(&self, _spec: &KernelSpec) -> bool {
+            false
+        }
+
+        pub fn kernel_matrix(&self, _kernel: &Kernel, _x: &Mat, _y: &Mat) -> Result<Mat> {
+            Err(anyhow!("XLA/PJRT runtime not compiled in"))
+        }
+
+        pub fn kde_at_points(&self, _q: &Mat, _data: &Mat, _h: f64) -> Result<Vec<f64>> {
+            Err(anyhow!("XLA/PJRT runtime not compiled in"))
+        }
+    }
+}
+
+#[cfg(not(feature = "xla-runtime"))]
+pub use stub::Engine;
 
 /// Pluggable kernel-assembly backend: native Rust or the PJRT engine.
 #[derive(Clone)]
@@ -345,7 +431,8 @@ mod tests {
     use super::*;
 
     // Engine-vs-native parity lives in rust/tests/runtime_parity.rs (it
-    // needs `make artifacts`); here we test the pure-rust pieces.
+    // needs `make artifacts` + the xla-runtime feature); here we test the
+    // pure-rust pieces.
 
     #[test]
     fn entry_selection() {

@@ -1,71 +1,14 @@
-//! Zero-dependency substrates: RNG, JSON, CLI parsing, property testing.
+//! Zero-dependency substrates: RNG, JSON, CLI parsing, property testing,
+//! and the shared worker pool.
 //!
-//! The build environment vendors only the `xla` crate closure, so the
-//! framework ships its own replacements for `rand`, `serde_json`, `clap`
-//! and `proptest` (see DESIGN.md "Environment constraints").
+//! The build environment vendors only a minimal `anyhow` drop-in, so the
+//! framework ships its own replacements for `rand`, `serde_json`, `clap`,
+//! `proptest` and `rayon` (see DESIGN.md "Environment constraints"). The
+//! [`pool`] module is the parallel substrate every quadratic hot path
+//! (linalg, kernel assembly, KDE, leverage) runs on.
 
-pub mod rng;
-pub mod json;
 pub mod cli;
+pub mod json;
+pub mod pool;
 pub mod prop;
-
-/// Parallel map over indexed chunks using `std::thread::scope`.
-///
-/// Splits `0..n` into `nthreads` contiguous ranges and runs `f(range)` on
-/// each, collecting results in order. Used by linalg / kernel assembly /
-/// KDE hot paths (no rayon in the vendor set).
-pub fn par_ranges<T: Send>(
-    n: usize,
-    nthreads: usize,
-    f: impl Fn(std::ops::Range<usize>) -> T + Sync,
-) -> Vec<T> {
-    let nthreads = nthreads.max(1).min(n.max(1));
-    let chunk = n.div_ceil(nthreads);
-    std::thread::scope(|s| {
-        let mut handles = Vec::new();
-        for t in 0..nthreads {
-            let lo = t * chunk;
-            let hi = ((t + 1) * chunk).min(n);
-            if lo >= hi {
-                break;
-            }
-            let f = &f;
-            handles.push(s.spawn(move || f(lo..hi)));
-        }
-        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
-    })
-}
-
-/// Number of worker threads to use: `LEVERKRR_THREADS` env var or the
-/// machine's available parallelism (capped at 16).
-pub fn default_threads() -> usize {
-    if let Ok(v) = std::env::var("LEVERKRR_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            return n.max(1);
-        }
-    }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn par_ranges_covers_everything_in_order() {
-        let out = par_ranges(103, 7, |r| r.collect::<Vec<_>>());
-        let flat: Vec<usize> = out.into_iter().flatten().collect();
-        assert_eq!(flat, (0..103).collect::<Vec<_>>());
-    }
-
-    #[test]
-    fn par_ranges_handles_small_n() {
-        assert_eq!(par_ranges(1, 8, |r| r.len()), vec![1]);
-        assert_eq!(par_ranges(0, 8, |r| r.len()), Vec::<usize>::new());
-    }
-
-    #[test]
-    fn default_threads_positive() {
-        assert!(default_threads() >= 1);
-    }
-}
+pub mod rng;

@@ -1,0 +1,274 @@
+//! Shared worker pool for the crate's quadratic hot paths.
+//!
+//! Every O(n·m) / O(n²) loop in the framework — blocked matmul and Gram
+//! products, kernel-matrix assembly, KDE sums, exact-leverage diagonals,
+//! per-point SA quadrature, Nyström block assembly — fans out through the
+//! primitives here instead of spawning threads ad hoc:
+//!
+//! * [`par_chunks`] — split `0..n` into one contiguous range per worker
+//!   and collect the per-range results in order;
+//! * [`par_rows`] — per-index map with deterministic output placement;
+//! * [`par_blocks`] — map *fixed-size* index blocks (block size chosen by
+//!   the caller, independent of the thread count) and return the results
+//!   in block order. Reductions that fold these blocks in order are
+//!   **bit-identical for every thread count** — this is the primitive
+//!   behind `Mat::gram` and the Nyström right-hand-side accumulation.
+//!
+//! # Determinism contract
+//!
+//! All three primitives guarantee that the values they return do not
+//! depend on the number of worker threads:
+//!
+//! * `par_chunks`/`par_rows` compute each output element on exactly one
+//!   worker with a fixed inner iteration order, so per-element results are
+//!   reproduced exactly regardless of how the ranges are cut;
+//! * `par_blocks` pins the floating-point reduction tree to the caller's
+//!   block size, so even sum-reductions are invariant.
+//!
+//! `rust/tests/parallel_parity.rs` asserts the end-to-end consequence:
+//! matmul, Gram, kernel matrices, KDE, and leverage scores are bitwise
+//! equal at 1 and 4 threads.
+//!
+//! # Thread-count resolution
+//!
+//! Highest priority first:
+//! 1. a scoped programmatic override ([`override_threads`] — used by the
+//!    coordinator's `FitConfig::threads` knob and the bench harness's
+//!    `--threads` flag),
+//! 2. the `LEVERKRR_THREADS` environment variable,
+//! 3. `std::thread::available_parallelism()`, capped at 16.
+//!
+//! A resolved count of 1 short-circuits to a serial reference path: the
+//! closure runs on the caller's thread and no workers are spawned.
+//!
+//! Workers are `std::thread::scope` threads (the vendor set has no rayon);
+//! panics in a worker are propagated to the caller via
+//! `std::panic::resume_unwind`, preserving the original payload.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// 0 = no override; otherwise the forced worker count.
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// The machine's available parallelism, capped at 16 — ignores both the
+/// scoped override and `LEVERKRR_THREADS`. For sizing things that are
+/// *not* the compute pool (e.g. serving workers), so a compute-pool
+/// override can't silently change their concurrency.
+pub fn machine_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+/// Resolve the worker-thread count (see module docs for the precedence).
+pub fn current_threads() -> usize {
+    let forced = THREAD_OVERRIDE.load(Ordering::Relaxed);
+    if forced > 0 {
+        return forced;
+    }
+    if let Ok(v) = std::env::var("LEVERKRR_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    machine_threads()
+}
+
+/// RAII guard restoring the previous thread override on drop.
+pub struct ThreadGuard {
+    prev: usize,
+}
+
+impl Drop for ThreadGuard {
+    fn drop(&mut self) {
+        THREAD_OVERRIDE.store(self.prev, Ordering::SeqCst);
+    }
+}
+
+/// Force the pool to `n` workers until the returned guard is dropped.
+///
+/// The override is process-global (the hot paths read it on entry), so
+/// concurrent overrides with different counts race; callers that need
+/// exclusivity (the parity tests) serialize around it. Results are
+/// unaffected either way — see the determinism contract.
+pub fn override_threads(n: usize) -> ThreadGuard {
+    let prev = THREAD_OVERRIDE.swap(n.max(1), Ordering::SeqCst);
+    ThreadGuard { prev }
+}
+
+/// Split `0..n` into one contiguous range per worker, run `f` on each,
+/// and return the results in range order. `nthreads == 1` (or `n <= 1`)
+/// runs `f(0..n)` on the caller's thread.
+pub fn par_chunks_with<T: Send>(
+    nthreads: usize,
+    n: usize,
+    f: impl Fn(Range<usize>) -> T + Sync,
+) -> Vec<T> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let nthreads = nthreads.max(1).min(n);
+    if nthreads == 1 {
+        return vec![f(0..n)];
+    }
+    let chunk = n.div_ceil(nthreads);
+    std::thread::scope(|s| {
+        let f = &f;
+        let handles: Vec<_> = (0..nthreads)
+            .map(|t| (t * chunk, ((t + 1) * chunk).min(n)))
+            .filter(|&(lo, hi)| lo < hi)
+            .map(|(lo, hi)| s.spawn(move || f(lo..hi)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|p| std::panic::resume_unwind(p)))
+            .collect()
+    })
+}
+
+/// [`par_chunks_with`] at the resolved global thread count.
+pub fn par_chunks<T: Send>(n: usize, f: impl Fn(Range<usize>) -> T + Sync) -> Vec<T> {
+    par_chunks_with(current_threads(), n, f)
+}
+
+/// Per-index parallel map: `out[i] = f(i)` with deterministic placement.
+pub fn par_rows<T: Send>(n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+    par_chunks(n, |r| r.map(&f).collect::<Vec<T>>())
+        .into_iter()
+        .flatten()
+        .collect()
+}
+
+/// Map fixed-size index blocks `[k·block, (k+1)·block) ∩ [0, n)` and
+/// return per-block results **in block order**, regardless of how the
+/// blocks were distributed over workers. Folding the returned vector in
+/// order yields a reduction whose floating-point evaluation tree depends
+/// only on `block`, never on the thread count.
+pub fn par_blocks<T: Send>(
+    n: usize,
+    block: usize,
+    f: impl Fn(Range<usize>) -> T + Sync,
+) -> Vec<T> {
+    par_blocks_with(current_threads(), n, block, f)
+}
+
+/// [`par_blocks`] with an explicit worker count — lets callers keep a
+/// work-size threshold (dispatch serially for small problems) without
+/// changing the block partition, so results stay identical either way.
+pub fn par_blocks_with<T: Send>(
+    nthreads: usize,
+    n: usize,
+    block: usize,
+    f: impl Fn(Range<usize>) -> T + Sync,
+) -> Vec<T> {
+    assert!(block > 0, "block size must be positive");
+    let nblocks = n.div_ceil(block);
+    par_chunks_with(nthreads, nblocks, |bs| {
+        bs.map(|b| f(b * block..((b + 1) * block).min(n)))
+            .collect::<Vec<T>>()
+    })
+    .into_iter()
+    .flatten()
+    .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    // Tests that flip the global override serialize on this lock so the
+    // suite's worker threads don't observe each other's counts.
+    static OVERRIDE_LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn par_chunks_covers_everything_in_order() {
+        let out = par_chunks_with(7, 103, |r| r.collect::<Vec<_>>());
+        let flat: Vec<usize> = out.into_iter().flatten().collect();
+        assert_eq!(flat, (0..103).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_chunks_empty_and_tiny() {
+        assert_eq!(par_chunks_with(8, 0, |r| r.len()), Vec::<usize>::new());
+        assert_eq!(par_chunks_with(8, 1, |r| r.len()), vec![1]);
+        // n < nthreads: never more chunks than elements
+        let out = par_chunks_with(8, 3, |r| r.len());
+        assert_eq!(out.iter().sum::<usize>(), 3);
+        assert!(out.len() <= 3);
+    }
+
+    #[test]
+    fn par_rows_deterministic_placement() {
+        let _lock = OVERRIDE_LOCK.lock().unwrap();
+        for nt in [1usize, 2, 4, 9] {
+            let _g = override_threads(nt);
+            let out = par_rows(57, |i| i * i);
+            let want: Vec<usize> = (0..57).map(|i| i * i).collect();
+            assert_eq!(out, want, "nt={nt}");
+        }
+    }
+
+    #[test]
+    fn par_rows_single_element_chunks() {
+        // more workers than elements → every chunk is a single element
+        let out = par_chunks_with(64, 5, |r| {
+            assert_eq!(r.len(), 1);
+            r.start
+        });
+        assert_eq!(out, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn par_blocks_order_is_thread_count_invariant() {
+        let _lock = OVERRIDE_LOCK.lock().unwrap();
+        let mut seen: Option<Vec<(usize, usize)>> = None;
+        for nt in [1usize, 3, 8] {
+            let _g = override_threads(nt);
+            let blocks = par_blocks(100, 7, |r| (r.start, r.end));
+            if let Some(prev) = &seen {
+                assert_eq!(&blocks, prev, "nt={nt}");
+            }
+            // exact fixed partition regardless of nt
+            assert_eq!(blocks.len(), 15);
+            assert_eq!(blocks[0], (0, 7));
+            assert_eq!(blocks[14], (98, 100));
+            seen = Some(blocks);
+        }
+    }
+
+    #[test]
+    fn worker_panic_propagates_payload() {
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            par_chunks_with(4, 16, |r| {
+                if r.contains(&9) {
+                    panic!("boom in worker");
+                }
+                r.len()
+            })
+        }));
+        let payload = caught.expect_err("worker panic must propagate");
+        let msg = payload
+            .downcast_ref::<&str>()
+            .copied()
+            .or_else(|| payload.downcast_ref::<String>().map(|s| s.as_str()))
+            .unwrap_or("");
+        assert!(msg.contains("boom in worker"), "payload was: {msg}");
+    }
+
+    #[test]
+    fn override_guard_restores() {
+        let _lock = OVERRIDE_LOCK.lock().unwrap();
+        let base = current_threads();
+        {
+            let _g = override_threads(3);
+            assert_eq!(current_threads(), 3);
+            {
+                let _inner = override_threads(1);
+                assert_eq!(current_threads(), 1);
+            }
+            assert_eq!(current_threads(), 3);
+        }
+        assert_eq!(current_threads(), base);
+        assert!(current_threads() >= 1);
+    }
+}

@@ -1,0 +1,312 @@
+//! Serial ↔ parallel parity: every hot path that runs on the shared
+//! worker pool (`leverkrr::util::pool`) must produce **bit-identical**
+//! results at 1 and 4 threads — including shapes that don't divide evenly
+//! into chunks and inputs smaller than the worker count.
+//!
+//! The pool's thread override is process-global, so every test here
+//! serializes on one lock while it flips the count.
+//!
+//! The file also hosts the pool-exercising property tests (random-shape
+//! matmul vs a naive triple loop, kernel-matrix invariants, KDE
+//! normalization) so chunking off-by-ones surface under the parallel
+//! configuration they would corrupt.
+
+use leverkrr::kde;
+use leverkrr::kernels::{Kernel, KernelSpec};
+use leverkrr::linalg::Mat;
+use leverkrr::nystrom::{NativeBackend, NystromKrr};
+use leverkrr::util::pool;
+use leverkrr::util::prop;
+use leverkrr::util::rng::Rng;
+use std::sync::Mutex;
+
+static POOL_LOCK: Mutex<()> = Mutex::new(());
+
+/// Run `f` under an exclusive pool override of `nt` workers.
+fn with_threads<T>(nt: usize, f: impl FnOnce() -> T) -> T {
+    let _guard = pool::override_threads(nt);
+    f()
+}
+
+/// Lock the global override, evaluate `f` at 1 and at 4 threads, and
+/// return both results.
+fn at_1_and_4<T>(mut f: impl FnMut() -> T) -> (T, T) {
+    let _lock = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let serial = with_threads(1, &mut f);
+    let parallel = with_threads(4, &mut f);
+    (serial, parallel)
+}
+
+fn random_mat(rng: &mut Rng, rows: usize, cols: usize) -> Mat {
+    Mat::from_fn(rows, cols, |_, _| rng.normal())
+}
+
+// ---------------------------------------------------------------------------
+// bitwise parity, path by path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn matmul_bit_identical_across_threads() {
+    let mut rng = Rng::seed_from_u64(101);
+    // includes: trivial, non-divisible-by-4, n < threads, and a shape
+    // large enough (> 64³ work) to actually take the parallel branch
+    for &(m, k, n) in &[
+        (1usize, 1usize, 1usize),
+        (2, 3, 4),
+        (3, 50, 2), // fewer rows than workers
+        (65, 33, 17),
+        (130, 129, 131),
+    ] {
+        let a = random_mat(&mut rng, m, k);
+        let b = random_mat(&mut rng, k, n);
+        let (c1, c4) = at_1_and_4(|| a.matmul(&b));
+        assert_eq!(c1.data, c4.data, "matmul ({m},{k},{n}) diverged");
+    }
+}
+
+#[test]
+fn gram_bit_identical_across_threads() {
+    let mut rng = Rng::seed_from_u64(102);
+    // 9000×8 spans multiple fixed 4096-row reduction blocks AND clears
+    // the 64³ work threshold, so the parallel branch + block fold are
+    // both exercised; the small shapes cover the serial short-circuit
+    // and n < threads
+    for &(n, m) in &[(3usize, 5usize), (90, 17), (700, 23), (9000, 8)] {
+        let a = random_mat(&mut rng, n, m);
+        let (g1, g4) = at_1_and_4(|| a.gram());
+        assert_eq!(g1.data, g4.data, "gram ({n},{m}) diverged");
+    }
+}
+
+#[test]
+fn matvec_and_solve_mat_bit_identical_across_threads() {
+    let mut rng = Rng::seed_from_u64(103);
+    let a = random_mat(&mut rng, 150, 90);
+    let x: Vec<f64> = (0..90).map(|_| rng.normal()).collect();
+    let (y1, y4) = at_1_and_4(|| leverkrr::linalg::matvec(&a, &x));
+    assert_eq!(y1, y4, "matvec diverged");
+
+    let spd = {
+        let mut g = random_mat(&mut rng, 60, 40).gram();
+        g.add_diag(40.0 * 0.5);
+        g
+    };
+    let chol = leverkrr::linalg::Cholesky::factor(&spd).unwrap();
+    let b = random_mat(&mut rng, 40, 33);
+    let (s1, s4) = at_1_and_4(|| chol.solve_mat(&b));
+    assert_eq!(s1.data, s4.data, "solve_mat diverged");
+}
+
+#[test]
+fn kernel_matrix_bit_identical_across_threads() {
+    let mut rng = Rng::seed_from_u64(104);
+    for spec in [
+        KernelSpec::Matern { nu: 0.5, a: 1.0 },
+        KernelSpec::Matern { nu: 1.5, a: 1.7 },
+        KernelSpec::Gaussian { sigma: 0.8 },
+    ] {
+        let k = Kernel::new(spec);
+        // 101×97×4 exceeds the 32³ parallel-dispatch threshold and is not
+        // a multiple of any chunk size; 2×1 stays below every worker count
+        for &(n, m, d) in &[(101usize, 97usize, 4usize), (2, 1, 3)] {
+            let x = random_mat(&mut rng, n, d);
+            let y = random_mat(&mut rng, m, d);
+            let (k1, k4) = at_1_and_4(|| k.matrix(&x, &y));
+            assert_eq!(k1.data, k4.data, "{spec:?} matrix ({n},{m},{d}) diverged");
+        }
+        // 121×121×3 > 32³ → the symmetric path takes the parallel branch
+        let x = random_mat(&mut rng, 121, 3);
+        let (s1, s4) = at_1_and_4(|| k.matrix_sym(&x));
+        assert_eq!(s1.data, s4.data, "{spec:?} matrix_sym diverged");
+    }
+}
+
+#[test]
+fn kde_bit_identical_across_threads() {
+    let mut rng = Rng::seed_from_u64(105);
+    let data = random_mat(&mut rng, 401, 2);
+    let q = random_mat(&mut rng, 203, 2);
+    let h = 0.3;
+    let (p1, p4) = at_1_and_4(|| kde::exact(&q, &data, h));
+    assert_eq!(p1, p4, "exact KDE diverged");
+
+    // subsampled KDE draws centers from an Rng — reseed per run so both
+    // thread counts see the same centers
+    let (s1, s4) = at_1_and_4(|| {
+        let mut r = Rng::seed_from_u64(7);
+        kde::subsampled(&data, h, 64, &mut r)
+    });
+    assert_eq!(s1, s4, "subsampled KDE diverged");
+}
+
+#[test]
+fn exact_leverage_bit_identical_across_threads() {
+    let mut rng = Rng::seed_from_u64(106);
+    let ds = leverkrr::data::dist1d(leverkrr::data::Dist1d::Bimodal, 90, &mut rng);
+    let k = Kernel::new(KernelSpec::Matern { nu: 1.5, a: 1.0 });
+    let lam = leverkrr::krr::lambda::fig2(ds.n());
+    let (g1, g4) =
+        at_1_and_4(|| leverkrr::leverage::exact::rescaled_leverage_exact(&ds.x, &k, lam));
+    assert_eq!(g1, g4, "exact leverage diverged");
+}
+
+#[test]
+fn sa_scores_bit_identical_across_threads() {
+    use leverkrr::leverage::sa::{SaEstimator, SaIntegration};
+    let mut rng = Rng::seed_from_u64(107);
+    let k = Kernel::new(KernelSpec::Matern { nu: 1.5, a: 1.0 });
+    let p_hat: Vec<f64> = (0..211).map(|_| 10f64.powf(rng.range(-4.0, 1.0))).collect();
+    for integration in [SaIntegration::ClosedForm, SaIntegration::Quadrature] {
+        let est = SaEstimator { integration, ..Default::default() };
+        let (s1, s4) = at_1_and_4(|| est.scores_from_density(&p_hat, &k, 1e-4, 3));
+        assert_eq!(s1, s4, "SA {integration:?} diverged");
+    }
+}
+
+#[test]
+fn nystrom_fit_bit_identical_across_threads() {
+    let mut rng = Rng::seed_from_u64(108);
+    let ds = leverkrr::data::dist1d(leverkrr::data::Dist1d::Uniform, 300, &mut rng);
+    let k = Kernel::new(KernelSpec::Matern { nu: 1.5, a: 1.0 });
+    let idx: Vec<usize> = (0..25).map(|i| i * 12).collect();
+    let (b1, b4) = at_1_and_4(|| {
+        NystromKrr::fit_with_landmarks(k.clone(), &ds.x, &ds.y, 1e-3, &idx, &NativeBackend)
+            .unwrap()
+            .beta
+    });
+    assert_eq!(b1, b4, "Nyström β diverged");
+}
+
+#[test]
+fn fit_config_threads_knob_is_wallclock_only() {
+    // End-to-end: the coordinator's `threads` knob changes nothing but
+    // wall clock — identical landmarks and coefficients at 1 vs 4.
+    use leverkrr::coordinator::{fit_with_backend, FitConfig};
+    use leverkrr::runtime::Backend;
+    let _lock = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let mut rng = Rng::seed_from_u64(109);
+    let ds = leverkrr::data::dist1d(leverkrr::data::Dist1d::Bimodal, 400, &mut rng);
+    let fit_at = |threads: usize| {
+        let mut cfg = FitConfig::default_for(&ds);
+        cfg.threads = Some(threads);
+        fit_with_backend(&ds, &cfg, Backend::Native).unwrap()
+    };
+    let m1 = fit_at(1);
+    let m4 = fit_at(4);
+    assert_eq!(m1.nystrom.idx, m4.nystrom.idx);
+    assert_eq!(m1.nystrom.beta, m4.nystrom.beta);
+    assert_eq!(m1.q, m4.q);
+}
+
+#[test]
+fn env_var_sets_thread_count_when_no_override() {
+    // CI runs the whole suite under LEVERKRR_THREADS=1 and =4; this pins
+    // the env resolution path itself: env applies when no override is
+    // active, and an override takes precedence over it.
+    let _lock = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let prev = std::env::var("LEVERKRR_THREADS").ok();
+    std::env::set_var("LEVERKRR_THREADS", "13");
+    assert_eq!(pool::current_threads(), 13);
+    {
+        let _g = pool::override_threads(2);
+        assert_eq!(pool::current_threads(), 2, "override must beat the env var");
+    }
+    assert_eq!(pool::current_threads(), 13);
+    std::env::set_var("LEVERKRR_THREADS", "not-a-number");
+    assert!(pool::current_threads() >= 1, "bad env value falls back");
+    match prev {
+        Some(v) => std::env::set_var("LEVERKRR_THREADS", v),
+        None => std::env::remove_var("LEVERKRR_THREADS"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// property tests under the parallel pool
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_matmul_matches_naive_triple_loop() {
+    let _lock = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _g = pool::override_threads(4);
+    prop::check(
+        201,
+        40,
+        |rng| {
+            let (m, k, n) = (1 + rng.usize(70), 1 + rng.usize(70), 1 + rng.usize(70));
+            (random_mat(rng, m, k), random_mat(rng, k, n))
+        },
+        |(a, b)| {
+            let c = a.matmul(b);
+            let mut ok = true;
+            for i in 0..a.rows {
+                for j in 0..b.cols {
+                    let want: f64 = (0..a.cols).map(|t| a[(i, t)] * b[(t, j)]).sum();
+                    ok &= (c[(i, j)] - want).abs() <= 1e-9 * (1.0 + want.abs());
+                }
+            }
+            ok
+        },
+    );
+}
+
+#[test]
+fn prop_kernel_matrix_invariants() {
+    let _lock = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _g = pool::override_threads(4);
+    prop::check(
+        202,
+        25,
+        |rng| {
+            let n = 2 + rng.usize(39);
+            let d = 1 + rng.usize(4);
+            let spec = if rng.f64() < 0.5 {
+                KernelSpec::Matern { nu: 1.5, a: rng.range(0.5, 2.0) }
+            } else {
+                KernelSpec::Gaussian { sigma: rng.range(0.4, 1.5) }
+            };
+            (random_mat(rng, n, d), spec)
+        },
+        |(x, spec)| {
+            let k = Kernel::new(*spec);
+            let km = k.matrix_sym(x);
+            let n = x.rows;
+            // symmetry + unit diagonal (k(x,x) = 1 for our kernels) +
+            // agreement with the general cross-matrix path
+            let mut ok = km.data == k.matrix(x, x).data;
+            for i in 0..n {
+                ok &= (km[(i, i)] - 1.0).abs() < 1e-12;
+                for j in 0..n {
+                    ok &= km[(i, j)] == km[(j, i)];
+                    ok &= (0.0..=1.0 + 1e-12).contains(&km[(i, j)]);
+                }
+            }
+            // PSD up to jitter: K + 1e-9 I must factor
+            let mut kj = km.clone();
+            kj.add_diag(1e-9);
+            ok && leverkrr::linalg::Cholesky::factor_jittered(&kj).is_ok()
+        },
+    );
+}
+
+#[test]
+fn prop_kde_normalizes_under_pool() {
+    let _lock = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _g = pool::override_threads(4);
+    prop::check(
+        203,
+        15,
+        |rng| {
+            let n = 50 + rng.usize(150);
+            let h = rng.range(0.15, 0.6);
+            (random_mat(rng, n, 1), h)
+        },
+        |(x, h)| {
+            // Riemann integral of the KDE over [-9, 9] ≈ 1
+            let m = 1500;
+            let q = Mat::from_fn(m, 1, |i, _| -9.0 + 18.0 * (i as f64 + 0.5) / m as f64);
+            let dens = kde::exact(&q, x, *h);
+            let integral: f64 = dens.iter().sum::<f64>() * 18.0 / m as f64;
+            dens.iter().all(|&p| p >= 0.0 && p.is_finite()) && (integral - 1.0).abs() < 5e-3
+        },
+    );
+}
