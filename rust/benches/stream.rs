@@ -1,0 +1,8 @@
+//! `cargo bench --bench stream -- [--full] [--ns a,b,c] [--out f.json]`
+//! Streaming per-arrival latency + end-state risk vs periodic full refit.
+//! See `leverkrr::bench_harness::experiments::stream` for the setting.
+fn main() {
+    let opts =
+        leverkrr::bench_harness::ExpOptions::parse_cli("stream", "streaming experiment driver");
+    leverkrr::bench_harness::experiments::stream::run(&opts);
+}

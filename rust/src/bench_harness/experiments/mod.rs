@@ -7,12 +7,14 @@
 //! | [`fig2::run`] | Figure 2 (SA vs true rescaled leverage) | §4.2 / §B.3 |
 //! | [`fig3::run`] | Figure 3 (Gaussian kernels, growing d) | §B.4 |
 //! | [`perf::run`] | §Perf hot-path microbenches | EXPERIMENTS.md §Perf |
+//! | [`stream::run`] | streaming update latency vs periodic refit | ROADMAP §streaming |
 
 pub mod ablation;
 pub mod fig1;
 pub mod fig2;
 pub mod fig3;
 pub mod perf;
+pub mod stream;
 pub mod table1;
 
 use crate::leverage::LeverageMethod;

@@ -1,0 +1,195 @@
+//! Streaming experiment — per-arrival update latency and end-state
+//! accuracy versus a periodic full-refit baseline.
+//!
+//! For each n the same dataset is (a) replayed through
+//! [`crate::stream::replay`] (sequential-RLS dictionary, budget 128,
+//! O(m²) incremental updates) and (b) served by periodically refitting
+//! the batch pipeline on the growing prefix (the strategy the streaming
+//! subsystem replaces). Reported per n:
+//!
+//! * per-arrival update latency p50/p95/p99 — the headline check is that
+//!   these stay **flat as n grows** (no O(n) work per arrival), which the
+//!   driver prints as the p50 ratio between the largest and smallest n;
+//! * end-state in-sample risk of both strategies — streaming should land
+//!   within a few percent of the batch fit;
+//! * total wall time of each strategy.
+
+use crate::bench_harness::{maybe_write_out, ExpOptions, Table};
+use crate::coordinator::{fit_with_backend, FitConfig};
+use crate::data::{self, Dataset};
+use crate::krr;
+use crate::runtime::Backend;
+use crate::stream::{replay, RefreshPolicy, StreamConfig, DEFAULT_ACCEPT_THRESHOLD};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+pub fn default_ns(full: bool) -> Vec<usize> {
+    if full {
+        vec![500, 1_000, 2_000, 4_000, 8_000]
+    } else {
+        vec![500, 1_000, 2_000]
+    }
+}
+
+/// Dictionary budget used across the sweep (fixed so latency depends
+/// only on n).
+pub const BUDGET: usize = 128;
+
+pub struct Row {
+    pub n: usize,
+    pub dict: usize,
+    pub update_p50_us: f64,
+    pub update_p95_us: f64,
+    pub update_p99_us: f64,
+    pub stream_risk: f64,
+    pub stream_secs: f64,
+    pub refit_risk: f64,
+    pub refit_secs: f64,
+    pub refits: usize,
+}
+
+fn prefix_dataset(ds: &Dataset, t: usize) -> Dataset {
+    Dataset {
+        name: format!("{}[0..{t}]", ds.name),
+        x: crate::linalg::Mat::from_fn(t, ds.d(), |i, j| ds.x[(i, j)]),
+        y: ds.y[..t].to_vec(),
+        f_true: ds.f_true[..t].to_vec(),
+        p_true: ds.p_true.as_ref().map(|p| p[..t].to_vec()),
+    }
+}
+
+pub fn run(opts: &ExpOptions) -> Vec<Row> {
+    let _pool = opts.pool_guard();
+    let ns = opts.ns.clone().unwrap_or_else(|| default_ns(opts.full));
+    println!(
+        "# stream — per-arrival latency (budget {BUDGET}) vs periodic full refit, seed={}",
+        opts.seed
+    );
+    let mut rows = Vec::new();
+    for &n in &ns {
+        let mut rng = Rng::seed_from_u64(opts.seed + n as u64);
+        let ds = data::dist1d(data::Dist1d::Bimodal, n, &mut rng);
+        let base = FitConfig::default_for(&ds);
+        // --- streaming path ---
+        let scfg = StreamConfig {
+            kernel: base.kernel,
+            mu: n as f64 * base.lambda,
+            budget: BUDGET,
+            accept_threshold: DEFAULT_ACCEPT_THRESHOLD,
+            refresh: RefreshPolicy { every: 64, drift: 0.0 },
+            threads: opts.threads,
+        };
+        let (sc, report) = replay(&ds, &scfg, 0);
+        let snap = sc.model().snapshot();
+        let stream_risk = krr::in_sample_risk(&snap.predict_batch(&ds.x), &ds.f_true);
+        // --- periodic full-refit baseline: refit on every 1/8th of the
+        // stream (so the refit count is n-independent; each refit pays
+        // the full O(n·m²) pipeline on the prefix) ---
+        let mut points: Vec<usize> = (1..=8).map(|k| (k * n) / 8).collect();
+        points.dedup();
+        points.retain(|&t| t > 0); // tiny n: (k·n)/8 rounds to empty prefixes
+        let mut refit_secs = 0.0;
+        let mut refits = 0;
+        let mut last_risk = f64::NAN;
+        for &t in &points {
+            let prefix = prefix_dataset(&ds, t);
+            let mut cfg = FitConfig::default_for(&prefix);
+            cfg.kernel = base.kernel;
+            cfg.lambda = scfg.mu / t as f64;
+            cfg.m_sub = BUDGET.min(t);
+            cfg.seed = opts.seed;
+            cfg.threads = opts.threads;
+            let t0 = std::time::Instant::now();
+            let model = fit_with_backend(&prefix, &cfg, Backend::Native)
+                .expect("refit baseline");
+            refit_secs += t0.elapsed().as_secs_f64();
+            refits += 1;
+            if t == n {
+                last_risk =
+                    krr::in_sample_risk(&model.predict_batch(&ds.x), &ds.f_true);
+            }
+        }
+        rows.push(Row {
+            n,
+            dict: report.dict,
+            update_p50_us: report.update_p50 * 1e6,
+            update_p95_us: report.update_p95 * 1e6,
+            update_p99_us: report.update_p99 * 1e6,
+            stream_risk,
+            stream_secs: report.total_secs,
+            refit_risk: last_risk,
+            refit_secs,
+            refits,
+        });
+        eprintln!("  n={n} done");
+    }
+    print_table(&rows);
+    let json = Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("n", Json::Num(r.n as f64)),
+                    ("dict", Json::Num(r.dict as f64)),
+                    ("update_p50_us", Json::Num(r.update_p50_us)),
+                    ("update_p95_us", Json::Num(r.update_p95_us)),
+                    ("update_p99_us", Json::Num(r.update_p99_us)),
+                    ("stream_risk", Json::Num(r.stream_risk)),
+                    ("stream_secs", Json::Num(r.stream_secs)),
+                    ("refit_risk", Json::Num(r.refit_risk)),
+                    ("refit_secs", Json::Num(r.refit_secs)),
+                    ("refits", Json::Num(r.refits as f64)),
+                ])
+            })
+            .collect(),
+    );
+    maybe_write_out(opts, "stream", json);
+    rows
+}
+
+fn print_table(rows: &[Row]) {
+    let mut t = Table::new(&[
+        "n",
+        "dict",
+        "upd_p50_us",
+        "upd_p95_us",
+        "upd_p99_us",
+        "stream_risk",
+        "stream_s",
+        "refit_risk",
+        "refit_s",
+        "refits",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.n.to_string(),
+            r.dict.to_string(),
+            format!("{:.1}", r.update_p50_us),
+            format!("{:.1}", r.update_p95_us),
+            format!("{:.1}", r.update_p99_us),
+            format!("{:.5}", r.stream_risk),
+            format!("{:.3}", r.stream_secs),
+            format!("{:.5}", r.refit_risk),
+            format!("{:.3}", r.refit_secs),
+            r.refits.to_string(),
+        ]);
+    }
+    println!("\n## stream: per-arrival latency + end-state risk vs periodic refit");
+    t.print();
+    if let (Some(first), Some(last)) = (rows.first(), rows.last()) {
+        if first.n < last.n && first.update_p50_us > 0.0 {
+            println!(
+                "\n  p50 latency ratio n={} vs n={}: {:.2}x (flat ⇒ no O(n) per-arrival work)",
+                last.n,
+                first.n,
+                last.update_p50_us / first.update_p50_us
+            );
+        }
+        println!(
+            "  end-state risk, stream vs refit at n={}: {:.5} vs {:.5} ({:+.1}%)",
+            last.n,
+            last.stream_risk,
+            last.refit_risk,
+            100.0 * (last.stream_risk - last.refit_risk) / last.refit_risk.max(1e-12)
+        );
+    }
+}

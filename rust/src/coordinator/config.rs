@@ -12,14 +12,21 @@
 //!   "m_sub": 180,
 //!   "kde_bandwidth": 0.031,
 //!   "threads": 8,
-//!   "serve": {"max_batch": 256, "max_wait_ms": 4, "workers": 4}
+//!   "serve": {"max_batch": 256, "max_wait_ms": 4, "workers": 4},
+//!   "stream": {"every": 64, "drift": 0.25}
 //! }
 //! ```
+//!
+//! The optional `stream` section sets the [`RefreshPolicy`] used by the
+//! streaming subsystem (`leverkrr stream`, [`crate::stream`]): publish a
+//! fresh model every `every` arrivals and/or on a relative prequential
+//! error drift of `drift`.
 
 use super::{FitConfig, ServerConfig};
 use crate::data::Dataset;
 use crate::kernels::KernelSpec;
 use crate::leverage::LeverageMethod;
+use crate::stream::RefreshPolicy;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use anyhow::{anyhow, Context, Result};
@@ -38,6 +45,8 @@ pub struct RunConfig {
     /// Worker threads for the compute pool (`util::pool`).
     pub threads: Option<usize>,
     pub serve: ServerConfig,
+    /// Streaming refresh policy (`stream` document section).
+    pub refresh: RefreshPolicy,
 }
 
 impl RunConfig {
@@ -61,6 +70,8 @@ impl RunConfig {
         };
         let serve = doc.get("serve");
         let default_serve = ServerConfig::default();
+        let stream = doc.get("stream");
+        let default_refresh = RefreshPolicy::default();
         Ok(RunConfig {
             data_name: data
                 .get("name")
@@ -87,6 +98,10 @@ impl RunConfig {
                     .get("workers")
                     .as_usize()
                     .unwrap_or(default_serve.workers),
+            },
+            refresh: RefreshPolicy {
+                every: stream.get("every").as_usize().unwrap_or(default_refresh.every),
+                drift: stream.get("drift").as_f64().unwrap_or(default_refresh.drift),
             },
         })
     }
@@ -140,6 +155,7 @@ impl RunConfig {
         if self.threads.is_some() {
             cfg.threads = self.threads;
         }
+        cfg.refresh = self.refresh;
         cfg
     }
 }
@@ -184,6 +200,21 @@ mod tests {
         let ds = cfg.build_dataset().unwrap();
         let fc = cfg.fit_config(&ds);
         assert_eq!(fc.method, LeverageMethod::Sa);
+    }
+
+    #[test]
+    fn stream_section_sets_refresh_policy() {
+        let cfg = RunConfig::from_json_str(
+            r#"{"data": {"name": "uniform1"}, "stream": {"every": 17, "drift": 0.5}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.refresh, RefreshPolicy { every: 17, drift: 0.5 });
+        let ds = cfg.build_dataset().unwrap();
+        let fc = cfg.fit_config(&ds);
+        assert_eq!(fc.refresh.every, 17);
+        // absent section → defaults
+        let cfg = RunConfig::from_json_str(r#"{"data": {"name": "uniform1"}}"#).unwrap();
+        assert_eq!(cfg.refresh, RefreshPolicy::default());
     }
 
     #[test]

@@ -21,7 +21,7 @@ pub mod config;
 pub mod server;
 
 pub use config::RunConfig;
-pub use server::{Server, ServerConfig};
+pub use server::{Prediction, Server, ServerClosed, ServerConfig};
 
 use crate::data::Dataset;
 use crate::kernels::{Kernel, KernelSpec};
@@ -50,6 +50,10 @@ pub struct FitConfig {
     /// (None → `LEVERKRR_THREADS` / available parallelism). Results are
     /// bit-identical for every value — see `util::pool`.
     pub threads: Option<usize>,
+    /// Streaming refresh policy: when [`crate::stream::StreamCoordinator`]
+    /// publishes updated snapshots into the serving path (ignored by the
+    /// one-shot batch fit itself).
+    pub refresh: crate::stream::RefreshPolicy,
 }
 
 impl FitConfig {
@@ -69,6 +73,7 @@ impl FitConfig {
             kde_bandwidth: Some(crate::kde::bandwidth::table1(n)),
             seed: 0,
             threads: None,
+            refresh: crate::stream::RefreshPolicy::default(),
         }
     }
 }

@@ -1,12 +1,21 @@
-//! Dynamic-batching prediction server.
+//! Dynamic-batching prediction server with hot-swappable models.
 //!
 //! Point queries arrive on a channel; a batcher thread groups them
 //! (flushing at `max_batch` or after `max_wait`) and dispatches batches
-//! to a pool of worker threads sharing the fitted model. Responses go
-//! back through per-request channels. Latency and throughput are
-//! recorded in a shared [`crate::metrics::Registry`]
-//! (`serve.latency.secs`, `serve.batch_size`, counters
-//! `serve.requests` / `serve.batches`).
+//! to a pool of worker threads. Each worker loads the **current** model
+//! from a [`ModelHandle`] once per batch — so a publish from the
+//! streaming coordinator ([`crate::stream::StreamCoordinator`]) takes
+//! effect at the next batch boundary while requests in flight finish on
+//! the snapshot they started with: no request is ever dropped or blocked
+//! by a refresh, and the `model_version` carried in every [`Prediction`]
+//! is non-decreasing for any sequential client. Requests whose query
+//! dimension doesn't match the current model are answered with `NaN`
+//! (and counted under `serve.bad_dimension`) rather than poisoning their
+//! batch. Responses go back through per-request channels. Latency,
+//! throughput, and the served model version are recorded in a shared
+//! [`crate::metrics::Registry`] (timers `serve.latency.secs` /
+//! `serve.batch_size`, gauge `serve.model_version`, counters
+//! `serve.requests` / `serve.batches` / `serve.bad_dimension`).
 //!
 //! This mirrors a standard model-server architecture (request router →
 //! batcher → execution workers) with the Nyström predict block
@@ -15,9 +24,10 @@
 use super::FittedModel;
 use crate::linalg::Mat;
 use crate::metrics::Registry;
+use crate::stream::ModelHandle;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 #[derive(Clone, Debug)]
@@ -40,28 +50,58 @@ impl Default for ServerConfig {
     }
 }
 
+/// A served prediction plus the version of the model that produced it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Prediction {
+    pub value: f64,
+    pub model_version: u64,
+}
+
+/// The server is no longer accepting requests (stopped or shut down).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ServerClosed;
+
+impl std::fmt::Display for ServerClosed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "prediction server is stopped")
+    }
+}
+
+impl std::error::Error for ServerClosed {}
+
 struct Request {
     x: Vec<f64>,
-    resp: Sender<f64>,
+    resp: Sender<Prediction>,
     enqueued: Instant,
 }
 
 /// Handle to a running prediction server.
 pub struct Server {
-    tx: Sender<Request>,
+    /// `None` once [`Server::stop`] has closed the intake. RwLock so
+    /// concurrent submitters share a read lock (`mpsc::Sender` is Sync);
+    /// only `stop` takes the write lock.
+    tx: RwLock<Option<Sender<Request>>>,
     pub metrics: Arc<Registry>,
+    handle: ModelHandle,
     shutdown: Arc<AtomicBool>,
     threads: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
+    /// Serve a fixed model (wrapped in a fresh swap slot).
     pub fn start(model: Arc<FittedModel>, cfg: ServerConfig) -> Server {
+        Self::start_with_handle(ModelHandle::new(model), cfg)
+    }
+
+    /// Serve whatever the handle currently holds; publishes through the
+    /// same handle hot-swap the served model.
+    pub fn start_with_handle(handle: ModelHandle, cfg: ServerConfig) -> Server {
         let (tx, rx) = channel::<Request>();
         let metrics = Arc::new(Registry::new());
         let shutdown = Arc::new(AtomicBool::new(false));
         // batch channel feeding the worker pool
         let (btx, brx) = channel::<Vec<Request>>();
-        let brx = Arc::new(std::sync::Mutex::new(brx));
+        let brx = Arc::new(Mutex::new(brx));
         let mut threads = Vec::new();
         // batcher thread
         {
@@ -74,7 +114,7 @@ impl Server {
         }
         // workers
         for _ in 0..cfg.workers.max(1) {
-            let model = model.clone();
+            let handle = handle.clone();
             let brx = brx.clone();
             let metrics = metrics.clone();
             threads.push(std::thread::spawn(move || loop {
@@ -83,30 +123,54 @@ impl Server {
                     guard.recv()
                 };
                 let Ok(batch) = batch else { break };
-                serve_batch(&model, batch, &metrics);
+                serve_batch(&handle, batch, &metrics);
             }));
         }
-        Server { tx, metrics, shutdown, threads }
+        Server { tx: RwLock::new(Some(tx)), metrics, handle, shutdown, threads }
     }
 
-    /// Blocking single prediction.
+    /// The swap slot this server reads from (publish through it to
+    /// hot-swap the served model).
+    pub fn model_handle(&self) -> ModelHandle {
+        self.handle.clone()
+    }
+
+    /// Blocking single prediction (panics if the server was stopped —
+    /// use [`Server::try_predict`] for a fallible call).
     pub fn predict(&self, x: &[f64]) -> f64 {
-        self.predict_async(x).recv().expect("server dropped response")
+        self.try_predict(x).expect("prediction server is stopped").value
     }
 
-    /// Submit and get a receiver for the response.
-    pub fn predict_async(&self, x: &[f64]) -> Receiver<f64> {
+    /// Blocking single prediction with the serving model's version.
+    pub fn try_predict(&self, x: &[f64]) -> Result<Prediction, ServerClosed> {
+        let rx = self.predict_async(x)?;
+        rx.recv().map_err(|_| ServerClosed)
+    }
+
+    /// Submit and get a receiver for the response. Returns
+    /// `Err(ServerClosed)` (instead of panicking) once the server has
+    /// been stopped.
+    pub fn predict_async(&self, x: &[f64]) -> Result<Receiver<Prediction>, ServerClosed> {
         let (rtx, rrx) = channel();
-        self.tx
-            .send(Request { x: x.to_vec(), resp: rtx, enqueued: Instant::now() })
-            .expect("server stopped");
-        rrx
+        let guard = self.tx.read().unwrap_or_else(|p| p.into_inner());
+        let tx = guard.as_ref().ok_or(ServerClosed)?;
+        tx.send(Request { x: x.to_vec(), resp: rtx, enqueued: Instant::now() })
+            .map_err(|_| ServerClosed)?;
+        Ok(rrx)
+    }
+
+    /// Close the intake: queued requests are still answered, later calls
+    /// get `Err(ServerClosed)`. Idempotent; does not join the threads.
+    pub fn stop(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // dropping the sender closes the request channel; the batcher
+        // drains what was already queued and exits
+        self.tx.write().unwrap_or_else(|p| p.into_inner()).take();
     }
 
     /// Stop accepting work and join all threads.
     pub fn shutdown(mut self) -> Arc<Registry> {
-        self.shutdown.store(true, Ordering::SeqCst);
-        drop(self.tx); // closes the request channel; batcher drains + exits
+        self.stop();
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
@@ -164,21 +228,42 @@ fn batcher_loop(
     }
 }
 
-fn serve_batch(model: &FittedModel, batch: Vec<Request>, metrics: &Registry) {
+fn serve_batch(handle: &ModelHandle, batch: Vec<Request>, metrics: &Registry) {
     if batch.is_empty() {
         return;
     }
-    let d = batch[0].x.len();
-    let xq = Mat::from_fn(batch.len(), d, |i, j| batch[i].x[j]);
-    let preds = model.predict_batch(&xq);
-    let now = Instant::now();
-    for (req, pred) in batch.into_iter().zip(preds) {
-        metrics.record(
-            "serve.latency.secs",
-            now.saturating_duration_since(req.enqueued).as_secs_f64(),
-        );
-        metrics.incr("serve.requests", 1);
-        let _ = req.resp.send(pred);
+    // one model load per batch: in-flight work keeps this Arc even if a
+    // publish lands mid-batch
+    let current = handle.load();
+    let want_d = current.model.nystrom.landmarks.cols;
+    metrics.gauge_set("serve.model_version", current.version as f64);
+    // group by query dimension: a request whose d doesn't match the
+    // current model is answered with NaN and counted, instead of
+    // poisoning the batch or killing the worker thread
+    let mut groups: std::collections::BTreeMap<usize, Vec<Request>> =
+        std::collections::BTreeMap::new();
+    for req in batch {
+        groups.entry(req.x.len()).or_default().push(req);
+    }
+    for (d, group) in groups {
+        let preds: Vec<f64> = if d == want_d {
+            let xq = Mat::from_fn(group.len(), d, |i, j| group[i].x[j]);
+            current.model.predict_batch(&xq)
+        } else {
+            metrics.incr("serve.bad_dimension", group.len() as u64);
+            vec![f64::NAN; group.len()]
+        };
+        let now = Instant::now();
+        for (req, pred) in group.into_iter().zip(preds) {
+            metrics.record(
+                "serve.latency.secs",
+                now.saturating_duration_since(req.enqueued).as_secs_f64(),
+            );
+            metrics.incr("serve.requests", 1);
+            let _ = req
+                .resp
+                .send(Prediction { value: pred, model_version: current.version });
+        }
     }
 }
 
@@ -202,9 +287,10 @@ mod tests {
         let m = model();
         let server = Server::start(m.clone(), ServerConfig::default());
         for &x in &[0.1, 0.33, 0.7, 0.95] {
-            let got = server.predict(&[x]);
+            let got = server.try_predict(&[x]).unwrap();
             let want = m.predict_one(&[x]);
-            assert!((got - want).abs() < 1e-12, "x={x}");
+            assert!((got.value - want).abs() < 1e-12, "x={x}");
+            assert_eq!(got.model_version, 1);
         }
         let reg = server.shutdown();
         assert_eq!(reg.counter("serve.requests"), 4);
@@ -242,10 +328,67 @@ mod tests {
     fn shutdown_drains_pending() {
         let m = model();
         let server = Server::start(m, ServerConfig::default());
-        let rx = server.predict_async(&[0.5]);
+        let rx = server.predict_async(&[0.5]).unwrap();
         let reg = server.shutdown();
         // request submitted before shutdown must still be answered
-        assert!(rx.recv().unwrap().is_finite());
+        assert!(rx.recv().unwrap().value.is_finite());
         assert!(reg.counter("serve.requests") >= 1);
+    }
+
+    #[test]
+    fn predict_after_stop_errors_instead_of_panicking() {
+        // regression: `predict_async` used to `expect("server stopped")`
+        let m = model();
+        let server = Server::start(m, ServerConfig::default());
+        assert!(server.try_predict(&[0.4]).is_ok());
+        server.stop();
+        assert_eq!(server.predict_async(&[0.5]).err(), Some(ServerClosed));
+        assert_eq!(server.try_predict(&[0.5]).err(), Some(ServerClosed));
+        server.stop(); // idempotent
+        let reg = server.shutdown();
+        assert_eq!(reg.counter("serve.requests"), 1);
+    }
+
+    #[test]
+    fn mixed_dimension_batch_answers_everyone_and_server_survives() {
+        let m = model(); // 1-d model
+        let server = Server::start(
+            m,
+            ServerConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(50),
+                workers: 1,
+            },
+        );
+        // submit a bad-dimension query and a good one close together so
+        // the batcher groups them
+        let bad = server.predict_async(&[0.1, 0.2]).unwrap();
+        let good = server.predict_async(&[0.5]).unwrap();
+        assert!(bad.recv().unwrap().value.is_nan());
+        assert!(good.recv().unwrap().value.is_finite());
+        // the worker survived: a follow-up request is still served
+        assert!(server.try_predict(&[0.3]).unwrap().value.is_finite());
+        let reg = server.shutdown();
+        assert_eq!(reg.counter("serve.requests"), 3);
+        assert_eq!(reg.counter("serve.bad_dimension"), 1);
+    }
+
+    #[test]
+    fn hot_swap_changes_served_model_and_version() {
+        let m1 = model();
+        let server = Server::start(m1.clone(), ServerConfig::default());
+        let p1 = server.try_predict(&[0.5]).unwrap();
+        assert_eq!(p1.model_version, 1);
+        // publish a different model through the server's handle
+        let mut rng = Rng::seed_from_u64(42);
+        let ds = data::dist1d(data::Dist1d::Bimodal, 250, &mut rng);
+        let cfg = FitConfig::default_for(&ds);
+        let m2 = Arc::new(fit_with_backend(&ds, &cfg, Backend::Native).unwrap());
+        let v = server.model_handle().publish(m2.clone());
+        assert_eq!(v, 2);
+        let p2 = server.try_predict(&[0.5]).unwrap();
+        assert_eq!(p2.model_version, 2);
+        assert!((p2.value - m2.predict_one(&[0.5])).abs() < 1e-12);
+        server.shutdown();
     }
 }

@@ -56,7 +56,13 @@
 //! * [`krr`] — exact KRR (ground truth) and risk metrics.
 //! * [`runtime`] — PJRT engine executing AOT-lowered JAX/Pallas artifacts
 //!   (behind the `xla-runtime` feature; an API-compatible stub otherwise).
-//! * [`coordinator`] — fit pipeline + dynamic-batching predict server.
+//! * [`coordinator`] — fit pipeline + dynamic-batching predict server
+//!   with hot-swappable, versioned models.
+//! * [`stream`] — online ingestion: sequential-leverage-score Nyström
+//!   dictionary, O(m²) incremental model updates via rank-one Cholesky
+//!   update/append/delete sweeps (a downdate completes the routine set
+//!   for future decayed-stream support), and refresh-policy-driven
+//!   publishing into the server.
 //! * [`bench_harness`] — timing harness used by `rust/benches/*`.
 //!
 //! ## Quickstart
@@ -86,6 +92,7 @@ pub mod krr;
 pub mod kmethods;
 pub mod runtime;
 pub mod coordinator;
+pub mod stream;
 pub mod bench_harness;
 
 /// Convenience re-exports for examples and downstream users.
@@ -94,5 +101,6 @@ pub mod prelude {
     pub use crate::data::Dataset;
     pub use crate::kernels::{Kernel, KernelSpec};
     pub use crate::leverage::{LeverageEstimator, LeverageMethod};
+    pub use crate::stream::{RefreshPolicy, StreamConfig, StreamCoordinator};
     pub use crate::util::rng::Rng;
 }

@@ -56,6 +56,29 @@ pub fn chol_in_place(a: &mut [f64], n: usize) -> Result<(), CholError> {
     Ok(())
 }
 
+/// Rank-one update of the trailing block of a row-major lower factor:
+/// rows/cols `start..n` of `l` are refactored so that the trailing block
+/// represents T Tᵀ + w wᵀ (`w.len() == n - start`). The leading rows are
+/// untouched. Always succeeds (adding a PSD rank-one term keeps the
+/// block PD).
+fn chol_update_raw(l: &mut [f64], n: usize, start: usize, w: &mut [f64]) {
+    debug_assert_eq!(l.len(), n * n);
+    debug_assert_eq!(w.len(), n - start);
+    for k in start..n {
+        let wk = w[k - start];
+        let lkk = l[k * n + k];
+        let r = (lkk * lkk + wk * wk).sqrt();
+        let c = r / lkk;
+        let s = wk / lkk;
+        l[k * n + k] = r;
+        for i in (k + 1)..n {
+            let lik = (l[i * n + k] + s * w[i - start]) / c;
+            l[i * n + k] = lik;
+            w[i - start] = c * w[i - start] - s * lik;
+        }
+    }
+}
+
 /// Lower-triangular Cholesky factor with solve helpers.
 #[derive(Clone, Debug)]
 pub struct Cholesky {
@@ -172,6 +195,110 @@ impl Cholesky {
         z.iter().map(|x| x * x).sum()
     }
 
+    /// Rank-one **update**: refactor A + vvᵀ in place, O(n²).
+    ///
+    /// Classic LINPACK `dchud`-style sweep of Givens-like rotations down
+    /// the columns; always succeeds (A + vvᵀ is PD whenever A is). This
+    /// is the per-arrival cost of the streaming model update
+    /// ([`crate::stream`]): one new observation contributes a rank-one
+    /// term to the Nyström normal matrix.
+    pub fn rank_one_update(&mut self, v: &[f64]) {
+        assert_eq!(v.len(), self.n);
+        let mut w = v.to_vec();
+        chol_update_raw(&mut self.l, self.n, 0, &mut w);
+    }
+
+    /// Rank-one **downdate**: refactor A − vvᵀ, O(n²). Fails (leaving the
+    /// factor untouched) if the result is not positive definite.
+    ///
+    /// Completes the up/downdate routine set: the streaming model's hot
+    /// paths use [`Cholesky::rank_one_update`] / [`Cholesky::append_row`]
+    /// / [`Cholesky::delete_row`]; the downdate is the primitive a
+    /// forgetting-factor (decayed-stream) objective will need to retire
+    /// old observations (ROADMAP "next streaming levers").
+    pub fn rank_one_downdate(&mut self, v: &[f64]) -> Result<(), CholError> {
+        assert_eq!(v.len(), self.n);
+        let n = self.n;
+        let mut l = self.l.clone();
+        let mut w = v.to_vec();
+        for k in 0..n {
+            let lkk = l[k * n + k];
+            let d = lkk * lkk - w[k] * w[k];
+            if d <= 0.0 || !d.is_finite() {
+                return Err(CholError { pivot: k, value: d });
+            }
+            let r = d.sqrt();
+            let c = r / lkk;
+            let s = w[k] / lkk;
+            l[k * n + k] = r;
+            for i in (k + 1)..n {
+                let lik = (l[i * n + k] - s * w[i]) / c;
+                l[i * n + k] = lik;
+                w[i] = c * w[i] - s * lik;
+            }
+        }
+        self.l = l;
+        Ok(())
+    }
+
+    /// Grow the factor to (n+1)×(n+1): given this = chol(A), produce
+    /// chol of the bordered matrix [[A, a],[aᵀ, diag]] in O(n²) (one
+    /// forward solve). Fails if the Schur complement is not positive —
+    /// the factor is left untouched in that case.
+    ///
+    /// Used when the streaming dictionary admits a new atom.
+    pub fn append_row(&mut self, a: &[f64], diag: f64) -> Result<(), CholError> {
+        assert_eq!(a.len(), self.n);
+        let n = self.n;
+        let mut z = a.to_vec();
+        self.solve_lower_in_place(&mut z);
+        let d = diag - z.iter().map(|x| x * x).sum::<f64>();
+        if d <= 0.0 || !d.is_finite() {
+            return Err(CholError { pivot: n, value: d });
+        }
+        let m = n + 1;
+        let mut l = vec![0.0; m * m];
+        for i in 0..n {
+            l[i * m..i * m + i + 1].copy_from_slice(&self.l[i * n..i * n + i + 1]);
+        }
+        l[n * m..n * m + n].copy_from_slice(&z);
+        l[n * m + n] = d.sqrt();
+        self.l = l;
+        self.n = m;
+        Ok(())
+    }
+
+    /// Shrink the factor: chol of A with row/column `k` deleted, O((n−k)²).
+    ///
+    /// Rows above `k` are unchanged; the trailing block absorbs the
+    /// deleted column via a rank-one update (`choldelete`). Used when the
+    /// streaming dictionary evicts an atom.
+    pub fn delete_row(&mut self, k: usize) {
+        let n = self.n;
+        assert!(k < n, "delete_row({k}) out of range for n={n}");
+        let m = n - 1;
+        // deleted column below the diagonal — the trailing correction
+        let mut w: Vec<f64> = ((k + 1)..n).map(|i| self.l[i * n + k]).collect();
+        let mut l = vec![0.0; m * m];
+        for i in 0..n {
+            if i == k {
+                continue;
+            }
+            let it = if i < k { i } else { i - 1 };
+            for j in 0..=i {
+                if j == k {
+                    continue;
+                }
+                let jt = if j < k { j } else { j - 1 };
+                l[it * m + jt] = self.l[i * n + j];
+            }
+        }
+        // trailing block T satisfies T Tᵀ = L₂₂L₂₂ᵀ + w wᵀ
+        chol_update_raw(&mut l, m, k, &mut w);
+        self.l = l;
+        self.n = m;
+    }
+
     /// Reconstruct A = L Lᵀ (test helper).
     pub fn reconstruct(&self) -> Mat {
         let n = self.n;
@@ -271,6 +398,158 @@ mod tests {
         let x = ch.solve(&b);
         let want: f64 = b.iter().zip(&x).map(|(bi, xi)| bi * xi).sum();
         assert!((q - want).abs() < 1e-8);
+    }
+
+    /// Compare two factors entry-wise over the lower triangle.
+    fn assert_factors_close(a: &Cholesky, b: &Cholesky, tol: f64) {
+        assert_eq!(a.n, b.n);
+        for i in 0..a.n {
+            for j in 0..=i {
+                assert!(
+                    (a.l(i, j) - b.l(i, j)).abs() < tol,
+                    "L[{i}][{j}]: {} vs {}",
+                    a.l(i, j),
+                    b.l(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rank_one_update_matches_refactor() {
+        let mut rng = Rng::seed_from_u64(21);
+        for &n in &[1usize, 2, 5, 17, 40] {
+            let a = Mat { rows: n, cols: n, data: gen::spd(&mut rng, n, 1.0) };
+            let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mut ch = Cholesky::factor(&a).unwrap();
+            ch.rank_one_update(&v);
+            let mut a2 = a.clone();
+            for i in 0..n {
+                for j in 0..n {
+                    a2[(i, j)] += v[i] * v[j];
+                }
+            }
+            let want = Cholesky::factor(&a2).unwrap();
+            assert_factors_close(&ch, &want, 1e-8 * (1.0 + a2.fro()));
+        }
+    }
+
+    #[test]
+    fn rank_one_downdate_inverts_update() {
+        let mut rng = Rng::seed_from_u64(22);
+        for &n in &[1usize, 3, 12, 30] {
+            let a = Mat { rows: n, cols: n, data: gen::spd(&mut rng, n, 1.0) };
+            let v: Vec<f64> = (0..n).map(|_| rng.normal() * 0.5).collect();
+            let want = Cholesky::factor(&a).unwrap();
+            let mut ch = want.clone();
+            ch.rank_one_update(&v);
+            ch.rank_one_downdate(&v).unwrap();
+            assert_factors_close(&ch, &want, 1e-7 * (1.0 + a.fro()));
+        }
+    }
+
+    #[test]
+    fn downdate_rejects_indefinite_and_keeps_factor() {
+        // A − vvᵀ indefinite when v is too large; factor must survive.
+        let a = Mat::from_rows(vec![vec![2.0, 0.5], vec![0.5, 2.0]]);
+        let mut ch = Cholesky::factor(&a).unwrap();
+        let before = ch.clone();
+        assert!(ch.rank_one_downdate(&[10.0, 0.0]).is_err());
+        assert_factors_close(&ch, &before, 0.0_f64.max(1e-15));
+    }
+
+    #[test]
+    fn append_row_matches_bordered_refactor() {
+        let mut rng = Rng::seed_from_u64(23);
+        for &n in &[1usize, 4, 11, 25] {
+            let big = Mat { rows: n + 1, cols: n + 1, data: gen::spd(&mut rng, n + 1, 1.0) };
+            let a = Mat::from_fn(n, n, |i, j| big[(i, j)]);
+            let col: Vec<f64> = (0..n).map(|i| big[(i, n)]).collect();
+            let mut ch = Cholesky::factor(&a).unwrap();
+            ch.append_row(&col, big[(n, n)]).unwrap();
+            let want = Cholesky::factor(&big).unwrap();
+            assert_factors_close(&ch, &want, 1e-8 * (1.0 + big.fro()));
+        }
+    }
+
+    #[test]
+    fn append_row_rejects_nonpositive_schur() {
+        // bordered matrix indefinite: new row duplicates an existing row
+        // but with a smaller diagonal, so the Schur complement is < 0
+        let a = Mat::from_rows(vec![vec![2.0, 0.3], vec![0.3, 2.0]]);
+        let mut ch = Cholesky::factor(&a).unwrap();
+        let err = ch.append_row(&[2.0, 0.3], 1.9).unwrap_err();
+        assert_eq!(err.pivot, 2);
+        assert_eq!(ch.n(), 2); // untouched
+    }
+
+    #[test]
+    fn delete_row_matches_submatrix_refactor() {
+        let mut rng = Rng::seed_from_u64(24);
+        for &n in &[2usize, 3, 8, 20] {
+            let a = Mat { rows: n, cols: n, data: gen::spd(&mut rng, n, 1.0) };
+            for k in [0, n / 2, n - 1] {
+                let mut ch = Cholesky::factor(&a).unwrap();
+                ch.delete_row(k);
+                let keep: Vec<usize> = (0..n).filter(|&i| i != k).collect();
+                let sub = Mat::from_fn(n - 1, n - 1, |i, j| a[(keep[i], keep[j])]);
+                let want = Cholesky::factor(&sub).unwrap();
+                assert_factors_close(&ch, &want, 1e-8 * (1.0 + a.fro()));
+            }
+        }
+    }
+
+    #[test]
+    fn update_append_delete_chain_stays_consistent() {
+        // simulate the streaming pattern: grow, rank-one update, evict —
+        // the factor must keep solving the matching assembled system.
+        let mut rng = Rng::seed_from_u64(25);
+        let n0 = 6;
+        let mut a = Mat { rows: n0, cols: n0, data: gen::spd(&mut rng, n0, 1.0) };
+        let mut ch = Cholesky::factor(&a).unwrap();
+        for step in 0..12 {
+            match step % 3 {
+                0 => {
+                    // rank-one update
+                    let v: Vec<f64> = (0..a.rows).map(|_| rng.normal() * 0.3).collect();
+                    for i in 0..a.rows {
+                        for j in 0..a.rows {
+                            a[(i, j)] += v[i] * v[j];
+                        }
+                    }
+                    ch.rank_one_update(&v);
+                }
+                1 => {
+                    // append a row keeping PD: diag dominant
+                    let col: Vec<f64> = (0..a.rows).map(|_| rng.normal() * 0.2).collect();
+                    let diag = 2.0 + col.iter().map(|x| x * x).sum::<f64>();
+                    let m = a.rows + 1;
+                    let old = a.clone();
+                    a = Mat::from_fn(m, m, |i, j| {
+                        if i < m - 1 && j < m - 1 {
+                            old[(i, j)]
+                        } else if i == m - 1 && j == m - 1 {
+                            diag
+                        } else {
+                            col[i.min(j)]
+                        }
+                    });
+                    ch.append_row(&col, diag).unwrap();
+                }
+                _ => {
+                    let k = rng.usize(a.rows);
+                    let keep: Vec<usize> = (0..a.rows).filter(|&i| i != k).collect();
+                    a = Mat::from_fn(keep.len(), keep.len(), |i, j| a[(keep[i], keep[j])]);
+                    ch.delete_row(k);
+                }
+            }
+            let b: Vec<f64> = (0..a.rows).map(|_| rng.normal()).collect();
+            let x = ch.solve(&b);
+            let ax = crate::linalg::matvec(&a, &x);
+            for i in 0..a.rows {
+                assert!((ax[i] - b[i]).abs() < 1e-6, "step {step} i={i}");
+            }
+        }
     }
 
     #[test]

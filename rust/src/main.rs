@@ -4,9 +4,12 @@
 //! * `fit`        — fit a Nyström-KRR model on a dataset and report risk.
 //! * `leverage`   — estimate leverage scores and dump them (JSON).
 //! * `serve`      — fit then run the batched predict server demo.
+//! * `stream`     — replay a dataset as an arrival stream through the
+//!   online Nyström coordinator; report accuracy-vs-time, update-latency
+//!   quantiles, and the final gap to a full batch fit.
 //! * `gen-data`   — write a synthetic dataset to CSV.
 //! * `bench-fig1` / `bench-table1` / `bench-fig2` / `bench-fig3` /
-//!   `bench-perf` — regenerate the paper's tables & figures.
+//!   `bench-perf` / `bench-stream` — regenerate tables & figures.
 //! * `selftest`   — quick end-to-end sanity run (native + XLA if built).
 
 use leverkrr::bench_harness::{experiments, ExpOptions};
@@ -32,6 +35,7 @@ fn main() {
         "tune" => cmd_tune(&rest),
         "leverage" => cmd_leverage(&rest),
         "serve" => cmd_serve(&rest),
+        "stream" => cmd_stream(&rest),
         "gen-data" => cmd_gen_data(&rest),
         "bench-fig1" => {
             experiments::fig1::run(&exp_opts("bench-fig1", &rest));
@@ -55,6 +59,10 @@ fn main() {
         }
         "bench-ablation" => {
             experiments::ablation::run(&exp_opts("bench-ablation", &rest));
+            0
+        }
+        "bench-stream" => {
+            experiments::stream::run(&exp_opts("bench-stream", &rest));
             0
         }
         "selftest" => cmd_selftest(),
@@ -83,6 +91,7 @@ commands:
   tune         cross-validated λ grid search over fixed landmarks
   leverage     estimate leverage scores, dump JSON
   serve        fit + run the dynamic-batching predict server demo
+  stream       replay a dataset as an arrival stream (online Nyström)
   gen-data     write a synthetic dataset (CSV)
   bench-fig1   Figure 1: runtime vs error trade-off (3-d bimodal)
   bench-table1 Table 1: leverage approximation accuracy (UCI-like)
@@ -90,6 +99,7 @@ commands:
   bench-fig3   Figure 3: Gaussian kernels, growing dimension
   bench-perf   §Perf hot-path microbenches
   bench-ablation SA design-choice ablations
+  bench-stream streaming update latency vs periodic full refit
   selftest     quick end-to-end sanity run"
     );
 }
@@ -294,6 +304,127 @@ fn cmd_serve(argv: &[String]) -> i32 {
         reg.timer_mean("serve.latency.secs") * 1e3,
         reg.counter("serve.batches"),
         reg.counter("serve.requests") as f64 / reg.counter("serve.batches").max(1) as f64,
+    );
+    let ps = reg.timer_quantiles("serve.latency.secs", &[0.50, 0.95, 0.99]);
+    println!(
+        "latency quantiles: p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms",
+        ps[0] * 1e3,
+        ps[1] * 1e3,
+        ps[2] * 1e3,
+    );
+    0
+}
+
+fn cmd_stream(argv: &[String]) -> i32 {
+    let cmd = data_flags(Command::new(
+        "stream",
+        "replay a dataset as an arrival stream (online Nyström + hot-swap publishing)",
+    ))
+    .flag("budget", "128", "dictionary budget (max atoms)")
+    .flag("mu", "", "absolute ridge μ (default: n·λ with the paper-rule λ)")
+    .flag("accept-threshold", "0.01", "dictionary admission threshold on δ/k(x,x)")
+    .flag("refresh-every", "64", "publish every k arrivals (0 disables)")
+    .flag("drift", "0.25", "publish on relative prequential-error drift (0 disables)")
+    .flag("report-every", "", "progress row every k arrivals (default n/10)");
+    let a = match cmd.parse(argv) {
+        Ok(a) => a,
+        Err(m) => {
+            eprintln!("{m}");
+            return 2;
+        }
+    };
+    let (ds, _) = dataset_from(&a);
+    let base = build_cfg(&a, &ds);
+    let n = ds.n();
+    let mu = a.get_f64("mu").unwrap_or(n as f64 * base.lambda);
+    let budget = a.get_usize("budget").unwrap_or(128);
+    let accept_threshold = a
+        .get_f64("accept-threshold")
+        .unwrap_or(leverkrr::stream::DEFAULT_ACCEPT_THRESHOLD);
+    // validate here so bad flag values exit like any other usage error
+    // instead of tripping the library asserts with a backtrace
+    if mu <= 0.0 || !mu.is_finite() {
+        eprintln!("--mu must be a positive number (got {mu})");
+        return 2;
+    }
+    if budget == 0 {
+        eprintln!("--budget must be at least 1");
+        return 2;
+    }
+    if !(0.0..1.0).contains(&accept_threshold) {
+        eprintln!("--accept-threshold must be in [0, 1) (got {accept_threshold})");
+        return 2;
+    }
+    let scfg = leverkrr::stream::StreamConfig {
+        kernel: base.kernel,
+        mu,
+        budget,
+        accept_threshold,
+        refresh: leverkrr::stream::RefreshPolicy {
+            every: a
+                .get_usize("refresh-every")
+                .unwrap_or_else(|| leverkrr::stream::RefreshPolicy::default().every),
+            drift: a
+                .get_f64("drift")
+                .unwrap_or_else(|| leverkrr::stream::RefreshPolicy::default().drift),
+        },
+        threads: base.threads,
+    };
+    println!(
+        "streaming {} (n={}, d={}) kernel={} μ={:.3e} (λ_eq={:.3e}) budget={} refresh every {} / drift {}",
+        ds.name,
+        n,
+        ds.d(),
+        scfg.kernel.name(),
+        scfg.mu,
+        scfg.mu / n as f64,
+        scfg.budget,
+        scfg.refresh.every,
+        scfg.refresh.drift,
+    );
+    let report_every = a.get_usize("report-every").unwrap_or((n / 10).max(1));
+    let (sc, report) = leverkrr::stream::replay(&ds, &scfg, report_every);
+    println!("\n  arrivals  dict  rolling_rmse  version  elapsed_s");
+    for r in &report.rows {
+        println!(
+            "  {:>8}  {:>4}  {:>12.5}  {:>7}  {:>9.3}",
+            r.arrivals, r.dict, r.rolling_rmse, r.version, r.elapsed_secs
+        );
+    }
+    // end-state accuracy vs a full batch fit at the equivalent λ = μ/n
+    // and the same landmark capacity (m = budget), so the printed gap
+    // measures the streaming approximation, not a capacity mismatch
+    let snap = sc.model().snapshot();
+    let stream_risk =
+        leverkrr::krr::in_sample_risk(&snap.predict_batch(&ds.x), &ds.f_true);
+    let mut bcfg = base.clone();
+    bcfg.lambda = mu / n as f64;
+    bcfg.m_sub = scfg.budget.min(n);
+    let batch = fit_with_backend(&ds, &bcfg, Backend::Native).expect("batch fit");
+    let batch_risk =
+        leverkrr::krr::in_sample_risk(&batch.predict_batch(&ds.x), &ds.f_true);
+    let (s_rmse, b_rmse) = (stream_risk.sqrt(), batch_risk.sqrt());
+    println!(
+        "\nreplayed {} arrivals in {:.3}s  (dict {}/{}, {} publishes, final version {})",
+        n,
+        report.total_secs,
+        report.dict,
+        scfg.budget,
+        sc.metrics.counter("stream.publishes"),
+        report.final_version,
+    );
+    println!(
+        "update latency: p50 {:.1} µs  p95 {:.1} µs  p99 {:.1} µs",
+        report.update_p50 * 1e6,
+        report.update_p95 * 1e6,
+        report.update_p99 * 1e6,
+    );
+    println!(
+        "end-state RMSE: stream {:.5} vs batch (m={}) {:.5}  ({:+.2}%)",
+        s_rmse,
+        bcfg.m_sub,
+        b_rmse,
+        100.0 * (s_rmse - b_rmse) / b_rmse.max(1e-12),
     );
     0
 }

@@ -135,11 +135,50 @@ pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
     }
 }
 
-/// Thread-safe named counters + timing summaries.
+/// Samples retained per timer for quantile estimation. A ring of the
+/// most recent values: bounds memory for always-on servers/streams while
+/// keeping quantiles exact over the trailing window (and exact over the
+/// whole run for anything that records fewer samples than the cap).
+const TIMER_SAMPLE_CAP: usize = 8192;
+
+/// Per-timer state: streaming moments + a bounded recent-sample ring.
+#[derive(Clone, Debug, Default)]
+struct TimerStats {
+    summary: Summary,
+    samples: Vec<f64>,
+    /// Next ring slot to overwrite once `samples` reaches the cap.
+    cursor: usize,
+}
+
+impl TimerStats {
+    fn add(&mut self, x: f64) {
+        self.summary.add(x);
+        if self.samples.len() < TIMER_SAMPLE_CAP {
+            self.samples.push(x);
+        } else {
+            self.samples[self.cursor] = x;
+            self.cursor = (self.cursor + 1) % TIMER_SAMPLE_CAP;
+        }
+    }
+
+}
+
+/// Sort a sample clone taken under the registry lock — called with the
+/// lock already released so the O(cap·log cap) sort never blocks
+/// hot-path `record` calls.
+fn sort_samples(mut v: Vec<f64>) -> Vec<f64> {
+    // total_cmp: monitoring must never panic, even on NaN samples
+    v.sort_by(f64::total_cmp);
+    v
+}
+
+/// Thread-safe named counters, last-value gauges, and timing summaries
+/// (with p50/p95/p99).
 #[derive(Default)]
 pub struct Registry {
     counters: Mutex<BTreeMap<String, AtomicU64>>,
-    timers: Mutex<BTreeMap<String, Summary>>,
+    gauges: Mutex<BTreeMap<String, f64>>,
+    timers: Mutex<BTreeMap<String, TimerStats>>,
 }
 
 impl Registry {
@@ -163,10 +202,23 @@ impl Registry {
             .unwrap_or(0)
     }
 
+    /// Set a last-value gauge (model version, dictionary size, …) —
+    /// unlike a timer, a gauge keeps no history and reports no quantiles.
+    pub fn gauge_set(&self, name: &str, value: f64) {
+        self.gauges.lock().unwrap().insert(name.to_string(), value);
+    }
+
+    /// Current value of a gauge (NaN if never set).
+    pub fn gauge(&self, name: &str) -> f64 {
+        self.gauges.lock().unwrap().get(name).copied().unwrap_or(f64::NAN)
+    }
+
     /// Record a duration (seconds) under a named timer.
     pub fn record(&self, name: &str, secs: f64) {
         let mut m = self.timers.lock().unwrap();
-        m.entry(name.to_string()).or_insert_with(Summary::new).add(secs);
+        m.entry(name.to_string())
+            .or_insert_with(|| TimerStats { summary: Summary::new(), ..Default::default() })
+            .add(secs);
     }
 
     /// Time a closure and record under `name`.
@@ -177,7 +229,12 @@ impl Registry {
     }
 
     pub fn timer_mean(&self, name: &str) -> f64 {
-        self.timers.lock().unwrap().get(name).map(|s| s.mean()).unwrap_or(f64::NAN)
+        self.timers
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|s| s.summary.mean())
+            .unwrap_or(f64::NAN)
     }
 
     pub fn timer_total(&self, name: &str) -> f64 {
@@ -185,23 +242,70 @@ impl Registry {
             .lock()
             .unwrap()
             .get(name)
-            .map(|s| s.mean() * s.count() as f64)
+            .map(|s| s.summary.mean() * s.summary.count() as f64)
             .unwrap_or(0.0)
     }
 
+    /// Linear-interpolation quantile of a timer's recorded values
+    /// (q ∈ [0,1]; NaN for an unknown timer). Exact over the trailing
+    /// sample window — see [`TIMER_SAMPLE_CAP`]. The sort happens
+    /// outside the registry lock.
+    pub fn timer_quantile(&self, name: &str, q: f64) -> f64 {
+        self.timer_quantiles(name, &[q])[0]
+    }
+
+    /// Several quantiles of one timer with a single sample clone + sort
+    /// (what the serve/stream CLIs use for p50/p95/p99 lines).
+    pub fn timer_quantiles(&self, name: &str, qs: &[f64]) -> Vec<f64> {
+        let samples =
+            self.timers.lock().unwrap().get(name).map(|s| s.samples.clone());
+        match samples {
+            Some(v) => {
+                let sorted = sort_samples(v);
+                qs.iter().map(|&q| quantile_sorted(&sorted, q)).collect()
+            }
+            None => vec![f64::NAN; qs.len()],
+        }
+    }
+
+    /// Timer snapshots include the streaming moments plus p50/p95/p99
+    /// over the retained sample window. Sample sorting happens after the
+    /// locks are released, so a snapshot never stalls hot-path `record`s.
     pub fn snapshot(&self) -> Json {
-        let counters = self.counters.lock().unwrap();
-        let timers = self.timers.lock().unwrap();
-        let mut obj = BTreeMap::new();
         let mut cj = BTreeMap::new();
-        for (k, v) in counters.iter() {
-            cj.insert(k.clone(), Json::Num(v.load(Ordering::Relaxed) as f64));
+        {
+            let counters = self.counters.lock().unwrap();
+            for (k, v) in counters.iter() {
+                cj.insert(k.clone(), Json::Num(v.load(Ordering::Relaxed) as f64));
+            }
         }
+        let timer_data: Vec<(String, Json, Vec<f64>)> = {
+            let timers = self.timers.lock().unwrap();
+            timers
+                .iter()
+                .map(|(k, v)| (k.clone(), v.summary.to_json(), v.samples.clone()))
+                .collect()
+        };
         let mut tj = BTreeMap::new();
-        for (k, v) in timers.iter() {
-            tj.insert(k.clone(), v.to_json());
+        for (k, mut entry, samples) in timer_data {
+            if let Json::Obj(map) = &mut entry {
+                let sorted = sort_samples(samples);
+                map.insert("p50".to_string(), Json::Num(quantile_sorted(&sorted, 0.50)));
+                map.insert("p95".to_string(), Json::Num(quantile_sorted(&sorted, 0.95)));
+                map.insert("p99".to_string(), Json::Num(quantile_sorted(&sorted, 0.99)));
+            }
+            tj.insert(k, entry);
         }
+        let mut gj = BTreeMap::new();
+        {
+            let gauges = self.gauges.lock().unwrap();
+            for (k, v) in gauges.iter() {
+                gj.insert(k.clone(), Json::Num(*v));
+            }
+        }
+        let mut obj = BTreeMap::new();
         obj.insert("counters".to_string(), Json::Obj(cj));
+        obj.insert("gauges".to_string(), Json::Obj(gj));
         obj.insert("timers".to_string(), Json::Obj(tj));
         Json::Obj(obj)
     }
@@ -278,6 +382,56 @@ mod tests {
         assert!(r.timer_mean("work") >= 0.0);
         let snap = r.snapshot();
         assert_eq!(snap.get("counters").get("requests").as_f64(), Some(5.0));
+    }
+
+    #[test]
+    fn registry_snapshot_includes_latency_quantiles() {
+        let r = Registry::new();
+        for i in 1..=100 {
+            r.record("lat", i as f64);
+        }
+        assert!((r.timer_quantile("lat", 0.5) - 50.5).abs() < 1e-9);
+        assert!(r.timer_quantile("nope", 0.5).is_nan());
+        let snap = r.snapshot();
+        let lat = snap.get("timers").get("lat");
+        assert!((lat.get("p50").as_f64().unwrap() - 50.5).abs() < 1e-9);
+        assert!((lat.get("p95").as_f64().unwrap() - 95.05).abs() < 1e-9);
+        assert!((lat.get("p99").as_f64().unwrap() - 99.01).abs() < 1e-9);
+        // the streaming summary fields are still there
+        assert_eq!(lat.get("n").as_f64(), Some(100.0));
+    }
+
+    #[test]
+    fn gauges_keep_last_value_only() {
+        let r = Registry::new();
+        assert!(r.gauge("v").is_nan());
+        r.gauge_set("v", 3.0);
+        r.gauge_set("v", 7.0);
+        assert_eq!(r.gauge("v"), 7.0);
+        let snap = r.snapshot();
+        assert_eq!(snap.get("gauges").get("v").as_f64(), Some(7.0));
+        // gauges don't pollute the timers section
+        assert_eq!(snap.get("timers").get("v").as_f64(), None);
+    }
+
+    #[test]
+    fn timer_samples_are_bounded_to_a_recent_window() {
+        let r = Registry::new();
+        for _ in 0..TIMER_SAMPLE_CAP {
+            r.record("lat", 1.0);
+        }
+        assert!((r.timer_quantile("lat", 0.5) - 1.0).abs() < 1e-12);
+        // a full second generation overwrites the ring entirely
+        for _ in 0..TIMER_SAMPLE_CAP {
+            r.record("lat", 2.0);
+        }
+        assert!((r.timer_quantile("lat", 0.0) - 2.0).abs() < 1e-12);
+        assert!((r.timer_quantile("lat", 1.0) - 2.0).abs() < 1e-12);
+        // the streaming summary still spans the whole run
+        let snap = r.snapshot();
+        let lat = snap.get("timers").get("lat");
+        assert_eq!(lat.get("n").as_f64(), Some(2.0 * TIMER_SAMPLE_CAP as f64));
+        assert_eq!(lat.get("min").as_f64(), Some(1.0));
     }
 
     #[test]

@@ -1,0 +1,392 @@
+//! Online Nyström dictionary maintained by **sequential ridge leverage
+//! scores** (the KORS / ALD line: Calandriello et al., "Analysis of
+//! Nyström method with sequential ridge leverage scores"; Engel et al.'s
+//! approximate-linear-dependence test is the deterministic limit).
+//!
+//! For an arriving point x the dictionary computes the projection
+//! residual against the current atoms J:
+//!
+//! ```text
+//!   δ(x) = k(x,x) − k_J(x)ᵀ (K_JJ + εI)^{−1} k_J(x)        (ε: tiny jitter)
+//! ```
+//!
+//! δ is, up to the jitter, the squared RKHS distance of φ(x) from
+//! span{φ(x_j)}. The sequential ridge leverage score of the candidate at
+//! ridge μ̄ is the monotone map `ℓ̂_μ̄(x) = δ/(δ + μ̄)` (the new diagonal of
+//! `K'(K' + μ̄I)^{−1}` for the bordered Gram), so thresholding δ/k(x,x)
+//! *is* thresholding the sequential RLS with the ridge folded into the
+//! threshold — and unlike a μ̄-regularized residual it cleanly separates
+//! duplicates (δ → 0) from novel points (δ → k(x,x)).
+//!
+//! Policy: reject when `δ/k(x,x) < accept_threshold` (redundant); admit
+//! otherwise; at budget, the candidate must beat the weakest atom's
+//! leave-one-out residual `δ_j = 1/[(K_JJ+εI)^{−1}]_jj` by a hysteresis
+//! margin to swap in. Because admitted atoms all passed the threshold,
+//! every Schur complement of `K_JJ` is ≥ `accept_threshold·k(x,x)` — the
+//! Gram stays comfortably PD, which is what lets the Cholesky factor
+//! grow/shrink by the rank-one routines ([`Cholesky::append_row`] /
+//! [`Cholesky::delete_row`]) instead of refactoring.
+//!
+//! Costs per offered point: O(m·d) kernel row + O(m²) triangular solve;
+//! a full-budget eviction check consults the O(m³) all-atom score scan,
+//! memoized per dictionary state so it is paid once per mutation rather
+//! than once per candidate. Nothing scales with the number of points
+//! seen.
+
+use crate::kernels::Kernel;
+use crate::linalg::{Cholesky, Mat};
+
+/// Relative jitter ε/k(x,x) stabilizing the atom Gram factor.
+const GRAM_JITTER_REL: f64 = 1e-8;
+
+/// What [`OnlineDictionary::offer`] decided, with the intermediates the
+/// incremental model needs to mirror the change in O(m²).
+pub enum DictDecision {
+    /// Redundant point: not an atom. `kx` is the kernel row against the
+    /// (unchanged) dictionary — the arrival still updates the model.
+    Rejected { kx: Vec<f64> },
+    /// The point was admitted as a new atom (appended last).
+    Admitted {
+        /// Index of the atom evicted to make room (position *before*
+        /// removal), if the budget was full.
+        evicted: Option<usize>,
+        /// Kernel row of the new atom against the dictionary it joined
+        /// (post-eviction, pre-append ordering).
+        kx: Vec<f64>,
+        /// k(x, x) of the new atom.
+        kxx: f64,
+        /// Projection coefficients `(K_JJ + εI)^{−1} kx` of the new atom
+        /// onto those same atoms.
+        proj: Vec<f64>,
+    },
+}
+
+/// Budgeted online dictionary with an incrementally maintained Cholesky
+/// factor of `K_JJ + εI`.
+pub struct OnlineDictionary {
+    kernel: Kernel,
+    budget: usize,
+    /// Admission threshold on the relative residual δ/k(x,x) ∈ [0, 1].
+    pub accept_threshold: f64,
+    /// A candidate must beat `margin ×` the weakest atom's residual to
+    /// trigger an eviction (hysteresis against churn).
+    pub evict_margin: f64,
+    /// Absolute jitter ε (set from the first point's k(x,x)).
+    eps: f64,
+    atoms: Mat,
+    arrival: Vec<u64>,
+    chol: Option<Cholesky>,
+    /// Memoized [`OnlineDictionary::atom_scores`] — the scores depend
+    /// only on the atom set, so the O(m³) eviction scan is paid once per
+    /// dictionary mutation instead of once per full-budget candidate.
+    cached_scores: Option<Vec<f64>>,
+}
+
+impl OnlineDictionary {
+    pub fn new(kernel: Kernel, budget: usize, accept_threshold: f64) -> Self {
+        assert!(budget >= 1, "need a budget of at least one atom");
+        assert!(
+            (0.0..1.0).contains(&accept_threshold),
+            "accept threshold must be in [0, 1)"
+        );
+        OnlineDictionary {
+            kernel,
+            budget,
+            accept_threshold,
+            evict_margin: 1.1,
+            eps: 0.0,
+            atoms: Mat::zeros(0, 0),
+            arrival: Vec::new(),
+            chol: None,
+            cached_scores: None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.atoms.rows
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.atoms.rows == 0
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Input dimension the dictionary is locked to (0 while empty).
+    pub fn dim(&self) -> usize {
+        self.atoms.cols
+    }
+
+    /// Atom points, one per row (in admission order).
+    pub fn atoms(&self) -> &Mat {
+        &self.atoms
+    }
+
+    /// Arrival index of each atom (provenance into the stream).
+    pub fn arrivals(&self) -> &[u64] {
+        &self.arrival
+    }
+
+    /// Kernel row k(x, atoms). Pool-parallel per-element map for large
+    /// dictionaries (each entry computed by exactly one worker → results
+    /// are thread-count invariant).
+    pub fn k_vec(&self, x: &[f64]) -> Vec<f64> {
+        let m = self.atoms.rows;
+        if m == 0 {
+            return Vec::new();
+        }
+        let nt = if m * self.atoms.cols > 64 * 64 {
+            crate::util::pool::current_threads()
+        } else {
+            1
+        };
+        let parts = crate::util::pool::par_chunks_with(nt, m, |range| {
+            range
+                .map(|j| self.kernel.eval(x, self.atoms.row(j)))
+                .collect::<Vec<f64>>()
+        });
+        parts.into_iter().flatten().collect()
+    }
+
+    /// Relative projection residual δ(x)/k(x,x) ∈ [0, 1] of a candidate
+    /// against the current dictionary (1.0 when empty). The sequential
+    /// ridge leverage score at ridge μ̄ is `δ/(δ + μ̄)` — see
+    /// [`OnlineDictionary::rls_estimate`].
+    pub fn novelty(&self, x: &[f64]) -> f64 {
+        self.rel_residual(&self.k_vec(x), self.kernel.eval(x, x))
+    }
+
+    /// δ(x)/k(x,x) given the precomputed kernel row — the single
+    /// implementation behind both [`OnlineDictionary::novelty`] and the
+    /// admission test in [`OnlineDictionary::offer`].
+    fn rel_residual(&self, kx: &[f64], kxx: f64) -> f64 {
+        let Some(chol) = self.chol.as_ref() else { return 1.0 };
+        // δ = k(x,x) − kxᵀ(K_JJ+εI)^{−1}kx = k(x,x) − ‖L^{−1}kx‖²
+        let delta = (kxx - chol.quad_form(kx)).max(0.0);
+        if kxx > 0.0 {
+            (delta / kxx).min(1.0)
+        } else {
+            0.0
+        }
+    }
+
+    /// Sequential ridge leverage score of a candidate at ridge `mu`:
+    /// `δ(x)/(δ(x) + μ̄)`, the new diagonal of `K'(K'+μ̄I)^{−1}` for the
+    /// bordered Gram.
+    pub fn rls_estimate(&self, x: &[f64], mu: f64) -> f64 {
+        let kxx = self.kernel.eval(x, x);
+        let delta = self.novelty(x) * kxx;
+        delta / (delta + mu)
+    }
+
+    /// Leave-one-out residual of every atom within the dictionary,
+    /// relative to its own diagonal: `δ_j/k_jj` with
+    /// `δ_j = 1/[(K_JJ+εI)^{−1}]_jj` (the Schur complement of atom j
+    /// against the rest) — the eviction order, in the same units as
+    /// [`OnlineDictionary::novelty`]. O(m³) total; pool-parallel over
+    /// atoms (independent solves, thread-count invariant).
+    pub fn atom_scores(&self) -> Vec<f64> {
+        let Some(chol) = self.chol.as_ref() else { return Vec::new() };
+        let m = self.atoms.rows;
+        let nt =
+            if m * m > 64 * 64 { crate::util::pool::current_threads() } else { 1 };
+        let parts = crate::util::pool::par_chunks_with(nt, m, |range| {
+            range
+                .map(|j| {
+                    let mut e = vec![0.0; m];
+                    e[j] = 1.0;
+                    let inv_jj = chol.quad_form(&e).max(f64::MIN_POSITIVE);
+                    let kjj = self.kernel.eval(self.atoms.row(j), self.atoms.row(j));
+                    (1.0 / inv_jj / kjj.max(f64::MIN_POSITIVE)).max(0.0)
+                })
+                .collect::<Vec<f64>>()
+        });
+        parts.into_iter().flatten().collect()
+    }
+
+    /// [`OnlineDictionary::atom_scores`] but served from the memo when
+    /// the dictionary hasn't mutated since the last full-budget offer —
+    /// what snapshots use so a publish doesn't re-pay the O(m³) scan.
+    pub fn atom_scores_cached(&self) -> Vec<f64> {
+        match &self.cached_scores {
+            Some(s) => s.clone(),
+            None => self.atom_scores(),
+        }
+    }
+
+    /// Offer an arriving point. Admission is deterministic (threshold on
+    /// the relative residual; budget enforced by evict-the-weakest), so a
+    /// replay is reproducible bit-for-bit at any pool width.
+    pub fn offer(&mut self, x: &[f64], arrival: u64) -> DictDecision {
+        let kxx = self.kernel.eval(x, x);
+        if self.is_empty() {
+            assert!(kxx > 0.0, "k(x,x) must be positive");
+            self.eps = GRAM_JITTER_REL * kxx;
+            self.push_atom(x, arrival);
+            let one = Mat { rows: 1, cols: 1, data: vec![kxx + self.eps] };
+            self.chol = Some(Cholesky::factor(&one).expect("k(x,x) + ε > 0"));
+            return DictDecision::Admitted {
+                evicted: None,
+                kx: Vec::new(),
+                kxx,
+                proj: Vec::new(),
+            };
+        }
+        let mut kx = self.k_vec(x);
+        let residual = self.rel_residual(&kx, kxx);
+        if residual < self.accept_threshold {
+            return DictDecision::Rejected { kx };
+        }
+        let mut evicted = None;
+        if self.len() >= self.budget {
+            if self.cached_scores.is_none() {
+                self.cached_scores = Some(self.atom_scores());
+            }
+            let scores = self.cached_scores.as_deref().expect("just filled");
+            let (j, &min_score) = scores
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .expect("budget ≥ 1");
+            if residual <= min_score * self.evict_margin {
+                return DictDecision::Rejected { kx };
+            }
+            self.remove_atom(j);
+            kx.remove(j);
+            evicted = Some(j);
+        }
+        // projection onto the dictionary the new atom joins
+        let proj = {
+            let chol = self.chol.as_ref().expect("dictionary non-empty");
+            chol.solve(&kx)
+        };
+        self.push_atom(x, arrival);
+        let mut chol = self.chol.take().expect("dictionary factor");
+        if chol.append_row(&kx, kxx + self.eps).is_err() {
+            // numerically dependent column — refactor from scratch
+            let mut kdd = self.kernel.matrix_sym(&self.atoms);
+            kdd.add_diag(self.eps);
+            chol = Cholesky::factor_jittered(&kdd).expect("K_JJ + εI is PD");
+        }
+        self.chol = Some(chol);
+        DictDecision::Admitted { evicted, kx, kxx, proj }
+    }
+
+    fn push_atom(&mut self, x: &[f64], arrival: u64) {
+        if self.atoms.rows == 0 {
+            self.atoms = Mat::zeros(0, x.len());
+        }
+        assert_eq!(x.len(), self.atoms.cols, "dimension changed mid-stream");
+        self.atoms.data.extend_from_slice(x);
+        self.atoms.rows += 1;
+        self.arrival.push(arrival);
+        self.cached_scores = None;
+    }
+
+    fn remove_atom(&mut self, j: usize) {
+        let d = self.atoms.cols;
+        self.atoms.data.drain(j * d..(j + 1) * d);
+        self.atoms.rows -= 1;
+        self.arrival.remove(j);
+        if let Some(chol) = self.chol.as_mut() {
+            chol.delete_row(j);
+        }
+        self.cached_scores = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{dist1d, Dist1d};
+    use crate::kernels::KernelSpec;
+    use crate::util::rng::Rng;
+
+    fn kernel() -> Kernel {
+        Kernel::new(KernelSpec::Matern { nu: 1.5, a: 1.0 })
+    }
+
+    #[test]
+    fn first_point_always_admitted() {
+        let mut d = OnlineDictionary::new(kernel(), 4, 0.1);
+        match d.offer(&[0.3], 0) {
+            DictDecision::Admitted { evicted: None, .. } => {}
+            _ => panic!("first point must be admitted"),
+        }
+        assert_eq!(d.len(), 1);
+        assert_eq!(d.arrivals(), &[0]);
+    }
+
+    #[test]
+    fn duplicate_point_rejected() {
+        let mut d = OnlineDictionary::new(kernel(), 8, 0.01);
+        d.offer(&[0.3], 0);
+        match d.offer(&[0.3], 1) {
+            DictDecision::Rejected { kx } => assert_eq!(kx.len(), 1),
+            _ => panic!("exact duplicate must be redundant"),
+        }
+        assert_eq!(d.len(), 1);
+    }
+
+    #[test]
+    fn budget_is_never_exceeded_and_factor_tracks_gram() {
+        let mut rng = Rng::seed_from_u64(5);
+        let ds = dist1d(Dist1d::Bimodal, 300, &mut rng);
+        let mut d = OnlineDictionary::new(kernel(), 12, 0.001);
+        for i in 0..ds.n() {
+            d.offer(ds.x.row(i), i as u64);
+            assert!(d.len() <= 12, "budget exceeded at arrival {i}");
+        }
+        assert_eq!(d.len(), 12, "a 300-point bimodal stream should fill 12 atoms");
+        // the incrementally maintained factor matches a fresh one
+        let mut kdd = kernel().matrix_sym(d.atoms());
+        kdd.add_diag(d.eps);
+        let fresh = Cholesky::factor(&kdd).unwrap();
+        let inc = d.chol.as_ref().unwrap();
+        let b: Vec<f64> = (0..d.len()).map(|i| (i as f64).sin()).collect();
+        let (xf, xi) = (fresh.solve(&b), inc.solve(&b));
+        for i in 0..d.len() {
+            assert!(
+                (xf[i] - xi[i]).abs() < 1e-6 * (1.0 + xf[i].abs()),
+                "factor drift at {i}: {} vs {}",
+                xf[i],
+                xi[i]
+            );
+        }
+    }
+
+    #[test]
+    fn novelty_high_for_novel_low_for_covered() {
+        let mut d = OnlineDictionary::new(kernel(), 16, 0.001);
+        for (i, x) in [0.0, 0.1, 0.2, 0.3].iter().enumerate() {
+            d.offer(&[*x], i as u64);
+        }
+        let covered = d.novelty(&[0.15]);
+        let novel = d.novelty(&[5.0]);
+        assert!(novel > covered, "novel {novel} vs covered {covered}");
+        assert!(novel > 0.9, "distant point should look near-independent: {novel}");
+        assert!(covered < 0.01, "midpoint of a dense grid is redundant: {covered}");
+        // the RLS form is a monotone map of the residual
+        assert!(d.rls_estimate(&[5.0], 0.5) > d.rls_estimate(&[0.15], 0.5));
+    }
+
+    #[test]
+    fn eviction_keeps_the_diverse_atoms() {
+        // fill a budget of 3 with a tight cluster, then offer a far point:
+        // it must swap in, evicting one of the redundant cluster atoms.
+        let mut d = OnlineDictionary::new(kernel(), 3, 0.0001);
+        d.offer(&[0.50], 0);
+        d.offer(&[0.52], 1);
+        d.offer(&[0.48], 2);
+        assert_eq!(d.len(), 3);
+        match d.offer(&[4.0], 3) {
+            DictDecision::Admitted { evicted: Some(_), .. } => {}
+            _ => panic!("far point must evict a cluster atom"),
+        }
+        assert_eq!(d.len(), 3);
+        // the far point is now an atom
+        assert_eq!(d.atoms().row(2)[0], 4.0);
+    }
+}

@@ -1,0 +1,341 @@
+//! Incrementally maintained Nyström-KRR model.
+//!
+//! The batch solver ([`crate::nystrom::NystromKrr`]) solves
+//!
+//! ```text
+//!   (K_mn K_nm + nλ K_mm) β = K_mn y
+//! ```
+//!
+//! Write `S = K_mn K_nm = Σ_t k_t k_tᵀ` and `r = Σ_t y_t k_t` with
+//! `k_t = K(X_J, x_t)` — both are *streaming sums*: an arriving
+//! observation contributes one rank-one term. This module maintains `S`,
+//! `r`, and a Cholesky factor of `A = S + μ K_mm` (μ = nλ held as an
+//! absolute ridge) under three events:
+//!
+//! * **arrival** — `S += k_t k_tᵀ`, `r += y_t k_t`, factor via
+//!   [`Cholesky::rank_one_update`]: O(m²), independent of n;
+//! * **atom admitted** — past arrivals' kernel values against the new
+//!   atom are unknown without replaying the stream, so they are
+//!   approximated by the dictionary projection
+//!   `k(x_t, x_new) ≈ k_tᵀ c`, `c = (K_JJ+εI)^{−1} k_{J,new}` — giving the
+//!   bordered extension `S → [[S, Sc], [cᵀS, cᵀSc]]` in O(m²) (the error
+//!   is Cauchy–Schwarz-bounded by the admission threshold: points left
+//!   *out* of the dictionary are exactly the well-projected ones). The
+//!   factor grows with [`Cholesky::append_row`];
+//! * **atom evicted** — row/column deleted, factor shrinks with
+//!   [`Cholesky::delete_row`].
+//!
+//! β is refreshed by two O(m²) triangular solves per arrival, so the
+//! model is always ready to serve or snapshot. A from-scratch refit on
+//! the same prefix with the same landmarks and λ = μ/n agrees with the
+//! incremental state up to the projection approximation —
+//! `rust/tests/stream_parity.rs` pins that down.
+
+use super::dictionary::{DictDecision, OnlineDictionary};
+use crate::coordinator::{FitReport, FittedModel};
+use crate::kernels::Kernel;
+use crate::linalg::{Cholesky, Mat};
+use crate::nystrom::NystromKrr;
+use crate::runtime::Backend;
+
+pub struct IncrementalModel {
+    kernel: Kernel,
+    /// Absolute ridge μ (≈ nλ of the equivalent batch objective).
+    mu: f64,
+    dict: OnlineDictionary,
+    /// S ≈ Σ_t k_t k_tᵀ in current dictionary coordinates.
+    s: Mat,
+    /// r ≈ Σ_t y_t k_t.
+    rhs: Vec<f64>,
+    /// Factor of A = S + μ K_mm.
+    chol_a: Option<Cholesky>,
+    beta: Vec<f64>,
+    n_seen: u64,
+}
+
+impl IncrementalModel {
+    pub fn new(kernel: Kernel, mu: f64, budget: usize, accept_threshold: f64) -> Self {
+        assert!(mu > 0.0, "ridge μ must be positive");
+        let dict = OnlineDictionary::new(kernel.clone(), budget, accept_threshold);
+        IncrementalModel {
+            kernel,
+            mu,
+            dict,
+            s: Mat::zeros(0, 0),
+            rhs: Vec::new(),
+            chol_a: None,
+            beta: Vec::new(),
+            n_seen: 0,
+        }
+    }
+
+    pub fn n_seen(&self) -> u64 {
+        self.n_seen
+    }
+
+    /// Current dictionary size m.
+    pub fn m(&self) -> usize {
+        self.dict.len()
+    }
+
+    pub fn mu(&self) -> f64 {
+        self.mu
+    }
+
+    pub fn dict(&self) -> &OnlineDictionary {
+        &self.dict
+    }
+
+    pub fn beta(&self) -> &[f64] {
+        &self.beta
+    }
+
+    /// Predict with the current coefficients (0.0 before any arrival).
+    pub fn predict_one(&self, x: &[f64]) -> f64 {
+        if self.dict.is_empty() {
+            return 0.0;
+        }
+        let kx = self.dict.k_vec(x);
+        crate::linalg::dot(&kx, &self.beta)
+    }
+
+    /// Ingest one labeled observation: O(m²) (plus an O(m³) eviction
+    /// scan when the budget forces a swap).
+    pub fn ingest(&mut self, x: &[f64], y: f64) {
+        let t = self.n_seen;
+        let kt: Vec<f64> = match self.dict.offer(x, t) {
+            DictDecision::Rejected { kx } => kx,
+            DictDecision::Admitted { evicted, kx, kxx, proj } => {
+                if let Some(j) = evicted {
+                    self.delete_coord(j);
+                }
+                self.extend_coord(&kx, kxx, &proj);
+                let mut full = kx;
+                full.push(kxx);
+                full
+            }
+        };
+        let m = kt.len();
+        debug_assert_eq!(m, self.s.rows);
+        for i in 0..m {
+            let ki = kt[i];
+            for j in 0..m {
+                self.s[(i, j)] += ki * kt[j];
+            }
+        }
+        for (ri, &ki) in self.rhs.iter_mut().zip(&kt) {
+            *ri += y * ki;
+        }
+        match self.chol_a.take() {
+            Some(mut chol) => {
+                chol.rank_one_update(&kt);
+                self.chol_a = Some(chol);
+            }
+            None => self.rebuild_factor(), // first arrival: assemble + factor
+        }
+        self.n_seen += 1;
+        self.refresh_beta();
+    }
+
+    /// Drop coordinate j (evicted atom) from S, r, and the factor.
+    fn delete_coord(&mut self, j: usize) {
+        let m = self.s.rows;
+        debug_assert!(j < m);
+        let keep: Vec<usize> = (0..m).filter(|&i| i != j).collect();
+        let old = std::mem::replace(&mut self.s, Mat::zeros(0, 0));
+        self.s = Mat::from_fn(m - 1, m - 1, |a, b| old[(keep[a], keep[b])]);
+        self.rhs.remove(j);
+        if let Some(chol) = self.chol_a.as_mut() {
+            chol.delete_row(j);
+        }
+    }
+
+    /// Grow S, r, and the factor by the new atom's coordinate using the
+    /// dictionary projection `proj` (see module docs).
+    fn extend_coord(&mut self, kx: &[f64], kxx: f64, proj: &[f64]) {
+        let m = self.s.rows;
+        debug_assert_eq!(kx.len(), m);
+        debug_assert_eq!(proj.len(), m);
+        let sc = crate::linalg::matvec(&self.s, proj);
+        let corner = crate::linalg::dot(proj, &sc);
+        let r_new = crate::linalg::dot(&self.rhs, proj);
+        let old = std::mem::replace(&mut self.s, Mat::zeros(0, 0));
+        self.s = Mat::from_fn(m + 1, m + 1, |a, b| {
+            if a < m && b < m {
+                old[(a, b)]
+            } else if a == m && b == m {
+                corner
+            } else if a == m {
+                sc[b]
+            } else {
+                sc[a]
+            }
+        });
+        self.rhs.push(r_new);
+        let mu = self.mu;
+        let grew = match self.chol_a.as_mut() {
+            Some(chol) => {
+                let a_col: Vec<f64> = (0..m).map(|i| sc[i] + mu * kx[i]).collect();
+                chol.append_row(&a_col, corner + mu * kxx).is_ok()
+            }
+            None => true, // first atom: factor is built on the first arrival
+        };
+        if !grew {
+            self.rebuild_factor();
+        }
+    }
+
+    /// O(m³) fallback / first-arrival path: assemble A = S + μ K_mm and
+    /// factor it fresh (jittered — the same rescue the batch solver uses).
+    fn rebuild_factor(&mut self) {
+        let m = self.s.rows;
+        if m == 0 {
+            self.chol_a = None;
+            return;
+        }
+        let kmm = self.kernel.matrix_sym(self.dict.atoms());
+        let a = Mat::from_fn(m, m, |i, j| self.s[(i, j)] + self.mu * kmm[(i, j)]);
+        self.chol_a =
+            Some(Cholesky::factor_jittered(&a).expect("S + μK_mm must be PD"));
+    }
+
+    fn refresh_beta(&mut self) {
+        match self.chol_a.as_ref() {
+            Some(chol) => self.beta = chol.solve(&self.rhs),
+            None => self.beta.clear(),
+        }
+    }
+
+    /// Freeze the current state into a servable [`FittedModel`]. The
+    /// equivalent batch regularization is λ = μ/n at the current n.
+    pub fn snapshot(&self) -> FittedModel {
+        let m = self.m();
+        let idx: Vec<usize> =
+            self.dict.arrivals().iter().map(|&a| a as usize).collect();
+        let nystrom = NystromKrr {
+            kernel: self.kernel.clone(),
+            landmarks: self.dict.atoms().clone(),
+            idx,
+            beta: self.beta.clone(),
+            lambda: self.mu / self.n_seen.max(1) as f64,
+        };
+        let scores = self.dict.atom_scores_cached();
+        let total: f64 = scores.iter().sum();
+        let q = if total > 0.0 && total.is_finite() {
+            scores.iter().map(|s| s / total).collect()
+        } else {
+            vec![1.0 / m.max(1) as f64; m]
+        };
+        let report = FitReport {
+            m_sub: m,
+            backend: "native",
+            method: "stream",
+            ..Default::default()
+        };
+        FittedModel { nystrom, report, backend: Backend::Native, q }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{dist1d, Dist1d};
+    use crate::kernels::KernelSpec;
+    use crate::nystrom::NativeBackend;
+    use crate::util::rng::Rng;
+
+    fn kernel() -> Kernel {
+        Kernel::new(KernelSpec::Matern { nu: 1.5, a: 1.0 })
+    }
+
+    #[test]
+    fn single_point_model_interpolates_towards_label() {
+        let mut m = IncrementalModel::new(kernel(), 0.5, 8, 0.01);
+        m.ingest(&[0.5], 2.0);
+        assert_eq!(m.m(), 1);
+        assert_eq!(m.n_seen(), 1);
+        // β solves (k² + μk)β = k y  →  f(x₀) = k β = y·k/(k+μ) < y
+        let pred = m.predict_one(&[0.5]);
+        assert!(pred > 0.0 && pred < 2.0, "shrunk prediction, got {pred}");
+        assert!((pred - 2.0 / 1.5).abs() < 1e-9, "expected y·k/(k+μ), got {pred}");
+    }
+
+    #[test]
+    fn matches_batch_fit_when_dictionary_is_static() {
+        // Feed a stream whose dictionary settles immediately (first
+        // points span the domain; later points are all rejected): the
+        // incremental normal equations are then *exact*, so the final β
+        // must match the batch solver on the same landmarks to roundoff.
+        let mut rng = Rng::seed_from_u64(9);
+        let ds = dist1d(Dist1d::Uniform, 160, &mut rng);
+        let mu = 0.8;
+        // high threshold → only genuinely spread-out early points join
+        let mut m = IncrementalModel::new(kernel(), mu, 6, 0.3);
+        for i in 0..ds.n() {
+            m.ingest(ds.x.row(i), ds.y[i]);
+        }
+        let n = ds.n();
+        let idx: Vec<usize> =
+            m.dict().arrivals().iter().map(|&a| a as usize).collect();
+        let adds_after_start = idx.iter().filter(|&&a| a >= 3 * n / 4).count();
+        assert_eq!(
+            adds_after_start, 0,
+            "dictionary should settle early for this test, atoms at {idx:?}"
+        );
+        let batch = NystromKrr::fit_with_landmarks(
+            kernel(),
+            &ds.x,
+            &ds.y,
+            mu / n as f64,
+            &idx,
+            &NativeBackend,
+        )
+        .unwrap();
+        // compare predictions over the training inputs
+        let pb = batch.predict(&ds.x);
+        let mut worst = 0.0_f64;
+        for i in 0..n {
+            let pi = m.predict_one(ds.x.row(i));
+            worst = worst.max((pi - pb[i]).abs());
+        }
+        // not bitwise (different accumulation orders + projected S terms
+        // from pre-settlement admissions at this deliberately coarse
+        // threshold; production thresholds are ~30× finer and tighter)
+        let scale = pb.iter().fold(0.0_f64, |a, v| a.max(v.abs())).max(1e-12);
+        assert!(worst / scale < 0.1, "worst rel deviation {}", worst / scale);
+    }
+
+    #[test]
+    fn eviction_keeps_model_solvable() {
+        let mut rng = Rng::seed_from_u64(10);
+        let ds = dist1d(Dist1d::Bimodal, 250, &mut rng);
+        let mut m = IncrementalModel::new(kernel(), 0.25, 10, 0.0005);
+        for i in 0..ds.n() {
+            m.ingest(ds.x.row(i), ds.y[i]);
+            assert!(m.m() <= 10);
+            assert!(m.beta().iter().all(|b| b.is_finite()), "β diverged at {i}");
+        }
+        assert_eq!(m.m(), 10);
+        let pred = m.predict_one(&[0.25]);
+        assert!(pred.is_finite());
+    }
+
+    #[test]
+    fn snapshot_serves_like_the_live_model() {
+        let mut rng = Rng::seed_from_u64(11);
+        let ds = dist1d(Dist1d::Uniform, 120, &mut rng);
+        let mut m = IncrementalModel::new(kernel(), 0.5, 12, 0.01);
+        for i in 0..ds.n() {
+            m.ingest(ds.x.row(i), ds.y[i]);
+        }
+        let snap = m.snapshot();
+        assert_eq!(snap.nystrom.m(), m.m());
+        assert!((snap.nystrom.lambda - 0.5 / 120.0).abs() < 1e-15);
+        assert!((snap.q.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        for &x in &[0.05, 0.4, 0.77] {
+            let a = m.predict_one(&[x]);
+            let b = snap.predict_one(&[x]);
+            assert!((a - b).abs() < 1e-12, "x={x}: {a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,104 @@
+//! Integration coverage for `leverage::bless`: BLESS scores against the
+//! exact O(n³) oracle on a small problem — rank correlation and median
+//! calibration, beyond the single in-module unit test.
+
+use leverkrr::data::{self, Dataset};
+use leverkrr::kernels::{Kernel, KernelSpec};
+use leverkrr::leverage::{self, LeverageContext, LeverageEstimator, LeverageMethod};
+use leverkrr::util::rng::Rng;
+
+/// Spearman rank correlation (ties broken by index — scores are
+/// continuous so exact ties are measure-zero).
+fn spearman(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let ranks = |v: &[f64]| -> Vec<f64> {
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.sort_by(|&i, &j| v[i].partial_cmp(&v[j]).unwrap().then(i.cmp(&j)));
+        let mut r = vec![0.0; n];
+        for (rank, &i) in idx.iter().enumerate() {
+            r[i] = rank as f64;
+        }
+        r
+    };
+    let (ra, rb) = (ranks(a), ranks(b));
+    let mean = (n as f64 - 1.0) / 2.0;
+    let mut num = 0.0;
+    let mut da = 0.0;
+    let mut db = 0.0;
+    for i in 0..n {
+        let (xa, xb) = (ra[i] - mean, rb[i] - mean);
+        num += xa * xb;
+        da += xa * xa;
+        db += xb * xb;
+    }
+    num / (da.sqrt() * db.sqrt())
+}
+
+fn setup(n: usize, seed: u64) -> (Dataset, Kernel, f64) {
+    let mut rng = Rng::seed_from_u64(seed);
+    let ds = data::dist1d(data::Dist1d::Bimodal, n, &mut rng);
+    let nu = 1.5;
+    let kernel = Kernel::new(KernelSpec::Matern { nu, a: (2.0 * nu).sqrt() });
+    let lambda = leverkrr::krr::lambda::fig2(n);
+    (ds, kernel, lambda)
+}
+
+#[test]
+fn bless_tracks_exact_scores_in_rank_and_scale() {
+    let (ds, kernel, lambda) = setup(350, 1);
+    let n = ds.n();
+    let mut ctx = LeverageContext::new(&ds.x, &kernel, lambda);
+    ctx.inner_m = 40;
+    let mut rng = Rng::seed_from_u64(2);
+    let exact = LeverageMethod::Exact.build().estimate(&ctx, &mut rng);
+    let mut rng = Rng::seed_from_u64(3);
+    let bless = LeverageMethod::Bless.build().estimate(&ctx, &mut rng);
+    assert_eq!(bless.len(), n);
+    assert!(bless.iter().all(|&s| s > 0.0 && s.is_finite()));
+
+    // (a) ordering: BLESS must rank points like the exact scores
+    let rho = spearman(&exact, &bless);
+    assert!(rho > 0.7, "Spearman rank correlation {rho} (expected > 0.7)");
+
+    // (b) calibration: normalized sampling weights agree within tolerance
+    // for the bulk of the points (median ratio near 1)
+    let qe = leverage::normalize(&exact);
+    let qb = leverage::normalize(&bless);
+    let mut ratios: Vec<f64> = (0..n).map(|i| qb[i] / qe[i]).collect();
+    ratios.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = ratios[n / 2];
+    assert!((med - 1.0).abs() < 0.35, "median weight ratio {med}");
+    // and the central half of the ratio distribution is tight-ish
+    let (q25, q75) = (ratios[n / 4], ratios[3 * n / 4]);
+    assert!(
+        q75 / q25 < 3.0,
+        "weight ratio IQR too wide: [{q25:.3}, {q75:.3}]"
+    );
+}
+
+#[test]
+fn bless_dictionary_scales_with_inner_m() {
+    // sanity on the knob the pipeline exposes: a larger inner dictionary
+    // must not make the approximation worse in rank terms
+    let (ds, kernel, lambda) = setup(250, 4);
+    let mut rng = Rng::seed_from_u64(5);
+    let exact = {
+        let ctx = LeverageContext::new(&ds.x, &kernel, lambda);
+        LeverageMethod::Exact.build().estimate(&ctx, &mut rng)
+    };
+    let rho_at = |inner: usize, seed: u64| {
+        let mut ctx = LeverageContext::new(&ds.x, &kernel, lambda);
+        ctx.inner_m = inner;
+        let mut rng = Rng::seed_from_u64(seed);
+        let est = LeverageMethod::Bless.build().estimate(&ctx, &mut rng);
+        spearman(&exact, &est)
+    };
+    let coarse = rho_at(10, 6);
+    let fine = rho_at(60, 6);
+    assert!(fine > 0.6, "fine BLESS correlation {fine}");
+    assert!(
+        fine > coarse - 0.1,
+        "inner_m=60 (ρ={fine}) should not rank-degrade vs inner_m=10 (ρ={coarse})"
+    );
+}

@@ -1,0 +1,209 @@
+//! Streaming subsystem invariants:
+//!
+//! 1. **Thread-count parity** — a full replay (dictionary decisions,
+//!    model coefficients, predictions) is bitwise identical at 1 and 4
+//!    pool workers: every new pool-backed path in `stream` partitions
+//!    per-element work and keeps reductions serial, per the
+//!    `util::pool` determinism contract.
+//! 2. **Incremental ≈ from-scratch** — the O(m²)-per-arrival model
+//!    agrees with a from-scratch Nyström refit on the same prefix with
+//!    the same landmarks and λ = μ/n, up to the documented projection
+//!    approximation.
+//! 3. **Budget** — the dictionary never exceeds its budget at any point
+//!    of the stream.
+//! 4. **Hot-swap under load** — concurrent predict traffic across model
+//!    refreshes: zero dropped requests, monotonically increasing model
+//!    versions.
+
+use leverkrr::coordinator::{Server, ServerConfig};
+use leverkrr::data::{self, Dataset};
+use leverkrr::kernels::KernelSpec;
+use leverkrr::nystrom::{NativeBackend, NystromKrr};
+use leverkrr::stream::{replay, RefreshPolicy, StreamConfig, StreamCoordinator};
+use leverkrr::util::pool;
+use leverkrr::util::rng::Rng;
+use std::sync::Mutex;
+
+static POOL_LOCK: Mutex<()> = Mutex::new(());
+
+fn with_threads<T>(nt: usize, f: impl FnOnce() -> T) -> T {
+    let _guard = pool::override_threads(nt);
+    f()
+}
+
+fn test_dataset(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::seed_from_u64(seed);
+    data::dist1d(data::Dist1d::Bimodal, n, &mut rng)
+}
+
+fn stream_cfg(n: usize, budget: usize) -> StreamConfig {
+    StreamConfig {
+        kernel: KernelSpec::Matern { nu: 1.5, a: 1.0 },
+        mu: n as f64 * 1e-3,
+        budget,
+        accept_threshold: 0.01,
+        refresh: RefreshPolicy { every: 64, drift: 0.0 },
+        threads: None,
+    }
+}
+
+/// Full replay → (atom arrival indices, β, predictions on a fixed grid).
+fn replay_fingerprint(n: usize, budget: usize) -> (Vec<u64>, Vec<f64>, Vec<f64>) {
+    let ds = test_dataset(n, 41);
+    let (sc, _report) = replay(&ds, &stream_cfg(n, budget), 0);
+    let arrivals = sc.model().dict().arrivals().to_vec();
+    let beta = sc.model().beta().to_vec();
+    let snap = sc.model().snapshot();
+    let grid =
+        leverkrr::linalg::Mat::from_fn(64, 1, |i, _| 1.5 * i as f64 / 63.0);
+    let preds = snap.predict_batch(&grid);
+    (arrivals, beta, preds)
+}
+
+#[test]
+fn replay_bit_identical_across_threads() {
+    let _lock = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let serial = with_threads(1, || replay_fingerprint(400, 48));
+    let parallel = with_threads(4, || replay_fingerprint(400, 48));
+    assert_eq!(serial.0, parallel.0, "dictionary trajectories diverged");
+    assert_eq!(serial.1, parallel.1, "coefficients diverged (bitwise)");
+    assert_eq!(serial.2, parallel.2, "predictions diverged (bitwise)");
+    // sanity: the model actually has content
+    assert!(!serial.0.is_empty());
+    assert!(serial.2.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn incremental_matches_from_scratch_refit() {
+    let n = 600;
+    let ds = test_dataset(n, 42);
+    let cfg = stream_cfg(n, 64);
+    let (sc, report) = replay(&ds, &cfg, 0);
+    assert_eq!(report.n, n);
+    // from-scratch refit on the same prefix (= the whole stream) with the
+    // same landmarks and the equivalent batch regularization λ = μ/n
+    let idx: Vec<usize> =
+        sc.model().dict().arrivals().iter().map(|&a| a as usize).collect();
+    assert!(!idx.is_empty() && idx.iter().all(|&i| i < n));
+    let kernel = leverkrr::kernels::Kernel::new(cfg.kernel);
+    let batch = NystromKrr::fit_with_landmarks(
+        kernel,
+        &ds.x,
+        &ds.y,
+        cfg.mu / n as f64,
+        &idx,
+        &NativeBackend,
+    )
+    .unwrap();
+    let p_batch = batch.predict(&ds.x);
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for i in 0..n {
+        let p_inc = sc.model().predict_one(ds.x.row(i));
+        num += (p_inc - p_batch[i]) * (p_inc - p_batch[i]);
+        den += p_batch[i] * p_batch[i];
+    }
+    let rel = (num / den.max(1e-300)).sqrt();
+    assert!(
+        rel < 0.05,
+        "incremental vs refit relative deviation {rel} (expected < 5%)"
+    );
+}
+
+#[test]
+fn dictionary_never_exceeds_budget() {
+    let n = 500;
+    let ds = test_dataset(n, 43);
+    let budget = 20;
+    let mut sc = StreamCoordinator::new(stream_cfg(n, budget));
+    for i in 0..n {
+        sc.ingest(ds.x.row(i), ds.y[i]);
+        assert!(
+            sc.dict_len() <= budget,
+            "dictionary {} over budget {budget} at arrival {i}",
+            sc.dict_len()
+        );
+    }
+    // coverage at this threshold settles well below the cap but must be
+    // a real dictionary, not a couple of points
+    assert!(sc.dict_len() > 5, "dictionary suspiciously small: {}", sc.dict_len());
+}
+
+#[test]
+fn hot_swap_under_load_drops_nothing_and_versions_increase() {
+    let n = 800;
+    let ds = test_dataset(n, 44);
+    let mut cfg = stream_cfg(n, 32);
+    cfg.refresh = RefreshPolicy { every: 40, drift: 0.0 };
+    let mut sc = StreamCoordinator::new(cfg);
+    // warm up so the first served snapshot is meaningful
+    for i in 0..100 {
+        sc.ingest(ds.x.row(i), ds.y[i]);
+    }
+    sc.publish_now();
+    let server = Server::start_with_handle(
+        sc.handle(),
+        ServerConfig {
+            max_batch: 32,
+            max_wait: std::time::Duration::from_millis(1),
+            workers: 2,
+        },
+    );
+    let n_clients = 4usize;
+    let reqs_per_client = 150usize;
+    let max_seen = std::thread::scope(|s| {
+        // ingester keeps publishing every 40 arrivals while clients query
+        let ingester = s.spawn(move || {
+            for i in 100..n {
+                sc.ingest(ds.x.row(i), ds.y[i]);
+                if i % 50 == 0 {
+                    // stretch ingestion across the clients' lifetime
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                }
+            }
+            sc.publish_now()
+        });
+        let clients: Vec<_> = (0..n_clients)
+            .map(|c| {
+                let server = &server;
+                s.spawn(move || {
+                    let mut rng = Rng::seed_from_u64(c as u64);
+                    let mut last = 0u64;
+                    for r in 0..reqs_per_client {
+                        let p = server
+                            .try_predict(&[1.5 * rng.f64()])
+                            .unwrap_or_else(|e| panic!("client {c} req {r} dropped: {e}"));
+                        assert!(p.value.is_finite());
+                        assert!(
+                            p.model_version >= last,
+                            "client {c}: version went backwards ({} < {last})",
+                            p.model_version
+                        );
+                        last = p.model_version;
+                    }
+                    last
+                })
+            })
+            .collect();
+        let final_version = ingester.join().unwrap();
+        let max_seen =
+            clients.into_iter().map(|h| h.join().unwrap()).max().unwrap();
+        assert!(final_version >= 2);
+        max_seen
+    });
+    let reg = server.shutdown();
+    // zero dropped: every submitted request was answered
+    assert_eq!(
+        reg.counter("serve.requests"),
+        (n_clients * reqs_per_client) as u64
+    );
+    // the slot really advanced past the initial publish while serving
+    // (clients saw ≥ the warmup publishes; the gauge holds the version
+    // of *some* late batch — concurrent workers may write it out of
+    // order, so only the lower bound is guaranteed)
+    assert!(max_seen >= 2, "served versions never advanced");
+    assert!(
+        reg.gauge("serve.model_version") >= 2.0,
+        "model_version gauge never recorded a swapped model"
+    );
+}
