@@ -1,11 +1,18 @@
 //! §Perf — hot-path microbenchmarks (EXPERIMENTS.md §Perf feeds on this).
 //!
 //! Covers every layer:
-//! * L3 native substrate: kernel-block assembly, Cholesky, alias sampling,
-//!   SA closed form + quadrature, KDE (exact / grid / subsampled);
+//! * L3 native substrate: kernel-block assembly (blocked engine vs the
+//!   scalar reference), Cholesky, alias sampling, SA closed form +
+//!   quadrature, KDE (exact / grid / subsampled);
+//! * Pool: persistent-dispatch vs per-call scoped-spawn overhead, and
+//!   the 1-vs-N kernel-matrix scaling curve;
 //! * Runtime: XLA kernel-block + KDE dispatch (when artifacts exist),
 //!   including per-tile dispatch overhead;
 //! * Serving: batched predict throughput + latency through the server.
+//!
+//! Besides the human-readable table, every timing lands in
+//! `BENCH_perf.json` (experiment name, n/m/d, threads, ns/op) so the
+//! perf trajectory is machine-trackable across PRs.
 
 use crate::bench_harness::{bench_reps, timing_row, ExpOptions};
 use crate::coordinator::{fit_with_backend, FitConfig, Server, ServerConfig};
@@ -16,36 +23,110 @@ use crate::leverage::sa::{sa_value_closed_form, sa_value_quadrature, SpectralDen
 use crate::linalg::{Cholesky, Mat};
 use crate::nystrom;
 use crate::runtime::{Backend, Engine};
+use crate::util::json::Json;
 use crate::util::rng::{AliasTable, Rng};
 use std::sync::Arc;
+
+/// Machine-readable result accumulator → `BENCH_perf.json`.
+struct PerfLog {
+    rows: Vec<Json>,
+}
+
+impl PerfLog {
+    fn new() -> Self {
+        PerfLog { rows: Vec::new() }
+    }
+
+    /// Record one timing: `secs` is seconds per op (we store ns/op).
+    fn rec(&mut self, name: &str, n: usize, m: usize, d: usize, secs: f64) {
+        self.rec_at(name, n, m, d, crate::util::pool::current_threads(), secs);
+    }
+
+    /// [`PerfLog::rec`] with an explicit thread count — for benches that
+    /// run at a count other than the resolved one.
+    fn rec_at(&mut self, name: &str, n: usize, m: usize, d: usize, threads: usize, secs: f64) {
+        self.rows.push(Json::obj(vec![
+            ("name", Json::Str(name.into())),
+            ("n", Json::Num(n as f64)),
+            ("m", Json::Num(m as f64)),
+            ("d", Json::Num(d as f64)),
+            ("threads", Json::Num(threads as f64)),
+            ("ns_per_op", Json::Num(secs * 1e9)),
+        ]));
+    }
+
+    fn write(self, opts: &ExpOptions) {
+        let doc = Json::obj(vec![
+            ("experiment", Json::Str("perf".into())),
+            ("full", Json::Bool(opts.full)),
+            ("reps", Json::Num(opts.reps as f64)),
+            ("seed", Json::Num(opts.seed as f64)),
+            ("threads", Json::Num(crate::util::pool::current_threads() as f64)),
+            ("results", Json::Arr(self.rows)),
+        ]);
+        match std::fs::write("BENCH_perf.json", doc.to_string_pretty()) {
+            Ok(()) => println!("\nwrote BENCH_perf.json"),
+            Err(e) => eprintln!("\ncould not write BENCH_perf.json: {e}"),
+        }
+    }
+}
+
+/// Per-call scoped-spawn dispatch (the pre-persistent pool) — kept here
+/// as the bench baseline for the persistent-vs-scoped comparison.
+fn scoped_par_chunks<T: Send>(
+    nthreads: usize,
+    n: usize,
+    f: &(impl Fn(std::ops::Range<usize>) -> T + Sync),
+) -> Vec<T> {
+    let nthreads = nthreads.max(1).min(n.max(1));
+    if nthreads == 1 {
+        return vec![f(0..n)];
+    }
+    let chunk = n.div_ceil(nthreads);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..nthreads)
+            .map(|t| (t * chunk).min(n)..((t + 1) * chunk).min(n))
+            .filter(|r| !r.is_empty())
+            .map(|r| s.spawn(move || f(r)))
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
 
 pub fn run(opts: &ExpOptions) {
     let _pool = opts.pool_guard();
     let mut rng = Rng::seed_from_u64(opts.seed);
     let reps = opts.reps.max(3);
+    let mut log = PerfLog::new();
     println!("# §Perf microbenches (reps={reps})\n");
 
-    // ---- L3: kernel-matrix assembly (native) ------------------------------
+    // ---- L3: kernel-matrix assembly (blocked engine vs scalar) ------------
     let n = if opts.full { 8192 } else { 4096 };
     let m = 512;
     let d = 3;
     let x = Mat::from_fn(n, d, |_, _| rng.normal());
     let y = Mat::from_fn(m, d, |_, _| rng.normal());
     let kernel = Kernel::new(KernelSpec::Matern { nu: 1.5, a: 1.0 });
-    let t = bench_reps(1, reps, || {
+    let t_blocked = bench_reps(1, reps, || {
         std::hint::black_box(kernel.matrix(&x, &y));
     });
-    println!("{}", timing_row(&format!("native K_nm ({n}x{m}, d={d})"), &t));
-    let flops = 3.0 * n as f64 * m as f64 * d as f64;
+    println!("{}", timing_row(&format!("K_nm blocked ({n}x{m}, d={d})"), &t_blocked));
+    log.rec("kernel_matrix_blocked", n, m, d, t_blocked[0]);
+    let t_scalar = bench_reps(1, reps, || {
+        std::hint::black_box(kernel.matrix_scalar(&x, &y));
+    });
+    println!("{}", timing_row(&format!("K_nm scalar  ({n}x{m}, d={d})"), &t_scalar));
+    log.rec("kernel_matrix_scalar", n, m, d, t_scalar[0]);
     println!(
-        "    ~{:.2} Gflop-equiv/s (dist part)",
-        flops / t[0] / 1e9
+        "    blocked-vs-scalar kernel-matrix speedup: {:.2}x",
+        t_scalar[0] / t_blocked[0].max(1e-12)
     );
+    let flops = 2.0 * n as f64 * m as f64 * d as f64;
+    println!("    ~{:.2} Gflop-equiv/s (dist part)", flops / t_blocked[0] / 1e9);
 
     // ---- pool scaling: kernel-matrix assembly at 1 vs N threads -----------
     // The headline knob of the parallel compute core: same inputs, same
-    // (bit-identical) output, wall-clock only. n ≥ 4000 so the speedup is
-    // not dominated by spawn overhead.
+    // (bit-identical) output, wall-clock only.
     {
         let n_sc = n.max(4096);
         let m_sc = 1024;
@@ -58,11 +139,12 @@ pub fn run(opts: &ExpOptions) {
             let t = bench_reps(1, reps, || {
                 std::hint::black_box(kernel.matrix(&xs, &ys));
             });
-            drop(guard);
             println!(
                 "{}",
-                timing_row(&format!("native K_nm ({n_sc}x{m_sc}) threads={nt}"), &t)
+                timing_row(&format!("K_nm blocked ({n_sc}x{m_sc}) threads={nt}"), &t)
             );
+            log.rec("kernel_matrix_blocked_scaling", n_sc, m_sc, d, t[0]);
+            drop(guard);
             secs_by_nt.push(t[0]);
         }
         println!(
@@ -71,12 +153,52 @@ pub fn run(opts: &ExpOptions) {
         );
     }
 
+    // ---- pool dispatch: persistent workers vs per-call scoped spawn -------
+    // Fine-grained batches are where spawn-per-call used to dominate:
+    // 256 dispatches of a trivial 4096-element reduction per rep.
+    {
+        let nt = crate::util::pool::current_threads().max(2).min(16);
+        let work = |r: std::ops::Range<usize>| -> f64 { r.map(|i| (i as f64).sqrt()).sum() };
+        let dispatches = 256;
+        let t_pers = bench_reps(1, reps, || {
+            let mut acc = 0.0;
+            for _ in 0..dispatches {
+                acc += crate::util::pool::par_chunks_with(nt, 4096, work)
+                    .iter()
+                    .sum::<f64>();
+            }
+            std::hint::black_box(acc);
+        });
+        let t_scoped = bench_reps(1, reps, || {
+            let mut acc = 0.0;
+            for _ in 0..dispatches {
+                acc += scoped_par_chunks(nt, 4096, &work).iter().sum::<f64>();
+            }
+            std::hint::black_box(acc);
+        });
+        println!(
+            "{}",
+            timing_row(&format!("pool dispatch persistent (nt={nt})"), &t_pers)
+        );
+        println!(
+            "{}",
+            timing_row(&format!("pool dispatch scoped     (nt={nt})"), &t_scoped)
+        );
+        println!(
+            "    persistent-vs-scoped dispatch speedup ({dispatches} fine batches): {:.2}x",
+            t_scoped[0] / t_pers[0].max(1e-12)
+        );
+        log.rec_at("pool_dispatch_persistent", dispatches * 4096, dispatches, 0, nt, t_pers[0]);
+        log.rec_at("pool_dispatch_scoped", dispatches * 4096, dispatches, 0, nt, t_scoped[0]);
+    }
+
     // gaussian kernel assembly (cheaper per-element path)
     let kg = Kernel::new(KernelSpec::Gaussian { sigma: 1.0 });
     let t = bench_reps(1, reps, || {
         std::hint::black_box(kg.matrix(&x, &y));
     });
-    println!("{}", timing_row(&format!("native K_nm gaussian ({n}x{m})"), &t));
+    println!("{}", timing_row(&format!("K_nm gaussian blocked ({n}x{m})"), &t));
+    log.rec("kernel_matrix_gaussian_blocked", n, m, d, t[0]);
 
     // ---- Runtime: XLA kernel block ----------------------------------------
     match Engine::load_default() {
@@ -86,6 +208,7 @@ pub fn run(opts: &ExpOptions) {
                 std::hint::black_box(engine.kernel_matrix(&kernel, &x, &y).unwrap());
             });
             println!("{}", timing_row(&format!("XLA  K_nm ({n}x{m}, d={d})"), &t));
+            log.rec("xla_kernel_matrix", n, m, d, t[0]);
             // single-tile dispatch overhead
             let xt = Mat::from_fn(engine.tm, d, |_, _| 0.5);
             let yt = Mat::from_fn(engine.tn, d, |_, _| 0.5);
@@ -96,11 +219,13 @@ pub fn run(opts: &ExpOptions) {
                 "{}",
                 timing_row(&format!("XLA single tile ({}x{})", engine.tm, engine.tn), &t)
             );
+            log.rec("xla_single_tile", engine.tm, engine.tn, d, t[0]);
             // XLA KDE
             let t = bench_reps(1, reps, || {
                 std::hint::black_box(engine.kde_at_points(&x, &x, 0.2).unwrap());
             });
             println!("{}", timing_row(&format!("XLA  KDE exact ({n} pts)"), &t));
+            log.rec("xla_kde_exact", n, n, d, t[0]);
         }
         Err(e) => println!("(XLA engine unavailable: {e}; run `make artifacts`)"),
     }
@@ -112,15 +237,18 @@ pub fn run(opts: &ExpOptions) {
         std::hint::black_box(kde::exact(&ds.x, &ds.x, h));
     });
     println!("{}", timing_row(&format!("KDE exact (n={n}, d=3)"), &t));
+    log.rec("kde_exact", n, n, 3, t[0]);
     let t = bench_reps(1, reps, || {
         std::hint::black_box(kde::grid(&ds.x, h).unwrap());
     });
     println!("{}", timing_row(&format!("KDE grid  (n={n}, d=3)"), &t));
+    log.rec("kde_grid", n, 0, 3, t[0]);
     let mut rng2 = rng.fork(1);
     let t = bench_reps(1, reps, || {
         std::hint::black_box(kde::subsampled(&ds.x, h, 400, &mut rng2));
     });
     println!("{}", timing_row(&format!("KDE subsampled m=400 (n={n})"), &t));
+    log.rec("kde_subsampled", n, 400, 3, t[0]);
 
     // ---- SA integral evaluation --------------------------------------------
     let sd = SpectralDensity::new(&kernel, 3);
@@ -131,12 +259,14 @@ pub fn run(opts: &ExpOptions) {
         std::hint::black_box(s);
     });
     println!("{}", timing_row(&format!("SA closed form ({n} points)"), &t));
+    log.rec("sa_closed_form", n, 0, 3, t[0]);
     let t = bench_reps(1, reps, || {
         let s: f64 =
             ps.iter().take(512).map(|&p| sa_value_quadrature(p, &sd, 1e-4, &gl)).sum();
         std::hint::black_box(s);
     });
     println!("{}", timing_row("SA quadrature (512 points)", &t));
+    log.rec("sa_quadrature", 512, 0, 3, t[0]);
 
     // ---- sampling + linalg ---------------------------------------------------
     let weights: Vec<f64> = (0..n).map(|i| 1.0 + (i % 7) as f64).collect();
@@ -145,6 +275,7 @@ pub fn run(opts: &ExpOptions) {
         std::hint::black_box(at.sample_many(m, &mut rng2));
     });
     println!("{}", timing_row(&format!("alias build+sample (n={n}, m={m})"), &t));
+    log.rec("alias_build_sample", n, m, 0, t[0]);
 
     let spd = {
         let b = Mat::from_fn(m, m, |_, _| rng2.normal());
@@ -156,6 +287,7 @@ pub fn run(opts: &ExpOptions) {
         std::hint::black_box(Cholesky::factor(&spd).unwrap());
     });
     println!("{}", timing_row(&format!("cholesky (m={m})"), &t));
+    log.rec("cholesky", m, m, 0, t[0]);
 
     // ---- end-to-end fit + serve ------------------------------------------------
     let cfg = FitConfig {
@@ -166,6 +298,7 @@ pub fn run(opts: &ExpOptions) {
         std::hint::black_box(fit_with_backend(&ds, &cfg, Backend::Native).unwrap());
     });
     println!("{}", timing_row(&format!("fit pipeline SA (n={n}, 3-d)"), &t));
+    log.rec("fit_pipeline_sa", n, cfg.m_sub, 3, t[0]);
 
     let model = Arc::new(fit_with_backend(&ds, &cfg, Backend::Native).unwrap());
     let server = Server::start(model, ServerConfig::default());
@@ -197,4 +330,7 @@ pub fn run(opts: &ExpOptions) {
         p50 * 1e3,
         reg.counter("serve.batches")
     );
+    log.rec("serve_predict", n_req, 0, 3, secs / n_req as f64);
+
+    log.write(opts);
 }

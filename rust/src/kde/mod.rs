@@ -87,6 +87,18 @@ pub fn loo_correct(p_leave_in: f64, n: usize, d: usize, h: f64) -> f64 {
     ((p_leave_in - self_term) * n as f64 / (n - 1) as f64).max(0.0)
 }
 
+/// Count of times the grid path declined (memory / dimensionality) and a
+/// fallback KDE ran instead — mirrored into
+/// [`crate::metrics::global()`] under `kde.grid.fallback` so the decline
+/// is observable rather than a silent `None`.
+pub fn grid_fallbacks() -> u64 {
+    crate::metrics::global().counter("kde.grid.fallback")
+}
+
+fn note_grid_fallback() {
+    crate::metrics::global().incr("kde.grid.fallback", 1);
+}
+
 /// Estimate the density at every row of `x` (leave-in, matching the
 /// paper's estimator). Deterministic given `rng` seed.
 pub fn density_at_points(x: &Mat, h: f64, method: KdeMethod, rng: &mut Rng) -> Vec<f64> {
@@ -95,12 +107,14 @@ pub fn density_at_points(x: &Mat, h: f64, method: KdeMethod, rng: &mut Rng) -> V
         KdeMethod::Exact => exact(x, x, h),
         KdeMethod::Subsampled { m } => subsampled(x, h, m, rng),
         KdeMethod::Grid => grid(x, h).unwrap_or_else(|| {
-            // Grid infeasible (memory) — documented fallback.
+            // Grid infeasible (memory/dimension) — counted fallback.
+            note_grid_fallback();
             subsampled(x, h, ((x.rows as f64).sqrt() as usize * 4).max(64), rng)
         }),
         KdeMethod::Auto => {
             if x.cols <= 3 {
                 grid(x, h).unwrap_or_else(|| {
+                    note_grid_fallback();
                     subsampled(x, h, ((x.rows as f64).sqrt() as usize * 4).max(64), rng)
                 })
             } else {
@@ -111,30 +125,24 @@ pub fn density_at_points(x: &Mat, h: f64, method: KdeMethod, rng: &mut Rng) -> V
 }
 
 /// Exact Gaussian KDE of the rows of `data`, evaluated at rows of `q`.
-/// O(n·m·d), pool-parallel over query points; every query's sum runs over
-/// the data in the same fixed order, so results are thread-count
-/// invariant.
+/// O(n·m·d) through the blocked distance engine
+/// ([`crate::linalg::blocked::row_reduce`]): tiled r² with precomputed
+/// row norms, each query's sum folded over the data j-ascending into one
+/// accumulator — thread-count invariant bit for bit.
 pub fn exact(q: &Mat, data: &Mat, h: f64) -> Vec<f64> {
     assert_eq!(q.cols, data.cols);
+    if data.rows == 0 {
+        return vec![0.0; q.rows];
+    }
     let inv2h2 = 1.0 / (2.0 * h * h);
     let c = norm_const(data.cols, h) / data.rows as f64;
-    let out = crate::util::pool::par_chunks(q.rows, |range| {
-        let mut v = Vec::with_capacity(range.len());
-        for i in range {
-            let qi = q.row(i);
-            let mut s = 0.0;
-            for j in 0..data.rows {
-                s += (-crate::linalg::sqdist(qi, data.row(j)) * inv2h2).exp();
-            }
-            v.push(s * c);
-        }
-        v
-    });
-    out.into_iter().flatten().collect()
+    let sums = crate::linalg::blocked::row_reduce(q, data, |r2| (-r2 * inv2h2).exp());
+    sums.into_iter().map(|s| s * c).collect()
 }
 
 /// Subsampled KDE: density of the full sample estimated from m random
-/// centers (an unbiased Monte-Carlo estimate of the exact KDE).
+/// centers (an unbiased Monte-Carlo estimate of the exact KDE). Blocked
+/// engine, same determinism as [`exact`].
 pub fn subsampled(x: &Mat, h: f64, m: usize, rng: &mut Rng) -> Vec<f64> {
     let n = x.rows;
     let m = m.min(n).max(1);
@@ -142,19 +150,8 @@ pub fn subsampled(x: &Mat, h: f64, m: usize, rng: &mut Rng) -> Vec<f64> {
     let centers = Mat::from_fn(m, x.cols, |i, j| x[(centers_idx[i], j)]);
     let inv2h2 = 1.0 / (2.0 * h * h);
     let c = norm_const(x.cols, h) / m as f64;
-    let out = crate::util::pool::par_chunks(n, |range| {
-        let mut v = Vec::with_capacity(range.len());
-        for i in range {
-            let xi = x.row(i);
-            let mut s = 0.0;
-            for j in 0..m {
-                s += (-crate::linalg::sqdist(xi, centers.row(j)) * inv2h2).exp();
-            }
-            v.push(s * c);
-        }
-        v
-    });
-    out.into_iter().flatten().collect()
+    let sums = crate::linalg::blocked::row_reduce(x, &centers, |r2| (-r2 * inv2h2).exp());
+    sums.into_iter().map(|s| s * c).collect()
 }
 
 /// Binned KDE: nearest-cell binning at width h/2, separable Gaussian
@@ -209,56 +206,128 @@ pub fn grid(x: &Mat, h: f64) -> Option<Vec<f64>> {
     // run-to-run AXPY instead of a strided scalar walk. This keeps every
     // pass streaming (the original line-walk missed cache on every
     // element for the outer axes).
+    //
+    // Sharding (ROADMAP perf lever): convolution lines along one axis
+    // are independent across the other coordinates, so each pass fans
+    // out on the worker pool — over *superblocks* (`seg·len` regions,
+    // disjoint outputs concatenated in order) when there are several,
+    // else over contiguous off-column ranges within the single
+    // superblock (the outermost axis), scattered back by run copies.
+    // Zero-skip only elides exact-zero AXPYs (value-neutral on finite
+    // non-negative data), so the pass stays bit-identical at every
+    // thread count and partition.
     let taps: Vec<f64> = (-radius_cells..=radius_cells)
         .map(|k| (-((k as f64 * delta).powi(2)) / (2.0 * h * h)).exp())
         .collect();
+    // Convolve one superblock of `src` into the zeroed `dst`.
+    let convolve_sb = |src: &[f64], dst: &mut [f64], seg: usize, len: usize| {
+        const CHUNK: usize = 64; // zero-skip granularity for long runs
+        for c in 0..len {
+            let src_start = c * seg;
+            let lo_k = (-(c as isize)).max(-radius_cells);
+            let hi_k = ((len - 1 - c) as isize).min(radius_cells);
+            if seg == 1 {
+                // unit runs: per-element zero skip (old fast path)
+                let v = src[src_start];
+                if v == 0.0 {
+                    continue;
+                }
+                for k in lo_k..=hi_k {
+                    dst[(src_start as isize + k) as usize] +=
+                        v * taps[(k + radius_cells) as usize];
+                }
+            } else {
+                // long runs: chunked zero-skip + contiguous AXPY
+                let mut off0 = 0;
+                while off0 < seg {
+                    let off1 = (off0 + CHUNK).min(seg);
+                    if src[src_start + off0..src_start + off1].iter().any(|&v| v != 0.0) {
+                        for k in lo_k..=hi_k {
+                            let t = taps[(k + radius_cells) as usize];
+                            let dst_start = ((c as isize + k) as usize) * seg + off0;
+                            let s = &src[src_start + off0..src_start + off1];
+                            let dd = &mut dst[dst_start..dst_start + (off1 - off0)];
+                            for (dv, &sv) in dd.iter_mut().zip(s) {
+                                *dv += t * sv;
+                            }
+                        }
+                    }
+                    off0 = off1;
+                }
+            }
+        }
+    };
     let mut buf = grid_counts;
     let mut next = vec![0.0f64; total];
+    let nt_grid = if total * taps.len() > (1 << 16) {
+        crate::util::pool::current_threads()
+    } else {
+        1
+    };
     for axis in 0..d {
-        next.iter_mut().for_each(|v| *v = 0.0);
         let seg = strides[axis];
         let len = dims[axis];
         let superblock = seg * len;
-        const CHUNK: usize = 64; // zero-skip granularity for long runs
-        for sb in 0..total / superblock {
-            let base = sb * superblock;
-            for c in 0..len {
-                let src_start = base + c * seg;
-                let lo_k = (-(c as isize)).max(-radius_cells);
-                let hi_k = ((len - 1 - c) as isize).min(radius_cells);
-                if seg == 1 {
-                    // unit runs: per-element zero skip (old fast path)
-                    let v = buf[src_start];
-                    if v == 0.0 {
-                        continue;
-                    }
-                    for k in lo_k..=hi_k {
-                        next[(src_start as isize + k) as usize] +=
-                            v * taps[(k + radius_cells) as usize];
-                    }
-                } else {
-                    // long runs: chunked zero-skip + contiguous AXPY
-                    let mut off0 = 0;
-                    while off0 < seg {
-                        let off1 = (off0 + CHUNK).min(seg);
-                        if buf[src_start + off0..src_start + off1]
-                            .iter()
-                            .any(|&v| v != 0.0)
-                        {
-                            for k in lo_k..=hi_k {
-                                let t = taps[(k + radius_cells) as usize];
-                                let dst =
-                                    base + ((c as isize + k) as usize) * seg + off0;
-                                let src = src_start + off0;
-                                for off in 0..(off1 - off0) {
-                                    next[dst + off] += t * buf[src + off];
-                                }
+        let n_sb = total / superblock;
+        if n_sb > 1 {
+            // parallel over superblocks; output = concatenation in order
+            let buf_ref = &buf;
+            let conv = &convolve_sb;
+            let parts = crate::util::pool::par_chunks_with(nt_grid, n_sb, |sbs| {
+                let mut out = vec![0.0f64; sbs.len() * superblock];
+                for (bi, sb) in sbs.enumerate() {
+                    conv(
+                        &buf_ref[sb * superblock..(sb + 1) * superblock],
+                        &mut out[bi * superblock..(bi + 1) * superblock],
+                        seg,
+                        len,
+                    );
+                }
+                out
+            });
+            next.clear();
+            for p in parts {
+                next.extend_from_slice(&p);
+            }
+        } else if seg > 1 {
+            // single superblock (outermost axis): parallel over
+            // contiguous off-column ranges, scattered back by run copies
+            let buf_ref = &buf;
+            let parts = crate::util::pool::par_chunks_with(nt_grid, seg, |offs| {
+                let (o0, w) = (offs.start, offs.len());
+                let mut out = vec![0.0f64; len * w]; // c-major columns
+                for c in 0..len {
+                    let src_run = &buf_ref[c * seg + o0..c * seg + o0 + w];
+                    if src_run.iter().any(|&v| v != 0.0) {
+                        let lo_k = (-(c as isize)).max(-radius_cells);
+                        let hi_k = ((len - 1 - c) as isize).min(radius_cells);
+                        for k in lo_k..=hi_k {
+                            let t = taps[(k + radius_cells) as usize];
+                            let dst_c = (c as isize + k) as usize;
+                            let dd = &mut out[dst_c * w..(dst_c + 1) * w];
+                            for (dv, &sv) in dd.iter_mut().zip(src_run) {
+                                *dv += t * sv;
                             }
                         }
-                        off0 = off1;
                     }
                 }
+                out
+            });
+            // no zeroing needed: the scatter writes every element of
+            // `next` (all offsets × all columns) via copy_from_slice
+            let mut o0 = 0;
+            for part in parts {
+                let w = part.len() / len;
+                for c in 0..len {
+                    next[c * seg + o0..c * seg + o0 + w]
+                        .copy_from_slice(&part[c * w..(c + 1) * w]);
+                }
+                o0 += w;
             }
+        } else {
+            // 1-d grid (one superblock of unit runs): serial, tiny
+            next.iter_mut().for_each(|v| *v = 0.0);
+            convolve_sb(&buf, &mut next, seg, len);
         }
         std::mem::swap(&mut buf, &mut next);
     }
@@ -350,6 +419,19 @@ mod tests {
         let p_grid = grid(&ds.x, h).expect("grid feasible");
         let e = rel_err(&p_grid, &p_exact);
         assert!(e < 0.08, "median rel err {e}");
+    }
+
+    #[test]
+    fn grid_decline_is_counted_not_silent() {
+        // d = 8 > 3: the grid path declines and falls back — the global
+        // metrics counter must record it.
+        let mut rng = Rng::seed_from_u64(9);
+        let ds = crate::data::bimodal_d(200, 8, 0.4, &mut rng);
+        let before = grid_fallbacks();
+        let p = density_at_points(&ds.x, 0.3, KdeMethod::Grid, &mut rng);
+        assert_eq!(p.len(), ds.n());
+        assert!(p.iter().all(|&v| v > 0.0 && v.is_finite()));
+        assert!(grid_fallbacks() > before, "grid decline must be counted");
     }
 
     #[test]

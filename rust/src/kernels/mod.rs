@@ -125,12 +125,30 @@ impl Kernel {
         self.eval_sq(sqdist(x, y))
     }
 
-    /// Assemble the (rows(x) × rows(y)) kernel matrix natively, tiled
-    /// over row ranges on the shared worker pool (the production path is
-    /// the AOT/PJRT engine in `runtime`). Each output row is evaluated by
-    /// one worker with a fixed column order — bit-identical results for
-    /// every thread count.
+    /// Assemble the (rows(x) × rows(y)) kernel matrix natively through
+    /// the cache-blocked distance engine ([`crate::linalg::blocked`]):
+    /// tiled r² via ‖x‖²+‖y‖²−2⟨x,y⟩ with precomputed row norms, then
+    /// [`Kernel::eval_sq`] mapped per tile. Tile partitioning is
+    /// shape-derived, so results are bit-identical for every thread
+    /// count (they may differ from [`Kernel::matrix_scalar`] by r²
+    /// cancellation round-off). The production path is the AOT/PJRT
+    /// engine in `runtime`.
     pub fn matrix(&self, x: &Mat, y: &Mat) -> Mat {
+        crate::linalg::blocked::map_matrix(x, y, |r2| self.eval_sq(r2))
+    }
+
+    /// Symmetric kernel matrix K(X, X) — blocked engine, block-upper
+    /// tiles only; the mirror is bitwise identical to direct evaluation
+    /// (see [`crate::linalg::blocked`]).
+    pub fn matrix_sym(&self, x: &Mat) -> Mat {
+        crate::linalg::blocked::map_matrix_sym(x, |r2| self.eval_sq(r2))
+    }
+
+    /// The pre-blocked scalar reference: per-pair two-pass [`sqdist`],
+    /// pool-parallel over row ranges. Kept as the oracle for
+    /// blocked-vs-scalar validation and the `bench-perf` comparison —
+    /// not a hot path.
+    pub fn matrix_scalar(&self, x: &Mat, y: &Mat) -> Mat {
         assert_eq!(x.cols, y.cols, "dimension mismatch");
         let (n, m) = (x.rows, y.rows);
         let nt = if n * m * x.cols > 32 * 32 * 32 {
@@ -149,38 +167,6 @@ impl Kernel {
             out
         });
         Mat { rows: n, cols: m, data: blocks.into_iter().flatten().collect() }
-    }
-
-    /// Symmetric kernel matrix K(X, X) — computes the upper triangle only
-    /// (pool-parallel over row ranges; mirror is a deterministic copy).
-    pub fn matrix_sym(&self, x: &Mat) -> Mat {
-        let n = x.rows;
-        let nt = if n * n * x.cols > 32 * 32 * 32 {
-            crate::util::pool::current_threads()
-        } else {
-            1
-        };
-        // parallel over row ranges; each fills its rows' upper part
-        let blocks = crate::util::pool::par_chunks_with(nt, n, |range| {
-            let mut rows = Vec::with_capacity(range.len());
-            for i in range {
-                let xi = x.row(i);
-                let mut r = vec![0.0; n];
-                for (j, rj) in r.iter_mut().enumerate().skip(i) {
-                    *rj = self.eval_sq(sqdist(xi, x.row(j)));
-                }
-                rows.push(r);
-            }
-            rows
-        });
-        let mut k =
-            Mat { rows: n, cols: n, data: blocks.into_iter().flatten().flatten().collect() };
-        for i in 0..n {
-            for j in 0..i {
-                k.data[i * n + j] = k.data[j * n + i];
-            }
-        }
-        k
     }
 
     /// The kernel's spectral density m(‖s‖) as a function of the radial
@@ -291,6 +277,30 @@ mod tests {
         let a = k.matrix(&x, &x);
         let b = k.matrix_sym(&x);
         assert!(a.max_abs_diff(&b) < 1e-14);
+    }
+
+    #[test]
+    fn blocked_matrix_matches_scalar_reference() {
+        // The blocked engine may shift values by r² cancellation error;
+        // for unit-scale data that is ≪ 1e-9 on the kernel values.
+        let mut rng = Rng::seed_from_u64(23);
+        for &(n, m, d) in &[(37usize, 21usize, 3usize), (150, 140, 5), (2, 1, 1)] {
+            let x = Mat::from_fn(n, d, |_, _| rng.normal());
+            let y = Mat::from_fn(m, d, |_, _| rng.normal());
+            for spec in [
+                KernelSpec::Matern { nu: 1.5, a: 1.0 },
+                KernelSpec::Gaussian { sigma: 0.8 },
+            ] {
+                let k = Kernel::new(spec);
+                let blocked = k.matrix(&x, &y);
+                let scalar = k.matrix_scalar(&x, &y);
+                assert!(
+                    blocked.max_abs_diff(&scalar) < 1e-9,
+                    "{spec:?} ({n},{m},{d}): {}",
+                    blocked.max_abs_diff(&scalar)
+                );
+            }
+        }
     }
 
     #[test]

@@ -16,15 +16,15 @@ pub struct KMeansResult {
     pub iterations: usize,
 }
 
-/// k-means++ seeding.
+/// k-means++ seeding. Distance columns run through the blocked engine
+/// ([`crate::linalg::blocked::map_row`]), consistent with the assignment
+/// step's distances.
 fn seed_pp(phi: &Mat, k: usize, rng: &mut Rng) -> Mat {
     let n = phi.rows;
     let mut centers = Mat::zeros(k, phi.cols);
     let first = rng.usize(n);
     centers.row_mut(0).copy_from_slice(phi.row(first));
-    let mut d2: Vec<f64> = (0..n)
-        .map(|i| crate::linalg::sqdist(phi.row(i), centers.row(0)))
-        .collect();
+    let mut d2 = crate::linalg::blocked::map_row(centers.row(0), phi, |r2| r2);
     for c in 1..k {
         let total: f64 = d2.iter().sum();
         let pick = if total <= 0.0 {
@@ -42,8 +42,9 @@ fn seed_pp(phi: &Mat, k: usize, rng: &mut Rng) -> Mat {
             pick
         };
         centers.row_mut(c).copy_from_slice(phi.row(pick));
+        let dc = crate::linalg::blocked::map_row(centers.row(c), phi, |r2| r2);
         for i in 0..n {
-            d2[i] = d2[i].min(crate::linalg::sqdist(phi.row(i), centers.row(c)));
+            d2[i] = d2[i].min(dc[i]);
         }
     }
     centers
@@ -59,25 +60,18 @@ pub fn kmeans(phi: &Mat, k: usize, max_iter: usize, rng: &mut Rng) -> KMeansResu
     let mut iterations = 0;
     for it in 0..max_iter {
         iterations = it + 1;
-        // assign (pool-parallel; per-point argmin → thread-count invariant)
-        let new_assign: Vec<usize> = crate::util::pool::par_rows(n, |i| {
-            let mut best = 0;
-            let mut bd = f64::INFINITY;
-            for c in 0..k {
-                let dd = crate::linalg::sqdist(phi.row(i), centers.row(c));
-                if dd < bd {
-                    bd = dd;
-                    best = c;
-                }
-            }
-            best
-        });
-        let changed = new_assign
+        // assign via the blocked engine (per-point argmin, ties to the
+        // lower index → thread-count invariant); keep the distances so
+        // the reseed below ranks points under the same metric
+        let nearest = crate::linalg::blocked::nearest_rows(phi, &centers);
+        let changed = nearest
             .iter()
             .zip(&assignments)
-            .filter(|(a, b)| a != b)
+            .filter(|((a, _), b)| a != *b)
             .count();
-        assignments = new_assign;
+        for (ai, &(c, _)) in assignments.iter_mut().zip(&nearest) {
+            *ai = c;
+        }
         // update
         let mut sums = Mat::zeros(k, d);
         let mut counts = vec![0usize; k];
@@ -92,13 +86,10 @@ pub fn kmeans(phi: &Mat, k: usize, max_iter: usize, rng: &mut Rng) -> KMeansResu
         }
         for c in 0..k {
             if counts[c] == 0 {
-                // re-seed empty cluster at the farthest point
+                // re-seed empty cluster at the point farthest from its
+                // assigned center (blocked r², same metric as assignment)
                 let far = (0..n)
-                    .max_by(|&a, &b| {
-                        let da = crate::linalg::sqdist(phi.row(a), centers.row(assignments[a]));
-                        let db = crate::linalg::sqdist(phi.row(b), centers.row(assignments[b]));
-                        da.partial_cmp(&db).unwrap()
-                    })
+                    .max_by(|&a, &b| nearest[a].1.partial_cmp(&nearest[b].1).unwrap())
                     .unwrap();
                 centers.row_mut(c).copy_from_slice(phi.row(far));
             } else {
@@ -112,9 +103,19 @@ pub fn kmeans(phi: &Mat, k: usize, max_iter: usize, rng: &mut Rng) -> KMeansResu
             break;
         }
     }
-    let inertia: f64 = (0..n)
-        .map(|i| crate::linalg::sqdist(phi.row(i), centers.row(assignments[i])))
-        .sum();
+    // inertia under the same blocked metric, against the final centers:
+    // gather each cluster's members so the total distance work stays
+    // O(n·d) (each point measured against its assigned center only)
+    let mut inertia = 0.0;
+    for c in 0..k {
+        let members: Vec<usize> = (0..n).filter(|&i| assignments[i] == c).collect();
+        if members.is_empty() {
+            continue;
+        }
+        let sub = Mat::from_fn(members.len(), d, |r, j| phi[(members[r], j)]);
+        let dc = crate::linalg::blocked::map_row(centers.row(c), &sub, |r2| r2);
+        inertia += dc.iter().sum::<f64>();
+    }
     KMeansResult { assignments, centers, inertia, iterations }
 }
 

@@ -9,6 +9,9 @@ use crate::util::rng::Rng;
 pub struct ExactEstimator;
 
 /// Exact rescaled leverage scores G_λ(x_i,x_i) without needing responses.
+/// K_n is assembled through the blocked distance/Gram engine
+/// (`linalg::blocked` via [`crate::kernels::Kernel::matrix_sym`]); the
+/// e_i solves fan out on the shared pool.
 pub fn rescaled_leverage_exact(
     x: &crate::linalg::Mat,
     kernel: &crate::kernels::Kernel,

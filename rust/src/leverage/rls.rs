@@ -47,21 +47,30 @@ pub fn dictionary_rls(
         Some(s) => s.to_vec(),
         None => (0..n).collect(),
     };
-    // B rows: b_i = L^{-1} k_{J,i}; accumulate BᵀB and keep b_i
-    // (pool-parallel; each b_i is an independent triangular solve)
+    // K_{rows,J} assembled in one shot through the blocked engine, then
+    // B rows b_i = L^{-1} k_{J,i} (pool-parallel; each b_i is an
+    // independent triangular solve).
+    let subset_mat;
+    let kxj = match subset {
+        Some(_) => {
+            subset_mat = Mat::from_fn(rows.len(), x.cols, |i, j| x[(rows[i], j)]);
+            kernel.matrix(&subset_mat, &landmarks)
+        }
+        None => kernel.matrix(x, &landmarks),
+    };
     let chunks = crate::util::pool::par_chunks(rows.len(), |range| {
         let mut bs = Vec::with_capacity(range.len());
         for r in range {
-            let i = rows[r];
-            let xi = x.row(i);
-            let mut k_col: Vec<f64> =
-                (0..m).map(|j| kernel.eval(xi, landmarks.row(j))).collect();
+            let mut k_col = kxj.row(r).to_vec();
             chol_jj.solve_lower_in_place(&mut k_col);
             bs.push(k_col);
         }
         bs
     });
     let b_rows: Vec<Vec<f64>> = chunks.into_iter().flatten().collect();
+    // kxj is dead once the solves are done — release the n×m block before
+    // the O(n·m²) accumulation below doubles the peak footprint.
+    drop(kxj);
     // M = BᵀB + nλ I_m  (note: BᵀB over the *scored subset*; when scoring
     // a subset we still want the geometry of those points only — this is
     // the standard subset-Nyström RLS used inside the recursions).

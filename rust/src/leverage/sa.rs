@@ -22,6 +22,11 @@
 //! We use the kernels' true spectral constants (not the paper's C_α=D_α=1
 //! simplification) so K̃ matches G in absolute scale, which Figure 2
 //! requires.
+//!
+//! The KDE stage (the only pairwise-quadratic part of Algorithm 1) runs
+//! on the blocked distance engine — see [`crate::kde`] and
+//! [`crate::linalg::blocked`]; the per-point quadrature stays a
+//! per-element pool map.
 
 use super::{LeverageContext, LeverageEstimator};
 use crate::kde::{self, KdeMethod};

@@ -23,29 +23,52 @@
 //!
 //! ## Parallel compute core
 //!
-//! Every quadratic hot path — [`linalg::Mat::matmul`] / `gram`, kernel
-//! matrix assembly, KDE sums, exact-leverage diagonals, per-point SA
-//! quadrature, and Nyström block assembly — runs on the shared worker
-//! pool in [`util::pool`]. The pool guarantees **bit-identical results
-//! for every thread count**: per-element work is partitioned so each
-//! output is produced by exactly one worker in a fixed order, and
-//! sum-reductions (`Mat::gram`, the Nyström right-hand side) fold
-//! fixed-size blocks in block order, so the floating-point evaluation
-//! tree never depends on how many workers ran. The thread count comes
-//! from (highest priority first) a scoped [`util::pool::override_threads`]
-//! guard (the [`coordinator::FitConfig::threads`] knob and the bench
-//! harness's `--threads` flag), the `LEVERKRR_THREADS` environment
-//! variable, or the machine's available parallelism capped at 16; a
-//! count of 1 short-circuits to a serial reference path on the caller's
-//! thread. `rust/tests/parallel_parity.rs` pins the guarantee down with
-//! bitwise 1-vs-4-thread comparisons across every parallelized path.
+//! Two layers carry every quadratic hot path:
+//!
+//! * **The blocked distance/Gram engine** ([`linalg::blocked`]): all
+//!   pairwise work — kernel-matrix assembly, KDE sums, k-means
+//!   assignment, exact/RLS leverage blocks, Nyström blocks, the
+//!   streaming dictionary's kernel rows — computes tiled r² via
+//!   ‖x‖²+‖y‖²−2⟨x,y⟩ with precomputed row norms, transpose-packed
+//!   SIMD-friendly inner tiles, and the caller's map (e.g.
+//!   [`kernels::Kernel::eval_sq`]) applied per tile.
+//! * **The persistent worker pool** ([`util::pool`]): workers spawn
+//!   lazily on first parallel dispatch and then park on a shared job
+//!   queue for the life of the process — dispatch costs a lock + condvar
+//!   wakeup, not thread creation. The caller participates in its own
+//!   batch, so nested or contended dispatch can never deadlock.
+//!
+//! **Determinism contract** (re-pinned for the blocked engine): tile and
+//! block partitioning is *shape-derived*, never thread-count-derived;
+//! each output element is produced by exactly one executor in a fixed
+//! inner order; and sum-reductions (`Mat::gram`, the Nyström right-hand
+//! side, per-row KDE folds) fix their floating-point reduction tree
+//! independently of the worker count. Results are therefore
+//! **bit-identical at every thread count**. Blocked r² values may differ
+//! from the old scalar two-pass `sqdist` path by cancellation round-off
+//! (clamped at zero); the tolerance-based accuracy tests absorb that
+//! shift, while `rust/tests/parallel_parity.rs` pins cross-thread
+//! bitwise parity for every rebased path.
+//!
+//! The thread count comes from (highest priority first) a scoped
+//! [`util::pool::override_threads`] guard (the
+//! [`coordinator::FitConfig::threads`] knob and the bench harness's
+//! `--threads` flag), the `LEVERKRR_THREADS` environment variable, or
+//! the machine's available parallelism capped at 16; a count of 1
+//! short-circuits to a serial reference path on the caller's thread
+//! without touching the pool.
 //!
 //! ## Crate layout
 //!
 //! * [`util`] — zero-dependency substrates: RNG, JSON, CLI, property
-//!   tests, and the [`util::pool`] worker pool described above.
-//! * [`metrics`] — timers / counters / streaming summaries.
-//! * [`linalg`] — dense row-major matrices, blocked matmul, Cholesky.
+//!   tests, and the persistent [`util::pool`] worker pool described
+//!   above.
+//! * [`metrics`] — timers / counters / streaming summaries, plus a
+//!   process-global registry ([`metrics::global`]) for library-internal
+//!   events (e.g. KDE grid fallbacks).
+//! * [`linalg`] — dense row-major matrices, blocked matmul, Cholesky,
+//!   and the [`linalg::blocked`] pairwise distance/Gram engine behind
+//!   every pairwise hot path.
 //! * [`special`] — Γ, erf, modified Bessel K_ν, polylogarithm Li_s.
 //! * [`quadrature`] — Gauss–Legendre and adaptive rules.
 //! * [`kernels`] — Matérn / Gaussian kernels and their spectral densities.

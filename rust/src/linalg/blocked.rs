@@ -1,0 +1,422 @@
+//! Cache-blocked pairwise squared-distance / Gram engine.
+//!
+//! Every pairwise hot path in the crate — kernel-matrix assembly for
+//! Nyström/KRR, the KDE sums behind the paper's analytic leverage
+//! formula, k-means assignment, exact/RLS leverage scoring, and the
+//! streaming dictionary's kernel rows — bottoms out in ‖x_i − y_j‖².
+//! This module computes those distances tiled, via the expansion
+//!
+//! ```text
+//!   r²(i, j) = ‖x_i‖² + ‖y_j‖² − 2⟨x_i, y_j⟩
+//! ```
+//!
+//! with row norms precomputed once ([`row_sqnorms`]), each y-tile
+//! transposed into a contiguous scratch buffer so the inner loop is a
+//! unit-stride multiply-add over the tile (SIMD-friendly at opt-level
+//! 3), and a caller-supplied map `f(r²)` applied per tile —
+//! `Kernel::eval_sq` for kernel matrices, a Gaussian `exp` for KDE,
+//! the identity for raw distances.
+//!
+//! # Determinism contract
+//!
+//! Tile partitioning is **shape-derived** (the fixed [`TILE_J`] width on
+//! a 0-aligned grid — never the thread count), every output element is
+//! produced by exactly one worker with a fixed inner summation order
+//! (k ascending over the feature dimension), and the row reductions in
+//! [`row_reduce`] fold j ascending into a single accumulator per row.
+//! Results are therefore **bit-identical at every thread count** — and
+//! independent of the tile width itself. The expansion's values may
+//! differ from the scalar two-pass `sqdist` path by O(ε·‖x‖²)
+//! cancellation error; negative round-off is clamped at zero and the
+//! crate's tolerance-based accuracy tests absorb the shift.
+//!
+//! Symmetric assembly ([`map_matrix_sym`]) computes only block-upper
+//! tiles and mirrors: the per-element evaluation sequence is exactly
+//! commutative in IEEE-754 (single-rounded `a+b` and exact ×2 scaling),
+//! so the mirror is bitwise identical to direct evaluation and
+//! `map_matrix_sym(x, f)` equals `map_matrix(x, x, f)` bit for bit.
+
+use super::Mat;
+use crate::util::pool;
+
+/// Packed tile width (columns of `y` per transpose-packed tile). Purely
+/// a cache/SIMD knob: results do not depend on it (see module docs).
+pub const TILE_J: usize = 128;
+
+/// Work threshold (n·m·d) below which matrix-shaped maps dispatch
+/// serially — matches the pre-blocked per-path thresholds.
+const PAR_MIN_WORK: usize = 32 * 32 * 32;
+
+/// Work threshold (m·d) for the single-row paths ([`map_row`]).
+const ROW_MIN_WORK: usize = 64 * 64;
+
+/// ‖row_i‖² for every row, via the same unrolled [`super::dot`] the rest
+/// of the crate uses.
+pub fn row_sqnorms(x: &Mat) -> Vec<f64> {
+    (0..x.rows).map(|i| super::dot(x.row(i), x.row(i))).collect()
+}
+
+/// Transpose rows `[j0, j0+w)` of `y` into `yt` so `yt[k·w + jj] =
+/// y[(j0+jj, k)]` — feature-major, unit stride over the tile.
+#[inline]
+fn pack_tile(y: &Mat, j0: usize, w: usize, yt: &mut [f64]) {
+    let d = y.cols;
+    for jj in 0..w {
+        let row = y.row(j0 + jj);
+        for k in 0..d {
+            yt[k * w + jj] = row[k];
+        }
+    }
+}
+
+/// Squared distances from one x-row against a packed tile:
+/// `acc[jj] = max(0, nxi + ny_tile[jj] − 2⟨xi, y_{j0+jj}⟩)`.
+///
+/// The evaluation sequence per element — one `nxi + nyj` add, then
+/// `(−2·x_k)·y_k` terms folded k-ascending, then the clamp — is the
+/// single source of truth shared by every engine entry point, so kernel
+/// rows computed through [`map_row`] are bitwise consistent with the
+/// matching [`map_matrix_sym`] entries.
+#[inline]
+fn tile_r2(xi: &[f64], nxi: f64, yt: &[f64], ny_tile: &[f64], acc: &mut [f64]) {
+    let w = acc.len();
+    for (a, &nyj) in acc.iter_mut().zip(ny_tile) {
+        *a = nxi + nyj;
+    }
+    for (k, &xk) in xi.iter().enumerate() {
+        let c = -2.0 * xk; // exact: scaling by a power of two
+        let yrow = &yt[k * w..(k + 1) * w];
+        for (a, &yv) in acc.iter_mut().zip(yrow) {
+            *a += c * yv;
+        }
+    }
+    for a in acc.iter_mut() {
+        if *a < 0.0 {
+            *a = 0.0;
+        }
+    }
+}
+
+/// `out[(i, j)] = f(r²(x_i, y_j))` — the blocked cross-matrix map behind
+/// [`crate::kernels::Kernel::matrix`] and [`sqdist_matrix`].
+pub fn map_matrix(x: &Mat, y: &Mat, f: impl Fn(f64) -> f64 + Sync) -> Mat {
+    assert_eq!(x.cols, y.cols, "dimension mismatch");
+    let (n, m, d) = (x.rows, y.rows, x.cols);
+    if n == 0 || m == 0 {
+        return Mat { rows: n, cols: m, data: Vec::new() };
+    }
+    let nx = row_sqnorms(x);
+    let ny = row_sqnorms(y);
+    let nt = if n * m * d.max(1) > PAR_MIN_WORK { pool::current_threads() } else { 1 };
+    let (f, nx, ny) = (&f, &nx, &ny);
+    let blocks = pool::par_chunks_with(nt, n, |range| {
+        let mut out = vec![0.0; range.len() * m];
+        let mut yt = vec![0.0; TILE_J * d];
+        let mut acc = vec![0.0; TILE_J];
+        let mut j0 = 0;
+        while j0 < m {
+            let w = TILE_J.min(m - j0);
+            pack_tile(y, j0, w, &mut yt);
+            for (bi, i) in range.clone().enumerate() {
+                tile_r2(x.row(i), nx[i], &yt, &ny[j0..j0 + w], &mut acc[..w]);
+                let dst = &mut out[bi * m + j0..bi * m + j0 + w];
+                for (o, &a) in dst.iter_mut().zip(acc[..w].iter()) {
+                    *o = f(a);
+                }
+            }
+            j0 += w;
+        }
+        out
+    });
+    Mat { rows: n, cols: m, data: blocks.into_iter().flatten().collect() }
+}
+
+/// Symmetric map `out[(i, j)] = f(r²(x_i, x_j))`: computes tiles on and
+/// above the diagonal, mirrors the rest (bitwise-identical — see the
+/// module docs).
+pub fn map_matrix_sym(x: &Mat, f: impl Fn(f64) -> f64 + Sync) -> Mat {
+    let (n, d) = (x.rows, x.cols);
+    if n == 0 {
+        return Mat { rows: 0, cols: 0, data: Vec::new() };
+    }
+    let nx = row_sqnorms(x);
+    let nt = if n * n * d.max(1) > PAR_MIN_WORK { pool::current_threads() } else { 1 };
+    let (f, nx) = (&f, &nx);
+    let blocks = pool::par_chunks_with(nt, n, |range| {
+        let mut out = vec![0.0; range.len() * n];
+        let mut yt = vec![0.0; TILE_J * d];
+        let mut acc = vec![0.0; TILE_J];
+        // first 0-aligned tile that intersects column range.start..n
+        let mut j0 = (range.start / TILE_J) * TILE_J;
+        while j0 < n {
+            let w = TILE_J.min(n - j0);
+            pack_tile(x, j0, w, &mut yt);
+            for (bi, i) in range.clone().enumerate() {
+                if j0 + w <= i {
+                    continue; // tile entirely below this row's diagonal
+                }
+                tile_r2(x.row(i), nx[i], &yt, &nx[j0..j0 + w], &mut acc[..w]);
+                let lo = i.saturating_sub(j0).min(w);
+                let dst = &mut out[bi * n + j0 + lo..bi * n + j0 + w];
+                for (o, &a) in dst.iter_mut().zip(acc[lo..w].iter()) {
+                    *o = f(a);
+                }
+            }
+            j0 += w;
+        }
+        out
+    });
+    let mut k = Mat { rows: n, cols: n, data: blocks.into_iter().flatten().collect() };
+    for i in 0..n {
+        for j in 0..i {
+            k.data[i * n + j] = k.data[j * n + i];
+        }
+    }
+    k
+}
+
+/// Raw blocked pairwise squared distances (identity map).
+pub fn sqdist_matrix(x: &Mat, y: &Mat) -> Mat {
+    map_matrix(x, y, |r2| r2)
+}
+
+/// Per-row reduction `out[i] = Σ_j f(r²(q_i, data_j))` without
+/// materializing the n×m matrix — the KDE shape. Each row folds j
+/// ascending into a single accumulator, so the reduction tree depends
+/// only on the data order, never on threads or tile width.
+pub fn row_reduce(q: &Mat, data: &Mat, f: impl Fn(f64) -> f64 + Sync) -> Vec<f64> {
+    assert_eq!(q.cols, data.cols, "dimension mismatch");
+    let (n, m, d) = (q.rows, data.rows, q.cols);
+    if n == 0 {
+        return Vec::new();
+    }
+    if m == 0 {
+        return vec![0.0; n];
+    }
+    let nq = row_sqnorms(q);
+    let ndata = row_sqnorms(data);
+    let nt = if n * m * d.max(1) > PAR_MIN_WORK { pool::current_threads() } else { 1 };
+    let (f, nq, ndata) = (&f, &nq, &ndata);
+    let chunks = pool::par_chunks_with(nt, n, |range| {
+        let mut sums = vec![0.0; range.len()];
+        let mut yt = vec![0.0; TILE_J * d];
+        let mut acc = vec![0.0; TILE_J];
+        let mut j0 = 0;
+        while j0 < m {
+            let w = TILE_J.min(m - j0);
+            pack_tile(data, j0, w, &mut yt);
+            for (bi, i) in range.clone().enumerate() {
+                tile_r2(q.row(i), nq[i], &yt, &ndata[j0..j0 + w], &mut acc[..w]);
+                // fold j-ascending into the row's scalar accumulator
+                let s = &mut sums[bi];
+                for &a in acc[..w].iter() {
+                    *s += f(a);
+                }
+            }
+            j0 += w;
+        }
+        sums
+    });
+    chunks.into_iter().flatten().collect()
+}
+
+/// One query row against every row of `y`: `out[j] = f(r²(x, y_j))`.
+/// The streaming dictionary's kernel-row path; bitwise consistent with
+/// the matching [`map_matrix_sym`] entries (shared [`tile_r2`]).
+pub fn map_row(x: &[f64], y: &Mat, f: impl Fn(f64) -> f64 + Sync) -> Vec<f64> {
+    assert_eq!(x.len(), y.cols, "dimension mismatch");
+    let (m, d) = (y.rows, y.cols);
+    if m == 0 {
+        return Vec::new();
+    }
+    let nx = super::dot(x, x);
+    let ny = row_sqnorms(y);
+    let nt = if m * d.max(1) > ROW_MIN_WORK { pool::current_threads() } else { 1 };
+    let ny_ref = &ny;
+    let f = &f;
+    let parts = pool::par_blocks_with(nt, m, TILE_J, |tile| {
+        let (j0, w) = (tile.start, tile.len());
+        let mut yt = vec![0.0; w * d];
+        let mut acc = vec![0.0; w];
+        pack_tile(y, j0, w, &mut yt);
+        tile_r2(x, nx, &yt, &ny_ref[j0..j0 + w], &mut acc);
+        acc.iter().map(|&a| f(a)).collect::<Vec<f64>>()
+    });
+    parts.into_iter().flatten().collect()
+}
+
+/// Nearest center per row: `out[i] = (argmin_j r²(x_i, c_j), min r²)`,
+/// ties broken toward the lower index. The k-means assignment step.
+pub fn nearest_rows(x: &Mat, centers: &Mat) -> Vec<(usize, f64)> {
+    assert_eq!(x.cols, centers.cols, "dimension mismatch");
+    let (n, k, d) = (x.rows, centers.rows, x.cols);
+    assert!(k > 0, "need at least one center");
+    if n == 0 {
+        return Vec::new();
+    }
+    let nx = row_sqnorms(x);
+    let nc = row_sqnorms(centers);
+    let nt = if n * k * d.max(1) > PAR_MIN_WORK { pool::current_threads() } else { 1 };
+    let (nx, nc) = (&nx, &nc);
+    let chunks = pool::par_chunks_with(nt, n, |range| {
+        let mut yt = vec![0.0; TILE_J * d];
+        let mut acc = vec![0.0; TILE_J];
+        let mut best = vec![(0usize, f64::INFINITY); range.len()];
+        let mut j0 = 0;
+        while j0 < k {
+            let w = TILE_J.min(k - j0);
+            pack_tile(centers, j0, w, &mut yt);
+            for (bi, i) in range.clone().enumerate() {
+                tile_r2(x.row(i), nx[i], &yt, &nc[j0..j0 + w], &mut acc[..w]);
+                let b = &mut best[bi];
+                for (jj, &a) in acc[..w].iter().enumerate() {
+                    if a < b.1 {
+                        *b = (j0 + jj, a);
+                    }
+                }
+            }
+            j0 += w;
+        }
+        best
+    });
+    chunks.into_iter().flatten().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::sqdist;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn random_mat(rng: &mut Rng, rows: usize, cols: usize) -> Mat {
+        Mat::from_fn(rows, cols, |_, _| rng.normal())
+    }
+
+    fn rel(a: f64, b: f64) -> f64 {
+        (a - b).abs() / (1.0 + b.abs())
+    }
+
+    #[test]
+    fn prop_blocked_matches_naive_sqdist_nondivisible_shapes() {
+        // Random shapes around the tile boundary — n or d smaller than
+        // the tile, exact multiples, and off-by-ones — must agree with
+        // the scalar two-pass sqdist to 1e-9 relative.
+        prop::check(
+            31,
+            40,
+            |rng| {
+                let n = 1 + rng.usize(2 * TILE_J + 3);
+                let m = 1 + rng.usize(2 * TILE_J + 3);
+                let d = 1 + rng.usize(9);
+                (random_mat(rng, n, d), random_mat(rng, m, d))
+            },
+            |(x, y)| {
+                let r = sqdist_matrix(x, y);
+                let mut ok = true;
+                for i in 0..x.rows {
+                    for j in 0..y.rows {
+                        ok &= rel(r[(i, j)], sqdist(x.row(i), y.row(j))) < 1e-9;
+                    }
+                }
+                ok
+            },
+        );
+    }
+
+    #[test]
+    fn exact_tile_multiple_and_singleton_shapes() {
+        let mut rng = Rng::seed_from_u64(32);
+        for &(n, m, d) in
+            &[(TILE_J, TILE_J, 4), (1usize, 1usize, 1usize), (TILE_J + 1, TILE_J - 1, 3), (3, 200, 1)]
+        {
+            let x = random_mat(&mut rng, n, d);
+            let y = random_mat(&mut rng, m, d);
+            let r = sqdist_matrix(&x, &y);
+            for i in 0..n {
+                for j in 0..m {
+                    assert!(
+                        rel(r[(i, j)], sqdist(x.row(i), y.row(j))) < 1e-9,
+                        "({n},{m},{d}) at ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sym_is_bitwise_equal_to_cross_with_self() {
+        let mut rng = Rng::seed_from_u64(33);
+        for &(n, d) in &[(5usize, 3usize), (TILE_J - 1, 2), (TILE_J + 7, 4), (300, 1)] {
+            let x = random_mat(&mut rng, n, d);
+            let s = map_matrix_sym(&x, |r2| (-r2).exp());
+            let c = map_matrix(&x, &x, |r2| (-r2).exp());
+            assert_eq!(s.data, c.data, "({n},{d})");
+            // diagonal r² is tiny (clamped round-off), symmetric exactly
+            for i in 0..n {
+                assert!((s[(i, i)] - 1.0).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn row_reduce_matches_naive_sum() {
+        let mut rng = Rng::seed_from_u64(34);
+        let q = random_mat(&mut rng, 57, 3);
+        let data = random_mat(&mut rng, TILE_J + 9, 3);
+        let got = row_reduce(&q, &data, |r2| (-0.5 * r2).exp());
+        for i in 0..q.rows {
+            let want: f64 =
+                (0..data.rows).map(|j| (-0.5 * sqdist(q.row(i), data.row(j))).exp()).sum();
+            assert!((got[i] - want).abs() < 1e-9 * (1.0 + want), "row {i}");
+        }
+    }
+
+    #[test]
+    fn map_row_is_bitwise_a_matrix_row() {
+        let mut rng = Rng::seed_from_u64(35);
+        let y = random_mat(&mut rng, TILE_J + 5, 4);
+        let x: Vec<f64> = (0..4).map(|_| rng.normal()).collect();
+        let xm = Mat { rows: 1, cols: 4, data: x.clone() };
+        let via_row = map_row(&x, &y, |r2| (-r2).exp());
+        let via_mat = map_matrix(&xm, &y, |r2| (-r2).exp());
+        assert_eq!(via_row, via_mat.data);
+    }
+
+    #[test]
+    fn nearest_matches_naive_argmin_with_low_index_ties() {
+        let mut rng = Rng::seed_from_u64(36);
+        let x = random_mat(&mut rng, 80, 2);
+        let mut c = random_mat(&mut rng, 7, 2);
+        // duplicate a center to force a tie — lower index must win
+        for j in 0..2 {
+            c[(6, j)] = c[(2, j)];
+        }
+        let got = nearest_rows(&x, &c);
+        let r = sqdist_matrix(&x, &c);
+        for i in 0..x.rows {
+            let mut want = (0usize, f64::INFINITY);
+            for j in 0..c.rows {
+                if r[(i, j)] < want.1 {
+                    want = (j, r[(i, j)]);
+                }
+            }
+            assert_eq!(got[i], want, "row {i}");
+            assert_ne!(got[i].0, 6, "tie must break to the lower index");
+        }
+    }
+
+    #[test]
+    fn empty_and_zero_dim_edges() {
+        let x = Mat::zeros(0, 3);
+        let y = Mat::zeros(4, 3);
+        assert_eq!(sqdist_matrix(&x, &y).rows, 0);
+        assert_eq!(row_reduce(&x, &y, |r| r), Vec::<f64>::new());
+        assert_eq!(row_reduce(&y, &x, |r| r), vec![0.0; 4]);
+        assert_eq!(map_row(&[1.0, 2.0, 3.0], &x, |r| r), Vec::<f64>::new());
+        let z = Mat::zeros(3, 0);
+        let r = sqdist_matrix(&z, &Mat::zeros(2, 0));
+        assert_eq!((r.rows, r.cols), (3, 2));
+        assert!(r.data.iter().all(|&v| v == 0.0));
+    }
+}

@@ -3,12 +3,16 @@
 //! Everything the KRR / Nyström / leverage stack needs, built from
 //! scratch: blocked + multithreaded matmul, syrk, Cholesky factorization
 //! (with jitter retry for near-singular Nyström blocks), triangular
-//! solves, SPD solves, and the exact-leverage diagonal helper.
+//! solves, SPD solves, and the exact-leverage diagonal helper — plus the
+//! cache-blocked pairwise-distance/Gram engine in [`blocked`] that every
+//! pairwise hot path (kernels, KDE, k-means, leverage, Nyström, the
+//! streaming dictionary) routes through.
 //!
 //! Sizes in play: the full empirical kernel matrix K_n is only ever formed
 //! for ground-truth computations (n ≲ 2·10^4); the hot path works with
 //! n×m blocks, m = O(d_stat log n) ≪ n.
 
+pub mod blocked;
 mod mat;
 mod chol;
 pub mod eigen;

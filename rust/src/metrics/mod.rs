@@ -8,8 +8,18 @@
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
+
+/// Process-wide registry for library-internal events that have no
+/// per-run registry in scope (e.g. `kde.grid.fallback` when the binned
+/// KDE declines and the caller silently gets the exact/subsampled
+/// path). Servers and bench drivers keep their own [`Registry`]; this
+/// one exists so deep library code can still count.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
 
 /// Measure the wall time of a closure in seconds.
 pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
@@ -432,6 +442,13 @@ mod tests {
         let lat = snap.get("timers").get("lat");
         assert_eq!(lat.get("n").as_f64(), Some(2.0 * TIMER_SAMPLE_CAP as f64));
         assert_eq!(lat.get("min").as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn global_registry_counts() {
+        let before = global().counter("test.global.counter");
+        global().incr("test.global.counter", 2);
+        assert_eq!(global().counter("test.global.counter"), before + 2);
     }
 
     #[test]

@@ -12,9 +12,10 @@
 //! equations. The m×m system is factored with jittered Cholesky (columns
 //! drawn with replacement make K_mm frequently rank-deficient).
 //!
-//! Complexity: O(n·m·d) kernel evaluations (run through
-//! [`crate::runtime::KernelEngine`] on the hot path) + O(n·m²) for the
-//! normal equations + O(m³) to factor.
+//! Complexity: O(n·m·d) kernel evaluations (native path: the blocked
+//! distance/Gram engine behind [`crate::kernels::Kernel::matrix`]; or
+//! the AOT/PJRT engine when available) + O(n·m²) for the normal
+//! equations + O(m³) to factor.
 
 use crate::kernels::Kernel;
 use crate::linalg::{Cholesky, Mat};

@@ -129,25 +129,17 @@ impl OnlineDictionary {
         &self.arrival
     }
 
-    /// Kernel row k(x, atoms). Pool-parallel per-element map for large
-    /// dictionaries (each entry computed by exactly one worker → results
-    /// are thread-count invariant).
+    /// Kernel row k(x, atoms) through the blocked distance engine
+    /// ([`crate::linalg::blocked::map_row`]): tiled r² with precomputed
+    /// atom norms, bitwise consistent with the `matrix_sym` entries the
+    /// refactor fallback builds — and thread-count invariant (each entry
+    /// computed by exactly one worker with a fixed inner order).
     pub fn k_vec(&self, x: &[f64]) -> Vec<f64> {
-        let m = self.atoms.rows;
-        if m == 0 {
+        if self.atoms.rows == 0 {
             return Vec::new();
         }
-        let nt = if m * self.atoms.cols > 64 * 64 {
-            crate::util::pool::current_threads()
-        } else {
-            1
-        };
-        let parts = crate::util::pool::par_chunks_with(nt, m, |range| {
-            range
-                .map(|j| self.kernel.eval(x, self.atoms.row(j)))
-                .collect::<Vec<f64>>()
-        });
-        parts.into_iter().flatten().collect()
+        let kernel = &self.kernel;
+        crate::linalg::blocked::map_row(x, &self.atoms, |r2| kernel.eval_sq(r2))
     }
 
     /// Relative projection residual δ(x)/k(x,x) ∈ [0, 1] of a candidate

@@ -1,9 +1,10 @@
-//! Shared worker pool for the crate's quadratic hot paths.
+//! Shared **persistent** worker pool for the crate's quadratic hot paths.
 //!
 //! Every O(n·m) / O(n²) loop in the framework — blocked matmul and Gram
-//! products, kernel-matrix assembly, KDE sums, exact-leverage diagonals,
-//! per-point SA quadrature, Nyström block assembly — fans out through the
-//! primitives here instead of spawning threads ad hoc:
+//! products, the blocked distance/Gram engine (`linalg::blocked`), KDE
+//! sums, exact-leverage diagonals, per-point SA quadrature, Nyström block
+//! assembly — fans out through the primitives here instead of spawning
+//! threads ad hoc:
 //!
 //! * [`par_chunks`] — split `0..n` into one contiguous range per worker
 //!   and collect the per-range results in order;
@@ -14,20 +15,50 @@
 //!   **bit-identical for every thread count** — this is the primitive
 //!   behind `Mat::gram` and the Nyström right-hand-side accumulation.
 //!
+//! # Persistent workers
+//!
+//! Workers are spawned lazily on first parallel dispatch and then parked
+//! on a shared job queue for the life of the process — a call costs one
+//! lock + condvar wakeup instead of OS thread creation per call, which
+//! is what makes fine-grained dispatch (streaming arrivals, small kernel
+//! tiles) worth parallelizing at all. The pool never shrinks and never
+//! respawns: [`spawned_workers`] is monotone and stable across calls
+//! (asserted by the reuse test below).
+//!
+//! Dispatch protocol: the caller carves the index space into ranges,
+//! queues *helper* tasks that pull ranges from a shared claim counter,
+//! and **participates itself** — it claims and runs ranges like any
+//! worker, then revokes its not-yet-started helpers from the queue and
+//! waits only for helpers actually in flight. Consequences:
+//!
+//! * progress never depends on a free worker (the caller alone can
+//!   finish the batch), so nested `par_*` calls and concurrent callers
+//!   cannot deadlock;
+//! * the number of *workers executing* a batch may be smaller than the
+//!   resolved thread count under contention, but the range partition —
+//!   and therefore every result — depends only on the resolved count
+//!   and the input shape (see the determinism contract).
+//!
+//! A panic in any range is caught where it happened, the batch is
+//! aborted, and the original payload is re-raised on the caller via
+//! `std::panic::resume_unwind`.
+//!
 //! # Determinism contract
 //!
-//! All three primitives guarantee that the values they return do not
-//! depend on the number of worker threads:
+//! All primitives guarantee that the values they return do not depend on
+//! the number of worker threads *executing* them:
 //!
 //! * `par_chunks`/`par_rows` compute each output element on exactly one
-//!   worker with a fixed inner iteration order, so per-element results are
-//!   reproduced exactly regardless of how the ranges are cut;
+//!   executor with a fixed inner iteration order, so per-element results
+//!   are reproduced exactly regardless of how the ranges are cut or who
+//!   runs them;
 //! * `par_blocks` pins the floating-point reduction tree to the caller's
 //!   block size, so even sum-reductions are invariant.
 //!
 //! `rust/tests/parallel_parity.rs` asserts the end-to-end consequence:
-//! matmul, Gram, kernel matrices, KDE, and leverage scores are bitwise
-//! equal at 1 and 4 threads.
+//! matmul, Gram, kernel matrices, KDE, k-means assignment, leverage
+//! scores, and the streaming dictionary are bitwise equal at 1 and 4
+//! threads.
 //!
 //! # Thread-count resolution
 //!
@@ -39,17 +70,21 @@
 //! 3. `std::thread::available_parallelism()`, capped at 16.
 //!
 //! A resolved count of 1 short-circuits to a serial reference path: the
-//! closure runs on the caller's thread and no workers are spawned.
-//!
-//! Workers are `std::thread::scope` threads (the vendor set has no rayon);
-//! panics in a worker are propagated to the caller via
-//! `std::panic::resume_unwind`, preserving the original payload.
+//! closure runs on the caller's thread and the pool is never touched.
 
+use std::collections::VecDeque;
 use std::ops::Range;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// 0 = no override; otherwise the forced worker count.
 static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Hard cap on persistent workers. Thread counts above it still produce
+/// their full range partition — excess ranges queue behind the cap — so
+/// results are unaffected (partitioning is never executor-derived).
+const MAX_WORKERS: usize = 32;
 
 /// The machine's available parallelism, capped at 16 — ignores both the
 /// scoped override and `LEVERKRR_THREADS`. For sizing things that are
@@ -95,9 +130,197 @@ pub fn override_threads(n: usize) -> ThreadGuard {
     ThreadGuard { prev }
 }
 
+// ---------------------------------------------------------------------------
+// persistent pool internals
+// ---------------------------------------------------------------------------
+
+/// Type-erased helper task. The closure borrows the caller's stack frame
+/// (batch state + user closure); `run_batch` upholds the `'static` lie by
+/// never returning while a task is queued or in flight.
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// Per-batch control block shared between the queue and the caller —
+/// tracks helpers that have been *dequeued* (in flight) so revocation
+/// can wait for exactly those.
+struct BatchCtl {
+    running: Mutex<usize>,
+    done_cv: Condvar,
+}
+
+struct QueueEntry {
+    batch: u64,
+    ctl: Arc<BatchCtl>,
+    task: Task,
+}
+
+struct PoolShared {
+    queue: Mutex<VecDeque<QueueEntry>>,
+    queue_cv: Condvar,
+    /// Workers spawned so far; monotone — the pool never shrinks.
+    workers: AtomicUsize,
+    next_batch: AtomicU64,
+}
+
+static POOL: OnceLock<PoolShared> = OnceLock::new();
+
+fn pool() -> &'static PoolShared {
+    POOL.get_or_init(|| PoolShared {
+        queue: Mutex::new(VecDeque::new()),
+        queue_cv: Condvar::new(),
+        workers: AtomicUsize::new(0),
+        next_batch: AtomicU64::new(0),
+    })
+}
+
+/// Total persistent workers spawned since process start. Stable across
+/// repeated dispatches once warm — the no-thread-leak invariant.
+pub fn spawned_workers() -> usize {
+    pool().workers.load(Ordering::SeqCst)
+}
+
+/// Grow the pool to at least `want` workers (capped at [`MAX_WORKERS`]).
+fn ensure_workers(want: usize) {
+    let p = pool();
+    let want = want.min(MAX_WORKERS);
+    loop {
+        let cur = p.workers.load(Ordering::SeqCst);
+        if cur >= want {
+            return;
+        }
+        if p.workers.compare_exchange(cur, cur + 1, Ordering::SeqCst, Ordering::SeqCst).is_ok() {
+            std::thread::Builder::new()
+                .name(format!("leverkrr-pool-{cur}"))
+                .spawn(move || worker_loop(p))
+                .expect("spawning pool worker");
+        }
+    }
+}
+
+fn worker_loop(p: &'static PoolShared) {
+    loop {
+        let entry = {
+            let mut q = p.queue.lock().unwrap_or_else(|e| e.into_inner());
+            loop {
+                if let Some(e) = q.pop_front() {
+                    // Mark in flight under the queue lock so a revoking
+                    // caller can never miss a dequeued task.
+                    *e.ctl.running.lock().unwrap() += 1;
+                    break e;
+                }
+                q = p.queue_cv.wait(q).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        let QueueEntry { ctl, task, .. } = entry;
+        task(); // never unwinds: panics are caught inside the batch
+        let mut running = ctl.running.lock().unwrap();
+        *running -= 1;
+        if *running == 0 {
+            ctl.done_cv.notify_all();
+        }
+    }
+}
+
+/// Shared state of one parallel call: the claim counter, result slots,
+/// and the first panic payload.
+struct BatchState<'a, T, F> {
+    f: &'a F,
+    ranges: &'a [Range<usize>],
+    next: AtomicUsize,
+    aborted: AtomicBool,
+    results: Mutex<Vec<Option<T>>>,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+impl<T: Send, F: Fn(Range<usize>) -> T + Sync> BatchState<'_, T, F> {
+    /// Claim and execute ranges until none remain (or the batch aborts).
+    fn run_jobs(&self) {
+        loop {
+            if self.aborted.load(Ordering::SeqCst) {
+                return;
+            }
+            let i = self.next.fetch_add(1, Ordering::SeqCst);
+            if i >= self.ranges.len() {
+                return;
+            }
+            match std::panic::catch_unwind(AssertUnwindSafe(|| (self.f)(self.ranges[i].clone())))
+            {
+                Ok(v) => self.results.lock().unwrap_or_else(|e| e.into_inner())[i] = Some(v),
+                Err(payload) => {
+                    self.aborted.store(true, Ordering::SeqCst);
+                    let mut slot = self.panic.lock().unwrap_or_else(|e| e.into_inner());
+                    if slot.is_none() {
+                        *slot = Some(payload);
+                    }
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Execute `f` over `ranges` with up to `ranges.len() - 1` pool helpers
+/// plus the caller. Returns results in range order; re-raises the first
+/// worker panic with its original payload.
+fn run_batch<T: Send, F: Fn(Range<usize>) -> T + Sync>(ranges: Vec<Range<usize>>, f: &F) -> Vec<T> {
+    let k = ranges.len();
+    let state = BatchState {
+        f,
+        ranges: &ranges,
+        next: AtomicUsize::new(0),
+        aborted: AtomicBool::new(false),
+        results: Mutex::new((0..k).map(|_| None).collect()),
+        panic: Mutex::new(None),
+    };
+    let helpers = k.saturating_sub(1);
+    if helpers > 0 {
+        let p = pool();
+        ensure_workers(helpers);
+        let batch_id = p.next_batch.fetch_add(1, Ordering::SeqCst);
+        let ctl = Arc::new(BatchCtl { running: Mutex::new(0), done_cv: Condvar::new() });
+        {
+            let mut q = p.queue.lock().unwrap_or_else(|e| e.into_inner());
+            for _ in 0..helpers {
+                let sref: &BatchState<'_, T, F> = &state;
+                let task: Box<dyn FnOnce() + Send + '_> = Box::new(move || sref.run_jobs());
+                // SAFETY: the task borrows `state`/`ranges`/`f` from this
+                // stack frame. We do not return until every queued copy is
+                // either removed from the queue (revocation below, under
+                // the queue lock) or finished running (`running == 0`), so
+                // no borrow outlives the frame.
+                let task: Task = unsafe { std::mem::transmute(task) };
+                q.push_back(QueueEntry { batch: batch_id, ctl: ctl.clone(), task });
+            }
+        }
+        p.queue_cv.notify_all();
+        // The caller is an executor too — progress never waits on a worker.
+        state.run_jobs();
+        // Revoke helpers that never started…
+        {
+            let mut q = p.queue.lock().unwrap_or_else(|e| e.into_inner());
+            q.retain(|e| e.batch != batch_id);
+        }
+        // …and wait out the ones in flight (they hold borrows of `state`).
+        let mut running = ctl.running.lock().unwrap_or_else(|e| e.into_inner());
+        while *running > 0 {
+            running = ctl.done_cv.wait(running).unwrap_or_else(|e| e.into_inner());
+        }
+    } else {
+        state.run_jobs();
+    }
+    if let Some(payload) = state.panic.lock().unwrap_or_else(|e| e.into_inner()).take() {
+        std::panic::resume_unwind(payload);
+    }
+    let results = state.results.into_inner().unwrap_or_else(|e| e.into_inner());
+    results.into_iter().map(|r| r.expect("all ranges completed")).collect()
+}
+
+// ---------------------------------------------------------------------------
+// public primitives (API unchanged from the scoped-spawn pool)
+// ---------------------------------------------------------------------------
+
 /// Split `0..n` into one contiguous range per worker, run `f` on each,
 /// and return the results in range order. `nthreads == 1` (or `n <= 1`)
-/// runs `f(0..n)` on the caller's thread.
+/// runs `f(0..n)` on the caller's thread without touching the pool.
 pub fn par_chunks_with<T: Send>(
     nthreads: usize,
     n: usize,
@@ -111,18 +334,11 @@ pub fn par_chunks_with<T: Send>(
         return vec![f(0..n)];
     }
     let chunk = n.div_ceil(nthreads);
-    std::thread::scope(|s| {
-        let f = &f;
-        let handles: Vec<_> = (0..nthreads)
-            .map(|t| (t * chunk, ((t + 1) * chunk).min(n)))
-            .filter(|&(lo, hi)| lo < hi)
-            .map(|(lo, hi)| s.spawn(move || f(lo..hi)))
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().unwrap_or_else(|p| std::panic::resume_unwind(p)))
-            .collect()
-    })
+    let ranges: Vec<Range<usize>> = (0..nthreads)
+        .map(|t| (t * chunk).min(n)..((t + 1) * chunk).min(n))
+        .filter(|r| !r.is_empty())
+        .collect();
+    run_batch(ranges, &f)
 }
 
 /// [`par_chunks_with`] at the resolved global thread count.
@@ -199,7 +415,7 @@ mod tests {
 
     #[test]
     fn par_rows_deterministic_placement() {
-        let _lock = OVERRIDE_LOCK.lock().unwrap();
+        let _lock = OVERRIDE_LOCK.lock().unwrap_or_else(|p| p.into_inner());
         for nt in [1usize, 2, 4, 9] {
             let _g = override_threads(nt);
             let out = par_rows(57, |i| i * i);
@@ -220,7 +436,7 @@ mod tests {
 
     #[test]
     fn par_blocks_order_is_thread_count_invariant() {
-        let _lock = OVERRIDE_LOCK.lock().unwrap();
+        let _lock = OVERRIDE_LOCK.lock().unwrap_or_else(|p| p.into_inner());
         let mut seen: Option<Vec<(usize, usize)>> = None;
         for nt in [1usize, 3, 8] {
             let _g = override_threads(nt);
@@ -256,8 +472,21 @@ mod tests {
     }
 
     #[test]
+    fn panic_in_every_range_still_propagates_one_payload() {
+        // All executors hit panics concurrently; exactly one payload
+        // wins, the batch aborts, and the pool stays usable afterwards.
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            par_chunks_with(4, 8, |_| -> usize { panic!("everybody panics") })
+        }));
+        assert!(caught.is_err());
+        // pool still serves fresh batches after an aborted one
+        let out = par_chunks_with(4, 8, |r| r.len());
+        assert_eq!(out.iter().sum::<usize>(), 8);
+    }
+
+    #[test]
     fn override_guard_restores() {
-        let _lock = OVERRIDE_LOCK.lock().unwrap();
+        let _lock = OVERRIDE_LOCK.lock().unwrap_or_else(|p| p.into_inner());
         let base = current_threads();
         {
             let _g = override_threads(3);
@@ -270,5 +499,60 @@ mod tests {
         }
         assert_eq!(current_threads(), base);
         assert!(current_threads() >= 1);
+    }
+
+    /// Warm the pool to its hard cap so no concurrently running test can
+    /// grow it between a test's measurements (tests share the process).
+    fn warm_to_cap() -> usize {
+        let n = 4 * (MAX_WORKERS + 1); // one range per requested worker
+        let out = par_chunks_with(MAX_WORKERS + 1, n, |r| r.len());
+        assert_eq!(out.iter().sum::<usize>(), n);
+        let warm = spawned_workers();
+        assert_eq!(warm, MAX_WORKERS, "warm-up should reach the cap");
+        warm
+    }
+
+    #[test]
+    fn workers_are_reused_across_sequential_calls() {
+        let _lock = OVERRIDE_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let _g = override_threads(4);
+        let warm = warm_to_cap();
+        // a hundred more dispatches must not create a single new thread
+        for _ in 0..100 {
+            let out = par_chunks(777, |r| r.len());
+            assert_eq!(out.iter().sum::<usize>(), 777);
+        }
+        assert_eq!(spawned_workers(), warm, "pool leaked workers across calls");
+    }
+
+    #[test]
+    fn nested_parallel_calls_complete() {
+        let _lock = OVERRIDE_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let _g = override_threads(4);
+        // outer×inner fan-out: inner calls run on pool workers and must
+        // not deadlock even when every worker is busy with outer ranges
+        let out = par_chunks(8, |outer| {
+            outer
+                .map(|i| {
+                    let inner = par_chunks_with(4, 50, |r| r.map(|j| i + j).sum::<usize>());
+                    inner.iter().sum::<usize>()
+                })
+                .sum::<usize>()
+        });
+        let total: usize = out.iter().sum();
+        let want: usize = (0..8).map(|i| 50 * i + 50 * 49 / 2).sum();
+        assert_eq!(total, want);
+    }
+
+    #[test]
+    fn serial_path_runs_whole_range_on_caller() {
+        let _lock = OVERRIDE_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let _g = override_threads(1);
+        let caller = std::thread::current().id();
+        let out = par_chunks(10_000, |r| {
+            assert_eq!(std::thread::current().id(), caller, "serial must stay inline");
+            r.len()
+        });
+        assert_eq!(out, vec![10_000]);
     }
 }

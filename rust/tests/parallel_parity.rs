@@ -1,7 +1,11 @@
 //! Serial ↔ parallel parity: every hot path that runs on the shared
-//! worker pool (`leverkrr::util::pool`) must produce **bit-identical**
-//! results at 1 and 4 threads — including shapes that don't divide evenly
-//! into chunks and inputs smaller than the worker count.
+//! persistent worker pool (`leverkrr::util::pool`) — including everything
+//! rebased onto the blocked distance/Gram engine (`linalg::blocked`):
+//! kernel matrices, KDE (exact/subsampled/grid), k-means assignment,
+//! leverage scoring, Nyström fits, and the streaming dictionary — must
+//! produce **bit-identical** results at 1 and 4 threads, including shapes
+//! that don't divide evenly into chunks/tiles and inputs smaller than the
+//! worker count.
 //!
 //! The pool's thread override is process-global, so every test here
 //! serializes on one lock while it flips the count.
@@ -119,6 +123,92 @@ fn kernel_matrix_bit_identical_across_threads() {
         let (s1, s4) = at_1_and_4(|| k.matrix_sym(&x));
         assert_eq!(s1.data, s4.data, "{spec:?} matrix_sym diverged");
     }
+}
+
+#[test]
+fn blocked_engine_bit_identical_across_threads() {
+    use leverkrr::linalg::blocked;
+    let mut rng = Rng::seed_from_u64(110);
+    // shapes straddling the tile width and the parallel-dispatch threshold
+    for &(n, m, d) in &[(5usize, 3usize, 2usize), (130, 129, 4), (300, 257, 3)] {
+        let x = random_mat(&mut rng, n, d);
+        let y = random_mat(&mut rng, m, d);
+        let (a1, a4) = at_1_and_4(|| blocked::sqdist_matrix(&x, &y));
+        assert_eq!(a1.data, a4.data, "sqdist_matrix ({n},{m},{d}) diverged");
+        let (r1, r4) = at_1_and_4(|| blocked::row_reduce(&x, &y, |r2| (-r2).exp()));
+        assert_eq!(r1, r4, "row_reduce ({n},{m},{d}) diverged");
+        let (s1, s4) = at_1_and_4(|| blocked::map_matrix_sym(&x, |r2| (-r2).exp()));
+        assert_eq!(s1.data, s4.data, "map_matrix_sym ({n},{d}) diverged");
+        let q: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let (v1, v4) = at_1_and_4(|| blocked::map_row(&q, &y, |r2| (-r2).exp()));
+        assert_eq!(v1, v4, "map_row ({m},{d}) diverged");
+        let (n1, n4) = at_1_and_4(|| blocked::nearest_rows(&x, &y));
+        assert_eq!(n1, n4, "nearest_rows ({n},{m},{d}) diverged");
+    }
+}
+
+#[test]
+fn kmeans_bit_identical_across_threads() {
+    // End-to-end Lloyd's (seeding + blocked assignment + updates):
+    // reseed the Rng per run so both thread counts see the same draws.
+    let mut rng = Rng::seed_from_u64(111);
+    let phi = random_mat(&mut rng, 500, 6);
+    let (a, b) = at_1_and_4(|| {
+        let mut r = Rng::seed_from_u64(17);
+        leverkrr::kmethods::kmeans::kmeans(&phi, 5, 40, &mut r)
+    });
+    assert_eq!(a.assignments, b.assignments, "k-means assignments diverged");
+    assert_eq!(a.centers.data, b.centers.data, "k-means centers diverged");
+    assert_eq!(a.inertia.to_bits(), b.inertia.to_bits(), "k-means inertia diverged");
+}
+
+#[test]
+fn dictionary_rls_bit_identical_across_threads() {
+    let mut rng = Rng::seed_from_u64(112);
+    let ds = leverkrr::data::dist1d(leverkrr::data::Dist1d::Bimodal, 260, &mut rng);
+    let k = Kernel::new(KernelSpec::Matern { nu: 1.5, a: 1.0 });
+    let lam = leverkrr::krr::lambda::fig2(ds.n());
+    let dict: Vec<usize> = (0..40).map(|i| i * 6).collect();
+    let (s1, s4) =
+        at_1_and_4(|| leverkrr::leverage::rls::dictionary_rls(&ds.x, &k, lam, &dict, None));
+    assert_eq!(s1, s4, "dictionary RLS diverged");
+    let subset: Vec<usize> = (0..130).map(|i| i * 2).collect();
+    let (t1, t4) = at_1_and_4(|| {
+        leverkrr::leverage::rls::dictionary_rls(&ds.x, &k, lam, &dict, Some(&subset))
+    });
+    assert_eq!(t1, t4, "subset dictionary RLS diverged");
+}
+
+#[test]
+fn kde_grid_bit_identical_across_threads() {
+    // the grid convolution is sharded across the pool per axis; both the
+    // superblock and off-column fan-outs must stay bitwise invariant
+    let mut rng = Rng::seed_from_u64(113);
+    let ds = leverkrr::data::bimodal3(3000, 0.4, &mut rng);
+    let h = kde::bandwidth::fig1(ds.n());
+    let (g1, g4) = at_1_and_4(|| kde::grid(&ds.x, h).expect("grid feasible in 3-d"));
+    assert_eq!(g1, g4, "grid KDE diverged");
+}
+
+#[test]
+fn stream_dictionary_k_vec_bit_identical_across_threads() {
+    use leverkrr::stream::OnlineDictionary;
+    let mut rng = Rng::seed_from_u64(114);
+    let d = 20;
+    let n_atoms = 250; // m·d above the row-path parallel threshold
+    let points = random_mat(&mut rng, n_atoms, d);
+    let query: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+    let k = Kernel::new(KernelSpec::Gaussian { sigma: 2.0 });
+    let (v1, v4) = at_1_and_4(|| {
+        let mut dict = OnlineDictionary::new(k.clone(), n_atoms, 0.001);
+        for i in 0..n_atoms {
+            dict.offer(points.row(i), i as u64);
+        }
+        (dict.len(), dict.k_vec(&query), dict.novelty(&query))
+    });
+    assert_eq!(v1.0, v4.0, "dictionary replay diverged in size");
+    assert_eq!(v1.1, v4.1, "k_vec diverged");
+    assert_eq!(v1.2.to_bits(), v4.2.to_bits(), "novelty diverged");
 }
 
 #[test]
