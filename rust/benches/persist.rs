@@ -1,0 +1,11 @@
+//! `cargo bench --bench persist -- [--full] [--ns a,b,c] [--reps k]`
+//! Artifact save/load and stream checkpoint/restore latency vs n, m;
+//! writes machine-readable `BENCH_persist.json`.
+//! See `leverkrr::bench_harness::experiments::persist` for the setting.
+fn main() {
+    let opts = leverkrr::bench_harness::ExpOptions::parse_cli(
+        "persist",
+        "persistence (save/load/restore) experiment driver",
+    );
+    leverkrr::bench_harness::experiments::persist::run(&opts);
+}

@@ -8,12 +8,14 @@
 //! | [`fig3::run`] | Figure 3 (Gaussian kernels, growing d) | §B.4 |
 //! | [`perf::run`] | §Perf hot-path microbenches | EXPERIMENTS.md §Perf |
 //! | [`stream::run`] | streaming update latency vs periodic refit | ROADMAP §streaming |
+//! | [`persist::run`] | artifact save/load/restore latency vs n, m | ROADMAP §persistence |
 
 pub mod ablation;
 pub mod fig1;
 pub mod fig2;
 pub mod fig3;
 pub mod perf;
+pub mod persist;
 pub mod stream;
 pub mod table1;
 

@@ -1,0 +1,158 @@
+//! Persistence microbenchmarks — artifact size and save/load/restore
+//! latency as n (training points) and m (landmarks / dictionary atoms)
+//! grow.
+//!
+//! Reported per n:
+//!
+//! * `model_encode` / `model_decode` — pure codec cost (bytes in memory);
+//! * `model_save` / `model_load` — through the store (temp file + atomic
+//!   rename, manifest update, CRC verification);
+//! * `checkpoint_save` / `checkpoint_restore` — the full stream
+//!   coordinator freeze/thaw (the crash-recovery path);
+//! * artifact sizes in bytes (model and checkpoint).
+//!
+//! Every row lands in `BENCH_perf.json`-shaped machine-readable output —
+//! `BENCH_persist.json` with name/n/m/d/threads/ns_per_op (+ bytes) — so
+//! the persistence cost trajectory is trackable across PRs. The headline
+//! expectation: save/load scale with the *artifact* (O(m²)), not with n.
+
+use crate::bench_harness::{bench_reps, timing_row, ExpOptions};
+use crate::coordinator::{fit_with_backend, FitConfig};
+use crate::data;
+use crate::persist::{codec, Store};
+use crate::runtime::Backend;
+use crate::stream::{replay, CheckpointPolicy, RefreshPolicy, StreamConfig};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+pub fn default_ns(full: bool) -> Vec<usize> {
+    if full {
+        vec![1_000, 4_000, 16_000]
+    } else {
+        vec![500, 2_000]
+    }
+}
+
+/// Machine-readable result accumulator → `BENCH_persist.json`.
+struct PersistLog {
+    rows: Vec<Json>,
+}
+
+impl PersistLog {
+    fn new() -> Self {
+        PersistLog { rows: Vec::new() }
+    }
+
+    fn rec(&mut self, name: &str, n: usize, m: usize, d: usize, secs: f64, bytes: u64) {
+        self.rows.push(Json::obj(vec![
+            ("name", Json::Str(name.into())),
+            ("n", Json::Num(n as f64)),
+            ("m", Json::Num(m as f64)),
+            ("d", Json::Num(d as f64)),
+            ("threads", Json::Num(crate::util::pool::current_threads() as f64)),
+            ("ns_per_op", Json::Num(secs * 1e9)),
+            ("bytes", Json::Num(bytes as f64)),
+        ]));
+    }
+
+    fn write(self, opts: &ExpOptions) {
+        let doc = Json::obj(vec![
+            ("experiment", Json::Str("persist".into())),
+            ("full", Json::Bool(opts.full)),
+            ("reps", Json::Num(opts.reps as f64)),
+            ("seed", Json::Num(opts.seed as f64)),
+            ("threads", Json::Num(crate::util::pool::current_threads() as f64)),
+            ("results", Json::Arr(self.rows)),
+        ]);
+        match std::fs::write("BENCH_persist.json", doc.to_string_pretty()) {
+            Ok(()) => println!("\nwrote BENCH_persist.json"),
+            Err(e) => eprintln!("\ncould not write BENCH_persist.json: {e}"),
+        }
+    }
+}
+
+pub fn run(opts: &ExpOptions) {
+    let _pool = opts.pool_guard();
+    let reps = opts.reps.max(3);
+    let ns = opts.ns.clone().unwrap_or_else(|| default_ns(opts.full));
+    let mut log = PersistLog::new();
+    println!("# bench-persist — artifact save/load/restore latency (reps={reps})\n");
+    let dir = std::env::temp_dir().join(format!("leverkrr-bench-persist-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = Store::open(&dir).expect("open bench store");
+
+    for &n in &ns {
+        let mut rng = Rng::seed_from_u64(opts.seed + n as u64);
+        let ds = data::dist1d(data::Dist1d::Bimodal, n, &mut rng);
+        let cfg = FitConfig::default_for(&ds);
+        let model = fit_with_backend(&ds, &cfg, Backend::Native).expect("bench fit");
+        let (m, d) = (model.nystrom.m(), ds.d());
+
+        // pure codec
+        let bytes = codec::encode_model(&model);
+        let model_bytes = bytes.len() as u64;
+        let t = bench_reps(1, reps, || {
+            std::hint::black_box(codec::encode_model(&model));
+        });
+        println!("{}", timing_row(&format!("model encode (n={n}, m={m})"), &t));
+        log.rec("model_encode", n, m, d, t[0], model_bytes);
+        let t = bench_reps(1, reps, || {
+            std::hint::black_box(codec::decode_model(&bytes).unwrap());
+        });
+        println!("{}", timing_row(&format!("model decode (n={n}, m={m})"), &t));
+        log.rec("model_decode", n, m, d, t[0], model_bytes);
+
+        // through the store (each save creates a version; gc keeps the dir
+        // from growing across reps)
+        let name = format!("bench-{n}");
+        // gc happens after the timing loop so only the save itself (write
+        // + fsync + rename + manifest) lands in the measured region
+        let t = bench_reps(1, reps, || {
+            store.save_model(&name, &model).expect("bench save");
+        });
+        store.gc(&name, 1).expect("bench gc");
+        println!("{}", timing_row(&format!("model save  (n={n}, m={m})"), &t));
+        log.rec("model_save", n, m, d, t[0], model_bytes);
+        let t = bench_reps(1, reps, || {
+            std::hint::black_box(store.load_model(&name, None).expect("bench load"));
+        });
+        println!("{}", timing_row(&format!("model load  (n={n}, m={m})"), &t));
+        log.rec("model_load", n, m, d, t[0], model_bytes);
+
+        // stream checkpoint freeze/thaw at a fixed budget
+        let scfg = StreamConfig {
+            kernel: cfg.kernel,
+            mu: n as f64 * cfg.lambda,
+            budget: 128,
+            accept_threshold: crate::stream::DEFAULT_ACCEPT_THRESHOLD,
+            refresh: RefreshPolicy { every: 0, drift: 0.0 },
+            threads: opts.threads,
+            checkpoint: CheckpointPolicy::default(),
+        };
+        let (sc, _) = replay(&ds, &scfg, 0);
+        let md = sc.dict_len();
+        let chk_bytes = codec::encode_checkpoint(&sc.checkpoint());
+        let checkpoint_bytes = chk_bytes.len() as u64;
+        let ckpt_name = format!("bench-{n}-ckpt");
+        let t = bench_reps(1, reps, || {
+            store.save_checkpoint(&ckpt_name, &sc.checkpoint()).expect("bench ckpt save");
+        });
+        store.gc(&ckpt_name, 1).expect("bench gc");
+        println!("{}", timing_row(&format!("ckpt save   (n={n}, dict={md})"), &t));
+        log.rec("checkpoint_save", n, md, d, t[0], checkpoint_bytes);
+        let t = bench_reps(1, reps, || {
+            let (_, chk) = store.load_checkpoint(&ckpt_name, None).expect("bench ckpt load");
+            std::hint::black_box(crate::stream::StreamCoordinator::restore(chk));
+        });
+        println!("{}", timing_row(&format!("ckpt restore(n={n}, dict={md})"), &t));
+        log.rec("checkpoint_restore", n, md, d, t[0], checkpoint_bytes);
+        println!(
+            "    artifact sizes: model {:.1} KiB, checkpoint {:.1} KiB\n",
+            model_bytes as f64 / 1024.0,
+            checkpoint_bytes as f64 / 1024.0
+        );
+    }
+
+    let _ = std::fs::remove_dir_all(&dir);
+    log.write(opts);
+}

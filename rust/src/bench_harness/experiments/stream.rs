@@ -78,6 +78,7 @@ pub fn run(opts: &ExpOptions) -> Vec<Row> {
             accept_threshold: DEFAULT_ACCEPT_THRESHOLD,
             refresh: RefreshPolicy { every: 64, drift: 0.0 },
             threads: opts.threads,
+            checkpoint: crate::stream::CheckpointPolicy::default(),
         };
         let (sc, report) = replay(&ds, &scfg, 0);
         let snap = sc.model().snapshot();

@@ -13,14 +13,27 @@
 //!   "kde_bandwidth": 0.031,
 //!   "threads": 8,
 //!   "serve": {"max_batch": 256, "max_wait_ms": 4, "workers": 4},
-//!   "stream": {"every": 64, "drift": 0.25}
+//!   "stream": {"every": 64, "drift": 0.25, "serve": true, "budget": 128},
+//!   "persist": {"dir": "models", "name": "prod", "checkpoint_every": 256,
+//!               "keep_last": 4, "warm_start": true}
 //! }
 //! ```
 //!
 //! The optional `stream` section sets the [`RefreshPolicy`] used by the
 //! streaming subsystem (`leverkrr stream`, [`crate::stream`]): publish a
 //! fresh model every `every` arrivals and/or on a relative prequential
-//! error drift of `drift`.
+//! error drift of `drift`. With `"serve": true`, `leverkrr run` drives
+//! the stream coordinator end to end — ingest and serve in one process,
+//! hot-swapping per the refresh policy — instead of the one-shot batch
+//! fit (`budget` / `mu` / `accept_threshold` tune the online
+//! dictionary).
+//!
+//! The optional `persist` section wires the artifact store
+//! ([`crate::persist`]) through the run: the fitted (or final streamed)
+//! model is exported under `name`, stream checkpoints are written every
+//! `checkpoint_every` arrivals under `<name>.ckpt`, a restart
+//! warm-starts from the latest checkpoint (`warm_start`, default true),
+//! and `keep_last` versions are retained per artifact (0 = keep all).
 
 use super::{FitConfig, ServerConfig};
 use crate::data::Dataset;
@@ -30,6 +43,42 @@ use crate::stream::RefreshPolicy;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use anyhow::{anyhow, Context, Result};
+
+/// `persist` document section: artifact-store wiring for a run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PersistSection {
+    /// Artifact-store root (None → persistence off).
+    pub dir: Option<String>,
+    /// Artifact name the model is exported under (checkpoints go to
+    /// `<name>.ckpt`).
+    pub name: String,
+    /// Stream-checkpoint period in arrivals (0 disables).
+    pub checkpoint_every: usize,
+    /// Versions kept per artifact by post-run gc (0 = keep all).
+    pub keep_last: usize,
+    /// Restore the latest checkpoint before streaming (default true).
+    pub warm_start: bool,
+}
+
+impl Default for PersistSection {
+    fn default() -> Self {
+        PersistSection {
+            dir: None,
+            name: "model".to_string(),
+            checkpoint_every: 0,
+            keep_last: 0,
+            warm_start: true,
+        }
+    }
+}
+
+impl PersistSection {
+    /// Artifact name stream checkpoints are versioned under (kept apart
+    /// from the model name so model/checkpoint versions never collide).
+    pub fn checkpoint_name(&self) -> String {
+        format!("{}.ckpt", self.name)
+    }
+}
 
 /// Parsed config document.
 #[derive(Clone, Debug)]
@@ -47,6 +96,17 @@ pub struct RunConfig {
     pub serve: ServerConfig,
     /// Streaming refresh policy (`stream` document section).
     pub refresh: RefreshPolicy,
+    /// `stream.serve`: run ingest + serve end to end through the stream
+    /// coordinator instead of the one-shot batch fit.
+    pub stream_serve: bool,
+    /// `stream.budget`: online dictionary budget (default: m_sub rule).
+    pub stream_budget: Option<usize>,
+    /// `stream.mu`: absolute streaming ridge (default: n·λ).
+    pub stream_mu: Option<f64>,
+    /// `stream.accept_threshold`: dictionary admission threshold.
+    pub stream_accept: Option<f64>,
+    /// `persist` document section.
+    pub persist: PersistSection,
 }
 
 impl RunConfig {
@@ -103,7 +163,70 @@ impl RunConfig {
                 every: stream.get("every").as_usize().unwrap_or(default_refresh.every),
                 drift: stream.get("drift").as_f64().unwrap_or(default_refresh.drift),
             },
+            stream_serve: stream.get("serve").as_bool().unwrap_or(false),
+            stream_budget: stream.get("budget").as_usize(),
+            stream_mu: stream.get("mu").as_f64(),
+            stream_accept: stream.get("accept_threshold").as_f64(),
+            persist: {
+                let p = doc.get("persist");
+                let d = PersistSection::default();
+                PersistSection {
+                    dir: p.get("dir").as_str().map(|s| s.to_string()),
+                    name: p.get("name").as_str().unwrap_or(&d.name).to_string(),
+                    checkpoint_every: p
+                        .get("checkpoint_every")
+                        .as_usize()
+                        .unwrap_or(d.checkpoint_every),
+                    keep_last: p.get("keep_last").as_usize().unwrap_or(d.keep_last),
+                    warm_start: p.get("warm_start").as_bool().unwrap_or(d.warm_start),
+                }
+            },
         })
+    }
+
+    /// Materialize the [`crate::stream::StreamConfig`] for a
+    /// `stream.serve` run: batch paper rules filled in, document
+    /// overrides applied, checkpoint policy wired from the `persist`
+    /// section.
+    pub fn stream_config(&self, ds: &Dataset) -> crate::stream::StreamConfig {
+        let fit = self.fit_config(ds);
+        let mut sc = crate::stream::StreamConfig::from_fit(&fit, ds.n());
+        if let Some(b) = self.stream_budget {
+            sc.budget = b.max(1);
+        }
+        // invalid document values fall back to the derived defaults (with
+        // a warning) instead of being ingested: the library asserts on
+        // them, and the checkpoint decoder would reject any checkpoint
+        // written with an out-of-range config — a run must never write
+        // artifacts it cannot restore
+        if let Some(mu) = self.stream_mu {
+            if mu > 0.0 && mu.is_finite() {
+                sc.mu = mu;
+            } else {
+                eprintln!("config: ignoring stream.mu={mu} (must be positive); using {}", sc.mu);
+            }
+        }
+        if let Some(a) = self.stream_accept {
+            if (0.0..1.0).contains(&a) {
+                sc.accept_threshold = a;
+            } else {
+                eprintln!(
+                    "config: ignoring stream.accept_threshold={a} (must be in [0, 1)); using {}",
+                    sc.accept_threshold
+                );
+            }
+        }
+        if self.persist.dir.is_some() && self.persist.checkpoint_every > 0 {
+            sc.checkpoint = crate::stream::CheckpointPolicy {
+                every: self.persist.checkpoint_every,
+                dir: self.persist.dir.clone(),
+                name: self.persist.checkpoint_name(),
+                // the run's keep_last bounds periodic checkpoints too
+                // (0 = keep all, same semantics as the gc on exit)
+                keep_last: self.persist.keep_last,
+            };
+        }
+        sc
     }
 
     /// Materialize the dataset described by the config.
@@ -215,6 +338,56 @@ mod tests {
         // absent section → defaults
         let cfg = RunConfig::from_json_str(r#"{"data": {"name": "uniform1"}}"#).unwrap();
         assert_eq!(cfg.refresh, RefreshPolicy::default());
+    }
+
+    #[test]
+    fn stream_serve_and_persist_sections_parse() {
+        let cfg = RunConfig::from_json_str(
+            r#"{
+              "data": {"name": "uniform1", "n": 300},
+              "stream": {"every": 32, "serve": true, "budget": 48, "mu": 0.9,
+                         "accept_threshold": 0.02},
+              "persist": {"dir": "/tmp/models", "name": "prod",
+                          "checkpoint_every": 100, "keep_last": 3,
+                          "warm_start": false}
+            }"#,
+        )
+        .unwrap();
+        assert!(cfg.stream_serve);
+        assert_eq!(cfg.stream_budget, Some(48));
+        assert_eq!(cfg.persist.dir.as_deref(), Some("/tmp/models"));
+        assert_eq!(cfg.persist.name, "prod");
+        assert_eq!(cfg.persist.checkpoint_name(), "prod.ckpt");
+        assert_eq!(cfg.persist.checkpoint_every, 100);
+        assert_eq!(cfg.persist.keep_last, 3);
+        assert!(!cfg.persist.warm_start);
+        let ds = cfg.build_dataset().unwrap();
+        let sc = cfg.stream_config(&ds);
+        assert_eq!(sc.budget, 48);
+        assert_eq!(sc.mu, 0.9);
+        assert_eq!(sc.accept_threshold, 0.02);
+        assert_eq!(sc.refresh.every, 32);
+        assert_eq!(sc.checkpoint.every, 100);
+        assert_eq!(sc.checkpoint.dir.as_deref(), Some("/tmp/models"));
+        assert_eq!(sc.checkpoint.name, "prod.ckpt");
+        assert_eq!(sc.checkpoint.keep_last, 3);
+        // absent sections → defaults (persistence off, batch path)
+        let cfg = RunConfig::from_json_str(r#"{"data": {"name": "uniform1"}}"#).unwrap();
+        assert!(!cfg.stream_serve);
+        assert_eq!(cfg.persist, PersistSection::default());
+        let ds = cfg.build_dataset().unwrap();
+        assert_eq!(cfg.stream_config(&ds).checkpoint.every, 0);
+        // out-of-range document values fall back to derived defaults
+        // instead of producing an un-restorable checkpoint config
+        let cfg = RunConfig::from_json_str(
+            r#"{"data": {"name": "uniform1", "n": 200},
+                "stream": {"serve": true, "mu": -1.0, "accept_threshold": 1.5}}"#,
+        )
+        .unwrap();
+        let ds = cfg.build_dataset().unwrap();
+        let sc = cfg.stream_config(&ds);
+        assert!(sc.mu > 0.0 && sc.mu.is_finite());
+        assert!((0.0..1.0).contains(&sc.accept_threshold));
     }
 
     #[test]

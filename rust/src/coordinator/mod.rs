@@ -20,7 +20,7 @@
 pub mod config;
 pub mod server;
 
-pub use config::RunConfig;
+pub use config::{PersistSection, RunConfig};
 pub use server::{Prediction, Server, ServerClosed, ServerConfig};
 
 use crate::data::Dataset;
@@ -111,6 +111,10 @@ pub struct FittedModel {
     pub backend: Backend,
     /// Normalized sampling distribution used for the landmarks.
     pub q: Vec<f64>,
+    /// Training points behind this model (batch n, or the stream's
+    /// `n_seen` for a snapshot) — provenance; `q.len()` cannot stand in
+    /// for it because a stream snapshot's q has one weight per atom.
+    pub n_train: u64,
 }
 
 impl FittedModel {
@@ -120,6 +124,30 @@ impl FittedModel {
 
     pub fn predict_one(&self, x: &[f64]) -> f64 {
         self.nystrom.predict_one(x)
+    }
+
+    /// Persist into an artifact store as a new version of `name`;
+    /// returns the manifest entry. The artifact captures the servable
+    /// math (kernel, landmarks, β, λ, q) with exact `f64` bit patterns —
+    /// `load` reproduces predictions bit-for-bit.
+    pub fn save(
+        &self,
+        store: &crate::persist::Store,
+        name: &str,
+    ) -> Result<crate::persist::ArtifactMeta, crate::persist::PersistError> {
+        store.save_model(name, self)
+    }
+
+    /// Load from an artifact store (`version: None` → latest). The
+    /// loaded model always serves through the native backend; corrupt
+    /// artifacts yield a typed [`crate::persist::PersistError`] and a
+    /// `persist.load.corrupt` count in [`crate::metrics::global`].
+    pub fn load(
+        store: &crate::persist::Store,
+        name: &str,
+        version: Option<u64>,
+    ) -> Result<FittedModel, crate::persist::PersistError> {
+        store.load_model(name, version).map(|(_, m)| m)
     }
 }
 
@@ -188,7 +216,7 @@ pub fn fit_with_backend(
         backend: backend.name(),
         method: estimator.name(),
     };
-    Ok(FittedModel { nystrom, report, backend, q })
+    Ok(FittedModel { nystrom, report, backend, q, n_train: ds.n() as u64 })
 }
 
 /// Fit with the auto backend (XLA artifacts if present, else native).

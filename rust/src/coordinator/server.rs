@@ -93,6 +93,25 @@ impl Server {
         Self::start_with_handle(ModelHandle::new(model), cfg)
     }
 
+    /// Cold-start a serving process straight from a persisted artifact:
+    /// load `name` (latest version when `version` is None) from the
+    /// store and serve it through a fresh [`ModelHandle`] — zero refit
+    /// work, and the served predictions are bit-identical to the process
+    /// that exported the model. Corrupt artifacts are rejected with the
+    /// typed error (and counted as `persist.load.corrupt`) before any
+    /// thread is spawned.
+    pub fn start_from_artifact(
+        store: &crate::persist::Store,
+        name: &str,
+        version: Option<u64>,
+        cfg: ServerConfig,
+    ) -> Result<Server, crate::persist::PersistError> {
+        let (v, model) = store.load_model(name, version)?;
+        let server = Self::start(Arc::new(model), cfg);
+        server.metrics.gauge_set("serve.artifact_version", v as f64);
+        Ok(server)
+    }
+
     /// Serve whatever the handle currently holds; publishes through the
     /// same handle hot-swap the served model.
     pub fn start_with_handle(handle: ModelHandle, cfg: ServerConfig) -> Server {
@@ -371,6 +390,40 @@ mod tests {
         let reg = server.shutdown();
         assert_eq!(reg.counter("serve.requests"), 3);
         assert_eq!(reg.counter("serve.bad_dimension"), 1);
+    }
+
+    #[test]
+    fn start_from_artifact_serves_saved_model_bitwise() {
+        let dir = std::env::temp_dir().join(format!(
+            "leverkrr-server-artifact-test-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = crate::persist::Store::open(&dir).unwrap();
+        let m = model();
+        m.save(&store, "served").unwrap();
+        let server =
+            Server::start_from_artifact(&store, "served", None, ServerConfig::default())
+                .unwrap();
+        for &x in &[0.15, 0.6, 0.88] {
+            let got = server.try_predict(&[x]).unwrap();
+            assert_eq!(
+                got.value.to_bits(),
+                m.predict_one(&[x]).to_bits(),
+                "served prediction at {x} must be bit-identical to the exporter"
+            );
+        }
+        assert_eq!(server.metrics.gauge("serve.artifact_version"), 1.0);
+        server.shutdown();
+        // a missing artifact is a typed error, not a panic
+        assert!(Server::start_from_artifact(
+            &store,
+            "absent",
+            None,
+            ServerConfig::default()
+        )
+        .is_err());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

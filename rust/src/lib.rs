@@ -86,7 +86,42 @@
 //!   update/append/delete sweeps (a downdate completes the routine set
 //!   for future decayed-stream support), and refresh-policy-driven
 //!   publishing into the server.
+//! * [`persist`] — model persistence: binary codec + versioned artifact
+//!   store (see "Persistence" below).
 //! * [`bench_harness`] — timing harness used by `rust/benches/*`.
+//!
+//! ## Persistence
+//!
+//! One fit can feed many serving processes, and a stream can survive a
+//! restart. [`persist`] freezes models and stream state to compact
+//! binary artifacts and brings them back **bit-identically** — the
+//! persistence extension of the determinism contract above:
+//!
+//! ```text
+//!   <dir>/<name>/<version>.lkrr            <dir>/<name>/MANIFEST.json
+//!   ┌──────────────────────────────┐       name, version, kind,
+//!   │ "LKRR" magic │ ver u16 │ kind │      created-at, n/m/d, kernel,
+//!   ├──────────────────────────────┤       checksum (per artifact)
+//!   │ tag "META" │ len │ payload │ CRC32   writes: temp file + atomic
+//!   │ tag "MODL" │ len │ payload │ CRC32   rename, gc(keep_last_k)
+//!   │ …  (checkpoints add CFG/PRGS) │
+//!   └──────────────────────────────┘       every f64 = exact bit pattern
+//! ```
+//!
+//! Compatibility: the magic is forever; the format version bumps on any
+//! layout change and readers reject *newer* files with a typed error
+//! while continuing to decode every version they ever shipped; unknown
+//! section tags are skipped (forward-compatible additions). Corruption
+//! (bit flip, truncation, foreign file) is always a typed
+//! [`persist::PersistError`] plus a `persist.load.corrupt` count in
+//! [`metrics::global`] — never a panic, never a half-decoded model.
+//!
+//! Entry points: `FittedModel::{save, load}`,
+//! [`coordinator::Server::start_from_artifact`] (cold-start serving with
+//! zero refit work), `StreamCoordinator::{checkpoint, restore}` with the
+//! periodic [`stream::CheckpointPolicy`], the `export` / `import` /
+//! `models` CLI subcommands, `stream --warm-start`, and the `persist`
+//! JSON config section.
 //!
 //! ## Quickstart
 //!
@@ -116,6 +151,7 @@ pub mod kmethods;
 pub mod runtime;
 pub mod coordinator;
 pub mod stream;
+pub mod persist;
 pub mod bench_harness;
 
 /// Convenience re-exports for examples and downstream users.
@@ -124,6 +160,9 @@ pub mod prelude {
     pub use crate::data::Dataset;
     pub use crate::kernels::{Kernel, KernelSpec};
     pub use crate::leverage::{LeverageEstimator, LeverageMethod};
-    pub use crate::stream::{RefreshPolicy, StreamConfig, StreamCoordinator};
+    pub use crate::persist::{PersistError, Store};
+    pub use crate::stream::{
+        CheckpointPolicy, RefreshPolicy, StreamCheckpoint, StreamConfig, StreamCoordinator,
+    };
     pub use crate::util::rng::Rng;
 }

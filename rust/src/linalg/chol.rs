@@ -83,8 +83,10 @@ fn chol_update_raw(l: &mut [f64], n: usize, start: usize, w: &mut [f64]) {
 #[derive(Clone, Debug)]
 pub struct Cholesky {
     /// L stored row-major in the lower triangle of an n×n buffer.
-    l: Vec<f64>,
-    n: usize,
+    /// (`pub(crate)` so `persist::codec` can round-trip the factor
+    /// bit-for-bit without refactoring on load.)
+    pub(crate) l: Vec<f64>,
+    pub(crate) n: usize,
     /// Jitter actually applied to the diagonal (0.0 if none was needed).
     pub jitter: f64,
 }

@@ -36,6 +36,9 @@ fn main() {
         "leverage" => cmd_leverage(&rest),
         "serve" => cmd_serve(&rest),
         "stream" => cmd_stream(&rest),
+        "export" => cmd_export(&rest),
+        "import" => cmd_import(&rest),
+        "models" => cmd_models(&rest),
         "gen-data" => cmd_gen_data(&rest),
         "bench-fig1" => {
             experiments::fig1::run(&exp_opts("bench-fig1", &rest));
@@ -65,6 +68,10 @@ fn main() {
             experiments::stream::run(&exp_opts("bench-stream", &rest));
             0
         }
+        "bench-persist" => {
+            experiments::persist::run(&exp_opts("bench-persist", &rest));
+            0
+        }
         "selftest" => cmd_selftest(),
         "--help" | "-h" | "help" => {
             print_usage();
@@ -91,7 +98,11 @@ commands:
   tune         cross-validated λ grid search over fixed landmarks
   leverage     estimate leverage scores, dump JSON
   serve        fit + run the dynamic-batching predict server demo
-  stream       replay a dataset as an arrival stream (online Nyström)
+  stream       replay a dataset as an arrival stream (online Nyström);
+               --warm-start resumes a persisted checkpoint
+  export       fit a model and save it into the versioned artifact store
+  import       load an artifact in a fresh process, verify + serve it
+  models       list / garbage-collect the artifact store
   gen-data     write a synthetic dataset (CSV)
   bench-fig1   Figure 1: runtime vs error trade-off (3-d bimodal)
   bench-table1 Table 1: leverage approximation accuracy (UCI-like)
@@ -100,6 +111,7 @@ commands:
   bench-perf   §Perf hot-path microbenches
   bench-ablation SA design-choice ablations
   bench-stream streaming update latency vs periodic full refit
+  bench-persist artifact save/load/checkpoint-restore latency vs n, m
   selftest     quick end-to-end sanity run"
     );
 }
@@ -325,7 +337,12 @@ fn cmd_stream(argv: &[String]) -> i32 {
     .flag("accept-threshold", "0.01", "dictionary admission threshold on δ/k(x,x)")
     .flag("refresh-every", "64", "publish every k arrivals (0 disables)")
     .flag("drift", "0.25", "publish on relative prequential-error drift (0 disables)")
-    .flag("report-every", "", "progress row every k arrivals (default n/10)");
+    .flag("report-every", "", "progress row every k arrivals (default n/10)")
+    .flag("warm-start", "", "restore the latest checkpoint from <dir>/<name> before replaying")
+    .flag("checkpoint-dir", "", "artifact store root for periodic checkpoints")
+    .flag("checkpoint-name", "stream", "artifact name checkpoints are versioned under")
+    .flag("checkpoint-every", "0", "checkpoint every k arrivals (0 disables)")
+    .flag("checkpoint-keep", "4", "checkpoint versions retained (0 = keep all)");
     let a = match cmd.parse(argv) {
         Ok(a) => a,
         Err(m) => {
@@ -369,21 +386,99 @@ fn cmd_stream(argv: &[String]) -> i32 {
                 .unwrap_or_else(|| leverkrr::stream::RefreshPolicy::default().drift),
         },
         threads: base.threads,
+        checkpoint: leverkrr::stream::CheckpointPolicy {
+            every: a.get_usize("checkpoint-every").unwrap_or(0),
+            dir: a
+                .get("checkpoint-dir")
+                .filter(|s| !s.is_empty())
+                .map(|s| s.to_string()),
+            name: a.get("checkpoint-name").unwrap_or("stream").to_string(),
+            keep_last: a.get_usize("checkpoint-keep").unwrap_or(4),
+        },
     };
+    let report_every = a.get_usize("report-every").unwrap_or((n / 10).max(1));
+    // identity of the stream these flags describe — stamped into every
+    // checkpoint, and checked on warm start so a checkpoint is never
+    // silently resumed against a different dataset
+    let origin = format!(
+        "{}:n={}:seed={}:d={}",
+        a.get("data").unwrap_or("bimodal3"),
+        n,
+        a.get_u64("seed").unwrap_or(0),
+        ds.d()
+    );
+    let mut sc = match a.get("warm-start").filter(|s| !s.is_empty()) {
+        Some(spec) => {
+            // resume a previous process's stream instead of starting cold;
+            // the restored checkpoint carries its own config, which
+            // supersedes this invocation's stream flags
+            let Some((dir, name)) = spec.rsplit_once('/') else {
+                eprintln!("--warm-start wants <store-dir>/<artifact-name> (got '{spec}')");
+                return 2;
+            };
+            let store = match leverkrr::persist::Store::open(dir) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("opening artifact store '{dir}': {e}");
+                    return 2;
+                }
+            };
+            match store.load_checkpoint(name, None) {
+                Ok((v, chk)) => {
+                    match chk.origin.as_deref() {
+                        Some(o) if o != origin => {
+                            eprintln!(
+                                "warm start refused: checkpoint is from stream '{o}', these flags describe '{origin}' — resuming would continue a model trained on different data"
+                            );
+                            return 2;
+                        }
+                        None => eprintln!(
+                            "warning: checkpoint records no stream identity; assuming it matches '{origin}'"
+                        ),
+                        _ => {}
+                    }
+                    println!(
+                        "warm start: restored '{name}' v{v} (n_seen={}, dict={})",
+                        chk.model.n_seen(),
+                        chk.model.m()
+                    );
+                    if chk.cfg.mu != scfg.mu
+                        || chk.cfg.budget != scfg.budget
+                        || chk.cfg.accept_threshold != scfg.accept_threshold
+                        || chk.cfg.refresh != scfg.refresh
+                        || chk.cfg.checkpoint != scfg.checkpoint
+                    {
+                        eprintln!(
+                            "note: the checkpoint's config supersedes this invocation's stream flags"
+                        );
+                    }
+                    leverkrr::stream::StreamCoordinator::restore(chk)
+                }
+                Err(e) => {
+                    eprintln!("warm start from '{spec}' failed: {e}");
+                    return 2;
+                }
+            }
+        }
+        None => leverkrr::stream::StreamCoordinator::new(scfg.clone()),
+    };
+    sc.set_origin(origin);
+    // the *effective* config (the restored one on a warm start) — what
+    // the banner and the batch-fit comparison below must describe
+    let eff = sc.config().clone();
     println!(
         "streaming {} (n={}, d={}) kernel={} μ={:.3e} (λ_eq={:.3e}) budget={} refresh every {} / drift {}",
         ds.name,
         n,
         ds.d(),
-        scfg.kernel.name(),
-        scfg.mu,
-        scfg.mu / n as f64,
-        scfg.budget,
-        scfg.refresh.every,
-        scfg.refresh.drift,
+        eff.kernel.name(),
+        eff.mu,
+        eff.mu / n as f64,
+        eff.budget,
+        eff.refresh.every,
+        eff.refresh.drift,
     );
-    let report_every = a.get_usize("report-every").unwrap_or((n / 10).max(1));
-    let (sc, report) = leverkrr::stream::replay(&ds, &scfg, report_every);
+    let report = leverkrr::stream::replay_into(&mut sc, &ds, report_every);
     println!("\n  arrivals  dict  rolling_rmse  version  elapsed_s");
     for r in &report.rows {
         println!(
@@ -398,27 +493,32 @@ fn cmd_stream(argv: &[String]) -> i32 {
     let stream_risk =
         leverkrr::krr::in_sample_risk(&snap.predict_batch(&ds.x), &ds.f_true);
     let mut bcfg = base.clone();
-    bcfg.lambda = mu / n as f64;
-    bcfg.m_sub = scfg.budget.min(n);
+    bcfg.lambda = eff.mu / n as f64;
+    bcfg.m_sub = eff.budget.min(n);
     let batch = fit_with_backend(&ds, &bcfg, Backend::Native).expect("batch fit");
     let batch_risk =
         leverkrr::krr::in_sample_risk(&batch.predict_batch(&ds.x), &ds.f_true);
     let (s_rmse, b_rmse) = (stream_risk.sqrt(), batch_risk.sqrt());
     println!(
-        "\nreplayed {} arrivals in {:.3}s  (dict {}/{}, {} publishes, final version {})",
+        "\nreplayed {} of {} arrivals in {:.3}s  (dict {}/{}, {} publishes, final version {})",
+        report.ingested,
         n,
         report.total_secs,
         report.dict,
-        scfg.budget,
+        eff.budget,
         sc.metrics.counter("stream.publishes"),
         report.final_version,
     );
-    println!(
-        "update latency: p50 {:.1} µs  p95 {:.1} µs  p99 {:.1} µs",
-        report.update_p50 * 1e6,
-        report.update_p95 * 1e6,
-        report.update_p99 * 1e6,
-    );
+    if report.ingested > 0 {
+        println!(
+            "update latency: p50 {:.1} µs  p95 {:.1} µs  p99 {:.1} µs",
+            report.update_p50 * 1e6,
+            report.update_p95 * 1e6,
+            report.update_p99 * 1e6,
+        );
+    } else {
+        println!("no new arrivals: the checkpoint already covers this stream");
+    }
     println!(
         "end-state RMSE: stream {:.5} vs batch (m={}) {:.5}  ({:+.2}%)",
         s_rmse,
@@ -426,6 +526,212 @@ fn cmd_stream(argv: &[String]) -> i32 {
         b_rmse,
         100.0 * (s_rmse - b_rmse) / b_rmse.max(1e-12),
     );
+    0
+}
+
+/// Deterministic probe document: 64 query points + the exporter's
+/// predictions. `import --probe` re-predicts in a fresh process and
+/// compares bit patterns (JSON `f64` text round-trips exactly: Rust's
+/// shortest-representation formatter ↔ `str::parse`).
+fn make_probe(model: &leverkrr::coordinator::FittedModel, d: usize) -> Json {
+    let k = 64usize;
+    let mut rng = Rng::seed_from_u64(0xBEEF);
+    let xq = leverkrr::linalg::Mat::from_fn(k, d, |_, _| rng.f64());
+    let preds = model.predict_batch(&xq);
+    Json::obj(vec![
+        ("d", Json::Num(d as f64)),
+        ("k", Json::Num(k as f64)),
+        ("xs", Json::arr_f64(&xq.data)),
+        ("preds", Json::arr_f64(&preds)),
+    ])
+}
+
+fn cmd_export(argv: &[String]) -> i32 {
+    let cmd = data_flags(Command::new(
+        "export",
+        "fit a model and save it into the versioned artifact store",
+    ))
+    .flag("dir", "models", "artifact store root directory")
+    .flag("name", "model", "artifact name (versions increment automatically)")
+    .flag("gc-keep", "0", "after saving, keep only the newest k versions (0 = keep all)")
+    .flag("probe-out", "", "write a probe JSON (query points + predictions) for `import --probe`");
+    let a = match cmd.parse(argv) {
+        Ok(a) => a,
+        Err(m) => {
+            eprintln!("{m}");
+            return 2;
+        }
+    };
+    let (ds, _) = dataset_from(&a);
+    let cfg = build_cfg(&a, &ds);
+    let backend = backend_from(&a);
+    let model = fit_with_backend(&ds, &cfg, backend).expect("fit failed");
+    let store = leverkrr::persist::Store::open(a.get("dir").unwrap()).expect("open store");
+    let name = a.get("name").unwrap();
+    let meta = match model.save(&store, name) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("export failed: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "exported {} v{} ({} bytes): kernel {}, n={}, m={}, d={}",
+        store.path_of(name, meta.version).display(),
+        meta.version,
+        meta.bytes,
+        meta.kernel,
+        meta.n,
+        meta.m,
+        meta.d,
+    );
+    if let Some(path) = a.get("probe-out").filter(|s| !s.is_empty()) {
+        let probe = make_probe(&model, ds.d());
+        std::fs::write(path, probe.to_string_pretty()).expect("write probe");
+        println!("wrote probe {path} (64 points)");
+    }
+    let keep = a.get_usize("gc-keep").unwrap_or(0);
+    if keep > 0 {
+        let removed = store.gc(name, keep).expect("gc");
+        if removed > 0 {
+            println!("gc: removed {removed} old version(s), kept newest {keep}");
+        }
+    }
+    0
+}
+
+fn cmd_import(argv: &[String]) -> i32 {
+    let cmd = Command::new(
+        "import",
+        "load an artifact in a fresh process, verify it, and serve it",
+    )
+    .flag("dir", "models", "artifact store root directory")
+    .flag_req("name", "artifact name")
+    .flag("version", "", "version to load (default: latest)")
+    .flag("probe", "", "probe JSON from `export --probe-out`: verify bitwise via direct + served predictions");
+    let a = match cmd.parse(argv) {
+        Ok(a) => a,
+        Err(m) => {
+            eprintln!("{m}");
+            return 2;
+        }
+    };
+    let store = leverkrr::persist::Store::open(a.get("dir").unwrap()).expect("open store");
+    let name = a.get("name").unwrap();
+    let version = a.get_u64("version");
+    let (v, model) = match store.load_model(name, version) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("import failed: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "imported {name} v{v}: kernel {}, m={}, d={}, λ={:.3e}",
+        model.nystrom.kernel.spec.name(),
+        model.nystrom.m(),
+        model.nystrom.landmarks.cols,
+        model.nystrom.lambda,
+    );
+    let Some(path) = a.get("probe").filter(|s| !s.is_empty()) else {
+        return 0;
+    };
+    let text = std::fs::read_to_string(path).expect("read probe");
+    let doc = Json::parse(&text).expect("probe json");
+    let d = doc.get("d").as_usize().expect("probe d");
+    let k = doc.get("k").as_usize().expect("probe k");
+    let take_f64s = |key: &str| -> Vec<f64> {
+        doc.get(key)
+            .as_arr()
+            .expect("probe array")
+            .iter()
+            .map(|v| v.as_f64().expect("probe number"))
+            .collect()
+    };
+    let xs = take_f64s("xs");
+    let want = take_f64s("preds");
+    assert_eq!(xs.len(), k * d, "probe xs arity");
+    assert_eq!(want.len(), k, "probe preds arity");
+    let xq = leverkrr::linalg::Mat { rows: k, cols: d, data: xs };
+    // 1) direct predict in this process
+    let direct = model.predict_batch(&xq);
+    let bad_direct =
+        direct.iter().zip(&want).filter(|(a, b)| a.to_bits() != b.to_bits()).count();
+    // 2) the cold-start serving path: artifact → ModelHandle → batched server
+    let server = leverkrr::coordinator::Server::start_from_artifact(
+        &store,
+        name,
+        version,
+        ServerConfig::default(),
+    )
+    .expect("start_from_artifact");
+    let mut bad_served = 0;
+    for i in 0..k {
+        let p = server.try_predict(xq.row(i)).expect("serve probe");
+        if p.value.to_bits() != want[i].to_bits() {
+            bad_served += 1;
+        }
+    }
+    server.shutdown();
+    if bad_direct == 0 && bad_served == 0 {
+        println!("probe OK: {k}/{k} predictions bit-identical (direct + served), zero refit work");
+        0
+    } else {
+        eprintln!(
+            "probe FAILED: {bad_direct}/{k} direct and {bad_served}/{k} served predictions deviate from the exporter"
+        );
+        1
+    }
+}
+
+fn cmd_models(argv: &[String]) -> i32 {
+    let cmd = Command::new("models", "list / garbage-collect the artifact store")
+        .flag("dir", "models", "artifact store root directory")
+        .flag("name", "", "restrict to one artifact name")
+        .flag("gc-keep", "0", "keep only the newest k versions of --name (0 = list only)");
+    let a = match cmd.parse(argv) {
+        Ok(a) => a,
+        Err(m) => {
+            eprintln!("{m}");
+            return 2;
+        }
+    };
+    let store = leverkrr::persist::Store::open(a.get("dir").unwrap()).expect("open store");
+    let name = a.get("name").filter(|s| !s.is_empty());
+    let keep = a.get_usize("gc-keep").unwrap_or(0);
+    if keep > 0 {
+        let Some(n) = name else {
+            eprintln!("--gc-keep needs --name");
+            return 2;
+        };
+        let removed = store.gc(n, keep).expect("gc");
+        println!("gc '{n}': removed {removed} version(s), kept newest {keep}");
+    }
+    let entries = match name {
+        Some(n) => store.list_name(n),
+        None => store.list(),
+    };
+    if entries.is_empty() {
+        println!("no artifacts under {}", store.root().display());
+        return 0;
+    }
+    let mut t = leverkrr::bench_harness::Table::new(&[
+        "name", "version", "kind", "created_unix", "n", "m", "d", "kernel", "bytes",
+    ]);
+    for e in &entries {
+        t.row(vec![
+            e.name.clone(),
+            e.version.to_string(),
+            e.kind.clone(),
+            e.created_unix.to_string(),
+            e.n.to_string(),
+            e.m.to_string(),
+            e.d.to_string(),
+            e.kernel.clone(),
+            e.bytes.to_string(),
+        ]);
+    }
+    t.print();
     0
 }
 
@@ -467,6 +773,10 @@ fn cmd_run_config(argv: &[String]) -> i32 {
     let rc = leverkrr::coordinator::RunConfig::from_file(a.get("config").unwrap())
         .expect("config");
     let ds = rc.build_dataset().expect("dataset");
+    if rc.stream_serve {
+        // ingest + serve in one process through the stream coordinator
+        return run_stream_serve(&rc, &ds);
+    }
     let cfg = rc.fit_config(&ds);
     let backend = backend_from(&a);
     println!(
@@ -476,6 +786,161 @@ fn cmd_run_config(argv: &[String]) -> i32 {
     let model = fit_with_backend(&ds, &cfg, backend).expect("fit");
     let risk = leverkrr::krr::in_sample_risk(&model.predict_batch(&ds.x), &ds.f_true);
     println!("report: {}  risk={risk:.6}", model.report.to_json());
+    persist_model_if_configured(&rc, &model);
+    0
+}
+
+/// Export the run's model into the configured artifact store (no-op
+/// when the `persist` section is absent).
+fn persist_model_if_configured(
+    rc: &leverkrr::coordinator::RunConfig,
+    model: &leverkrr::coordinator::FittedModel,
+) {
+    let Some(dir) = &rc.persist.dir else { return };
+    let store = leverkrr::persist::Store::open(dir).expect("open artifact store");
+    let meta = model.save(&store, &rc.persist.name).expect("export model");
+    println!(
+        "persisted model '{}' v{} ({} bytes) under {}",
+        meta.name,
+        meta.version,
+        meta.bytes,
+        store.root().display()
+    );
+    if rc.persist.keep_last > 0 {
+        let removed = store.gc(&rc.persist.name, rc.persist.keep_last).expect("gc");
+        if removed > 0 {
+            println!("gc: removed {removed} old version(s)");
+        }
+    }
+}
+
+/// `run` with `stream.serve = true`: the stream coordinator ingests the
+/// dataset as live arrivals while the hot-swap server answers queries
+/// from the same process — with the `persist` section set, the run
+/// warm-starts from the latest checkpoint, checkpoints periodically
+/// while ingesting, and exports the final model + checkpoint on exit
+/// (so the next run resumes instead of refitting).
+fn run_stream_serve(rc: &leverkrr::coordinator::RunConfig, ds: &Dataset) -> i32 {
+    let scfg = rc.stream_config(ds);
+    // identity of the stream this config describes — stamped into every
+    // checkpoint; a checkpoint from a *different* dataset must not be
+    // resumed (n_seen would offset into the new stream and the run would
+    // serve a model trained on the old data as a "continuation")
+    let origin =
+        format!("{}:n={}:seed={}:d={}", rc.data_name, rc.n, rc.seed, ds.d());
+    let mut sc = None;
+    if let (Some(dir), true) = (&rc.persist.dir, rc.persist.warm_start) {
+        let store = leverkrr::persist::Store::open(dir).expect("open artifact store");
+        let ckpt_name = rc.persist.checkpoint_name();
+        if store.latest(&ckpt_name).is_some() {
+            match store.load_checkpoint(&ckpt_name, None) {
+                Ok((v, chk)) => {
+                    let chk_origin = chk.origin.clone();
+                    if let Some(o) = chk_origin.as_deref().filter(|o| *o != origin) {
+                        eprintln!(
+                            "warm start skipped: checkpoint '{ckpt_name}' v{v} is from stream '{o}', this config describes '{origin}'; starting cold"
+                        );
+                    } else {
+                        if chk_origin.is_none() {
+                            eprintln!(
+                                "warning: checkpoint records no stream identity; assuming it matches '{origin}'"
+                            );
+                        }
+                        println!(
+                            "warm start: checkpoint '{ckpt_name}' v{v} (n_seen={}, dict={})",
+                            chk.model.n_seen(),
+                            chk.model.m()
+                        );
+                        sc = Some(leverkrr::stream::StreamCoordinator::restore(chk));
+                    }
+                }
+                Err(e) => eprintln!("warm start skipped ({e}); starting cold"),
+            }
+        }
+    }
+    let mut sc =
+        sc.unwrap_or_else(|| leverkrr::stream::StreamCoordinator::new(scfg.clone()));
+    sc.set_origin(origin);
+    // the *effective* config: on a warm start the restored checkpoint's
+    // config governs, superseding the document's stream/checkpoint knobs
+    let eff = sc.config().clone();
+    if eff.budget != scfg.budget
+        || eff.mu != scfg.mu
+        || eff.refresh != scfg.refresh
+        || eff.checkpoint != scfg.checkpoint
+    {
+        eprintln!(
+            "note: the restored checkpoint's config supersedes the document's stream settings"
+        );
+    }
+    let handle = sc.handle();
+    let server = Server::start_with_handle(handle, rc.serve.clone());
+    let (n, d) = (ds.n(), ds.d());
+    // treat the dataset as the full stream history: a warm-started
+    // coordinator resumes at its own position instead of re-ingesting
+    // (and double-weighting) arrivals it already absorbed
+    let start = (sc.n_seen() as usize).min(n);
+    println!(
+        "run (stream-serve): arrivals {start}..{n} into budget {} (refresh every {} / drift {}), serving concurrently",
+        eff.budget, eff.refresh.every, eff.refresh.drift
+    );
+    let t0 = std::time::Instant::now();
+    let sc = std::thread::scope(|s| {
+        let server = &server;
+        let ingester = s.spawn(move || {
+            for i in start..n {
+                sc.ingest(ds.x.row(i), ds.y[i]);
+            }
+            sc.publish_now();
+            sc
+        });
+        // demo query traffic riding alongside ingestion (hot swaps land
+        // at batch boundaries; requests in flight finish on their snapshot)
+        for w in 0..2u64 {
+            s.spawn(move || {
+                let mut rng = Rng::seed_from_u64(w);
+                for _ in 0..1000 {
+                    let q: Vec<f64> = (0..d).map(|_| rng.f64()).collect();
+                    let _ = server.try_predict(&q);
+                }
+            });
+        }
+        ingester.join().expect("ingest thread")
+    });
+    let secs = t0.elapsed().as_secs_f64();
+    let reg = server.shutdown();
+    let snap = sc.model().snapshot();
+    let risk = leverkrr::krr::in_sample_risk(&snap.predict_batch(&ds.x), &ds.f_true);
+    let ps = reg.timer_quantiles("serve.latency.secs", &[0.50, 0.95]);
+    println!(
+        "ingested {} arrivals in {:.2}s (dict {}/{}, {} publishes, {} checkpoints); served {} requests (p50 {:.3} ms, p95 {:.3} ms); in-sample risk {:.6}",
+        sc.n_seen(),
+        secs,
+        sc.dict_len(),
+        eff.budget,
+        sc.metrics.counter("stream.publishes"),
+        sc.metrics.counter("stream.checkpoints"),
+        reg.counter("serve.requests"),
+        ps[0] * 1e3,
+        ps[1] * 1e3,
+        risk,
+    );
+    // model export + gc shares the batch path's helper; only the final
+    // checkpoint (for the next warm start) is stream-specific
+    persist_model_if_configured(rc, &snap);
+    if let Some(dir) = &rc.persist.dir {
+        let store = leverkrr::persist::Store::open(dir).expect("open artifact store");
+        let ckpt_name = rc.persist.checkpoint_name();
+        let cmeta =
+            store.save_checkpoint(&ckpt_name, &sc.checkpoint()).expect("export checkpoint");
+        println!("persisted checkpoint '{ckpt_name}' v{}", cmeta.version);
+        if rc.persist.keep_last > 0 {
+            let removed = store.gc(&ckpt_name, rc.persist.keep_last).expect("gc");
+            if removed > 0 {
+                println!("gc: removed {removed} old checkpoint(s)");
+            }
+        }
+    }
     0
 }
 

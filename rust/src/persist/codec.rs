@@ -1,0 +1,1113 @@
+//! Dependency-free binary codec for model artifacts.
+//!
+//! ## File layout
+//!
+//! ```text
+//!   offset  size  field
+//!   0       4     magic "LKRR"
+//!   4       2     format version (u16 LE, currently 1)
+//!   6       2     artifact kind  (u16 LE: 1 = model, 2 = stream checkpoint)
+//!   8       …     sections, back to back:
+//!             4     section tag (ASCII, e.g. "MODL")
+//!             8     payload length (u64 LE)
+//!             len   payload
+//!             4     CRC32 (IEEE) of the payload (u32 LE)
+//! ```
+//!
+//! Every `f64` is stored as its IEEE-754 **bit pattern** (`to_bits`, LE) —
+//! no text formatting anywhere — so `decode(encode(x))` reproduces every
+//! float bit for bit, which is what lets a loaded model predict
+//! bit-identically to the fitted one and a restored stream checkpoint
+//! replay bit-identically to an uninterrupted run.
+//!
+//! ## Compatibility rules
+//!
+//! * The magic never changes; a file without it is rejected as
+//!   [`PersistError::BadMagic`].
+//! * `FORMAT_VERSION` bumps on any layout change; readers reject files
+//!   from a *newer* writer ([`PersistError::UnsupportedVersion`]) and are
+//!   expected to keep decoding every older version they ever shipped.
+//! * Unknown section tags are ignored on read (forward-compatible
+//!   additions); a missing required section is
+//!   [`PersistError::Malformed`].
+//! * Corruption anywhere in a payload is caught by the per-section CRC
+//!   ([`PersistError::ChecksumMismatch`]); a short file is
+//!   [`PersistError::Truncated`]. A decoder never panics on bad input and
+//!   never returns a half-decoded value.
+
+use super::PersistError;
+use crate::coordinator::{FitReport, FittedModel};
+use crate::kernels::{Kernel, KernelSpec};
+use crate::linalg::{Cholesky, Mat};
+use crate::nystrom::NystromKrr;
+use crate::runtime::Backend;
+use crate::stream::{
+    CheckpointPolicy, IncrementalModel, OnlineDictionary, RefreshPolicy, StreamCheckpoint,
+    StreamConfig,
+};
+
+/// File magic: first four bytes of every artifact.
+pub const MAGIC: [u8; 4] = *b"LKRR";
+
+/// Current writer format version (see module docs for the rules).
+pub const FORMAT_VERSION: u16 = 1;
+
+/// What an artifact file contains.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u16)]
+pub enum ArtifactKind {
+    /// A servable [`FittedModel`].
+    Model = 1,
+    /// A full [`StreamCheckpoint`] (config + model + replay progress).
+    Checkpoint = 2,
+}
+
+impl ArtifactKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ArtifactKind::Model => "model",
+            ArtifactKind::Checkpoint => "checkpoint",
+        }
+    }
+
+    fn from_u16(v: u16) -> Option<ArtifactKind> {
+        match v {
+            1 => Some(ArtifactKind::Model),
+            2 => Some(ArtifactKind::Checkpoint),
+            _ => None,
+        }
+    }
+}
+
+/// CRC32 (IEEE 802.3, reflected, poly 0xEDB88320) — the standard zip/png
+/// checksum, table-driven.
+pub fn crc32(data: &[u8]) -> u32 {
+    use std::sync::OnceLock;
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    });
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    !crc
+}
+
+// ---------------------------------------------------------------------------
+// byte-level writer / reader
+// ---------------------------------------------------------------------------
+
+/// Append-only payload builder.
+#[derive(Default)]
+pub struct Writer {
+    pub buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Writer {
+        Writer { buf: Vec::new() }
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Exact bit pattern — the codec's float representation everywhere.
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+
+    pub fn put_str(&mut self, s: &str) {
+        self.put_u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+}
+
+/// Bounds-checked payload reader. Every accessor returns
+/// [`PersistError::Truncated`] instead of panicking when the payload is
+/// short.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Guard an upcoming allocation: `n` bytes must still be present.
+    fn ensure(&self, n: usize) -> Result<(), PersistError> {
+        if self.remaining() < n {
+            Err(PersistError::Truncated)
+        } else {
+            Ok(())
+        }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], PersistError> {
+        self.ensure(n)?;
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, PersistError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u64(&mut self) -> Result<u64, PersistError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, PersistError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn str_owned(&mut self) -> Result<String, PersistError> {
+        let n = self.u64()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| PersistError::Malformed("invalid utf-8 in string".into()))
+    }
+
+    /// A `u64` that must fit a `usize` count of `elem_bytes`-sized items
+    /// still present in the payload — rejects corrupt giant lengths
+    /// before any allocation.
+    pub fn len_of(&mut self, elem_bytes: usize) -> Result<usize, PersistError> {
+        let n = self.u64()?;
+        let n: usize =
+            n.try_into().map_err(|_| PersistError::Malformed("length overflow".into()))?;
+        let total = n
+            .checked_mul(elem_bytes)
+            .ok_or_else(|| PersistError::Malformed("length overflow".into()))?;
+        self.ensure(total)?;
+        Ok(n)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Encode / Decode
+// ---------------------------------------------------------------------------
+
+/// Serialize into a [`Writer`] payload.
+pub trait Encode {
+    fn encode(&self, w: &mut Writer);
+}
+
+/// Deserialize from a [`Reader`]; must consume exactly what `encode`
+/// wrote and never panic on malformed input.
+pub trait Decode: Sized {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, PersistError>;
+}
+
+impl Encode for u64 {
+    fn encode(&self, w: &mut Writer) {
+        w.put_u64(*self);
+    }
+}
+
+impl Decode for u64 {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, PersistError> {
+        r.u64()
+    }
+}
+
+impl Encode for usize {
+    fn encode(&self, w: &mut Writer) {
+        w.put_u64(*self as u64);
+    }
+}
+
+impl Decode for usize {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, PersistError> {
+        r.u64()?
+            .try_into()
+            .map_err(|_| PersistError::Malformed("usize overflow".into()))
+    }
+}
+
+impl Encode for f64 {
+    fn encode(&self, w: &mut Writer) {
+        w.put_f64(*self);
+    }
+}
+
+impl Decode for f64 {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, PersistError> {
+        r.f64()
+    }
+}
+
+impl Encode for bool {
+    fn encode(&self, w: &mut Writer) {
+        w.put_u8(*self as u8);
+    }
+}
+
+impl Decode for bool {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, PersistError> {
+        match r.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            _ => Err(PersistError::Malformed("invalid bool".into())),
+        }
+    }
+}
+
+impl Encode for String {
+    fn encode(&self, w: &mut Writer) {
+        w.put_str(self);
+    }
+}
+
+impl Decode for String {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, PersistError> {
+        r.str_owned()
+    }
+}
+
+impl<T: Encode> Encode for Option<T> {
+    fn encode(&self, w: &mut Writer) {
+        match self {
+            None => w.put_u8(0),
+            Some(v) => {
+                w.put_u8(1);
+                v.encode(w);
+            }
+        }
+    }
+}
+
+impl<T: Decode> Decode for Option<T> {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, PersistError> {
+        match r.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(T::decode(r)?)),
+            _ => Err(PersistError::Malformed("invalid option tag".into())),
+        }
+    }
+}
+
+impl<T: Encode> Encode for Vec<T> {
+    fn encode(&self, w: &mut Writer) {
+        w.put_u64(self.len() as u64);
+        for v in self {
+            v.encode(w);
+        }
+    }
+}
+
+impl<T: Decode> Decode for Vec<T> {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, PersistError> {
+        // minimum 1 byte per element bounds the claimed length by the
+        // payload that is actually present (no allocation bombs)
+        let n = r.len_of(1)?;
+        let mut out = Vec::new();
+        for _ in 0..n {
+            out.push(T::decode(r)?);
+        }
+        Ok(out)
+    }
+}
+
+impl Encode for Mat {
+    fn encode(&self, w: &mut Writer) {
+        w.put_u64(self.rows as u64);
+        w.put_u64(self.cols as u64);
+        for &x in &self.data {
+            w.put_f64(x);
+        }
+    }
+}
+
+impl Decode for Mat {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, PersistError> {
+        let rows: usize = Decode::decode(r)?;
+        let cols: usize = Decode::decode(r)?;
+        let n = rows
+            .checked_mul(cols)
+            .ok_or_else(|| PersistError::Malformed("matrix shape overflow".into()))?;
+        let total = n
+            .checked_mul(8)
+            .ok_or_else(|| PersistError::Malformed("matrix shape overflow".into()))?;
+        r.ensure(total)?;
+        let mut data = Vec::with_capacity(n);
+        for _ in 0..n {
+            data.push(r.f64()?);
+        }
+        Ok(Mat { rows, cols, data })
+    }
+}
+
+impl Encode for Cholesky {
+    fn encode(&self, w: &mut Writer) {
+        w.put_u64(self.n() as u64);
+        w.put_f64(self.jitter);
+        for &x in &self.l {
+            w.put_f64(x);
+        }
+    }
+}
+
+impl Decode for Cholesky {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, PersistError> {
+        let n: usize = Decode::decode(r)?;
+        let jitter = r.f64()?;
+        let total = n
+            .checked_mul(n)
+            .and_then(|s| s.checked_mul(8))
+            .ok_or_else(|| PersistError::Malformed("factor shape overflow".into()))?;
+        r.ensure(total)?;
+        let mut l = Vec::with_capacity(n * n);
+        for _ in 0..n * n {
+            l.push(r.f64()?);
+        }
+        Ok(Cholesky { l, n, jitter })
+    }
+}
+
+impl Encode for KernelSpec {
+    fn encode(&self, w: &mut Writer) {
+        match self {
+            KernelSpec::Matern { nu, a } => {
+                w.put_u8(0);
+                w.put_f64(*nu);
+                w.put_f64(*a);
+            }
+            KernelSpec::Gaussian { sigma } => {
+                w.put_u8(1);
+                w.put_f64(*sigma);
+            }
+        }
+    }
+}
+
+impl Decode for KernelSpec {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, PersistError> {
+        match r.u8()? {
+            0 => Ok(KernelSpec::Matern { nu: r.f64()?, a: r.f64()? }),
+            1 => Ok(KernelSpec::Gaussian { sigma: r.f64()? }),
+            _ => Err(PersistError::Malformed("unknown kernel tag".into())),
+        }
+    }
+}
+
+impl Encode for Kernel {
+    fn encode(&self, w: &mut Writer) {
+        self.spec.encode(w);
+    }
+}
+
+impl Decode for Kernel {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, PersistError> {
+        // the Matérn normalization constant is a pure function of ν, so
+        // `Kernel::new` rebuilds it bit-identically from the spec
+        Ok(Kernel::new(KernelSpec::decode(r)?))
+    }
+}
+
+impl Encode for RefreshPolicy {
+    fn encode(&self, w: &mut Writer) {
+        self.every.encode(w);
+        w.put_f64(self.drift);
+    }
+}
+
+impl Decode for RefreshPolicy {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, PersistError> {
+        Ok(RefreshPolicy { every: Decode::decode(r)?, drift: r.f64()? })
+    }
+}
+
+impl Encode for CheckpointPolicy {
+    fn encode(&self, w: &mut Writer) {
+        self.every.encode(w);
+        self.dir.encode(w);
+        self.name.encode(w);
+        self.keep_last.encode(w);
+    }
+}
+
+impl Decode for CheckpointPolicy {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, PersistError> {
+        Ok(CheckpointPolicy {
+            every: Decode::decode(r)?,
+            dir: Decode::decode(r)?,
+            name: Decode::decode(r)?,
+            keep_last: Decode::decode(r)?,
+        })
+    }
+}
+
+impl Encode for StreamConfig {
+    fn encode(&self, w: &mut Writer) {
+        self.kernel.encode(w);
+        w.put_f64(self.mu);
+        self.budget.encode(w);
+        w.put_f64(self.accept_threshold);
+        self.refresh.encode(w);
+        self.threads.encode(w);
+        self.checkpoint.encode(w);
+    }
+}
+
+impl Decode for StreamConfig {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, PersistError> {
+        let cfg = StreamConfig {
+            kernel: Decode::decode(r)?,
+            mu: r.f64()?,
+            budget: Decode::decode(r)?,
+            accept_threshold: r.f64()?,
+            refresh: Decode::decode(r)?,
+            threads: Decode::decode(r)?,
+            checkpoint: Decode::decode(r)?,
+        };
+        if !(cfg.mu > 0.0 && cfg.mu.is_finite()) {
+            return Err(PersistError::Malformed("stream config: μ must be positive".into()));
+        }
+        if cfg.budget == 0 {
+            return Err(PersistError::Malformed("stream config: zero budget".into()));
+        }
+        if !(0.0..1.0).contains(&cfg.accept_threshold) {
+            return Err(PersistError::Malformed(
+                "stream config: accept threshold outside [0, 1)".into(),
+            ));
+        }
+        Ok(cfg)
+    }
+}
+
+impl Encode for NystromKrr {
+    fn encode(&self, w: &mut Writer) {
+        self.kernel.encode(w);
+        self.landmarks.encode(w);
+        self.idx.encode(w);
+        self.beta.encode(w);
+        w.put_f64(self.lambda);
+    }
+}
+
+impl Decode for NystromKrr {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, PersistError> {
+        let kernel = Kernel::decode(r)?;
+        let landmarks = Mat::decode(r)?;
+        let idx: Vec<usize> = Decode::decode(r)?;
+        let beta: Vec<f64> = Decode::decode(r)?;
+        let lambda = r.f64()?;
+        let m = landmarks.rows;
+        if beta.len() != m || idx.len() != m {
+            return Err(PersistError::Malformed(format!(
+                "landmark/β/idx arity mismatch: m={m}, β={}, idx={}",
+                beta.len(),
+                idx.len()
+            )));
+        }
+        Ok(NystromKrr { kernel, landmarks, idx, beta, lambda })
+    }
+}
+
+impl Encode for FittedModel {
+    fn encode(&self, w: &mut Writer) {
+        // backend/report timings are deliberately not persisted: the
+        // artifact is the servable math — kernel, landmarks, β, λ, q —
+        // plus the n_train provenance, nothing environment-specific
+        self.nystrom.encode(w);
+        self.q.encode(w);
+        self.n_train.encode(w);
+    }
+}
+
+impl Decode for FittedModel {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, PersistError> {
+        let nystrom = NystromKrr::decode(r)?;
+        let q: Vec<f64> = Decode::decode(r)?;
+        let n_train: u64 = Decode::decode(r)?;
+        let report = FitReport {
+            m_sub: nystrom.m(),
+            backend: "native",
+            method: "artifact",
+            ..Default::default()
+        };
+        Ok(FittedModel { nystrom, report, backend: Backend::Native, q, n_train })
+    }
+}
+
+impl Encode for OnlineDictionary {
+    fn encode(&self, w: &mut Writer) {
+        self.kernel.encode(w);
+        self.budget.encode(w);
+        w.put_f64(self.accept_threshold);
+        w.put_f64(self.evict_margin);
+        w.put_f64(self.eps);
+        self.atoms.encode(w);
+        self.arrival.encode(w);
+        self.chol.encode(w);
+        self.cached_scores.encode(w);
+    }
+}
+
+impl Decode for OnlineDictionary {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, PersistError> {
+        let dict = OnlineDictionary {
+            kernel: Kernel::decode(r)?,
+            budget: Decode::decode(r)?,
+            accept_threshold: r.f64()?,
+            evict_margin: r.f64()?,
+            eps: r.f64()?,
+            atoms: Mat::decode(r)?,
+            arrival: Decode::decode(r)?,
+            chol: Decode::decode(r)?,
+            cached_scores: Decode::decode(r)?,
+        };
+        let m = dict.atoms.rows;
+        if dict.arrival.len() != m {
+            return Err(PersistError::Malformed("dictionary arrival arity mismatch".into()));
+        }
+        if dict.budget == 0 || m > dict.budget {
+            return Err(PersistError::Malformed("dictionary over budget".into()));
+        }
+        if let Some(ch) = &dict.chol {
+            if ch.n() != m {
+                return Err(PersistError::Malformed("dictionary factor arity mismatch".into()));
+            }
+        } else if m > 0 {
+            return Err(PersistError::Malformed("non-empty dictionary without factor".into()));
+        }
+        if let Some(s) = &dict.cached_scores {
+            if s.len() != m {
+                return Err(PersistError::Malformed("cached score arity mismatch".into()));
+            }
+        }
+        Ok(dict)
+    }
+}
+
+impl Encode for IncrementalModel {
+    fn encode(&self, w: &mut Writer) {
+        self.kernel.encode(w);
+        w.put_f64(self.mu);
+        self.dict.encode(w);
+        self.s.encode(w);
+        self.rhs.encode(w);
+        self.chol_a.encode(w);
+        self.beta.encode(w);
+        self.n_seen.encode(w);
+    }
+}
+
+impl Decode for IncrementalModel {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, PersistError> {
+        let model = IncrementalModel {
+            kernel: Kernel::decode(r)?,
+            mu: r.f64()?,
+            dict: OnlineDictionary::decode(r)?,
+            s: Mat::decode(r)?,
+            rhs: Decode::decode(r)?,
+            chol_a: Decode::decode(r)?,
+            beta: Decode::decode(r)?,
+            n_seen: Decode::decode(r)?,
+        };
+        if !(model.mu > 0.0 && model.mu.is_finite()) {
+            return Err(PersistError::Malformed("model ridge μ must be positive".into()));
+        }
+        let m = model.dict.len();
+        if model.s.rows != m || model.s.cols != m || model.rhs.len() != m {
+            return Err(PersistError::Malformed("streaming sums arity mismatch".into()));
+        }
+        if !(model.beta.len() == m || model.beta.is_empty()) {
+            return Err(PersistError::Malformed("β arity mismatch".into()));
+        }
+        if let Some(ch) = &model.chol_a {
+            if ch.n() != m {
+                return Err(PersistError::Malformed("normal-equations factor arity mismatch".into()));
+            }
+        }
+        Ok(model)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// artifact files (header + CRC'd sections)
+// ---------------------------------------------------------------------------
+
+/// One decoded section: 4-byte ASCII tag + checksum-verified payload.
+pub struct RawSection<'a> {
+    pub tag: [u8; 4],
+    pub payload: &'a [u8],
+}
+
+/// Assemble a complete artifact file from payload sections.
+pub fn build_artifact(kind: ArtifactKind, sections: &[([u8; 4], &[u8])]) -> Vec<u8> {
+    let total: usize = 8 + sections.iter().map(|(_, p)| 16 + p.len()).sum::<usize>();
+    let mut out = Vec::with_capacity(total);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    out.extend_from_slice(&(kind as u16).to_le_bytes());
+    for (tag, payload) in sections {
+        out.extend_from_slice(tag);
+        out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        out.extend_from_slice(payload);
+        out.extend_from_slice(&crc32(payload).to_le_bytes());
+    }
+    out
+}
+
+/// Validate the header and split into checksum-verified sections.
+pub fn parse_artifact(bytes: &[u8]) -> Result<(ArtifactKind, Vec<RawSection<'_>>), PersistError> {
+    if bytes.len() < 8 {
+        return Err(PersistError::Truncated);
+    }
+    if bytes[0..4] != MAGIC {
+        return Err(PersistError::BadMagic);
+    }
+    let version = u16::from_le_bytes(bytes[4..6].try_into().unwrap());
+    if version == 0 || version > FORMAT_VERSION {
+        return Err(PersistError::UnsupportedVersion { found: version });
+    }
+    let kind = ArtifactKind::from_u16(u16::from_le_bytes(bytes[6..8].try_into().unwrap()))
+        .ok_or_else(|| PersistError::Malformed("unknown artifact kind".into()))?;
+    let mut sections = Vec::new();
+    let mut pos = 8usize;
+    while pos < bytes.len() {
+        if bytes.len() - pos < 12 {
+            return Err(PersistError::Truncated);
+        }
+        let tag: [u8; 4] = bytes[pos..pos + 4].try_into().unwrap();
+        let len = u64::from_le_bytes(bytes[pos + 4..pos + 12].try_into().unwrap());
+        let len: usize =
+            len.try_into().map_err(|_| PersistError::Malformed("section length overflow".into()))?;
+        pos += 12;
+        // checked arithmetic: a corrupt length near usize::MAX must be a
+        // typed error, not an overflow panic (debug) or wrapped-guard
+        // slice panic (release)
+        let end = match len.checked_add(4).and_then(|l| pos.checked_add(l)) {
+            Some(end) if end <= bytes.len() => end,
+            _ => return Err(PersistError::Truncated),
+        };
+        let payload = &bytes[pos..pos + len];
+        let stored = u32::from_le_bytes(bytes[pos + len..end].try_into().unwrap());
+        if crc32(payload) != stored {
+            return Err(PersistError::ChecksumMismatch {
+                section: String::from_utf8_lossy(&tag).into_owned(),
+            });
+        }
+        sections.push(RawSection { tag, payload });
+        pos += len + 4;
+    }
+    Ok((kind, sections))
+}
+
+fn find_section<'a>(
+    sections: &'a [RawSection<'a>],
+    tag: &[u8; 4],
+) -> Result<&'a RawSection<'a>, PersistError> {
+    sections.iter().find(|s| &s.tag == tag).ok_or_else(|| {
+        PersistError::Malformed(format!(
+            "missing required section '{}'",
+            String::from_utf8_lossy(tag)
+        ))
+    })
+}
+
+/// Decode one value from a section payload, requiring full consumption.
+fn decode_section<T: Decode>(section: &RawSection<'_>) -> Result<T, PersistError> {
+    let mut r = Reader::new(section.payload);
+    let v = T::decode(&mut r)?;
+    if r.remaining() != 0 {
+        return Err(PersistError::Malformed(format!(
+            "{} trailing bytes in section '{}'",
+            r.remaining(),
+            String::from_utf8_lossy(&section.tag)
+        )));
+    }
+    Ok(v)
+}
+
+fn payload_of<T: Encode>(v: &T) -> Vec<u8> {
+    let mut w = Writer::new();
+    v.encode(&mut w);
+    w.buf
+}
+
+/// Serialize a fitted model to a complete artifact file.
+pub fn encode_model(model: &FittedModel) -> Vec<u8> {
+    // META: human-debuggable provenance (n, m, d, kernel); the decoder
+    // does not require it — the manifest is built from it at save time
+    let mut meta = Writer::new();
+    meta.put_u64(model.n_train);
+    meta.put_u64(model.nystrom.m() as u64);
+    meta.put_u64(model.nystrom.landmarks.cols as u64);
+    meta.put_str(&model.nystrom.kernel.spec.name());
+    let body = payload_of(model);
+    build_artifact(
+        ArtifactKind::Model,
+        &[(*b"META", meta.buf.as_slice()), (*b"MODL", body.as_slice())],
+    )
+}
+
+/// Decode a fitted model from artifact bytes.
+pub fn decode_model(bytes: &[u8]) -> Result<FittedModel, PersistError> {
+    let (kind, sections) = parse_artifact(bytes)?;
+    if kind != ArtifactKind::Model {
+        return Err(PersistError::WrongKind { expected: ArtifactKind::Model, found: kind });
+    }
+    decode_section(find_section(&sections, b"MODL")?)
+}
+
+/// The PRGS section: replay progress (everything in a
+/// [`StreamCheckpoint`] besides the config and the model). One struct so
+/// the encoder, decoder, and validation stay in one place.
+struct Progress {
+    window: Vec<f64>,
+    window_cap: usize,
+    err_at_publish: f64,
+    since_publish: usize,
+    origin: Option<String>,
+}
+
+impl Encode for Progress {
+    fn encode(&self, w: &mut Writer) {
+        self.window.encode(w);
+        self.window_cap.encode(w);
+        w.put_f64(self.err_at_publish);
+        self.since_publish.encode(w);
+        self.origin.encode(w);
+    }
+}
+
+impl Decode for Progress {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, PersistError> {
+        let p = Progress {
+            window: Decode::decode(r)?,
+            window_cap: Decode::decode(r)?,
+            err_at_publish: r.f64()?,
+            since_publish: Decode::decode(r)?,
+            origin: Decode::decode(r)?,
+        };
+        // cap 0 would disable the window's eviction condition after
+        // restore (the VecDeque would grow one f64 per arrival forever),
+        // so it is as malformed as an over-full window
+        if p.window_cap == 0 || p.window.len() > p.window_cap {
+            return Err(PersistError::Malformed("invalid prequential window capacity".into()));
+        }
+        Ok(p)
+    }
+}
+
+/// Serialize a stream checkpoint to a complete artifact file.
+pub fn encode_checkpoint(chk: &StreamCheckpoint) -> Vec<u8> {
+    let cfg = payload_of(&chk.cfg);
+    let model = payload_of(&chk.model);
+    let prgs = payload_of(&Progress {
+        window: chk.window.clone(),
+        window_cap: chk.window_cap,
+        err_at_publish: chk.err_at_publish,
+        since_publish: chk.since_publish,
+        origin: chk.origin.clone(),
+    });
+    build_artifact(
+        ArtifactKind::Checkpoint,
+        &[
+            (*b"CFG ", cfg.as_slice()),
+            (*b"MODL", model.as_slice()),
+            (*b"PRGS", prgs.as_slice()),
+        ],
+    )
+}
+
+/// Decode a stream checkpoint from artifact bytes.
+pub fn decode_checkpoint(bytes: &[u8]) -> Result<StreamCheckpoint, PersistError> {
+    let (kind, sections) = parse_artifact(bytes)?;
+    if kind != ArtifactKind::Checkpoint {
+        return Err(PersistError::WrongKind { expected: ArtifactKind::Checkpoint, found: kind });
+    }
+    let cfg: StreamConfig = decode_section(find_section(&sections, b"CFG ")?)?;
+    let model: IncrementalModel = decode_section(find_section(&sections, b"MODL")?)?;
+    let p: Progress = decode_section(find_section(&sections, b"PRGS")?)?;
+    Ok(StreamCheckpoint {
+        cfg,
+        model,
+        window: p.window,
+        window_cap: p.window_cap,
+        err_at_publish: p.err_at_publish,
+        since_publish: p.since_publish,
+        origin: p.origin,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{fit_with_backend, FitConfig};
+    use crate::data::{dist1d, Dist1d};
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn roundtrip<T: Encode + Decode>(v: &T) -> T {
+        let bytes = payload_of(v);
+        let mut r = Reader::new(&bytes);
+        let back = T::decode(&mut r).expect("decode");
+        assert_eq!(r.remaining(), 0, "payload not fully consumed");
+        back
+    }
+
+    fn bits(xs: &[f64]) -> Vec<u64> {
+        xs.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // standard IEEE test vector
+        assert_eq!(crc32(b"123456789"), 0xCBF43926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn prop_vec_f64_roundtrip_bitwise() {
+        // includes negative zero, subnormals, infinities and NaN payloads:
+        // the codec must preserve the exact bit pattern of every f64
+        prop::check(
+            101,
+            80,
+            |rng| {
+                let n = rng.usize(40);
+                (0..n)
+                    .map(|i| match i % 6 {
+                        0 => rng.normal() * 10f64.powi(rng.usize(40) as i32 - 20),
+                        1 => -0.0,
+                        2 => f64::INFINITY,
+                        3 => f64::from_bits(0x7FF8_0000_0000_1234), // NaN w/ payload
+                        4 => f64::MIN_POSITIVE / 8.0,               // subnormal
+                        _ => rng.normal(),
+                    })
+                    .collect::<Vec<f64>>()
+            },
+            |v| bits(&roundtrip(v)) == bits(v),
+        );
+    }
+
+    #[test]
+    fn prop_mat_roundtrip_bitwise_random_shapes() {
+        prop::check(
+            102,
+            60,
+            |rng| {
+                let r = rng.usize(12);
+                let c = if r == 0 { 0 } else { 1 + rng.usize(12) };
+                Mat::from_fn(r, c, |_, _| rng.normal() * 1e3)
+            },
+            |m| {
+                let back = roundtrip(m);
+                back.rows == m.rows && back.cols == m.cols && bits(&back.data) == bits(&m.data)
+            },
+        );
+    }
+
+    #[test]
+    fn prop_cholesky_roundtrip_bitwise() {
+        prop::check(
+            103,
+            40,
+            |rng| {
+                let n = 1 + rng.usize(10);
+                let a = Mat { rows: n, cols: n, data: prop::gen::spd(rng, n, 0.5) };
+                Cholesky::factor_jittered(&a).unwrap()
+            },
+            |ch| {
+                let back = roundtrip(ch);
+                back.n() == ch.n()
+                    && back.jitter.to_bits() == ch.jitter.to_bits()
+                    && bits(&back.l) == bits(&ch.l)
+            },
+        );
+    }
+
+    #[test]
+    fn scalar_and_container_roundtrips() {
+        for spec in [
+            KernelSpec::Matern { nu: 1.5, a: 1.732 },
+            KernelSpec::Gaussian { sigma: 0.4 },
+        ] {
+            assert_eq!(roundtrip(&spec), spec);
+        }
+        assert_eq!(roundtrip(&Some(7u64)), Some(7));
+        assert_eq!(roundtrip(&None::<u64>), None);
+        assert_eq!(roundtrip(&"héllo\nworld".to_string()), "héllo\nworld");
+        assert_eq!(roundtrip(&true), true);
+        assert_eq!(
+            roundtrip(&RefreshPolicy { every: 17, drift: 0.25 }),
+            RefreshPolicy { every: 17, drift: 0.25 }
+        );
+        let cp = CheckpointPolicy {
+            every: 5,
+            dir: Some("models".into()),
+            name: "s".into(),
+            keep_last: 3,
+        };
+        assert_eq!(roundtrip(&cp), cp);
+    }
+
+    fn tiny_model(n: usize, seed: u64) -> FittedModel {
+        let mut rng = Rng::seed_from_u64(seed);
+        let ds = dist1d(Dist1d::Uniform, n, &mut rng);
+        let cfg = FitConfig::default_for(&ds);
+        fit_with_backend(&ds, &cfg, Backend::Native).unwrap()
+    }
+
+    #[test]
+    fn model_file_roundtrip_predicts_bitwise() {
+        let model = tiny_model(150, 7);
+        let bytes = encode_model(&model);
+        let back = decode_model(&bytes).unwrap();
+        assert_eq!(back.nystrom.idx, model.nystrom.idx);
+        assert_eq!(bits(&back.nystrom.beta), bits(&model.nystrom.beta));
+        assert_eq!(bits(&back.q), bits(&model.q));
+        assert_eq!(back.n_train, model.n_train);
+        assert_eq!(back.n_train, 150);
+        let grid = Mat::from_fn(64, 1, |i, _| i as f64 / 63.0);
+        assert_eq!(
+            bits(&back.predict_batch(&grid)),
+            bits(&model.predict_batch(&grid)),
+            "loaded model must predict bit-identically"
+        );
+    }
+
+    fn tiny_checkpoint(n: usize, seed: u64) -> StreamCheckpoint {
+        let mut rng = Rng::seed_from_u64(seed);
+        let ds = dist1d(Dist1d::Bimodal, n, &mut rng);
+        let cfg = StreamConfig {
+            kernel: KernelSpec::Matern { nu: 1.5, a: 1.0 },
+            mu: n as f64 * 1e-3,
+            budget: 16,
+            accept_threshold: 0.01,
+            refresh: RefreshPolicy { every: 32, drift: 0.0 },
+            threads: None,
+            checkpoint: CheckpointPolicy::default(),
+        };
+        let mut sc = crate::stream::StreamCoordinator::new(cfg);
+        sc.set_origin(format!("bimodal:n={n}:seed={seed}:d=1"));
+        for i in 0..ds.n() {
+            sc.ingest(ds.x.row(i), ds.y[i]);
+        }
+        sc.checkpoint()
+    }
+
+    #[test]
+    fn checkpoint_file_roundtrip_is_bitwise() {
+        let chk = tiny_checkpoint(120, 8);
+        let bytes = encode_checkpoint(&chk);
+        let back = decode_checkpoint(&bytes).unwrap();
+        assert_eq!(back.cfg.kernel, chk.cfg.kernel);
+        assert_eq!(back.model.n_seen(), chk.model.n_seen());
+        assert_eq!(back.model.dict().arrivals(), chk.model.dict().arrivals());
+        assert_eq!(bits(back.model.beta()), bits(chk.model.beta()));
+        assert_eq!(bits(&back.window), bits(&chk.window));
+        assert_eq!(back.since_publish, chk.since_publish);
+        assert_eq!(back.err_at_publish.to_bits(), chk.err_at_publish.to_bits());
+        assert_eq!(back.origin, chk.origin);
+        assert_eq!(back.origin.as_deref(), Some("bimodal:n=120:seed=8:d=1"));
+        for &x in &[0.05, 0.4, 0.9] {
+            assert_eq!(
+                back.model.predict_one(&[x]).to_bits(),
+                chk.model.predict_one(&[x]).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn corrupted_artifacts_are_rejected_with_typed_errors() {
+        let bytes = encode_model(&tiny_model(80, 9));
+        // bad magic
+        let mut b = bytes.clone();
+        b[0] ^= 0xFF;
+        assert!(matches!(decode_model(&b), Err(PersistError::BadMagic)));
+        // future format version
+        let mut b = bytes.clone();
+        b[4] = 0xFF;
+        assert!(matches!(
+            decode_model(&b),
+            Err(PersistError::UnsupportedVersion { .. })
+        ));
+        // flipped payload bit → per-section CRC catches it
+        let mut b = bytes.clone();
+        let mid = b.len() / 2;
+        b[mid] ^= 0x01;
+        assert!(matches!(decode_model(&b), Err(PersistError::ChecksumMismatch { .. })));
+        // truncation at every prefix length must yield a typed error,
+        // never a panic or a half-decoded model
+        for cut in [0, 3, 7, 8, 20, bytes.len() / 2, bytes.len() - 1] {
+            let err = decode_model(&bytes[..cut]).unwrap_err();
+            assert!(err.is_corrupt(), "cut={cut}: {err}");
+        }
+        // wrong kind: a checkpoint is not a model
+        let chk_bytes = encode_checkpoint(&tiny_checkpoint(60, 10));
+        assert!(matches!(decode_model(&chk_bytes), Err(PersistError::WrongKind { .. })));
+        assert!(matches!(
+            decode_checkpoint(&bytes),
+            Err(PersistError::WrongKind { .. })
+        ));
+    }
+
+    #[test]
+    fn unknown_sections_are_ignored_for_forward_compat() {
+        let model = tiny_model(60, 11);
+        let body = payload_of(&model);
+        let extra = b"future-extension payload";
+        let bytes = build_artifact(
+            ArtifactKind::Model,
+            &[(*b"XTRA", extra.as_slice()), (*b"MODL", body.as_slice())],
+        );
+        let back = decode_model(&bytes).unwrap();
+        assert_eq!(bits(&back.nystrom.beta), bits(&model.nystrom.beta));
+    }
+
+    #[test]
+    fn giant_section_length_in_header_fails_cleanly() {
+        // a section header claiming a near-usize::MAX payload must be a
+        // typed error, never overflow arithmetic or a slice panic
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC);
+        bytes.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        bytes.extend_from_slice(&(ArtifactKind::Model as u16).to_le_bytes());
+        bytes.extend_from_slice(b"MODL");
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        let err = decode_model(&bytes).unwrap_err();
+        assert!(err.is_corrupt(), "{err}");
+        bytes.truncate(bytes.len() - 8);
+        bytes.extend_from_slice(&(u64::MAX - 3).to_le_bytes());
+        let err = decode_model(&bytes).unwrap_err();
+        assert!(err.is_corrupt(), "{err}");
+    }
+
+    #[test]
+    fn giant_claimed_lengths_fail_cleanly() {
+        // a corrupt u64 length must not trigger a huge allocation
+        let mut w = Writer::new();
+        w.put_u64(u64::MAX);
+        let mut r = Reader::new(&w.buf);
+        assert!(Vec::<f64>::decode(&mut r).is_err());
+        let mut w = Writer::new();
+        w.put_u64(1 << 40);
+        w.put_u64(1 << 40);
+        let mut r = Reader::new(&w.buf);
+        assert!(Mat::decode(&mut r).is_err());
+    }
+}

@@ -1,0 +1,120 @@
+//! Model persistence: binary codec + versioned artifact store.
+//!
+//! Everything the crate can fit or stream — the SA-leverage Nyström
+//! model ([`crate::coordinator::FittedModel`]), the streaming
+//! dictionary / incremental model, a full
+//! [`crate::stream::StreamCoordinator`] checkpoint — can be frozen to a
+//! compact binary artifact and brought back **bit-identically**: a
+//! loaded model predicts the same bits as the fitted one, and a restored
+//! checkpoint replays subsequent arrivals to the same bits as an
+//! uninterrupted run (the same determinism contract the compute pool
+//! pins across thread counts).
+//!
+//! * [`codec`] — dependency-free binary format: `LKRR` magic +
+//!   format-version header, length-prefixed CRC32-verified sections,
+//!   `f64`s stored as exact bit patterns. [`codec::Encode`] /
+//!   [`codec::Decode`] cover `Mat`, `Cholesky`, kernels, the fitted
+//!   model, the online dictionary, the incremental model, and stream
+//!   checkpoints.
+//! * [`store`] — `<dir>/<name>/<version>.lkrr` with a JSON `MANIFEST`
+//!   (name, version, kind, created-at, n/m/d, kernel, checksum); writes
+//!   are temp-file + atomic rename; `save` / `load` / `list` / `latest`
+//!   / `gc(keep_last_k)`.
+//!
+//! Corruption anywhere (bit flip, truncation, foreign file, newer
+//! format) is a typed [`PersistError`] — never a panic, never a
+//! half-decoded model — and every corrupt reject is counted in
+//! [`crate::metrics::global`] as `persist.load.corrupt`.
+//!
+//! Wiring through the stack: `FittedModel::{save, load}`,
+//! [`crate::coordinator::Server::start_from_artifact`] (cold start a
+//! serving process with zero refit work),
+//! `StreamCoordinator::{checkpoint, restore}` plus the periodic
+//! [`crate::stream::CheckpointPolicy`], the `export` / `import` /
+//! `models` CLI subcommands, `stream --warm-start`, and the `persist`
+//! JSON config section.
+
+pub mod codec;
+pub mod store;
+
+pub use codec::{ArtifactKind, Decode, Encode, FORMAT_VERSION, MAGIC};
+pub use store::{ArtifactMeta, Store};
+
+/// Typed persistence failure. `is_corrupt` distinguishes damaged or
+/// foreign artifacts (counted as `persist.load.corrupt`) from plain I/O
+/// or lookup errors.
+#[derive(Debug)]
+pub enum PersistError {
+    Io(std::io::Error),
+    /// The file does not start with the `LKRR` magic.
+    BadMagic,
+    /// Written by a newer (or invalid) format version.
+    UnsupportedVersion { found: u16 },
+    /// The artifact holds a different kind than requested (e.g. loading
+    /// a stream checkpoint as a model).
+    WrongKind { expected: ArtifactKind, found: ArtifactKind },
+    /// A section's CRC32 does not match its payload (`section` is the
+    /// tag, or `"file"` for a whole-file checksum from the manifest).
+    ChecksumMismatch { section: String },
+    /// The file ends mid-header, mid-section, or mid-value.
+    Truncated,
+    /// Structurally invalid payload (bad tag, arity mismatch, …).
+    Malformed(String),
+    /// No such artifact name/version in the store.
+    NotFound { name: String, version: Option<u64> },
+}
+
+impl PersistError {
+    /// True for damaged/foreign-artifact rejects — the class counted
+    /// under `persist.load.corrupt` (I/O and not-found are not corruption).
+    pub fn is_corrupt(&self) -> bool {
+        matches!(
+            self,
+            PersistError::BadMagic
+                | PersistError::UnsupportedVersion { .. }
+                | PersistError::WrongKind { .. }
+                | PersistError::ChecksumMismatch { .. }
+                | PersistError::Truncated
+                | PersistError::Malformed(_)
+        )
+    }
+}
+
+impl std::fmt::Display for PersistError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PersistError::Io(e) => write!(f, "persist i/o: {e}"),
+            PersistError::BadMagic => write!(f, "not a leverkrr artifact (bad magic)"),
+            PersistError::UnsupportedVersion { found } => {
+                write!(f, "unsupported artifact format version {found} (reader supports ≤ {})", codec::FORMAT_VERSION)
+            }
+            PersistError::WrongKind { expected, found } => {
+                write!(f, "artifact kind mismatch: expected {}, found {}", expected.name(), found.name())
+            }
+            PersistError::ChecksumMismatch { section } => {
+                write!(f, "checksum mismatch in section '{section}' (artifact corrupted)")
+            }
+            PersistError::Truncated => write!(f, "artifact truncated"),
+            PersistError::Malformed(msg) => write!(f, "malformed artifact: {msg}"),
+            PersistError::NotFound { name, version } => match version {
+                Some(v) => write!(f, "artifact '{name}' version {v} not found"),
+                None => write!(f, "artifact '{name}' not found"),
+            },
+        }
+    }
+}
+
+impl std::error::Error for PersistError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            PersistError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for PersistError {
+    fn from(e: std::io::Error) -> Self {
+        PersistError::Io(e)
+    }
+}

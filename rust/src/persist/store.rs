@@ -1,0 +1,636 @@
+//! Versioned on-disk artifact store.
+//!
+//! Layout under a root directory:
+//!
+//! ```text
+//!   <root>/<name>/<version>.lkrr     one artifact per monotonically
+//!                                    increasing integer version
+//!   <root>/<name>/MANIFEST.json      provenance: name, version, kind,
+//!                                    created-at, n/m/d, kernel, checksum
+//! ```
+//!
+//! Writes are crash-safe: the artifact lands in a dot-prefixed temp file
+//! first and is moved into place with an atomic `rename`, so a reader
+//! never observes a half-written `.lkrr` file (the manifest is rewritten
+//! the same way). The manifest is advisory — `load` decodes and
+//! CRC-verifies the artifact itself, so a lost or stale manifest only
+//! costs metadata, never correctness.
+//!
+//! Any corrupt artifact (bad magic, wrong format version, checksum
+//! mismatch, truncation, malformed payload) is rejected with the typed
+//! [`PersistError`] and counted in `metrics::global()` under
+//! `persist.load.corrupt` — a loader never panics and never yields a
+//! half-decoded model.
+
+use super::codec::{self, ArtifactKind};
+use super::PersistError;
+use crate::coordinator::FittedModel;
+use crate::stream::StreamCheckpoint;
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Manifest entry for one stored artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub version: u64,
+    /// `"model"` or `"checkpoint"`.
+    pub kind: String,
+    /// Unix seconds at save time.
+    pub created_unix: u64,
+    /// Training points the artifact has seen (batch n or stream n_seen).
+    pub n: u64,
+    /// Landmarks / dictionary atoms.
+    pub m: u64,
+    /// Input dimension.
+    pub d: u64,
+    /// Kernel spec string, e.g. `matern(nu=1.5,a=1.732)`.
+    pub kernel: String,
+    /// Artifact file size in bytes.
+    pub bytes: u64,
+    /// CRC32 of the complete artifact file.
+    pub checksum: u32,
+}
+
+impl ArtifactMeta {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("version", Json::Num(self.version as f64)),
+            ("kind", Json::Str(self.kind.clone())),
+            ("created_unix", Json::Num(self.created_unix as f64)),
+            ("n", Json::Num(self.n as f64)),
+            ("m", Json::Num(self.m as f64)),
+            ("d", Json::Num(self.d as f64)),
+            ("kernel", Json::Str(self.kernel.clone())),
+            ("bytes", Json::Num(self.bytes as f64)),
+            ("checksum", Json::Num(self.checksum as f64)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Option<ArtifactMeta> {
+        Some(ArtifactMeta {
+            name: j.get("name").as_str()?.to_string(),
+            version: j.get("version").as_usize()? as u64,
+            kind: j.get("kind").as_str().unwrap_or("model").to_string(),
+            created_unix: j.get("created_unix").as_usize().unwrap_or(0) as u64,
+            n: j.get("n").as_usize().unwrap_or(0) as u64,
+            m: j.get("m").as_usize().unwrap_or(0) as u64,
+            d: j.get("d").as_usize().unwrap_or(0) as u64,
+            kernel: j.get("kernel").as_str().unwrap_or("?").to_string(),
+            bytes: j.get("bytes").as_usize().unwrap_or(0) as u64,
+            checksum: j.get("checksum").as_usize().unwrap_or(0) as u32,
+        })
+    }
+}
+
+/// Handle to an artifact-store root directory.
+#[derive(Clone, Debug)]
+pub struct Store {
+    root: PathBuf,
+}
+
+/// Process-wide sequence making every temp-file name unique: concurrent
+/// same-process writers (which the version-claim loop in `save_bytes`
+/// explicitly supports) must not truncate each other's temp files —
+/// the pid alone cannot distinguish two threads.
+fn unique_tmp_name(prefix: &str) -> String {
+    static TMP_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    format!(
+        ".tmp-{prefix}-{}-{}",
+        std::process::id(),
+        TMP_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+    )
+}
+
+impl Store {
+    /// Open (creating if needed) a store rooted at `dir`.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Store, PersistError> {
+        std::fs::create_dir_all(&dir)?;
+        Ok(Store { root: dir.as_ref().to_path_buf() })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn name_dir(&self, name: &str) -> PathBuf {
+        self.root.join(name)
+    }
+
+    /// On-disk path of one artifact version.
+    pub fn path_of(&self, name: &str, version: u64) -> PathBuf {
+        self.name_dir(name).join(format!("{version}.lkrr"))
+    }
+
+    fn manifest_path(&self, name: &str) -> PathBuf {
+        self.name_dir(name).join("MANIFEST.json")
+    }
+
+    fn check_name(name: &str) -> Result<(), PersistError> {
+        let ok = !name.is_empty()
+            && name != "."
+            && name != ".."
+            && !name.starts_with('.')
+            && name.chars().all(|c| c.is_ascii_alphanumeric() || "-_.".contains(c));
+        if ok {
+            Ok(())
+        } else {
+            Err(PersistError::Malformed(format!("bad artifact name '{name}'")))
+        }
+    }
+
+    /// Stored versions of `name`, ascending (empty if none or the name
+    /// is invalid — every name-taking entry point rejects path-escaping
+    /// names like `../x`, not just `save`).
+    pub fn versions(&self, name: &str) -> Vec<u64> {
+        if Self::check_name(name).is_err() {
+            return Vec::new();
+        }
+        let mut vs: Vec<u64> = match std::fs::read_dir(self.name_dir(name)) {
+            Ok(rd) => rd
+                .filter_map(|e| e.ok())
+                .filter_map(|e| {
+                    let fname = e.file_name().into_string().ok()?;
+                    fname.strip_suffix(".lkrr")?.parse::<u64>().ok()
+                })
+                .collect(),
+            Err(_) => Vec::new(),
+        };
+        vs.sort_unstable();
+        vs
+    }
+
+    /// Highest stored version of `name` (None if absent).
+    pub fn latest(&self, name: &str) -> Option<u64> {
+        self.versions(name).last().copied()
+    }
+
+    /// Artifact names present in the store, sorted.
+    pub fn names(&self) -> Vec<String> {
+        let mut out: Vec<String> = match std::fs::read_dir(&self.root) {
+            Ok(rd) => rd
+                .filter_map(|e| e.ok())
+                .filter(|e| e.path().is_dir())
+                .filter_map(|e| e.file_name().into_string().ok())
+                .filter(|n| !n.starts_with('.'))
+                .collect(),
+            Err(_) => Vec::new(),
+        };
+        out.sort();
+        out
+    }
+
+    fn read_manifest(&self, name: &str) -> Vec<ArtifactMeta> {
+        let Ok(text) = std::fs::read_to_string(self.manifest_path(name)) else {
+            return Vec::new();
+        };
+        let Ok(doc) = Json::parse(&text) else { return Vec::new() };
+        doc.get("artifacts")
+            .as_arr()
+            .map(|a| a.iter().filter_map(ArtifactMeta::from_json).collect())
+            .unwrap_or_default()
+    }
+
+    fn write_manifest(&self, name: &str, entries: &[ArtifactMeta]) -> Result<(), PersistError> {
+        let doc = Json::obj(vec![
+            ("name", Json::Str(name.to_string())),
+            ("artifacts", Json::Arr(entries.iter().map(|e| e.to_json()).collect())),
+        ]);
+        let tmp = self.name_dir(name).join(unique_tmp_name("manifest"));
+        std::fs::write(&tmp, doc.to_string_pretty())?;
+        std::fs::rename(&tmp, self.manifest_path(name))?;
+        Ok(())
+    }
+
+    /// Manifest entries for every artifact under every name (or one name
+    /// with [`Store::list_name`]). Versions present on disk but missing
+    /// from a manifest get a minimal synthesized entry.
+    pub fn list(&self) -> Vec<ArtifactMeta> {
+        self.names().iter().flat_map(|n| self.list_name(n)).collect()
+    }
+
+    /// Manifest entries for one artifact name, ascending by version.
+    pub fn list_name(&self, name: &str) -> Vec<ArtifactMeta> {
+        if Self::check_name(name).is_err() {
+            return Vec::new();
+        }
+        let manifest = self.read_manifest(name);
+        let mut out: Vec<ArtifactMeta> = Vec::new();
+        for v in self.versions(name) {
+            match manifest.iter().find(|e| e.version == v) {
+                Some(e) => out.push(e.clone()),
+                None => out.push(ArtifactMeta {
+                    name: name.to_string(),
+                    version: v,
+                    kind: "?".to_string(),
+                    created_unix: 0,
+                    n: 0,
+                    m: 0,
+                    d: 0,
+                    kernel: "?".to_string(),
+                    bytes: std::fs::metadata(self.path_of(name, v))
+                        .map(|m| m.len())
+                        .unwrap_or(0),
+                    checksum: 0,
+                }),
+            }
+        }
+        out
+    }
+
+    fn save_bytes(
+        &self,
+        name: &str,
+        kind: ArtifactKind,
+        bytes: &[u8],
+        n: u64,
+        m: u64,
+        d: u64,
+        kernel: String,
+    ) -> Result<ArtifactMeta, PersistError> {
+        Self::check_name(name)?;
+        std::fs::create_dir_all(self.name_dir(name))?;
+        // temp file first: a concurrent reader either sees the previous
+        // version set or a complete new file, never a prefix (the
+        // sequence counter keeps same-process writers from colliding)
+        let tmp = self.name_dir(name).join(unique_tmp_name("artifact"));
+        {
+            use std::io::Write;
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(bytes)?;
+            // data must hit disk before the link becomes durable —
+            // otherwise a power cut can leave a complete-looking but
+            // empty/partial file as the latest version
+            f.sync_all()?;
+        }
+        // claim a version slot with hard_link, which (unlike rename)
+        // fails if the destination exists: two writers racing on
+        // latest()+1 get distinct versions instead of one silently
+        // overwriting the other's artifact
+        let mut version = self.latest(name).map_or(1, |v| v + 1);
+        let mut claimed = false;
+        for _ in 0..64 {
+            match std::fs::hard_link(&tmp, self.path_of(name, version)) {
+                Ok(()) => {
+                    claimed = true;
+                    break;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => version += 1,
+                Err(e) => {
+                    let _ = std::fs::remove_file(&tmp);
+                    return Err(PersistError::Io(e));
+                }
+            }
+        }
+        let _ = std::fs::remove_file(&tmp);
+        if !claimed {
+            return Err(PersistError::Io(std::io::Error::new(
+                std::io::ErrorKind::Other,
+                "could not claim an artifact version slot (64 contended attempts)",
+            )));
+        }
+        // best-effort directory sync so the link itself survives a crash
+        if let Ok(d) = std::fs::File::open(self.name_dir(name)) {
+            let _ = d.sync_all();
+        }
+        let created_unix = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        let meta = ArtifactMeta {
+            name: name.to_string(),
+            version,
+            kind: kind.name().to_string(),
+            created_unix,
+            n,
+            m,
+            d,
+            kernel,
+            bytes: bytes.len() as u64,
+            checksum: codec::crc32(bytes),
+        };
+        let mut entries = self.read_manifest(name);
+        entries.retain(|e| e.version != version);
+        entries.push(meta.clone());
+        entries.sort_by_key(|e| e.version);
+        self.write_manifest(name, &entries)?;
+        Ok(meta)
+    }
+
+    /// Save a fitted model; returns its manifest entry (with the new
+    /// version).
+    pub fn save_model(&self, name: &str, model: &FittedModel) -> Result<ArtifactMeta, PersistError> {
+        let bytes = codec::encode_model(model);
+        self.save_bytes(
+            name,
+            ArtifactKind::Model,
+            &bytes,
+            model.n_train,
+            model.nystrom.m() as u64,
+            model.nystrom.landmarks.cols as u64,
+            model.nystrom.kernel.spec.name(),
+        )
+    }
+
+    /// Save a stream checkpoint; returns its manifest entry.
+    pub fn save_checkpoint(
+        &self,
+        name: &str,
+        chk: &StreamCheckpoint,
+    ) -> Result<ArtifactMeta, PersistError> {
+        let bytes = codec::encode_checkpoint(chk);
+        self.save_bytes(
+            name,
+            ArtifactKind::Checkpoint,
+            &bytes,
+            chk.model.n_seen(),
+            chk.model.m() as u64,
+            chk.model.dict().dim() as u64,
+            chk.cfg.kernel.name(),
+        )
+    }
+
+    /// Read raw artifact bytes (latest version when `version` is None),
+    /// verifying the whole-file checksum against the manifest when an
+    /// entry exists.
+    /// Callers (`load_model` / `load_checkpoint`) have already validated
+    /// `name` — outside the corrupt-counting wrapper, since a bad name is
+    /// a caller error, not a damaged artifact.
+    fn load_bytes(&self, name: &str, version: Option<u64>) -> Result<(u64, Vec<u8>), PersistError> {
+        let v = match version.or_else(|| self.latest(name)) {
+            Some(v) => v,
+            None => return Err(PersistError::NotFound { name: name.to_string(), version }),
+        };
+        let path = self.path_of(name, v);
+        let bytes = std::fs::read(&path).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::NotFound {
+                PersistError::NotFound { name: name.to_string(), version: Some(v) }
+            } else {
+                PersistError::Io(e)
+            }
+        })?;
+        if let Some(entry) = self.read_manifest(name).iter().find(|e| e.version == v) {
+            if entry.checksum != 0 && entry.checksum != codec::crc32(&bytes) {
+                return Err(PersistError::ChecksumMismatch { section: "file".to_string() });
+            }
+        }
+        Ok((v, bytes))
+    }
+
+    /// Count a corrupt reject in the process-global metrics registry.
+    fn reject_if_corrupt<T>(res: Result<T, PersistError>) -> Result<T, PersistError> {
+        if let Err(e) = &res {
+            if e.is_corrupt() {
+                crate::metrics::global().incr("persist.load.corrupt", 1);
+            }
+        }
+        res
+    }
+
+    /// Load a model (latest version when `version` is None). Corrupt
+    /// artifacts yield a typed error and a `persist.load.corrupt` count.
+    pub fn load_model(
+        &self,
+        name: &str,
+        version: Option<u64>,
+    ) -> Result<(u64, FittedModel), PersistError> {
+        Self::check_name(name)?;
+        Self::reject_if_corrupt(
+            self.load_bytes(name, version)
+                .and_then(|(v, bytes)| Ok((v, codec::decode_model(&bytes)?))),
+        )
+    }
+
+    /// Load a stream checkpoint (latest version when `version` is None).
+    pub fn load_checkpoint(
+        &self,
+        name: &str,
+        version: Option<u64>,
+    ) -> Result<(u64, StreamCheckpoint), PersistError> {
+        Self::check_name(name)?;
+        Self::reject_if_corrupt(
+            self.load_bytes(name, version)
+                .and_then(|(v, bytes)| Ok((v, codec::decode_checkpoint(&bytes)?))),
+        )
+    }
+
+    /// Drop all but the newest `keep_last` versions of `name`; returns
+    /// how many artifacts were removed. `keep_last == 0` keeps everything.
+    pub fn gc(&self, name: &str, keep_last: usize) -> Result<usize, PersistError> {
+        Self::check_name(name)?;
+        let versions = self.versions(name);
+        if keep_last == 0 || versions.len() <= keep_last {
+            return Ok(0);
+        }
+        let cut = versions.len() - keep_last;
+        let drop: Vec<u64> = versions[..cut].to_vec();
+        for &v in &drop {
+            std::fs::remove_file(self.path_of(name, v))?;
+        }
+        let mut entries = self.read_manifest(name);
+        entries.retain(|e| !drop.contains(&e.version));
+        self.write_manifest(name, &entries)?;
+        Ok(drop.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{fit_with_backend, FitConfig};
+    use crate::data::{dist1d, Dist1d};
+    use crate::linalg::Mat;
+    use crate::runtime::Backend;
+    use crate::util::rng::Rng;
+
+    /// Fresh store under the OS temp dir, removed on drop.
+    struct TempStore {
+        store: Store,
+        dir: PathBuf,
+    }
+
+    impl TempStore {
+        fn new(tag: &str) -> TempStore {
+            let dir = std::env::temp_dir().join(format!(
+                "leverkrr-store-test-{tag}-{}",
+                std::process::id()
+            ));
+            let _ = std::fs::remove_dir_all(&dir);
+            TempStore { store: Store::open(&dir).unwrap(), dir }
+        }
+    }
+
+    impl Drop for TempStore {
+        fn drop(&mut self) {
+            let _ = std::fs::remove_dir_all(&self.dir);
+        }
+    }
+
+    fn tiny_model(seed: u64) -> FittedModel {
+        let mut rng = Rng::seed_from_u64(seed);
+        let ds = dist1d(Dist1d::Uniform, 120, &mut rng);
+        let cfg = FitConfig::default_for(&ds);
+        fit_with_backend(&ds, &cfg, Backend::Native).unwrap()
+    }
+
+    #[test]
+    fn save_load_roundtrip_and_versioning() {
+        let ts = TempStore::new("roundtrip");
+        let m1 = tiny_model(1);
+        let meta1 = ts.store.save_model("demo", &m1).unwrap();
+        assert_eq!(meta1.version, 1);
+        assert_eq!(meta1.kind, "model");
+        assert_eq!(meta1.m, m1.nystrom.m() as u64);
+        let m2 = tiny_model(2);
+        let meta2 = ts.store.save_model("demo", &m2).unwrap();
+        assert_eq!(meta2.version, 2);
+        assert_eq!(ts.store.versions("demo"), vec![1, 2]);
+        assert_eq!(ts.store.latest("demo"), Some(2));
+        // latest loads v2, explicit version loads v1 — both bitwise
+        let (v, loaded2) = ts.store.load_model("demo", None).unwrap();
+        assert_eq!(v, 2);
+        assert_eq!(loaded2.nystrom.beta, m2.nystrom.beta);
+        let (_, loaded1) = ts.store.load_model("demo", Some(1)).unwrap();
+        assert_eq!(loaded1.nystrom.beta, m1.nystrom.beta);
+        let grid = Mat::from_fn(32, 1, |i, _| i as f64 / 31.0);
+        let want: Vec<u64> = m2.predict_batch(&grid).iter().map(|x| x.to_bits()).collect();
+        let got: Vec<u64> =
+            loaded2.predict_batch(&grid).iter().map(|x| x.to_bits()).collect();
+        assert_eq!(got, want);
+        // no temp files left behind
+        let leftovers: Vec<_> = std::fs::read_dir(ts.dir.join("demo"))
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().starts_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "temp files left: {leftovers:?}");
+    }
+
+    #[test]
+    fn manifest_lists_provenance() {
+        let ts = TempStore::new("manifest");
+        ts.store.save_model("a", &tiny_model(3)).unwrap();
+        ts.store.save_model("a", &tiny_model(4)).unwrap();
+        ts.store.save_model("b", &tiny_model(5)).unwrap();
+        let all = ts.store.list();
+        assert_eq!(all.len(), 3);
+        let a = ts.store.list_name("a");
+        assert_eq!(a.len(), 2);
+        assert_eq!((a[0].version, a[1].version), (1, 2));
+        assert!(a[0].kernel.starts_with("matern"));
+        assert!(a[0].bytes > 0 && a[0].checksum != 0);
+        assert_eq!(a[0].n, 120);
+        assert_eq!(a[0].d, 1);
+    }
+
+    #[test]
+    fn gc_keeps_newest_k() {
+        let ts = TempStore::new("gc");
+        for s in 0..5 {
+            ts.store.save_model("demo", &tiny_model(s)).unwrap();
+        }
+        let removed = ts.store.gc("demo", 2).unwrap();
+        assert_eq!(removed, 3);
+        assert_eq!(ts.store.versions("demo"), vec![4, 5]);
+        assert_eq!(ts.store.list_name("demo").len(), 2);
+        // keep_last 0 keeps everything
+        assert_eq!(ts.store.gc("demo", 0).unwrap(), 0);
+        // latest still loads
+        assert_eq!(ts.store.load_model("demo", None).unwrap().0, 5);
+    }
+
+    #[test]
+    fn missing_artifacts_are_not_found() {
+        let ts = TempStore::new("missing");
+        assert!(matches!(
+            ts.store.load_model("nope", None),
+            Err(PersistError::NotFound { .. })
+        ));
+        ts.store.save_model("demo", &tiny_model(6)).unwrap();
+        assert!(matches!(
+            ts.store.load_model("demo", Some(9)),
+            Err(PersistError::NotFound { .. })
+        ));
+    }
+
+    #[test]
+    fn corrupt_artifact_rejected_and_counted() {
+        let ts = TempStore::new("corrupt");
+        let meta = ts.store.save_model("demo", &tiny_model(7)).unwrap();
+        let path = ts.store.path_of("demo", meta.version);
+        // flip one payload bit on disk
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+        let before = crate::metrics::global().counter("persist.load.corrupt");
+        let err = ts.store.load_model("demo", None).unwrap_err();
+        assert!(err.is_corrupt(), "{err}");
+        assert!(matches!(err, PersistError::ChecksumMismatch { .. }));
+        // truncation is also typed + counted
+        std::fs::write(&path, &bytes[..bytes.len() / 3]).unwrap();
+        let err = ts.store.load_model("demo", None).unwrap_err();
+        assert!(err.is_corrupt(), "{err}");
+        assert_eq!(
+            crate::metrics::global().counter("persist.load.corrupt"),
+            before + 2,
+            "corrupt rejects must be counted in metrics::global()"
+        );
+    }
+
+    #[test]
+    fn bad_names_rejected() {
+        let ts = TempStore::new("names");
+        let m = tiny_model(8);
+        for bad in ["", ".", "..", "a/b", "../escape", ".hidden", "x y"] {
+            assert!(
+                matches!(ts.store.save_model(bad, &m), Err(PersistError::Malformed(_))),
+                "save with name '{bad}' must be rejected"
+            );
+            assert!(
+                matches!(ts.store.load_model(bad, None), Err(PersistError::Malformed(_))),
+                "load with name '{bad}' must be rejected"
+            );
+            assert!(
+                matches!(ts.store.gc(bad, 1), Err(PersistError::Malformed(_))),
+                "gc with name '{bad}' must be rejected"
+            );
+            assert!(ts.store.versions(bad).is_empty());
+            assert!(ts.store.list_name(bad).is_empty());
+        }
+    }
+
+    #[test]
+    fn checkpoint_save_load_roundtrip() {
+        use crate::kernels::KernelSpec;
+        use crate::stream::{CheckpointPolicy, RefreshPolicy, StreamConfig, StreamCoordinator};
+        let ts = TempStore::new("ckpt");
+        let mut rng = Rng::seed_from_u64(9);
+        let ds = dist1d(Dist1d::Bimodal, 150, &mut rng);
+        let cfg = StreamConfig {
+            kernel: KernelSpec::Matern { nu: 1.5, a: 1.0 },
+            mu: 0.15,
+            budget: 16,
+            accept_threshold: 0.01,
+            refresh: RefreshPolicy { every: 32, drift: 0.0 },
+            threads: None,
+            checkpoint: CheckpointPolicy::default(),
+        };
+        let mut sc = StreamCoordinator::new(cfg);
+        for i in 0..ds.n() {
+            sc.ingest(ds.x.row(i), ds.y[i]);
+        }
+        let chk = sc.checkpoint();
+        let meta = ts.store.save_checkpoint("stream", &chk).unwrap();
+        assert_eq!(meta.kind, "checkpoint");
+        assert_eq!(meta.n, 150);
+        let (_, back) = ts.store.load_checkpoint("stream", None).unwrap();
+        assert_eq!(back.model.beta(), chk.model.beta());
+        // a checkpoint is not a model
+        assert!(matches!(
+            ts.store.load_model("stream", None),
+            Err(PersistError::WrongKind { .. })
+        ));
+    }
+}

@@ -63,23 +63,28 @@ pub enum DictDecision {
 
 /// Budgeted online dictionary with an incrementally maintained Cholesky
 /// factor of `K_JJ + εI`.
+///
+/// Fields are `pub(crate)` so `persist::codec` can freeze and restore
+/// the full state bit-for-bit (checkpoint/restore must resume the exact
+/// admission trajectory); external callers go through the accessors.
+#[derive(Clone)]
 pub struct OnlineDictionary {
-    kernel: Kernel,
-    budget: usize,
+    pub(crate) kernel: Kernel,
+    pub(crate) budget: usize,
     /// Admission threshold on the relative residual δ/k(x,x) ∈ [0, 1].
     pub accept_threshold: f64,
     /// A candidate must beat `margin ×` the weakest atom's residual to
     /// trigger an eviction (hysteresis against churn).
     pub evict_margin: f64,
     /// Absolute jitter ε (set from the first point's k(x,x)).
-    eps: f64,
-    atoms: Mat,
-    arrival: Vec<u64>,
-    chol: Option<Cholesky>,
+    pub(crate) eps: f64,
+    pub(crate) atoms: Mat,
+    pub(crate) arrival: Vec<u64>,
+    pub(crate) chol: Option<Cholesky>,
     /// Memoized [`OnlineDictionary::atom_scores`] — the scores depend
     /// only on the atom set, so the O(m³) eviction scan is paid once per
     /// dictionary mutation instead of once per full-budget candidate.
-    cached_scores: Option<Vec<f64>>,
+    pub(crate) cached_scores: Option<Vec<f64>>,
 }
 
 impl OnlineDictionary {

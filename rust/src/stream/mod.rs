@@ -33,6 +33,13 @@
 //! Everything on the per-arrival path is deterministic and runs its
 //! inner loops on [`crate::util::pool`] primitives, so a replay is
 //! **bit-identical at every thread count** (`rust/tests/stream_parity.rs`).
+//!
+//! The coordinator is also durable: [`StreamCoordinator::checkpoint`]
+//! freezes the full state (dictionary, streaming sums, factors,
+//! prequential window) into a [`StreamCheckpoint`] — persisted by
+//! [`crate::persist`], written periodically per [`CheckpointPolicy`] —
+//! and [`StreamCoordinator::restore`] resumes it such that the rest of
+//! the stream replays bit-identically to a run that never stopped.
 
 pub mod dictionary;
 pub mod model;
@@ -66,6 +73,32 @@ impl Default for RefreshPolicy {
     }
 }
 
+/// When (and where) the coordinator writes durable checkpoints — the
+/// persistence twin of [`RefreshPolicy`]: a publish swaps a snapshot
+/// into the serving path, a checkpoint freezes the *full* coordinator
+/// state (dictionary, streaming sums, factors, prequential window) into
+/// the artifact store so a crashed or restarted process resumes with
+/// [`StreamCoordinator::restore`] instead of replaying the stream.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CheckpointPolicy {
+    /// Checkpoint every `every` arrivals (0 disables).
+    pub every: usize,
+    /// Artifact-store root directory (None disables).
+    pub dir: Option<String>,
+    /// Artifact name the checkpoints are versioned under.
+    pub name: String,
+    /// Versions retained after each periodic checkpoint (0 = keep all).
+    /// A long-running stream otherwise accumulates full-state artifacts
+    /// without bound — and each save pays O(versions) manifest upkeep.
+    pub keep_last: usize,
+}
+
+impl Default for CheckpointPolicy {
+    fn default() -> Self {
+        CheckpointPolicy { every: 0, dir: None, name: "stream".to_string(), keep_last: 4 }
+    }
+}
+
 /// Default admission threshold on the relative projection residual.
 pub const DEFAULT_ACCEPT_THRESHOLD: f64 = 0.01;
 
@@ -84,6 +117,8 @@ pub struct StreamConfig {
     /// Compute-pool override, applied for the coordinator's whole
     /// lifetime (None → env/machine default).
     pub threads: Option<usize>,
+    /// Durable-checkpoint policy (default: disabled).
+    pub checkpoint: CheckpointPolicy,
 }
 
 impl StreamConfig {
@@ -97,8 +132,38 @@ impl StreamConfig {
             accept_threshold: DEFAULT_ACCEPT_THRESHOLD,
             refresh: cfg.refresh,
             threads: cfg.threads,
+            checkpoint: CheckpointPolicy::default(),
         }
     }
+}
+
+/// The full frozen state of a [`StreamCoordinator`] — everything needed
+/// to resume ingestion bit-identically to an uninterrupted run:
+/// configuration, the incremental model (dictionary, streaming sums,
+/// factors, β, `n_seen`), and the refresh-policy progress (prequential
+/// window in arrival order, baseline error, arrivals since the last
+/// publish). Serialized by `persist::codec` and stored by
+/// `persist::Store::{save,load}_checkpoint`.
+///
+/// Not persisted: the serving [`ModelHandle`] (recreated lazily — the
+/// published version counter restarts at 1 in the restored process) and
+/// the metrics registry (counters restart at zero).
+pub struct StreamCheckpoint {
+    pub cfg: StreamConfig,
+    pub model: IncrementalModel,
+    /// Prequential error window, oldest first.
+    pub window: Vec<f64>,
+    pub window_cap: usize,
+    pub err_at_publish: f64,
+    pub since_publish: usize,
+    /// Caller-supplied identity of the stream this state came from
+    /// (e.g. `"bimodal1:n=600:seed=0:d=1"`, set via
+    /// [`StreamCoordinator::set_origin`]). Warm-start paths compare it
+    /// so a checkpoint is never silently resumed against a *different*
+    /// dataset — `n_seen` offsets into the new stream would otherwise
+    /// serve a model trained on the old data as if it were a
+    /// continuation.
+    pub origin: Option<String>,
 }
 
 /// Per-arrival outcome reported by [`StreamCoordinator::ingest`].
@@ -120,15 +185,51 @@ pub struct StreamCoordinator {
     window_cap: usize,
     err_at_publish: f64,
     since_publish: usize,
+    /// Durable-checkpoint sink from [`CheckpointPolicy`] (None when
+    /// disabled or the store could not be opened).
+    sink: Option<CheckpointSink>,
+    since_checkpoint: usize,
+    /// Stream identity carried into checkpoints (see
+    /// [`StreamCheckpoint::origin`]).
+    origin: Option<String>,
     /// Pool override for `cfg.threads`, held for the coordinator's whole
     /// lifetime (like the batch fit's per-fit guard) instead of swapping
     /// the process-global override on every arrival.
     _pool: Option<crate::util::pool::ThreadGuard>,
 }
 
+struct CheckpointSink {
+    store: crate::persist::Store,
+    name: String,
+    every: usize,
+    keep_last: usize,
+}
+
+fn make_sink(cfg: &StreamConfig) -> Option<CheckpointSink> {
+    let policy = &cfg.checkpoint;
+    let dir = policy.dir.as_ref()?;
+    if policy.every == 0 {
+        return None;
+    }
+    match crate::persist::Store::open(dir) {
+        Ok(store) => Some(CheckpointSink {
+            store,
+            name: policy.name.clone(),
+            every: policy.every,
+            keep_last: policy.keep_last,
+        }),
+        Err(e) => {
+            eprintln!("stream: checkpoint store '{dir}' unavailable: {e}");
+            crate::metrics::global().incr("persist.checkpoint.error", 1);
+            None
+        }
+    }
+}
+
 impl StreamCoordinator {
     pub fn new(cfg: StreamConfig) -> StreamCoordinator {
         let _pool = cfg.threads.map(crate::util::pool::override_threads);
+        let sink = make_sink(&cfg);
         let model = IncrementalModel::new(
             Kernel::new(cfg.kernel),
             cfg.mu,
@@ -144,6 +245,57 @@ impl StreamCoordinator {
             window_cap: 64,
             err_at_publish: f64::NAN,
             since_publish: 0,
+            sink,
+            since_checkpoint: 0,
+            origin: None,
+            _pool,
+        }
+    }
+
+    /// Record the identity of the stream being ingested (dataset name,
+    /// size, seed, dimension, …); carried into every checkpoint so a
+    /// warm start can refuse to resume against different data.
+    pub fn set_origin(&mut self, origin: impl Into<String>) {
+        self.origin = Some(origin.into());
+    }
+
+    pub fn origin(&self) -> Option<&str> {
+        self.origin.as_deref()
+    }
+
+    /// Freeze the full coordinator state for `persist` (see
+    /// [`StreamCheckpoint`] for what is and isn't captured).
+    pub fn checkpoint(&self) -> StreamCheckpoint {
+        StreamCheckpoint {
+            cfg: self.cfg.clone(),
+            model: self.model.clone(),
+            window: self.window.iter().copied().collect(),
+            window_cap: self.window_cap,
+            err_at_publish: self.err_at_publish,
+            since_publish: self.since_publish,
+            origin: self.origin.clone(),
+        }
+    }
+
+    /// Resume from a frozen checkpoint: subsequent `ingest` calls
+    /// continue the stream **bit-identically** to a coordinator that
+    /// never stopped (the published version counter and metrics restart;
+    /// the model math does not).
+    pub fn restore(chk: StreamCheckpoint) -> StreamCoordinator {
+        let _pool = chk.cfg.threads.map(crate::util::pool::override_threads);
+        let sink = make_sink(&chk.cfg);
+        StreamCoordinator {
+            cfg: chk.cfg,
+            model: chk.model,
+            handle: None,
+            metrics: Arc::new(Registry::new()),
+            window: VecDeque::from(chk.window),
+            window_cap: chk.window_cap,
+            err_at_publish: chk.err_at_publish,
+            since_publish: chk.since_publish,
+            sink,
+            since_checkpoint: 0,
+            origin: chk.origin,
             _pool,
         }
     }
@@ -214,9 +366,44 @@ impl StreamCoordinator {
         // aren't dominated by the periodic refreshes
         self.metrics.record("stream.update.secs", t0.elapsed().as_secs_f64());
         let published = self.maybe_publish();
+        self.maybe_checkpoint();
         self.metrics.incr("stream.arrivals", 1);
         self.metrics.gauge_set("stream.dict_size", self.model.m() as f64);
         IngestOutcome { prequential_err2: err2, published }
+    }
+
+    /// Write a durable checkpoint when the policy period elapses. Write
+    /// failures are counted (`persist.checkpoint.error`) and the stream
+    /// keeps going — losing a checkpoint must never lose the stream.
+    fn maybe_checkpoint(&mut self) {
+        let Some(sink) = &self.sink else { return };
+        self.since_checkpoint += 1;
+        if self.since_checkpoint < sink.every {
+            return;
+        }
+        self.since_checkpoint = 0;
+        let t0 = Instant::now();
+        let chk = self.checkpoint();
+        match sink.store.save_checkpoint(&sink.name, &chk) {
+            Ok(meta) => {
+                self.metrics.incr("stream.checkpoints", 1);
+                self.metrics.gauge_set("stream.checkpoint_version", meta.version as f64);
+                // retention: without this, a long-running stream fills the
+                // disk with full-state artifacts and every save pays
+                // O(versions) manifest upkeep
+                if sink.keep_last > 0 {
+                    if let Err(e) = sink.store.gc(&sink.name, sink.keep_last) {
+                        eprintln!("stream: checkpoint gc failed: {e}");
+                        crate::metrics::global().incr("persist.checkpoint.error", 1);
+                    }
+                }
+                self.metrics.record("stream.checkpoint.secs", t0.elapsed().as_secs_f64());
+            }
+            Err(e) => {
+                eprintln!("stream: checkpoint write failed: {e}");
+                crate::metrics::global().incr("persist.checkpoint.error", 1);
+            }
+        }
     }
 
     /// Ingest a micro-batch in arrival order; returns the last publish
@@ -294,6 +481,10 @@ pub struct ReplayRow {
 pub struct ReplayReport {
     pub rows: Vec<ReplayRow>,
     pub n: usize,
+    /// Arrivals actually ingested by this call — `n` minus the prefix a
+    /// warm-started coordinator had already absorbed (equal to `n` for a
+    /// cold replay).
+    pub ingested: usize,
     pub dict: usize,
     pub final_version: u64,
     pub total_secs: f64,
@@ -313,10 +504,29 @@ pub fn replay(
     report_every: usize,
 ) -> (StreamCoordinator, ReplayReport) {
     let mut sc = StreamCoordinator::new(cfg.clone());
+    let report = replay_into(&mut sc, ds, report_every);
+    (sc, report)
+}
+
+/// [`replay`] into an existing coordinator — what `stream --warm-start`
+/// uses to continue a restored checkpoint through the rest of a stream.
+///
+/// `ds` is the **full stream history**: ingestion starts at the
+/// coordinator's own position (`n_seen`), so arrivals a restored
+/// checkpoint already absorbed are not ingested twice (double-counting
+/// them in the streaming sums would weight that data ×2 — a different
+/// model, not a continuation). A fresh coordinator has `n_seen = 0` and
+/// replays everything.
+pub fn replay_into(
+    sc: &mut StreamCoordinator,
+    ds: &Dataset,
+    report_every: usize,
+) -> ReplayReport {
     let t0 = Instant::now();
     let mut rows = Vec::new();
     let mut version = 0;
-    for i in 0..ds.n() {
+    let start = (sc.n_seen() as usize).min(ds.n());
+    for i in start..ds.n() {
         if let Some(v) = sc.ingest(ds.x.row(i), ds.y[i]).published {
             version = v;
         }
@@ -332,17 +542,17 @@ pub fn replay(
     }
     version = sc.publish_now();
     let ps = sc.metrics.timer_quantiles("stream.update.secs", &[0.50, 0.95, 0.99]);
-    let report = ReplayReport {
+    ReplayReport {
         rows,
         n: ds.n(),
+        ingested: ds.n() - start,
         dict: sc.dict_len(),
         final_version: version,
         total_secs: t0.elapsed().as_secs_f64(),
         update_p50: ps[0],
         update_p95: ps[1],
         update_p99: ps[2],
-    };
-    (sc, report)
+    }
 }
 
 #[cfg(test)]
@@ -359,6 +569,7 @@ mod tests {
             accept_threshold: 0.005,
             refresh: RefreshPolicy { every: 50, drift: 0.0 },
             threads: None,
+            checkpoint: CheckpointPolicy::default(),
         }
     }
 
@@ -487,6 +698,74 @@ mod tests {
         assert_eq!(sc.n_seen(), 80, "bad arrivals must not count as seen");
         assert_eq!(sc.model().beta(), &before[..], "model must be untouched");
         assert!(sc.model().predict_one(&[0.4]).is_finite());
+    }
+
+    #[test]
+    fn checkpoint_restore_resumes_bitwise() {
+        let mut rng = Rng::seed_from_u64(12);
+        let ds = dist1d(Dist1d::Bimodal, 240, &mut rng);
+        // uninterrupted run
+        let mut full = StreamCoordinator::new(stream_cfg(240));
+        for i in 0..ds.n() {
+            full.ingest(ds.x.row(i), ds.y[i]);
+        }
+        // interrupted at the halfway point, resumed from the checkpoint
+        let mut first = StreamCoordinator::new(stream_cfg(240));
+        for i in 0..120 {
+            first.ingest(ds.x.row(i), ds.y[i]);
+        }
+        let chk = first.checkpoint();
+        drop(first);
+        let mut resumed = StreamCoordinator::restore(chk);
+        assert_eq!(resumed.n_seen(), 120);
+        for i in 120..ds.n() {
+            resumed.ingest(ds.x.row(i), ds.y[i]);
+        }
+        assert_eq!(
+            full.model().dict().arrivals(),
+            resumed.model().dict().arrivals(),
+            "dictionary trajectory diverged after restore"
+        );
+        assert_eq!(full.model().beta(), resumed.model().beta(), "β diverged (bitwise)");
+        assert_eq!(full.rolling_err().to_bits(), resumed.rolling_err().to_bits());
+        for &x in &[0.1, 0.5, 1.2] {
+            assert_eq!(
+                full.model().predict_one(&[x]).to_bits(),
+                resumed.model().predict_one(&[x]).to_bits(),
+                "prediction at {x} diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn periodic_checkpoint_policy_writes_artifacts() {
+        let dir = std::env::temp_dir().join(format!(
+            "leverkrr-stream-ckpt-test-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut cfg = stream_cfg(100);
+        cfg.checkpoint = CheckpointPolicy {
+            every: 40,
+            dir: Some(dir.to_string_lossy().into_owned()),
+            name: "unit".to_string(),
+            keep_last: 4,
+        };
+        let mut rng = Rng::seed_from_u64(13);
+        let ds = dist1d(Dist1d::Uniform, 100, &mut rng);
+        let mut sc = StreamCoordinator::new(cfg);
+        for i in 0..ds.n() {
+            sc.ingest(ds.x.row(i), ds.y[i]);
+        }
+        assert_eq!(sc.metrics.counter("stream.checkpoints"), 2, "100 arrivals / 40 = 2");
+        let store = crate::persist::Store::open(&dir).unwrap();
+        assert_eq!(store.versions("unit"), vec![1, 2]);
+        let (v, chk) = store.load_checkpoint("unit", None).unwrap();
+        assert_eq!(v, 2);
+        assert_eq!(chk.model.n_seen(), 80, "latest checkpoint is at arrival 80");
+        let resumed = StreamCoordinator::restore(chk);
+        assert_eq!(resumed.n_seen(), 80);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -38,19 +38,24 @@ use crate::linalg::{Cholesky, Mat};
 use crate::nystrom::NystromKrr;
 use crate::runtime::Backend;
 
+/// Fields are `pub(crate)` so `persist::codec` can freeze and restore
+/// the full state bit-for-bit; external callers use the accessors.
+/// `Clone` is what [`crate::stream::StreamCoordinator::checkpoint`]
+/// snapshots (O(m²) memory, cheap at dictionary scale).
+#[derive(Clone)]
 pub struct IncrementalModel {
-    kernel: Kernel,
+    pub(crate) kernel: Kernel,
     /// Absolute ridge μ (≈ nλ of the equivalent batch objective).
-    mu: f64,
-    dict: OnlineDictionary,
+    pub(crate) mu: f64,
+    pub(crate) dict: OnlineDictionary,
     /// S ≈ Σ_t k_t k_tᵀ in current dictionary coordinates.
-    s: Mat,
+    pub(crate) s: Mat,
     /// r ≈ Σ_t y_t k_t.
-    rhs: Vec<f64>,
+    pub(crate) rhs: Vec<f64>,
     /// Factor of A = S + μ K_mm.
-    chol_a: Option<Cholesky>,
-    beta: Vec<f64>,
-    n_seen: u64,
+    pub(crate) chol_a: Option<Cholesky>,
+    pub(crate) beta: Vec<f64>,
+    pub(crate) n_seen: u64,
 }
 
 impl IncrementalModel {
@@ -232,7 +237,7 @@ impl IncrementalModel {
             method: "stream",
             ..Default::default()
         };
-        FittedModel { nystrom, report, backend: Backend::Native, q }
+        FittedModel { nystrom, report, backend: Backend::Native, q, n_train: self.n_seen }
     }
 }
 

@@ -1,0 +1,223 @@
+//! Persistence subsystem invariants (the crate-external view):
+//!
+//! 1. **Bitwise model round-trip** — `load(save(m))` predicts
+//!    bit-identically to `m`, through the store and through
+//!    `Server::start_from_artifact` (the cold-start serving path), with
+//!    zero refit work.
+//! 2. **Checkpoint round-trip** — a stream checkpoint saved through the
+//!    store restores to a coordinator whose continued replay matches the
+//!    uninterrupted run bit for bit (the in-depth cut-point sweep lives
+//!    in `stream_parity.rs`).
+//! 3. **Typed corruption handling** — a truncated or bit-flipped
+//!    artifact is rejected with a typed `PersistError` (never a panic,
+//!    never a half-decoded model) and counted in `metrics::global()` as
+//!    `persist.load.corrupt`.
+//! 4. **Store lifecycle** — versions increment, `latest` tracks,
+//!    `gc(keep_last_k)` drops only the oldest, and the manifest carries
+//!    provenance.
+
+use leverkrr::coordinator::{fit_with_backend, FitConfig, FittedModel, Server, ServerConfig};
+use leverkrr::data::{self, Dataset};
+use leverkrr::kernels::KernelSpec;
+use leverkrr::persist::{PersistError, Store};
+use leverkrr::runtime::Backend;
+use leverkrr::stream::{CheckpointPolicy, RefreshPolicy, StreamConfig, StreamCoordinator};
+use leverkrr::util::rng::Rng;
+use std::path::PathBuf;
+
+/// Fresh store under the OS temp dir, removed on drop.
+struct TempStore {
+    store: Store,
+    dir: PathBuf,
+}
+
+impl TempStore {
+    fn new(tag: &str) -> TempStore {
+        let dir = std::env::temp_dir().join(format!(
+            "leverkrr-persist-it-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        TempStore { store: Store::open(&dir).unwrap(), dir }
+    }
+
+    /// A second, independent handle to the same directory — stands in
+    /// for "a fresh process" opening the store (nothing is shared
+    /// in-memory between the two handles).
+    fn reopen(&self) -> Store {
+        Store::open(&self.dir).unwrap()
+    }
+}
+
+impl Drop for TempStore {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}
+
+fn dataset(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::seed_from_u64(seed);
+    data::dist1d(data::Dist1d::Bimodal, n, &mut rng)
+}
+
+fn fit(ds: &Dataset) -> FittedModel {
+    let cfg = FitConfig::default_for(ds);
+    fit_with_backend(ds, &cfg, Backend::Native).unwrap()
+}
+
+fn bits(xs: &[f64]) -> Vec<u64> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn save_load_predict_bitwise_through_a_fresh_store_handle() {
+    let ts = TempStore::new("roundtrip");
+    let ds = dataset(500, 1);
+    let model = fit(&ds);
+    let meta = model.save(&ts.store, "prod").unwrap();
+    assert_eq!(meta.version, 1);
+    // "second process": independent store handle, zero refit work
+    let loaded = FittedModel::load(&ts.reopen(), "prod", None).unwrap();
+    assert_eq!(loaded.nystrom.idx, model.nystrom.idx);
+    assert_eq!(bits(&loaded.nystrom.beta), bits(&model.nystrom.beta));
+    let grid = leverkrr::linalg::Mat::from_fn(128, 1, |i, _| 1.5 * i as f64 / 127.0);
+    assert_eq!(
+        bits(&loaded.predict_batch(&grid)),
+        bits(&model.predict_batch(&grid)),
+        "loaded model must predict bit-identically to the exporter"
+    );
+    assert_eq!(loaded.report.method, "artifact", "provenance marks the artifact path");
+}
+
+#[test]
+fn server_cold_starts_from_artifact_and_serves_bitwise() {
+    let ts = TempStore::new("serve");
+    let ds = dataset(400, 2);
+    let model = fit(&ds);
+    model.save(&ts.store, "served").unwrap();
+    let store2 = ts.reopen();
+    let server =
+        Server::start_from_artifact(&store2, "served", None, ServerConfig::default()).unwrap();
+    let mut rng = Rng::seed_from_u64(3);
+    for _ in 0..32 {
+        let x = [1.5 * rng.f64()];
+        let got = server.try_predict(&x).unwrap();
+        assert_eq!(
+            got.value.to_bits(),
+            model.predict_one(&x).to_bits(),
+            "served prediction deviates from the exporting process"
+        );
+    }
+    let reg = server.shutdown();
+    assert_eq!(reg.counter("serve.requests"), 32);
+}
+
+#[test]
+fn checkpoint_through_store_restores_and_replays_bitwise() {
+    let ts = TempStore::new("ckpt");
+    let ds = dataset(300, 4);
+    let cfg = StreamConfig {
+        kernel: KernelSpec::Matern { nu: 1.5, a: 1.0 },
+        mu: 300.0 * 1e-3,
+        budget: 32,
+        accept_threshold: 0.01,
+        refresh: RefreshPolicy { every: 64, drift: 0.0 },
+        threads: None,
+        checkpoint: CheckpointPolicy::default(),
+    };
+    // uninterrupted reference
+    let mut full = StreamCoordinator::new(cfg.clone());
+    for i in 0..ds.n() {
+        full.ingest(ds.x.row(i), ds.y[i]);
+    }
+    // interrupted at 150, persisted, restored by a fresh store handle
+    let mut first = StreamCoordinator::new(cfg);
+    for i in 0..150 {
+        first.ingest(ds.x.row(i), ds.y[i]);
+    }
+    ts.store.save_checkpoint("live", &first.checkpoint()).unwrap();
+    drop(first);
+    let (v, chk) = ts.reopen().load_checkpoint("live", None).unwrap();
+    assert_eq!(v, 1);
+    assert_eq!(chk.model.n_seen(), 150);
+    let mut resumed = StreamCoordinator::restore(chk);
+    for i in 150..ds.n() {
+        resumed.ingest(ds.x.row(i), ds.y[i]);
+    }
+    assert_eq!(full.model().dict().arrivals(), resumed.model().dict().arrivals());
+    assert_eq!(bits(full.model().beta()), bits(resumed.model().beta()));
+    let grid = leverkrr::linalg::Mat::from_fn(64, 1, |i, _| 1.5 * i as f64 / 63.0);
+    assert_eq!(
+        bits(&full.model().snapshot().predict_batch(&grid)),
+        bits(&resumed.model().snapshot().predict_batch(&grid)),
+        "restored replay must be bit-identical to the uninterrupted run"
+    );
+}
+
+#[test]
+fn corrupt_artifacts_yield_typed_errors_and_metrics() {
+    let ts = TempStore::new("corrupt");
+    let ds = dataset(200, 5);
+    let model = fit(&ds);
+    let meta = model.save(&ts.store, "prod").unwrap();
+    let path = ts.store.path_of("prod", meta.version);
+    let pristine = std::fs::read(&path).unwrap();
+    let before = leverkrr::metrics::global().counter("persist.load.corrupt");
+
+    // bit flip in the payload
+    let mut bytes = pristine.clone();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&path, &bytes).unwrap();
+    let err = ts.store.load_model("prod", None).unwrap_err();
+    assert!(
+        matches!(err, PersistError::ChecksumMismatch { .. }),
+        "bit flip must be a checksum mismatch, got: {err}"
+    );
+
+    // truncation
+    std::fs::write(&path, &pristine[..pristine.len() / 4]).unwrap();
+    let err = ts.store.load_model("prod", None).unwrap_err();
+    assert!(err.is_corrupt(), "truncation must be typed corruption, got: {err}");
+
+    // foreign file
+    std::fs::write(&path, b"definitely not an artifact").unwrap();
+    let err = ts.store.load_model("prod", None).unwrap_err();
+    assert!(
+        matches!(err, PersistError::BadMagic | PersistError::ChecksumMismatch { .. }),
+        "foreign file must be rejected, got: {err}"
+    );
+
+    assert_eq!(
+        leverkrr::metrics::global().counter("persist.load.corrupt"),
+        before + 3,
+        "every corrupt reject must count persist.load.corrupt"
+    );
+
+    // restore the pristine bytes: the artifact loads again (the store
+    // held no poisoned state)
+    std::fs::write(&path, &pristine).unwrap();
+    let (_, back) = ts.store.load_model("prod", None).unwrap();
+    assert_eq!(bits(&back.nystrom.beta), bits(&model.nystrom.beta));
+}
+
+#[test]
+fn store_lifecycle_versions_latest_gc_manifest() {
+    let ts = TempStore::new("lifecycle");
+    let ds = dataset(150, 6);
+    for _ in 0..4 {
+        fit(&ds).save(&ts.store, "iter").unwrap();
+    }
+    assert_eq!(ts.store.versions("iter"), vec![1, 2, 3, 4]);
+    assert_eq!(ts.store.latest("iter"), Some(4));
+    let entries = ts.store.list_name("iter");
+    assert_eq!(entries.len(), 4);
+    assert!(entries.iter().all(|e| e.kind == "model" && e.n == 150 && e.d == 1));
+    assert_eq!(ts.store.gc("iter", 2).unwrap(), 2);
+    assert_eq!(ts.store.versions("iter"), vec![3, 4]);
+    assert_eq!(ts.store.load_model("iter", None).unwrap().0, 4);
+    assert!(matches!(
+        ts.store.load_model("iter", Some(1)),
+        Err(PersistError::NotFound { .. })
+    ));
+}

@@ -19,7 +19,9 @@ use leverkrr::coordinator::{Server, ServerConfig};
 use leverkrr::data::{self, Dataset};
 use leverkrr::kernels::KernelSpec;
 use leverkrr::nystrom::{NativeBackend, NystromKrr};
-use leverkrr::stream::{replay, RefreshPolicy, StreamConfig, StreamCoordinator};
+use leverkrr::stream::{
+    replay, CheckpointPolicy, RefreshPolicy, StreamConfig, StreamCoordinator,
+};
 use leverkrr::util::pool;
 use leverkrr::util::rng::Rng;
 use std::sync::Mutex;
@@ -44,6 +46,7 @@ fn stream_cfg(n: usize, budget: usize) -> StreamConfig {
         accept_threshold: 0.01,
         refresh: RefreshPolicy { every: 64, drift: 0.0 },
         threads: None,
+        checkpoint: CheckpointPolicy::default(),
     }
 }
 
@@ -71,6 +74,51 @@ fn replay_bit_identical_across_threads() {
     // sanity: the model actually has content
     assert!(!serial.0.is_empty());
     assert!(serial.2.iter().all(|v| v.is_finite()));
+}
+
+/// Fingerprint of a replay that is interrupted at `cut`, persisted
+/// through the full binary codec (encode → decode, as a crash/restart
+/// would), restored, and driven through the rest of the stream.
+fn restored_fingerprint(n: usize, budget: usize, cut: usize) -> (Vec<u64>, Vec<f64>, Vec<f64>) {
+    let ds = test_dataset(n, 41);
+    let mut first = StreamCoordinator::new(stream_cfg(n, budget));
+    for i in 0..cut {
+        first.ingest(ds.x.row(i), ds.y[i]);
+    }
+    let bytes = leverkrr::persist::codec::encode_checkpoint(&first.checkpoint());
+    drop(first);
+    let chk = leverkrr::persist::codec::decode_checkpoint(&bytes).expect("decode checkpoint");
+    let mut sc = StreamCoordinator::restore(chk);
+    for i in cut..n {
+        sc.ingest(ds.x.row(i), ds.y[i]);
+    }
+    let arrivals = sc.model().dict().arrivals().to_vec();
+    let beta = sc.model().beta().to_vec();
+    let snap = sc.model().snapshot();
+    let grid = leverkrr::linalg::Mat::from_fn(64, 1, |i, _| 1.5 * i as f64 / 63.0);
+    (arrivals, beta, snap.predict_batch(&grid))
+}
+
+#[test]
+fn checkpoint_restore_replay_bit_identical_to_uninterrupted() {
+    // 5. **Checkpoint/restore parity** — interrupt the stream anywhere,
+    //    round-trip the coordinator through the persistence codec, and
+    //    the remaining arrivals must land on state bit-identical to the
+    //    run that never stopped — at every thread count (the persistence
+    //    extension of the determinism contract).
+    let _lock = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let uninterrupted = with_threads(1, || replay_fingerprint(400, 48));
+    for cut in [1usize, 137, 399] {
+        let restored = with_threads(1, || restored_fingerprint(400, 48, cut));
+        assert_eq!(uninterrupted.0, restored.0, "cut={cut}: dictionary diverged");
+        assert_eq!(uninterrupted.1, restored.1, "cut={cut}: β diverged (bitwise)");
+        assert_eq!(uninterrupted.2, restored.2, "cut={cut}: predictions diverged");
+    }
+    // cross-thread: restore under 4 workers must match the serial run
+    let restored_par = with_threads(4, || restored_fingerprint(400, 48, 200));
+    assert_eq!(uninterrupted.0, restored_par.0, "parallel restore: dictionary diverged");
+    assert_eq!(uninterrupted.1, restored_par.1, "parallel restore: β diverged");
+    assert_eq!(uninterrupted.2, restored_par.2, "parallel restore: predictions diverged");
 }
 
 #[test]
