@@ -71,20 +71,39 @@ pub fn run(opts: &ExpOptions) -> Vec<Row> {
             for (method, t_sum, e_sum) in per_method.iter_mut() {
                 let mut mrng = rng.fork(*method as u64 + 1);
                 let est = build_estimator(*method, h);
-                let mut ctx = LeverageContext::new(&ds.x, &kernel, lambda);
-                ctx.inner_m = inner;
-                let (scores, secs) = time_it(|| est.estimate(&ctx, &mut mrng));
-                let q = crate::leverage::normalize(&scores);
-                let nys = NystromKrr::fit(
+                // per-method landmark Gram workspace: the estimator's
+                // levels fill it, the native Nyström fit drains it
+                // (results are bit-identical to per-stage assembly)
+                let gram = std::cell::RefCell::new(crate::linalg::GramCache::new(
                     kernel.clone(),
                     &ds.x,
-                    &ds.y,
-                    lambda,
-                    &q,
-                    m_sub,
-                    &mut mrng,
-                    &backend,
-                )
+                ));
+                let mut ctx = LeverageContext::new(&ds.x, &kernel, lambda);
+                ctx.inner_m = inner;
+                ctx.cache = Some(&gram);
+                let (scores, secs) = time_it(|| est.estimate(&ctx, &mut mrng));
+                let q = crate::leverage::normalize(&scores);
+                let nys = if opts.use_xla {
+                    NystromKrr::fit(
+                        kernel.clone(),
+                        &ds.x,
+                        &ds.y,
+                        lambda,
+                        &q,
+                        m_sub,
+                        &mut mrng,
+                        &backend,
+                    )
+                } else {
+                    NystromKrr::fit_sampled_with_cache(
+                        &ds.y,
+                        lambda,
+                        &q,
+                        m_sub,
+                        &mut mrng,
+                        &mut gram.borrow_mut(),
+                    )
+                }
                 .expect("nystrom fit");
                 let fitted = nys.predict_with(&ds.x, &backend);
                 let err = krr::in_sample_risk(&fitted, &ds.f_true);

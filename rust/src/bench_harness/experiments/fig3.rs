@@ -74,20 +74,37 @@ pub fn run(opts: &ExpOptions) -> Vec<Row> {
                     let mut mrng = rng.fork(*method as u64 + 3);
                     let est =
                         crate::bench_harness::experiments::fig1::build_estimator(*method, h);
-                    let mut ctx = LeverageContext::new(&ds.x, &kernel, lambda);
-                    ctx.inner_m = inner;
-                    let (scores, secs) = time_it(|| est.estimate(&ctx, &mut mrng));
-                    let q = crate::leverage::normalize(&scores);
-                    let nys = NystromKrr::fit(
+                    // shared leverage → Nyström workspace (see fig1)
+                    let gram = std::cell::RefCell::new(crate::linalg::GramCache::new(
                         kernel.clone(),
                         &ds.x,
-                        &ds.y,
-                        lambda,
-                        &q,
-                        m_sub,
-                        &mut mrng,
-                        &backend,
-                    )
+                    ));
+                    let mut ctx = LeverageContext::new(&ds.x, &kernel, lambda);
+                    ctx.inner_m = inner;
+                    ctx.cache = Some(&gram);
+                    let (scores, secs) = time_it(|| est.estimate(&ctx, &mut mrng));
+                    let q = crate::leverage::normalize(&scores);
+                    let nys = if opts.use_xla {
+                        NystromKrr::fit(
+                            kernel.clone(),
+                            &ds.x,
+                            &ds.y,
+                            lambda,
+                            &q,
+                            m_sub,
+                            &mut mrng,
+                            &backend,
+                        )
+                    } else {
+                        NystromKrr::fit_sampled_with_cache(
+                            &ds.y,
+                            lambda,
+                            &q,
+                            m_sub,
+                            &mut mrng,
+                            &mut gram.borrow_mut(),
+                        )
+                    }
                     .expect("nystrom fit");
                     let fitted = nys.predict_with(&ds.x, &backend);
                     let err = krr::in_sample_risk(&fitted, &ds.f_true);

@@ -20,11 +20,13 @@ use crate::data;
 use crate::kde;
 use crate::kernels::{Kernel, KernelSpec};
 use crate::leverage::sa::{sa_value_closed_form, sa_value_quadrature, SpectralDensity};
-use crate::linalg::{Cholesky, Mat};
+use crate::leverage::{LeverageContext, LeverageEstimator};
+use crate::linalg::{Cholesky, GramCache, Mat};
 use crate::nystrom;
 use crate::runtime::{Backend, Engine};
 use crate::util::json::Json;
 use crate::util::rng::{AliasTable, Rng};
+use std::cell::RefCell;
 use std::sync::Arc;
 
 /// Machine-readable result accumulator → `BENCH_perf.json`.
@@ -190,6 +192,105 @@ pub fn run(opts: &ExpOptions) {
         );
         log.rec_at("pool_dispatch_persistent", dispatches * 4096, dispatches, 0, nt, t_pers[0]);
         log.rec_at("pool_dispatch_scoped", dispatches * 4096, dispatches, 0, nt, t_scoped[0]);
+    }
+
+    // ---- landmark Gram cache: recursive-RLS cached vs uncached ------------
+    // Same estimator, same seed, same (bit-identical) scores; the cached
+    // run reuses K_·J columns across the recursion's levels and the
+    // uncached run is the reference workspace at the seed path's cost.
+    {
+        let n_rls = if opts.full { 4096 } else { 2048 };
+        let mut drng = rng.fork(11);
+        let ds_r = data::dist1d(data::Dist1d::Bimodal, n_rls, &mut drng);
+        let lam = crate::krr::lambda::fig2(n_rls);
+        let inner = ((n_rls as f64).powf(1.0 / 3.0).round() as usize).max(8);
+        let est = crate::leverage::rls::RecursiveRls::default();
+        let run_mode = |caching: bool| {
+            let gram = RefCell::new(if caching {
+                GramCache::new(kernel.clone(), &ds_r.x)
+            } else {
+                GramCache::new_uncached(kernel.clone(), &ds_r.x)
+            });
+            let mut ctx = LeverageContext::new(&ds_r.x, &kernel, lam);
+            ctx.inner_m = inner;
+            ctx.cache = Some(&gram);
+            let mut erng = Rng::seed_from_u64(99);
+            std::hint::black_box(est.estimate(&ctx, &mut erng));
+        };
+        let t_unc = bench_reps(1, reps, || run_mode(false));
+        let t_cac = bench_reps(1, reps, || run_mode(true));
+        println!(
+            "{}",
+            timing_row(&format!("recursive-RLS uncached (n={n_rls}, m={inner})"), &t_unc)
+        );
+        println!(
+            "{}",
+            timing_row(&format!("recursive-RLS cached   (n={n_rls}, m={inner})"), &t_cac)
+        );
+        println!(
+            "    cached-vs-uncached recursive-RLS speedup: {:.2}x",
+            t_unc[0] / t_cac[0].max(1e-12)
+        );
+        log.rec("recursive_rls_uncached", n_rls, inner, 1, t_unc[0]);
+        log.rec("recursive_rls_cached", n_rls, inner, 1, t_cac[0]);
+    }
+
+    // ---- stream ingest: fused micro-batches vs sequential arrivals --------
+    // b arrivals = one blocked b×m row evaluation + one rank-k factor
+    // sweep + one β solve, vs b of each — bit-identical final model
+    // (gramcache_parity.rs); ns/op is per arrival.
+    {
+        let n_s = if opts.full { 6000 } else { 3000 };
+        let mut srng = rng.fork(12);
+        let ds_s = data::dist1d(data::Dist1d::Bimodal, n_s, &mut srng);
+        let kernel_s = Kernel::new(KernelSpec::Matern { nu: 1.5, a: 1.0 });
+        let (mu, budget, thresh) = (n_s as f64 * 1e-3, 96usize, 0.002);
+        let t_seq = bench_reps(0, reps, || {
+            let mut m = crate::stream::IncrementalModel::new(
+                kernel_s.clone(),
+                mu,
+                budget,
+                thresh,
+            );
+            for i in 0..ds_s.n() {
+                m.ingest(ds_s.x.row(i), ds_s.y[i]);
+            }
+            std::hint::black_box(m.beta().len());
+        });
+        let chunk = 64;
+        let t_fused = bench_reps(0, reps, || {
+            let mut m = crate::stream::IncrementalModel::new(
+                kernel_s.clone(),
+                mu,
+                budget,
+                thresh,
+            );
+            let mut i = 0;
+            while i < ds_s.n() {
+                let hi = (i + chunk).min(ds_s.n());
+                let xs = Mat::from_fn(hi - i, ds_s.d(), |r, c| ds_s.x[(i + r, c)]);
+                m.ingest_batch(&xs, &ds_s.y[i..hi]);
+                i = hi;
+            }
+            std::hint::black_box(m.beta().len());
+        });
+        println!(
+            "{}",
+            timing_row(&format!("stream ingest sequential (n={n_s}, m={budget})"), &t_seq)
+        );
+        println!(
+            "{}",
+            timing_row(
+                &format!("stream ingest fused b={chunk}  (n={n_s}, m={budget})"),
+                &t_fused
+            )
+        );
+        println!(
+            "    fused-vs-sequential stream-ingest speedup: {:.2}x",
+            t_seq[0] / t_fused[0].max(1e-12)
+        );
+        log.rec("stream_ingest_sequential", n_s, budget, 1, t_seq[0] / n_s as f64);
+        log.rec("stream_ingest_fused", n_s, budget, 1, t_fused[0] / n_s as f64);
     }
 
     // gaussian kernel assembly (cheaper per-element path)

@@ -165,11 +165,20 @@ pub fn fit_with_backend(
     let _pool_guard = cfg.threads.map(crate::util::pool::override_threads);
     let t_total = std::time::Instant::now();
 
+    // One landmark Gram workspace for the whole fit: the algebraic
+    // leverage estimators (RC/BLESS) fill it level by level, and the
+    // native Nyström stage below consumes it — landmark columns are
+    // never evaluated twice across the pipeline (`gramcache.hit/miss`
+    // in `metrics::global()`). Results are bit-identical to per-stage
+    // assembly (see `linalg::gramcache`).
+    let gram = std::cell::RefCell::new(crate::linalg::GramCache::new(kernel.clone(), &ds.x));
+
     // Stage 1+2: density estimation + leverage scores.
     let estimator = cfg.method.build();
     let mut ctx = LeverageContext::new(&ds.x, &kernel, cfg.lambda);
     ctx.p_true = ds.p_true.as_deref();
     ctx.inner_m = cfg.inner_m;
+    ctx.cache = Some(&gram);
     let (scores, lev_secs) = time_it(|| {
         if let (LeverageMethod::Sa | LeverageMethod::SaQuadrature, Some(h)) =
             (cfg.method, cfg.kde_bandwidth)
@@ -194,16 +203,21 @@ pub fn fit_with_backend(
     let (idx, sample_secs) =
         time_it(|| crate::nystrom::sample_landmarks(&q, cfg.m_sub, &mut rng));
 
-    // Stage 4+5: assembly + solve.
-    let (nystrom, solve_secs) = time_it(|| {
-        NystromKrr::fit_with_landmarks(
+    // Stage 4+5: assembly + solve. The native path consumes the shared
+    // workspace (columns the estimator already evaluated are hits); the
+    // XLA path keeps its own block dispatch.
+    let (nystrom, solve_secs) = time_it(|| match backend {
+        Backend::Native => {
+            NystromKrr::fit_with_cache(&ds.y, cfg.lambda, &idx, &mut gram.borrow_mut())
+        }
+        _ => NystromKrr::fit_with_landmarks(
             kernel.clone(),
             &ds.x,
             &ds.y,
             cfg.lambda,
             &idx,
             &backend,
-        )
+        ),
     });
     let nystrom = nystrom?;
 

@@ -11,8 +11,9 @@
 //! dictionary (Table 1 / Figure 1 compare *all* leverage scores, so
 //! every method pays this O(n·m²) output step).
 
-use super::rls::dictionary_rls;
+use super::rls::dictionary_rls_in;
 use super::{LeverageContext, LeverageEstimator};
+use crate::linalg::GramCache;
 use crate::util::rng::{AliasTable, Rng};
 
 #[derive(Clone, Debug)]
@@ -35,6 +36,30 @@ impl LeverageEstimator for Bless {
     }
 
     fn estimate(&self, ctx: &LeverageContext, rng: &mut Rng) -> Vec<f64> {
+        match ctx.cache {
+            Some(shared) => self.run(ctx, &mut shared.borrow_mut(), rng),
+            None => {
+                // private caching workspace: columns survive across the
+                // path-following levels (bit-identical to a shared one)
+                let mut ws = GramCache::new(ctx.kernel.clone(), ctx.x);
+                self.run(ctx, &mut ws, rng)
+            }
+        }
+    }
+}
+
+impl Bless {
+    /// The path-following loop against a shared landmark Gram workspace:
+    /// each level's scoring pass installs its dictionary into the
+    /// workspace, so a landmark resampled at the next level (common —
+    /// high-leverage points persist along the λ path) is a cache hit
+    /// instead of a fresh K_·J column, and the final all-points output
+    /// pass reuses the converged dictionary's columns outright.
+    fn run(&self, ctx: &LeverageContext, ws: &mut GramCache, rng: &mut Rng) -> Vec<f64> {
+        assert!(
+            std::ptr::eq(ws.points(), ctx.x),
+            "shared Gram workspace must be keyed to the context's point set"
+        );
         let n = ctx.n();
         let m_dict = ctx.inner_m.max(4);
         // Initial dictionary: small uniform sample at λ_0 = 1 (κ² = k(x,x)).
@@ -51,7 +76,7 @@ impl LeverageEstimator for Bless {
                 rng.sample_without_replacement(n, pool_size)
             };
             // score candidates at level λ_h with the previous dictionary
-            let scores = dictionary_rls(ctx.x, ctx.kernel, lam_h, &dict, Some(&pool));
+            let scores = dictionary_rls_in(ws, lam_h, &dict, Some(&pool));
             // resample the dictionary ∝ scores
             let at = AliasTable::new(&scores);
             let mut new_dict: Vec<usize> =
@@ -61,7 +86,7 @@ impl LeverageEstimator for Bless {
             dict = new_dict;
         }
         // output pass: score everything at the target λ
-        dictionary_rls(ctx.x, ctx.kernel, target, &dict, None)
+        dictionary_rls_in(ws, target, &dict, None)
     }
 }
 
@@ -82,7 +107,7 @@ mod tests {
         let k = Kernel::new(KernelSpec::Matern { nu, a: (2.0 * nu).sqrt() });
         let lam = crate::krr::lambda::fig2(n);
         let exact = rescaled_leverage_exact(&ds.x, &k, lam);
-        let ctx = LeverageContext { x: &ds.x, kernel: &k, lambda: lam, p_true: None, inner_m: 40 };
+        let ctx = LeverageContext { x: &ds.x, kernel: &k, lambda: lam, p_true: None, inner_m: 40, cache: None };
         let est = Bless::default().estimate(&ctx, &mut rng);
         assert_eq!(est.len(), n);
         let qe = crate::leverage::normalize(&exact);
@@ -98,7 +123,7 @@ mod tests {
         let mut rng = Rng::seed_from_u64(2);
         let ds = dist1d(Dist1d::Uniform, 25, &mut rng);
         let k = Kernel::new(KernelSpec::Matern { nu: 0.5, a: 1.0 });
-        let ctx = LeverageContext { x: &ds.x, kernel: &k, lambda: 1e-3, p_true: None, inner_m: 8 };
+        let ctx = LeverageContext { x: &ds.x, kernel: &k, lambda: 1e-3, p_true: None, inner_m: 8, cache: None };
         let s = Bless::default().estimate(&ctx, &mut rng);
         assert!(s.iter().all(|&v| v > 0.0 && v.is_finite()));
     }
@@ -110,7 +135,7 @@ mod tests {
             let ds = dist1d(Dist1d::Uniform, 150, &mut rng);
             let k = Kernel::new(KernelSpec::Matern { nu: 1.5, a: 1.0 });
             let ctx =
-                LeverageContext { x: &ds.x, kernel: &k, lambda: 1e-3, p_true: None, inner_m: 20 };
+                LeverageContext { x: &ds.x, kernel: &k, lambda: 1e-3, p_true: None, inner_m: 20, cache: None };
             let mut r2 = Rng::seed_from_u64(99);
             Bless::default().estimate(&ctx, &mut r2)
         };

@@ -24,8 +24,9 @@ pub mod rls;
 pub mod sa;
 
 use crate::kernels::Kernel;
-use crate::linalg::Mat;
+use crate::linalg::{GramCache, Mat};
 use crate::util::rng::Rng;
+use std::cell::RefCell;
 
 /// Everything an estimator may need.
 pub struct LeverageContext<'a> {
@@ -38,6 +39,14 @@ pub struct LeverageContext<'a> {
     /// Internal subsample / dictionary size for the iterative baselines
     /// (the paper's `s = 1·n^{1/3}`-style setting).
     pub inner_m: usize,
+    /// Shared landmark Gram workspace ([`crate::linalg::gramcache`]).
+    /// The landmark-block estimators (Recursive-RLS, BLESS) extend it
+    /// level by level instead of reassembling K_·J, and the pipeline can
+    /// hand the same workspace to the Nyström stage afterwards so
+    /// already-evaluated landmark columns are never paid twice. `None` →
+    /// estimators that need one build a private caching workspace
+    /// (bit-identical results either way).
+    pub cache: Option<&'a RefCell<GramCache<'a>>>,
 }
 
 impl<'a> LeverageContext<'a> {
@@ -49,7 +58,15 @@ impl<'a> LeverageContext<'a> {
             lambda,
             p_true: None,
             inner_m: ((n as f64).powf(1.0 / 3.0).round() as usize).max(8),
+            cache: None,
         }
+    }
+
+    /// Attach a shared landmark Gram workspace (must be keyed to the
+    /// same point set as `self.x`; the estimators assert this).
+    pub fn with_cache(mut self, cache: &'a RefCell<GramCache<'a>>) -> Self {
+        self.cache = Some(cache);
+        self
     }
 
     pub fn n(&self) -> usize {

@@ -21,12 +21,18 @@
 
 use super::{LeverageContext, LeverageEstimator};
 use crate::kernels::Kernel;
-use crate::linalg::{Cholesky, Mat};
+use crate::linalg::{Cholesky, GramCache, Mat};
 use crate::util::rng::{AliasTable, Rng};
 
 /// Approximate rescaled leverage scores of the rows of `x` using landmark
 /// rows `dict` (indices into `x`). Returns G-hat (scaled by n like the
 /// exact scores).
+///
+/// One-shot form: builds a throwaway reference-mode workspace, so the
+/// cost and the bits are exactly the pre-workspace path's. Repeated
+/// callers (the recursion in [`RecursiveRls`], BLESS's path following)
+/// should hold a [`GramCache`] and call [`dictionary_rls_in`] so landmark
+/// columns shared between calls are evaluated only once.
 pub fn dictionary_rls(
     x: &Mat,
     kernel: &Kernel,
@@ -34,31 +40,42 @@ pub fn dictionary_rls(
     dict: &[usize],
     subset: Option<&[usize]>,
 ) -> Vec<f64> {
-    let n = x.rows;
+    let mut ws = GramCache::new_uncached(kernel.clone(), x);
+    dictionary_rls_in(&mut ws, lambda, dict, subset)
+}
+
+/// [`dictionary_rls`] against a shared landmark Gram workspace: installs
+/// `dict` into the workspace (extending or rebuilding K_JJ and its
+/// factor as needed) and assembles K_{rows,J} from cached columns —
+/// every landmark column is evaluated at most once per workspace
+/// lifetime. Scores are bit-identical to the one-shot form whenever the
+/// workspace *rebuilds* for `dict` (any non-prefix transition — the case
+/// every current recursive consumer hits, since per-level dictionaries
+/// are resampled rather than grown). When `dict` strictly extends the
+/// workspace's current list, the K_JJ factor is extended by
+/// [`crate::linalg::Cholesky::append_row`], whose low-order rounding
+/// (and jitter placement) legitimately differs from a from-scratch
+/// factorization — results then still satisfy both parity contracts
+/// (cached ≡ uncached and thread-count invariance; see
+/// [`crate::linalg::gramcache`]) but are not bitwise the one-shot form.
+pub fn dictionary_rls_in(
+    ws: &mut GramCache,
+    lambda: f64,
+    dict: &[usize],
+    subset: Option<&[usize]>,
+) -> Vec<f64> {
+    let n = ws.points().rows;
     let m = dict.len();
     assert!(m > 0, "empty dictionary");
     let nlam = n as f64 * lambda;
-    let landmarks = Mat::from_fn(m, x.cols, |i, j| x[(dict[i], j)]);
-    // K_JJ = R Rᵀ (lower L here) — factor with jitter.
-    let kjj = kernel.matrix_sym(&landmarks);
-    let chol_jj = Cholesky::factor_jittered(&kjj).expect("K_JJ PSD");
-    // rows to score
-    let rows: Vec<usize> = match subset {
-        Some(s) => s.to_vec(),
-        None => (0..n).collect(),
-    };
-    // K_{rows,J} assembled in one shot through the blocked engine, then
+    // K_JJ = R Rᵀ (lower L here) — factored (with jitter) by the
+    // workspace; K_{rows,J} gathered/assembled by it in one shot, then
     // B rows b_i = L^{-1} k_{J,i} (pool-parallel; each b_i is an
     // independent triangular solve).
-    let subset_mat;
-    let kxj = match subset {
-        Some(_) => {
-            subset_mat = Mat::from_fn(rows.len(), x.cols, |i, j| x[(rows[i], j)]);
-            kernel.matrix(&subset_mat, &landmarks)
-        }
-        None => kernel.matrix(x, &landmarks),
-    };
-    let chunks = crate::util::pool::par_chunks(rows.len(), |range| {
+    ws.set_landmarks(dict);
+    let kxj = ws.block(subset);
+    let chol_jj = ws.factor();
+    let chunks = crate::util::pool::par_chunks(kxj.rows, |range| {
         let mut bs = Vec::with_capacity(range.len());
         for r in range {
             let mut k_col = kxj.row(r).to_vec();
@@ -119,10 +136,14 @@ impl Default for RecursiveRls {
 }
 
 impl RecursiveRls {
-    /// Returns the dictionary built over `active` (indices into ctx.x).
+    /// Returns the dictionary built over `active` (indices into the
+    /// workspace's point set). Every level scores through the shared
+    /// workspace, so a landmark column evaluated at one level is a cache
+    /// hit at every later level that resamples the same point.
     fn build_dictionary(
         &self,
-        ctx: &LeverageContext,
+        lambda: f64,
+        ws: &mut GramCache,
         active: &[usize],
         m_dict: usize,
         rng: &mut Rng,
@@ -133,9 +154,9 @@ impl RecursiveRls {
         // random half
         let half: Vec<usize> = active.iter().copied().filter(|_| rng.f64() < 0.5).collect();
         let half = if half.is_empty() { vec![active[0]] } else { half };
-        let child = self.build_dictionary(ctx, &half, m_dict, rng);
+        let child = self.build_dictionary(lambda, ws, &half, m_dict, rng);
         // score the active set with the child dictionary
-        let scores = dictionary_rls(ctx.x, ctx.kernel, ctx.lambda, &child, Some(active));
+        let scores = dictionary_rls_in(ws, lambda, &child, Some(active));
         // resample dictionary ∝ scores
         let at = AliasTable::new(&scores);
         let take = ((m_dict as f64 * self.oversample).round() as usize).max(4);
@@ -143,6 +164,16 @@ impl RecursiveRls {
         dict.sort_unstable();
         dict.dedup();
         dict
+    }
+
+    fn run(&self, ctx: &LeverageContext, ws: &mut GramCache, rng: &mut Rng) -> Vec<f64> {
+        assert!(
+            std::ptr::eq(ws.points(), ctx.x),
+            "shared Gram workspace must be keyed to the context's point set"
+        );
+        let all: Vec<usize> = (0..ctx.n()).collect();
+        let dict = self.build_dictionary(ctx.lambda, ws, &all, ctx.inner_m, rng);
+        dictionary_rls_in(ws, ctx.lambda, &dict, None)
     }
 }
 
@@ -152,9 +183,15 @@ impl LeverageEstimator for RecursiveRls {
     }
 
     fn estimate(&self, ctx: &LeverageContext, rng: &mut Rng) -> Vec<f64> {
-        let all: Vec<usize> = (0..ctx.n()).collect();
-        let dict = self.build_dictionary(ctx, &all, ctx.inner_m, rng);
-        dictionary_rls(ctx.x, ctx.kernel, ctx.lambda, &dict, None)
+        match ctx.cache {
+            Some(shared) => self.run(ctx, &mut shared.borrow_mut(), rng),
+            None => {
+                // private caching workspace: the recursion still reuses
+                // columns level-to-level, bit-identically to a shared one
+                let mut ws = GramCache::new(ctx.kernel.clone(), ctx.x);
+                self.run(ctx, &mut ws, rng)
+            }
+        }
     }
 }
 
@@ -221,6 +258,7 @@ mod tests {
             lambda: lam,
             p_true: None,
             inner_m: 40,
+            cache: None,
         };
         let est = RecursiveRls::default().estimate(&ctx, &mut rng);
         // normalized scores should be close: mean ratio ~1
@@ -230,6 +268,25 @@ mod tests {
         ratios.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let med = ratios[ratios.len() / 2];
         assert!((med - 1.0).abs() < 0.35, "median ratio {med}");
+    }
+
+    #[test]
+    fn shared_workspace_matches_one_shot_bitwise() {
+        // dictionary_rls_in against a warm caching workspace must equal
+        // the one-shot (reference-mode) dictionary_rls bit for bit —
+        // gathered columns, K_JJ, and factor all agree by construction.
+        let (ds, k, lam) = setup(140, 6);
+        let mut rng = Rng::seed_from_u64(8);
+        let dict_a = rng.sample_without_replacement(ds.n(), 25);
+        let dict_b = rng.sample_without_replacement(ds.n(), 30);
+        let subset: Vec<usize> = (0..70).map(|i| i * 2).collect();
+        let mut ws = crate::linalg::GramCache::new(k.clone(), &ds.x);
+        for dict in [&dict_a, &dict_b, &dict_a] {
+            let cached = dictionary_rls_in(&mut ws, lam, dict, Some(&subset));
+            let oneshot = dictionary_rls(&ds.x, &k, lam, dict, Some(&subset));
+            assert_eq!(cached, oneshot, "cached-vs-one-shot diverged");
+        }
+        assert!(ws.stats().hits > 0, "revisited dictionaries must hit the cache");
     }
 
     #[test]

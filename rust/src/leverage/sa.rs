@@ -27,6 +27,15 @@
 //! on the blocked distance engine — see [`crate::kde`] and
 //! [`crate::linalg::blocked`]; the per-point quadrature stays a
 //! per-element pool map.
+//!
+//! SA itself evaluates no K_·J landmark blocks — that is its selling
+//! point — so a shared [`crate::linalg::GramCache`] on the context is
+//! passed through untouched here. In the fit pipeline the same workspace
+//! is handed to the Nyström stage afterwards, which assembles *its*
+//! landmark blocks through it; for the algebraic estimators (RC/BLESS)
+//! those columns are then partly pre-paid, while for SA the workspace
+//! simply starts cold (`rust/tests/gramcache_parity.rs` pins that an
+//! attached workspace never perturbs SA's scores).
 
 use super::{LeverageContext, LeverageEstimator};
 use crate::kde::{self, KdeMethod};
@@ -457,6 +466,7 @@ mod tests {
             lambda: lam,
             p_true: ds.p_true.as_deref(),
             inner_m: 16,
+            cache: None,
         };
         let sa = est.estimate(&ctx, &mut rng);
         let mut rels = Vec::new();

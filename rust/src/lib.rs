@@ -50,6 +50,42 @@
 //! shift, while `rust/tests/parallel_parity.rs` pins cross-thread
 //! bitwise parity for every rebased path.
 //!
+//! ## Landmark Gram cache
+//!
+//! Every landmark consumer — Recursive-RLS's recursion levels, BLESS's
+//! λ path, and the Nyström fit — shares one versioned workspace,
+//! [`linalg::gramcache::GramCache`], instead of reassembling K_·J
+//! blocks and refactoring K_JJ per stage:
+//!
+//! * kernel **columns** K(X, x_j) are cached per landmark data index
+//!   and gathered into whatever block a consumer asks for, so each
+//!   column is evaluated *at most once* per workspace lifetime
+//!   (`gramcache.hit` / `.miss` / `.evict` in [`metrics::global`]);
+//! * installing an **extension** of the current landmark list appends
+//!   rows, K_JJ entries, and factor rows ([`linalg::Cholesky::append_row`])
+//!   instead of rebuilding; any other change rebuilds and bumps the
+//!   workspace version (cached blocks are snapshots of a version);
+//! * streaming **micro-batches** fuse through the same machinery: b
+//!   arrivals become one blocked b×m row evaluation plus one
+//!   [`linalg::Cholesky::rank_k_update`] (a column-interleaved sweep
+//!   that performs *exactly* the scalar operations of k sequential
+//!   rank-one updates) and a single β solve.
+//!
+//! The determinism contract **doubles** here: results are bit-identical
+//! at every thread count *and* bit-identical cached-vs-uncached. The
+//! latter is engineered, not incidental — the blocked engine's
+//! per-element evaluation sequence depends only on the two input rows
+//! (never the request shape, tile position, or cache state), so a
+//! gathered cached column equals a fresh subset evaluation bit for bit,
+//! and the append-vs-rebuild factor choice derives from the
+//! landmark-list transition alone, never from cache occupancy.
+//! Invalidation is equally explicit: a workspace is keyed to one point
+//! set and kernel; landmark-set changes bump the version; capacity
+//! evictions drop only inactive columns, and re-evaluating an evicted
+//! column reproduces the same bits. `rust/tests/gramcache_parity.rs`
+//! pins cached ≡ uncached and 1-thread ≡ 4-thread for every rebased
+//! path, including fused-vs-sequential stream ingestion.
+//!
 //! The thread count comes from (highest priority first) a scoped
 //! [`util::pool::override_threads`] guard (the
 //! [`coordinator::FitConfig::threads`] knob and the bench harness's
@@ -66,9 +102,11 @@
 //! * [`metrics`] — timers / counters / streaming summaries, plus a
 //!   process-global registry ([`metrics::global`]) for library-internal
 //!   events (e.g. KDE grid fallbacks).
-//! * [`linalg`] — dense row-major matrices, blocked matmul, Cholesky,
-//!   and the [`linalg::blocked`] pairwise distance/Gram engine behind
-//!   every pairwise hot path.
+//! * [`linalg`] — dense row-major matrices, blocked matmul, Cholesky
+//!   (rank-one *and* fused rank-k up/downdates), the [`linalg::blocked`]
+//!   pairwise distance/Gram engine behind every pairwise hot path, and
+//!   the [`linalg::gramcache`] versioned landmark Gram workspace (see
+//!   "Landmark Gram cache" above).
 //! * [`special`] — Γ, erf, modified Bessel K_ν, polylogarithm Li_s.
 //! * [`quadrature`] — Gauss–Legendre and adaptive rules.
 //! * [`kernels`] — Matérn / Gaussian kernels and their spectral densities.
@@ -84,8 +122,10 @@
 //! * [`stream`] — online ingestion: sequential-leverage-score Nyström
 //!   dictionary, O(m²) incremental model updates via rank-one Cholesky
 //!   update/append/delete sweeps (a downdate completes the routine set
-//!   for future decayed-stream support), and refresh-policy-driven
-//!   publishing into the server.
+//!   for future decayed-stream support), fused micro-batch ingestion
+//!   (one blocked row-block + one rank-k factor sweep per batch,
+//!   bit-identical to one-by-one), and refresh-policy-driven publishing
+//!   into the server.
 //! * [`persist`] — model persistence: binary codec + versioned artifact
 //!   store (see "Persistence" below).
 //! * [`bench_harness`] — timing harness used by `rust/benches/*`.

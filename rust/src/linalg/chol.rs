@@ -210,6 +210,52 @@ impl Cholesky {
         chol_update_raw(&mut self.l, self.n, 0, &mut w);
     }
 
+    /// Rank-k **update**: refactor A + Σ_t v_t v_tᵀ in place for the k
+    /// rows of `vs` (k×n), O(k·n²) — one fused pass instead of k
+    /// separate [`Cholesky::rank_one_update`] sweeps.
+    ///
+    /// The sweeps are interleaved by *column*: at column j, the k
+    /// rotations are applied vector-by-vector before moving right. Each
+    /// factor column is then walked once per batch instead of once per
+    /// vector, so the column (and the k work vectors) stay cache-hot —
+    /// the streaming micro-batch lever ([`crate::stream`]: b arrivals =
+    /// one rank-k update of S + μK_mm instead of b rank-one sweeps).
+    ///
+    /// **Exactness**: column j of the factor is final as soon as sweep t
+    /// has processed it (later columns of sweep t never write column j),
+    /// and vector t+1's rotation at column j reads exactly that state —
+    /// the same scalar operations in the same order as k sequential
+    /// [`Cholesky::rank_one_update`] calls. The result is therefore
+    /// **bit-identical** to the sequential sweeps (pinned by a unit test
+    /// here and by `rust/tests/gramcache_parity.rs`), which is what lets
+    /// the fused stream ingest replay bitwise against one-by-one
+    /// ingestion. Always succeeds (each added term is PSD).
+    pub fn rank_k_update(&mut self, vs: &Mat) {
+        assert_eq!(vs.cols, self.n, "rank_k_update vector length mismatch");
+        let n = self.n;
+        let k = vs.rows;
+        if n == 0 || k == 0 {
+            return;
+        }
+        let mut w = vs.data.clone();
+        for j in 0..n {
+            for t in 0..k {
+                let wt = &mut w[t * n..(t + 1) * n];
+                let wj = wt[j];
+                let ljj = self.l[j * n + j];
+                let r = (ljj * ljj + wj * wj).sqrt();
+                let c = r / ljj;
+                let s = wj / ljj;
+                self.l[j * n + j] = r;
+                for i in (j + 1)..n {
+                    let lij = (self.l[i * n + j] + s * wt[i]) / c;
+                    self.l[i * n + j] = lij;
+                    wt[i] = c * wt[i] - s * lij;
+                }
+            }
+        }
+    }
+
     /// Rank-one **downdate**: refactor A − vvᵀ, O(n²). Fails (leaving the
     /// factor untouched) if the result is not positive definite.
     ///
@@ -434,6 +480,58 @@ mod tests {
             let want = Cholesky::factor(&a2).unwrap();
             assert_factors_close(&ch, &want, 1e-8 * (1.0 + a2.fro()));
         }
+    }
+
+    #[test]
+    fn rank_k_update_is_bitwise_k_sequential_rank_ones() {
+        // The fused column-interleaved sweep must perform exactly the
+        // same scalar operations as k sequential rank-one sweeps — the
+        // invariant the fused stream ingest's bitwise replay rests on.
+        let mut rng = Rng::seed_from_u64(26);
+        for &(n, k) in &[(1usize, 1usize), (2, 3), (7, 2), (17, 5), (33, 8)] {
+            let a = Mat { rows: n, cols: n, data: gen::spd(&mut rng, n, 1.0) };
+            let vs = Mat::from_fn(k, n, |_, _| rng.normal() * 0.7);
+            let mut fused = Cholesky::factor(&a).unwrap();
+            fused.rank_k_update(&vs);
+            let mut seq = Cholesky::factor(&a).unwrap();
+            for t in 0..k {
+                seq.rank_one_update(vs.row(t));
+            }
+            assert_eq!(fused.l, seq.l, "n={n} k={k}: fused != sequential bitwise");
+        }
+    }
+
+    #[test]
+    fn rank_k_update_matches_refactor() {
+        let mut rng = Rng::seed_from_u64(27);
+        for &(n, k) in &[(3usize, 2usize), (10, 4), (25, 6)] {
+            let a = Mat { rows: n, cols: n, data: gen::spd(&mut rng, n, 1.0) };
+            let vs = Mat::from_fn(k, n, |_, _| rng.normal() * 0.5);
+            let mut ch = Cholesky::factor(&a).unwrap();
+            ch.rank_k_update(&vs);
+            let mut a2 = a.clone();
+            for t in 0..k {
+                let v = vs.row(t);
+                for i in 0..n {
+                    for j in 0..n {
+                        a2[(i, j)] += v[i] * v[j];
+                    }
+                }
+            }
+            let want = Cholesky::factor(&a2).unwrap();
+            assert_factors_close(&ch, &want, 1e-8 * (1.0 + a2.fro()));
+        }
+    }
+
+    #[test]
+    fn rank_k_update_empty_batch_is_a_no_op() {
+        let mut rng = Rng::seed_from_u64(28);
+        let n = 6;
+        let a = Mat { rows: n, cols: n, data: gen::spd(&mut rng, n, 1.0) };
+        let mut ch = Cholesky::factor(&a).unwrap();
+        let before = ch.l.clone();
+        ch.rank_k_update(&Mat::zeros(0, n));
+        assert_eq!(ch.l, before);
     }
 
     #[test]

@@ -1,0 +1,572 @@
+//! Versioned landmark Gram workspace shared by every K_·J consumer.
+//!
+//! Recursive landmark samplers (Recursive-RLS, BLESS) and their
+//! downstream Nyström fit all evaluate kernel blocks against landmark
+//! sets drawn from **the same point set**: every level of the recursion
+//! reassembles K_rows,J and refactors K_JJ from scratch, and the final
+//! fit assembles the same blocks a third time. This module owns that
+//! work once:
+//!
+//! * **Column cache** — K(X, x_j) is cached per landmark *data index* j
+//!   (the full n-row column). Any requested block K_{rows,J} is then a
+//!   row/column gather; a landmark column is evaluated **at most once**
+//!   for the workspace's lifetime, no matter how many recursion levels,
+//!   subsets, or consumers touch it. Missing columns are evaluated in
+//!   one blocked call ([`crate::kernels::Kernel::matrix`]) and scattered.
+//! * **Landmark workspace** — the current landmark list, its packed row
+//!   matrix (the row-major layout [`crate::linalg::blocked`] tiles), the
+//!   assembled K_JJ, and its Cholesky factor. [`GramCache::set_landmarks`]
+//!   with an *extension* of the current list appends only the new rows,
+//!   columns, and factor rows ([`Cholesky::append_row`]); any other
+//!   change rebuilds. Every change bumps [`GramCache::version`] — cached
+//!   blocks handed out earlier are snapshots keyed by that version.
+//!
+//! # Determinism contract (cached ≡ uncached, bit for bit)
+//!
+//! The blocked engine computes every element `f(r²(x_i, y_j))` by a
+//! per-element evaluation sequence that depends **only on the two rows**
+//! — never on the tile the element landed in, the shape of the request,
+//! or the thread count (see [`crate::linalg::blocked`]). Therefore:
+//!
+//! * a cached full column gathered down to any row subset is bitwise
+//!   identical to evaluating that subset block directly (the seed path);
+//! * K_JJ gathered from cached columns is bitwise identical to a fresh
+//!   [`crate::kernels::Kernel::matrix_sym`] assembly;
+//! * and the K_JJ factor — built by identical code on identical inputs,
+//!   with the append-vs-rebuild choice derived from the landmark-list
+//!   transition alone (never from cache occupancy) — follows the same
+//!   trajectory in both modes.
+//!
+//! [`GramCache::new_uncached`] is the reference mode: identical
+//! workspace logic, no memoization, fresh (seed-cost) evaluation per
+//! request. `rust/tests/gramcache_parity.rs` pins cached ≡ uncached and
+//! 1-thread ≡ 4-thread bitwise for every rebased consumer.
+//!
+//! # Metrics
+//!
+//! Column traffic is counted in [`crate::metrics::global`]:
+//! `gramcache.hit` (column served from memory), `gramcache.miss`
+//! (column evaluated), `gramcache.evict` (column dropped by the
+//! capacity bound). The `stream` and `serve` CLI summaries print them
+//! next to `kde.grid.fallback`.
+#![deny(warnings)]
+#![deny(clippy::all)]
+
+use super::{Cholesky, Mat};
+use crate::kernels::Kernel;
+use std::collections::{HashMap, VecDeque};
+
+/// Default bound on cached columns (each column is n `f64`s): cap the
+/// cache at [`CACHE_BUDGET_FLOATS`] total floats (~512 MiB), never below
+/// 64 columns. Landmark dictionaries are m = O(d_stat·log n) ≪ n and a
+/// recursion touches a few times that many distinct indices, so at bench
+/// scales everything fits; at the largest sweeps the oldest inactive
+/// columns rotate out (re-evaluating an evicted column reproduces the
+/// same bits, so eviction never affects results), and a landmark *set*
+/// larger than the whole capacity bypasses the column cache entirely
+/// (reference-path evaluation — same bits, seed-path memory).
+pub fn default_max_cols(n: usize) -> usize {
+    (CACHE_BUDGET_FLOATS / n.max(1)).max(64)
+}
+
+/// Total cached floats the default capacity allows (512 MiB of `f64`).
+pub const CACHE_BUDGET_FLOATS: usize = 64 << 20;
+
+/// Versioned landmark-set Gram workspace over a fixed point set `x`.
+/// See the module docs for the caching and determinism contract.
+pub struct GramCache<'a> {
+    kernel: Kernel,
+    x: &'a Mat,
+    /// `false` → reference mode: same workspace logic, no memoization.
+    caching: bool,
+    max_cols: usize,
+    /// Landmark data index → cached full column K(X, x_j).
+    cols: HashMap<usize, Vec<f64>>,
+    /// Insertion order of cached columns (eviction order; active
+    /// landmarks are skipped).
+    order: VecDeque<usize>,
+    /// Bumped on every landmark-set change; blocks and factors handed
+    /// out earlier are snapshots of the version they were built at.
+    version: u64,
+    dict: Vec<usize>,
+    landmarks: Mat,
+    kjj: Mat,
+    chol: Option<Cholesky>,
+    stats: CacheStats,
+}
+
+/// Per-workspace column-traffic counters. The same events are mirrored
+/// into [`crate::metrics::global`] (`gramcache.hit` / `gramcache.miss` /
+/// `gramcache.evict`); the instance copy exists so tests and callers can
+/// make exact assertions without racing other workspaces in the process.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Columns served from memory.
+    pub hits: u64,
+    /// Columns evaluated (each distinct landmark index at most once for
+    /// a caching workspace whose capacity was never exceeded).
+    pub misses: u64,
+    /// Columns dropped by the capacity bound.
+    pub evicts: u64,
+}
+
+impl<'a> GramCache<'a> {
+    /// Caching workspace over `x` (the memoizing mode).
+    pub fn new(kernel: Kernel, x: &'a Mat) -> GramCache<'a> {
+        Self::build(kernel, x, true)
+    }
+
+    /// Reference mode: identical workspace logic and bit-identical
+    /// outputs, but every block request re-evaluates at the seed path's
+    /// cost (and nothing is stored). The cached-vs-uncached parity suite
+    /// and the `bench-perf` speedup rows compare against this.
+    pub fn new_uncached(kernel: Kernel, x: &'a Mat) -> GramCache<'a> {
+        Self::build(kernel, x, false)
+    }
+
+    fn build(kernel: Kernel, x: &'a Mat, caching: bool) -> GramCache<'a> {
+        GramCache {
+            kernel,
+            x,
+            caching,
+            max_cols: default_max_cols(x.rows),
+            cols: HashMap::new(),
+            order: VecDeque::new(),
+            version: 0,
+            dict: Vec::new(),
+            landmarks: Mat::zeros(0, x.cols),
+            kjj: Mat::zeros(0, 0),
+            chol: None,
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// This workspace's column-traffic counters (see [`CacheStats`]).
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    /// Override the cached-column capacity (tests exercise eviction with
+    /// tiny caps).
+    pub fn with_max_cols(mut self, max_cols: usize) -> GramCache<'a> {
+        self.max_cols = max_cols.max(1);
+        self
+    }
+
+    /// The point set this workspace is keyed to.
+    pub fn points(&self) -> &'a Mat {
+        self.x
+    }
+
+    pub fn kernel(&self) -> &Kernel {
+        &self.kernel
+    }
+
+    /// Landmark-set version: bumped on every [`GramCache::set_landmarks`]
+    /// that changes the list (a call with the identical list is a no-op).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Current landmark list (data indices into `x`, duplicates allowed —
+    /// Nyström samples with replacement).
+    pub fn dict(&self) -> &[usize] {
+        &self.dict
+    }
+
+    pub fn landmark_count(&self) -> usize {
+        self.dict.len()
+    }
+
+    /// Packed landmark rows (m×d, row-major — the layout the blocked
+    /// engine tiles). Extended in place on landmark-list extension.
+    pub fn landmarks(&self) -> &Mat {
+        &self.landmarks
+    }
+
+    /// The assembled K_JJ for the current landmark list (m×m).
+    pub fn kjj(&self) -> &Mat {
+        &self.kjj
+    }
+
+    /// Cholesky factor of the current K_JJ (jittered when landmarks
+    /// repeat). Panics while the landmark list is empty.
+    pub fn factor(&self) -> &Cholesky {
+        self.chol.as_ref().expect("set_landmarks first: no landmark set active")
+    }
+
+    /// Number of columns currently held by the cache (0 in reference
+    /// mode). With a capacity that was never exceeded this equals the
+    /// number of `gramcache.miss` evaluations this workspace performed.
+    pub fn cached_cols(&self) -> usize {
+        self.cols.len()
+    }
+
+    pub fn is_caching(&self) -> bool {
+        self.caching
+    }
+
+    /// Install a landmark list. An *extension* (the current list is a
+    /// prefix of the new one) appends the new landmark rows, K_JJ
+    /// rows/columns, and factor rows ([`Cholesky::append_row`], falling
+    /// back to a jittered refactor if a numerically dependent column
+    /// makes the Schur complement non-positive); anything else rebuilds
+    /// the workspace. A call with the unchanged list is a no-op (the
+    /// version is kept). The append-vs-rebuild choice depends only on
+    /// the list transition — never on what happens to be cached — so the
+    /// factor trajectory is identical in caching and reference modes.
+    /// Note the appended factor is the *incremental* one: its low-order
+    /// rounding (division order, jitter placement on new diagonals)
+    /// legitimately differs from a from-scratch factorization of the
+    /// same K_JJ — consumers that need from-scratch bits must install
+    /// the set via a non-prefix transition.
+    pub fn set_landmarks(&mut self, dict: &[usize]) {
+        if dict == self.dict.as_slice() {
+            return;
+        }
+        for &j in dict {
+            assert!(j < self.x.rows, "landmark index {j} out of range (n = {})", self.x.rows);
+        }
+        self.version += 1;
+        let m0 = self.dict.len();
+        let extends =
+            m0 > 0 && dict.len() > m0 && dict[..m0] == self.dict[..] && self.chol.is_some();
+        if extends {
+            self.extend_landmarks(&dict[m0..]);
+        } else {
+            self.rebuild_landmarks(dict);
+        }
+        self.evict_over_cap();
+    }
+
+    fn rebuild_landmarks(&mut self, dict: &[usize]) {
+        self.dict = dict.to_vec();
+        self.landmarks = gather_rows(self.x, dict);
+        let m = dict.len();
+        if m == 0 {
+            self.kjj = Mat::zeros(0, 0);
+            self.chol = None;
+            return;
+        }
+        if self.caching && m <= self.max_cols {
+            // gather K_JJ from the cached columns (bitwise identical to
+            // a fresh symmetric assembly — see the module docs)
+            let cols = self.col_block(dict);
+            self.kjj = Mat::from_fn(m, m, |i, j| cols[(dict[i], j)]);
+        } else {
+            // reference mode, or a landmark set too large to ever fit
+            // the column cache: the seed path's m×m symmetric assembly
+            // (the oversized test depends only on m vs the fixed
+            // capacity — never on cache occupancy — so the factor
+            // trajectory stays mode-independent)
+            self.kjj = self.kernel.matrix_sym(&self.landmarks);
+        }
+        self.chol = Some(Cholesky::factor_jittered(&self.kjj).expect("K_JJ PSD"));
+    }
+
+    fn extend_landmarks(&mut self, new: &[usize]) {
+        let m0 = self.dict.len();
+        let k = new.len();
+        // new full n-row columns (memoized in caching mode, recomputed
+        // fresh in reference mode — same bits either way); the K_JJ
+        // entries below are gathers out of these columns in both modes
+        let new_mat = gather_rows(self.x, new);
+        let cross: Mat = if self.caching && m0 + k <= self.max_cols {
+            self.col_block(new)
+        } else {
+            // reference mode / oversized set: evaluate without storing
+            self.miss(k);
+            self.kernel.matrix(self.x, &new_mat)
+        };
+        self.dict.extend_from_slice(new);
+        self.landmarks.data.extend_from_slice(&new_mat.data);
+        self.landmarks.rows += k;
+        let m = m0 + k;
+        let old = std::mem::replace(&mut self.kjj, Mat::zeros(0, 0));
+        let dict = &self.dict;
+        self.kjj = Mat::from_fn(m, m, |i, j| {
+            if i < m0 && j < m0 {
+                old[(i, j)]
+            } else if j >= m0 {
+                cross[(dict[i], j - m0)]
+            } else {
+                cross[(dict[j], i - m0)]
+            }
+        });
+        let mut chol = self.chol.take().expect("extension requires an active factor");
+        for t in m0..m {
+            let a: Vec<f64> = (0..t).map(|i| self.kjj[(t, i)]).collect();
+            if chol.append_row(&a, self.kjj[(t, t)]).is_err() {
+                // numerically dependent landmark — refactor with jitter
+                // (deterministic: depends only on K_JJ, which is fully
+                // assembled above)
+                self.chol = Some(Cholesky::factor_jittered(&self.kjj).expect("K_JJ PSD"));
+                return;
+            }
+        }
+        self.chol = Some(chol);
+    }
+
+    /// K_{rows,J} for the current landmark list: all of `x` when `rows`
+    /// is `None`, else the given row indices (in that order). Caching
+    /// mode gathers from the cached columns; reference mode evaluates
+    /// the requested block directly — bitwise identical outputs.
+    pub fn block(&mut self, rows: Option<&[usize]>) -> Mat {
+        let m = self.dict.len();
+        if m == 0 {
+            let nrows = rows.map_or(self.x.rows, <[usize]>::len);
+            return Mat::zeros(nrows, 0);
+        }
+        if !self.caching || m > self.max_cols {
+            // reference mode, or a landmark set that can never fit the
+            // column cache: direct (seed-path) evaluation of exactly the
+            // requested block — bitwise identical to the gather
+            self.miss(m);
+            return match rows {
+                None => self.kernel.matrix(self.x, &self.landmarks),
+                Some(r) => self.kernel.matrix(&gather_rows(self.x, r), &self.landmarks),
+            };
+        }
+        let dict = self.dict.clone();
+        let cols = self.col_block(&dict);
+        match rows {
+            None => cols,
+            Some(r) => Mat::from_fn(r.len(), m, |i, j| cols[(r[i], j)]),
+        }
+    }
+
+    /// Full n-row columns for arbitrary landmark indices, one column per
+    /// requested index (duplicates repeated). Caching mode serves hits
+    /// from memory and evaluates the missing columns in one blocked
+    /// call; reference mode evaluates everything fresh.
+    fn col_block(&mut self, idxs: &[usize]) -> Mat {
+        let n = self.x.rows;
+        if !self.caching {
+            self.miss(idxs.len());
+            return self.kernel.matrix(self.x, &gather_rows(self.x, idxs));
+        }
+        let mut missing: Vec<usize> = Vec::new();
+        let mut hits = 0usize;
+        for &j in idxs {
+            if self.cols.contains_key(&j) {
+                hits += 1;
+            } else if !missing.contains(&j) {
+                missing.push(j);
+            } else {
+                hits += 1; // duplicate request within this call
+            }
+        }
+        if !missing.is_empty() {
+            let blk = self.kernel.matrix(self.x, &gather_rows(self.x, &missing));
+            for (c, &j) in missing.iter().enumerate() {
+                let col: Vec<f64> = (0..n).map(|i| blk[(i, c)]).collect();
+                self.cols.insert(j, col);
+                self.order.push_back(j);
+            }
+            self.miss(missing.len());
+        }
+        self.hit(hits);
+        // resolve the m column slices once — the gather itself must not
+        // pay a hash probe per element
+        let cols: Vec<&[f64]> = idxs.iter().map(|j| self.cols[j].as_slice()).collect();
+        Mat::from_fn(n, idxs.len(), |i, c| cols[c][i])
+    }
+
+    /// Drop the oldest inactive columns until the capacity bound holds.
+    fn evict_over_cap(&mut self) {
+        let mut spared = 0usize;
+        while self.cols.len() > self.max_cols && spared < self.order.len() {
+            let j = self.order.pop_front().expect("order tracks cols");
+            if self.dict.contains(&j) {
+                // active landmark — keep it, move on
+                self.order.push_back(j);
+                spared += 1;
+            } else {
+                self.cols.remove(&j);
+                self.stats.evicts += 1;
+                crate::metrics::global().incr("gramcache.evict", 1);
+            }
+        }
+    }
+
+    fn miss(&mut self, k: usize) {
+        if k > 0 {
+            self.stats.misses += k as u64;
+            crate::metrics::global().incr("gramcache.miss", k as u64);
+        }
+    }
+
+    fn hit(&mut self, k: usize) {
+        if k > 0 {
+            self.stats.hits += k as u64;
+            crate::metrics::global().incr("gramcache.hit", k as u64);
+        }
+    }
+}
+
+/// Row gather `x[idxs, :]` (duplicates allowed).
+fn gather_rows(x: &Mat, idxs: &[usize]) -> Mat {
+    Mat::from_fn(idxs.len(), x.cols, |i, j| x[(idxs[i], j)])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::KernelSpec;
+    use crate::util::rng::Rng;
+
+    fn kernel() -> Kernel {
+        Kernel::new(KernelSpec::Matern { nu: 1.5, a: 1.0 })
+    }
+
+    fn random_mat(rng: &mut Rng, rows: usize, cols: usize) -> Mat {
+        Mat::from_fn(rows, cols, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn cached_block_is_bitwise_the_direct_evaluation() {
+        let mut rng = Rng::seed_from_u64(1);
+        let x = random_mat(&mut rng, 150, 3);
+        let k = kernel();
+        let dict: Vec<usize> = vec![3, 60, 9, 60, 149]; // duplicate allowed
+        let mut cache = GramCache::new(k.clone(), &x);
+        cache.set_landmarks(&dict);
+        let landmarks = Mat::from_fn(dict.len(), 3, |i, j| x[(dict[i], j)]);
+        // full block vs the seed path
+        let full = cache.block(None);
+        assert_eq!(full.data, k.matrix(&x, &landmarks).data);
+        // arbitrary row subset vs direct subset evaluation
+        let rows: Vec<usize> = vec![140, 0, 7, 77, 7];
+        let sub = cache.block(Some(&rows));
+        let sub_mat = Mat::from_fn(rows.len(), 3, |i, j| x[(rows[i], j)]);
+        assert_eq!(sub.data, k.matrix(&sub_mat, &landmarks).data);
+        // K_JJ vs the seed symmetric assembly, and the factor solves
+        assert_eq!(cache.kjj().data, k.matrix_sym(&landmarks).data);
+        assert_eq!(cache.factor().n(), dict.len());
+    }
+
+    #[test]
+    fn cached_and_uncached_agree_bitwise_including_extension() {
+        let mut rng = Rng::seed_from_u64(2);
+        let x = random_mat(&mut rng, 90, 2);
+        let seq: [&[usize]; 4] = [
+            &[4, 10, 2],
+            &[4, 10, 2, 55, 31],   // extension → append path
+            &[7, 7, 80],           // unrelated → rebuild
+            &[7, 7, 80, 4],        // extension again (4 is already cached)
+        ];
+        let mut cached = GramCache::new(kernel(), &x);
+        let mut reference = GramCache::new_uncached(kernel(), &x);
+        for dict in seq {
+            cached.set_landmarks(dict);
+            reference.set_landmarks(dict);
+            assert_eq!(cached.kjj().data, reference.kjj().data, "kjj diverged at {dict:?}");
+            assert_eq!(
+                cached.block(None).data,
+                reference.block(None).data,
+                "block diverged at {dict:?}"
+            );
+            let b: Vec<f64> = (0..dict.len()).map(|i| (i as f64).cos()).collect();
+            assert_eq!(
+                cached.factor().solve(&b),
+                reference.factor().solve(&b),
+                "factor diverged at {dict:?}"
+            );
+        }
+        assert!(cached.cached_cols() >= 6);
+        assert_eq!(reference.cached_cols(), 0);
+    }
+
+    #[test]
+    fn each_column_is_evaluated_at_most_once() {
+        let mut rng = Rng::seed_from_u64(3);
+        let x = random_mat(&mut rng, 80, 2);
+        let g = crate::metrics::global();
+        let global_miss_before = g.counter("gramcache.miss");
+        let mut cache = GramCache::new(kernel(), &x);
+        cache.set_landmarks(&[1, 5, 9]);
+        let _ = cache.block(None);
+        let _ = cache.block(Some(&[0, 1, 2, 3]));
+        cache.set_landmarks(&[5, 9, 40]); // rebuild, two columns reused
+        let _ = cache.block(None);
+        let stats = cache.stats();
+        assert_eq!(
+            stats.misses as usize,
+            cache.cached_cols(),
+            "a miss per distinct column only"
+        );
+        assert_eq!(stats.misses, 4, "columns 1,5,9,40");
+        assert!(stats.hits >= 8, "levels must reuse columns: {stats:?}");
+        // the process-global counter is wired (≥: other workspaces in
+        // this test binary may be counting concurrently)
+        assert!(g.counter("gramcache.miss") >= global_miss_before + 4);
+    }
+
+    #[test]
+    fn eviction_honours_capacity_and_spares_active_landmarks() {
+        let mut rng = Rng::seed_from_u64(4);
+        let x = random_mat(&mut rng, 40, 2);
+        let mut cache = GramCache::new(kernel(), &x).with_max_cols(3);
+        cache.set_landmarks(&[0, 1, 2]);
+        cache.set_landmarks(&[3, 4, 5]); // evicts 0,1,2
+        assert_eq!(cache.cached_cols(), 3);
+        assert_eq!(cache.stats().evicts, 3);
+        // a landmark set larger than the whole capacity bypasses the
+        // column cache outright (reference-path evaluation, same bits,
+        // seed-path memory)
+        let mut small = GramCache::new(kernel(), &x).with_max_cols(2);
+        small.set_landmarks(&[6, 7, 8]);
+        assert_eq!(small.cached_cols(), 0, "oversized sets bypass the cache");
+        assert_eq!(small.stats().evicts, 0);
+        let landmarks = Mat::from_fn(3, 2, |i, j| x[(6 + i, j)]);
+        assert_eq!(
+            small.block(None).data,
+            kernel().matrix(&x, &landmarks).data,
+            "oversized path must still match the seed evaluation bitwise"
+        );
+    }
+
+    #[test]
+    fn version_bumps_on_change_only() {
+        let mut rng = Rng::seed_from_u64(5);
+        let x = random_mat(&mut rng, 30, 1);
+        let mut cache = GramCache::new(kernel(), &x);
+        assert_eq!(cache.version(), 0);
+        cache.set_landmarks(&[2, 4]);
+        assert_eq!(cache.version(), 1);
+        cache.set_landmarks(&[2, 4]); // no-op
+        assert_eq!(cache.version(), 1);
+        cache.set_landmarks(&[2, 4, 6]); // extension
+        assert_eq!(cache.version(), 2);
+        assert_eq!(cache.dict(), &[2, 4, 6]);
+        assert_eq!(cache.landmarks().rows, 3);
+        cache.set_landmarks(&[9]); // rebuild
+        assert_eq!(cache.version(), 3);
+    }
+
+    #[test]
+    fn duplicate_landmarks_factor_via_jitter() {
+        let mut rng = Rng::seed_from_u64(6);
+        let x = random_mat(&mut rng, 25, 2);
+        let mut cache = GramCache::new(kernel(), &x);
+        cache.set_landmarks(&[3, 3, 3, 10]);
+        assert!(cache.factor().jitter > 0.0, "duplicated columns need jitter");
+        // extension onto a duplicated set must also stay factorable
+        cache.set_landmarks(&[3, 3, 3, 10, 11]);
+        let b = vec![1.0; 5];
+        assert!(cache.factor().solve(&b).iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn empty_landmark_set_is_a_valid_state() {
+        let mut rng = Rng::seed_from_u64(7);
+        let x = random_mat(&mut rng, 10, 2);
+        let mut cache = GramCache::new(kernel(), &x);
+        let b = cache.block(None);
+        assert_eq!((b.rows, b.cols), (10, 0));
+        cache.set_landmarks(&[1]);
+        cache.set_landmarks(&[]);
+        assert_eq!(cache.landmark_count(), 0);
+        assert_eq!(cache.block(Some(&[0, 5])).rows, 2);
+    }
+}

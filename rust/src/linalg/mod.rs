@@ -6,18 +6,22 @@
 //! solves, SPD solves, and the exact-leverage diagonal helper — plus the
 //! cache-blocked pairwise-distance/Gram engine in [`blocked`] that every
 //! pairwise hot path (kernels, KDE, k-means, leverage, Nyström, the
-//! streaming dictionary) routes through.
+//! streaming dictionary) routes through, and the versioned landmark Gram
+//! workspace in [`gramcache`] that the landmark consumers (Recursive-RLS,
+//! BLESS, Nyström) share so each K_·J column is evaluated at most once.
 //!
 //! Sizes in play: the full empirical kernel matrix K_n is only ever formed
 //! for ground-truth computations (n ≲ 2·10^4); the hot path works with
 //! n×m blocks, m = O(d_stat log n) ≪ n.
 
 pub mod blocked;
+pub mod gramcache;
 mod mat;
 mod chol;
 pub mod eigen;
 
 pub use chol::{chol_in_place, CholError, Cholesky};
+pub use gramcache::GramCache;
 pub use eigen::{sym_eigen, SymEigen};
 pub use mat::Mat;
 

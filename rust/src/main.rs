@@ -116,6 +116,22 @@ commands:
     );
 }
 
+/// Library-internal counters from `metrics::global()` that the fit/serve
+/// paths accumulate silently: landmark-Gram-cache traffic
+/// (`linalg::gramcache`) next to the KDE grid fallback count. Printed by
+/// the `serve` and `stream` summaries so cache behaviour is visible
+/// without a profiler.
+fn print_global_counters() {
+    let g = leverkrr::metrics::global();
+    println!(
+        "gram cache: {} hits / {} misses / {} evictions; kde grid fallbacks: {}",
+        g.counter("gramcache.hit"),
+        g.counter("gramcache.miss"),
+        g.counter("gramcache.evict"),
+        g.counter("kde.grid.fallback"),
+    );
+}
+
 fn exp_opts(name: &'static str, argv: &[String]) -> ExpOptions {
     match ExpOptions::command(name, "see module docs").parse(argv) {
         Ok(a) => ExpOptions::from_args(&a),
@@ -324,6 +340,7 @@ fn cmd_serve(argv: &[String]) -> i32 {
         ps[1] * 1e3,
         ps[2] * 1e3,
     );
+    print_global_counters();
     0
 }
 
@@ -526,6 +543,7 @@ fn cmd_stream(argv: &[String]) -> i32 {
         b_rmse,
         100.0 * (s_rmse - b_rmse) / b_rmse.max(1e-12),
     );
+    print_global_counters();
     0
 }
 
@@ -925,6 +943,7 @@ fn run_stream_serve(rc: &leverkrr::coordinator::RunConfig, ds: &Dataset) -> i32 
         ps[1] * 1e3,
         risk,
     );
+    print_global_counters();
     // model export + gc shares the batch path's helper; only the final
     // checkpoint (for the next warm start) is stream-specific
     persist_model_if_configured(rc, &snap);

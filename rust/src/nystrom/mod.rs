@@ -18,7 +18,7 @@
 //! equations + O(m³) to factor.
 
 use crate::kernels::Kernel;
-use crate::linalg::{Cholesky, Mat};
+use crate::linalg::{Cholesky, GramCache, Mat};
 use crate::util::rng::{AliasTable, Rng};
 
 /// Sub-sample size rules used by the paper's experiments.
@@ -94,14 +94,41 @@ impl NystromKrr {
         idx: &[usize],
         backend: &dyn KernelBackend,
     ) -> anyhow::Result<NystromKrr> {
-        let n = x.rows;
-        anyhow::ensure!(y.len() == n, "y length mismatch");
+        anyhow::ensure!(y.len() == x.rows, "y length mismatch");
         anyhow::ensure!(!idx.is_empty(), "need at least one landmark");
         let m = idx.len();
         let landmarks = Mat::from_fn(m, x.cols, |i, j| x[(idx[i], j)]);
         // K_nm (n×m): the hot block — via the pluggable backend.
         let knm = backend.cross_matrix(&kernel, x, &landmarks);
         let kmm = kernel.matrix_sym(&landmarks);
+        Self::fit_with_blocks(kernel, landmarks, idx, &knm, &kmm, y, lambda)
+    }
+
+    /// Fit from **precomputed** blocks: callers that already assembled
+    /// K_nm and K_mm (the leverage → Nyström pipelines in the
+    /// coordinator and the bench harness, via [`GramCache`]) hand them
+    /// in instead of paying the O(n·m·d) block a second time. (The pair
+    /// is the K_mm *values* plus K_nm — the normal matrix below needs
+    /// K_mm's entries, not its factor, so passing a factor alone could
+    /// not replace the assembly.) Bit-identical to
+    /// [`NystromKrr::fit_with_landmarks`] when the blocks match what the
+    /// native backend would have computed.
+    pub fn fit_with_blocks(
+        kernel: Kernel,
+        landmarks: Mat,
+        idx: &[usize],
+        knm: &Mat,
+        kmm: &Mat,
+        y: &[f64],
+        lambda: f64,
+    ) -> anyhow::Result<NystromKrr> {
+        let n = knm.rows;
+        let m = landmarks.rows;
+        anyhow::ensure!(y.len() == n, "y length mismatch");
+        anyhow::ensure!(m > 0, "need at least one landmark");
+        anyhow::ensure!(idx.len() == m, "landmark index/row mismatch");
+        anyhow::ensure!(knm.cols == m, "K_nm column mismatch");
+        anyhow::ensure!(kmm.rows == m && kmm.cols == m, "K_mm shape mismatch");
         // normal matrix  A = K_mn K_nm + nλ K_mm
         let mut a = knm.gram();
         for i in 0..m {
@@ -151,6 +178,47 @@ impl NystromKrr {
     ) -> anyhow::Result<NystromKrr> {
         let idx = sample_landmarks(q, m, rng);
         Self::fit_with_landmarks(kernel, x, y, lambda, &idx, backend)
+    }
+
+    /// Fit against a shared landmark Gram workspace: the final-level
+    /// blocks (K_nm, K_mm, and the landmark rows) come out of the cache
+    /// with zero reassembly — landmark columns already evaluated by an
+    /// upstream leverage estimator (Recursive-RLS / BLESS levels over
+    /// the same points) are hits, and everything is bit-identical to
+    /// [`NystromKrr::fit_with_landmarks`] on the native backend.
+    pub fn fit_with_cache(
+        y: &[f64],
+        lambda: f64,
+        idx: &[usize],
+        cache: &mut GramCache,
+    ) -> anyhow::Result<NystromKrr> {
+        anyhow::ensure!(y.len() == cache.points().rows, "y length mismatch");
+        anyhow::ensure!(!idx.is_empty(), "need at least one landmark");
+        cache.set_landmarks(idx);
+        let knm = cache.block(None);
+        Self::fit_with_blocks(
+            cache.kernel().clone(),
+            cache.landmarks().clone(),
+            idx,
+            &knm,
+            cache.kjj(),
+            y,
+            lambda,
+        )
+    }
+
+    /// [`NystromKrr::fit`]'s sampling step over a shared workspace
+    /// (draws the landmarks from `q`, then [`NystromKrr::fit_with_cache`]).
+    pub fn fit_sampled_with_cache(
+        y: &[f64],
+        lambda: f64,
+        q: &[f64],
+        m: usize,
+        rng: &mut Rng,
+        cache: &mut GramCache,
+    ) -> anyhow::Result<NystromKrr> {
+        let idx = sample_landmarks(q, m, rng);
+        Self::fit_with_cache(y, lambda, &idx, cache)
     }
 
     pub fn predict_one(&self, x: &[f64]) -> f64 {
@@ -234,6 +302,63 @@ mod tests {
         assert!(
             risk_nys < 4.0 * risk_exact + 1e-4,
             "nystrom risk {risk_nys} vs exact {risk_exact} (m={m}, dstat={dstat:.1})"
+        );
+    }
+
+    #[test]
+    fn cached_fit_is_bitwise_the_native_fit() {
+        // fit_with_cache consumes workspace blocks; the solution must be
+        // bit-identical to the assemble-from-scratch native path.
+        let mut rng = Rng::seed_from_u64(5);
+        let ds = data::dist1d(data::Dist1d::Bimodal, 120, &mut rng);
+        let k = Kernel::new(KernelSpec::Matern { nu: 1.5, a: 1.0 });
+        let idx = vec![3, 50, 3, 99, 17]; // duplicate: jitter path too
+        let a = NystromKrr::fit_with_landmarks(k.clone(), &ds.x, &ds.y, 1e-3, &idx, &NativeBackend)
+            .unwrap();
+        let mut cache = crate::linalg::GramCache::new(k, &ds.x);
+        let b = NystromKrr::fit_with_cache(&ds.y, 1e-3, &idx, &mut cache).unwrap();
+        assert_eq!(a.beta, b.beta, "β diverged");
+        assert_eq!(a.landmarks.data, b.landmarks.data);
+        let (pa, pb) = (a.predict(&ds.x), b.predict(&ds.x));
+        for i in 0..ds.n() {
+            assert_eq!(pa[i].to_bits(), pb[i].to_bits(), "prediction {i} diverged");
+        }
+    }
+
+    #[test]
+    fn fit_with_blocks_rejects_mismatched_shapes() {
+        let mut rng = Rng::seed_from_u64(6);
+        let ds = data::dist1d(data::Dist1d::Uniform, 30, &mut rng);
+        let k = Kernel::new(KernelSpec::Matern { nu: 1.5, a: 1.0 });
+        let idx = vec![1usize, 5, 9];
+        let landmarks = Mat::from_fn(3, 1, |i, j| ds.x[(idx[i], j)]);
+        let knm = k.matrix(&ds.x, &landmarks);
+        let kmm = k.matrix_sym(&landmarks);
+        // wrong y length
+        assert!(NystromKrr::fit_with_blocks(
+            k.clone(),
+            landmarks.clone(),
+            &idx,
+            &knm,
+            &kmm,
+            &ds.y[..10],
+            1e-3
+        )
+        .is_err());
+        // wrong K_mm shape
+        assert!(NystromKrr::fit_with_blocks(
+            k.clone(),
+            landmarks.clone(),
+            &idx,
+            &knm,
+            &Mat::zeros(2, 2),
+            &ds.y,
+            1e-3
+        )
+        .is_err());
+        // matching blocks succeed
+        assert!(
+            NystromKrr::fit_with_blocks(k, landmarks, &idx, &knm, &kmm, &ds.y, 1e-3).is_ok()
         );
     }
 

@@ -218,6 +218,27 @@ impl OnlineDictionary {
     /// replay is reproducible bit-for-bit at any pool width.
     pub fn offer(&mut self, x: &[f64], arrival: u64) -> DictDecision {
         let kxx = self.kernel.eval(x, x);
+        let kx = if self.is_empty() { Vec::new() } else { self.k_vec(x) };
+        self.offer_with_row(x, arrival, kx, kxx)
+    }
+
+    /// [`OnlineDictionary::offer`] with the kernel row (and k(x,x))
+    /// already computed — the fused micro-batch path
+    /// ([`crate::stream::IncrementalModel::ingest_batch`]) evaluates one
+    /// blocked b×m block per dictionary version and feeds the rows in
+    /// here. `kx` must be k(x, atoms) against the *current* atom set
+    /// (empty while the dictionary is empty); the blocked engine's
+    /// per-element independence makes a block row bitwise identical to
+    /// [`OnlineDictionary::k_vec`], so the admission trajectory is the
+    /// same either way.
+    pub fn offer_with_row(
+        &mut self,
+        x: &[f64],
+        arrival: u64,
+        mut kx: Vec<f64>,
+        kxx: f64,
+    ) -> DictDecision {
+        debug_assert_eq!(kx.len(), self.len(), "kernel row must match the atom set");
         if self.is_empty() {
             assert!(kxx > 0.0, "k(x,x) must be positive");
             self.eps = GRAM_JITTER_REL * kxx;
@@ -231,7 +252,6 @@ impl OnlineDictionary {
                 proj: Vec::new(),
             };
         }
-        let mut kx = self.k_vec(x);
         let residual = self.rel_residual(&kx, kxx);
         if residual < self.accept_threshold {
             return DictDecision::Rejected { kx };

@@ -104,9 +104,28 @@ impl IncrementalModel {
         crate::linalg::dot(&kx, &self.beta)
     }
 
+    /// Predictions for several query rows with the current coefficients:
+    /// one blocked kernel-block evaluation instead of a `k_vec` per row.
+    /// Row i is bitwise [`IncrementalModel::predict_one`]`(xs.row(i))`
+    /// (shared blocked-engine element sequence + the same `dot`).
+    pub fn predict_rows(&self, xs: &Mat) -> Vec<f64> {
+        if self.dict.is_empty() {
+            return vec![0.0; xs.rows];
+        }
+        let kq = self.kernel.matrix(xs, self.dict.atoms());
+        crate::linalg::matvec(&kq, &self.beta)
+    }
+
     /// Ingest one labeled observation: O(m²) (plus an O(m³) eviction
     /// scan when the budget forces a swap).
     pub fn ingest(&mut self, x: &[f64], y: f64) {
+        self.ingest_one_deferred(x, y);
+        self.refresh_beta();
+    }
+
+    /// The per-arrival update without the β refresh (the fused batch
+    /// path solves for β once per batch instead of per arrival).
+    fn ingest_one_deferred(&mut self, x: &[f64], y: f64) {
         let t = self.n_seen;
         let kt: Vec<f64> = match self.dict.offer(x, t) {
             DictDecision::Rejected { kx } => kx,
@@ -120,6 +139,21 @@ impl IncrementalModel {
                 full
             }
         };
+        self.accumulate(&kt, y);
+        match self.chol_a.take() {
+            Some(mut chol) => {
+                chol.rank_one_update(&kt);
+                self.chol_a = Some(chol);
+            }
+            None => self.rebuild_factor(), // first arrival: assemble + factor
+        }
+    }
+
+    /// Fold one arrival's rank-one term into the streaming sums
+    /// (S += k_t k_tᵀ, r += y_t k_t) — shared verbatim by the
+    /// per-arrival and fused batch paths so their accumulation order is
+    /// identical.
+    fn accumulate(&mut self, kt: &[f64], y: f64) {
         let m = kt.len();
         debug_assert_eq!(m, self.s.rows);
         for i in 0..m {
@@ -128,18 +162,109 @@ impl IncrementalModel {
                 self.s[(i, j)] += ki * kt[j];
             }
         }
-        for (ri, &ki) in self.rhs.iter_mut().zip(&kt) {
+        for (ri, &ki) in self.rhs.iter_mut().zip(kt) {
             *ri += y * ki;
         }
-        match self.chol_a.take() {
-            Some(mut chol) => {
-                chol.rank_one_update(&kt);
-                self.chol_a = Some(chol);
-            }
-            None => self.rebuild_factor(), // first arrival: assemble + factor
-        }
         self.n_seen += 1;
+    }
+
+    /// **Fused micro-batch ingestion**: process `b` arrivals with one
+    /// blocked b×m kernel-row evaluation per dictionary version and one
+    /// [`Cholesky::rank_k_update`] per run of non-mutating arrivals,
+    /// instead of b independent `k_vec` evaluations and rank-one sweeps.
+    ///
+    /// The final state (dictionary trajectory, S, r, the factor, β) is
+    /// **bit-identical** to calling [`IncrementalModel::ingest`] per
+    /// arrival: block rows equal `k_vec` rows (blocked-engine
+    /// per-element independence), admissions replay the exact
+    /// per-arrival sequence, and the fused rank-k update performs the
+    /// same scalar operations as the deferred rank-one sweeps (see
+    /// [`Cholesky::rank_k_update`]). Only intermediate β values are
+    /// skipped — β is solved once at the end.
+    pub fn ingest_batch(&mut self, xs: &Mat, ys: &[f64]) {
+        assert_eq!(xs.rows, ys.len(), "batch shape mismatch");
+        // Look-ahead bound: rows past an admission were evaluated against
+        // the pre-admission atom set and must be re-evaluated, so each
+        // blocked evaluation covers at most this many rows — bounding the
+        // discarded work per admission at LOOKAHEAD·m·d while keeping
+        // steady-state (rejection-run) fusion intact. Purely a cost knob:
+        // block rows are bitwise k_vec rows at any height.
+        const LOOKAHEAD: usize = 64;
+        let b = xs.rows;
+        let mut i = 0;
+        // pending rank-one rows awaiting one fused factor update
+        let mut pending: Vec<f64> = Vec::new();
+        let mut pending_rows = 0usize;
+        while i < b {
+            if self.dict.is_empty() {
+                // seed arrival: identical to the one-by-one path
+                self.ingest_one_deferred(xs.row(i), ys[i]);
+                i += 1;
+                continue;
+            }
+            // one blocked evaluation of the next look-ahead window
+            // against the current atom set
+            let take = (b - i).min(LOOKAHEAD);
+            let rest = Mat::from_fn(take, xs.cols, |r, c| xs[(i + r, c)]);
+            let block = self.kernel.matrix(&rest, self.dict.atoms());
+            let mut advanced = 0usize;
+            for r in 0..block.rows {
+                let x = rest.row(r);
+                let kxx = self.kernel.eval(x, x);
+                let t = self.n_seen;
+                match self.dict.offer_with_row(x, t, block.row(r).to_vec(), kxx) {
+                    DictDecision::Rejected { kx } => {
+                        self.accumulate(&kx, ys[i + r]);
+                        if self.chol_a.is_some() {
+                            pending.extend_from_slice(&kx);
+                            pending_rows += 1;
+                        } else {
+                            self.rebuild_factor();
+                        }
+                        advanced += 1;
+                    }
+                    DictDecision::Admitted { evicted, kx, kxx, proj } => {
+                        // the atom set mutates: flush the deferred
+                        // rank-ones first (preserving the one-by-one
+                        // operation order), replay the admission exactly,
+                        // then re-evaluate the block for the new atoms
+                        self.flush_pending(&mut pending, &mut pending_rows);
+                        if let Some(j) = evicted {
+                            self.delete_coord(j);
+                        }
+                        self.extend_coord(&kx, kxx, &proj);
+                        let mut full = kx;
+                        full.push(kxx);
+                        self.accumulate(&full, ys[i + r]);
+                        match self.chol_a.take() {
+                            Some(mut chol) => {
+                                chol.rank_one_update(&full);
+                                self.chol_a = Some(chol);
+                            }
+                            None => self.rebuild_factor(),
+                        }
+                        advanced += 1;
+                        break;
+                    }
+                }
+            }
+            i += advanced;
+        }
+        self.flush_pending(&mut pending, &mut pending_rows);
         self.refresh_beta();
+    }
+
+    /// Apply the deferred rank-one terms as one fused rank-k sweep.
+    fn flush_pending(&mut self, pending: &mut Vec<f64>, pending_rows: &mut usize) {
+        if *pending_rows == 0 {
+            return;
+        }
+        let m = pending.len() / *pending_rows;
+        let vs = Mat { rows: *pending_rows, cols: m, data: std::mem::take(pending) };
+        *pending_rows = 0;
+        let chol = self.chol_a.as_mut().expect("pending implies an active factor");
+        debug_assert_eq!(chol.n(), m);
+        chol.rank_k_update(&vs);
     }
 
     /// Drop coordinate j (evicted atom) from S, r, and the factor.
@@ -308,6 +433,59 @@ mod tests {
         // threshold; production thresholds are ~30× finer and tighter)
         let scale = pb.iter().fold(0.0_f64, |a, v| a.max(v.abs())).max(1e-12);
         assert!(worst / scale < 0.1, "worst rel deviation {}", worst / scale);
+    }
+
+    #[test]
+    fn fused_batch_ingest_is_bitwise_one_by_one() {
+        // heavy dictionary churn early (admissions + evictions at budget)
+        // and long rejected runs late: the fused path must reproduce the
+        // one-by-one trajectory bit for bit in every regime.
+        let mut rng = Rng::seed_from_u64(21);
+        let ds = dist1d(Dist1d::Bimodal, 260, &mut rng);
+        for chunk in [1usize, 3, 16, 300] {
+            let mut one = IncrementalModel::new(kernel(), 0.4, 9, 0.002);
+            for i in 0..ds.n() {
+                one.ingest(ds.x.row(i), ds.y[i]);
+            }
+            let mut fused = IncrementalModel::new(kernel(), 0.4, 9, 0.002);
+            let mut i = 0;
+            while i < ds.n() {
+                let hi = (i + chunk).min(ds.n());
+                let xs = Mat::from_fn(hi - i, ds.d(), |r, c| ds.x[(i + r, c)]);
+                fused.ingest_batch(&xs, &ds.y[i..hi]);
+                i = hi;
+            }
+            assert_eq!(one.n_seen(), fused.n_seen());
+            assert_eq!(
+                one.dict().arrivals(),
+                fused.dict().arrivals(),
+                "chunk {chunk}: dictionary trajectory diverged"
+            );
+            assert_eq!(one.beta(), fused.beta(), "chunk {chunk}: β diverged (bitwise)");
+            for &x in &[0.04, 0.51, 1.3] {
+                assert_eq!(
+                    one.predict_one(&[x]).to_bits(),
+                    fused.predict_one(&[x]).to_bits(),
+                    "chunk {chunk}: prediction at {x} diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn predict_rows_is_bitwise_predict_one_per_row() {
+        let mut rng = Rng::seed_from_u64(22);
+        let ds = dist1d(Dist1d::Uniform, 90, &mut rng);
+        let mut m = IncrementalModel::new(kernel(), 0.5, 10, 0.01);
+        let empty = m.predict_rows(&ds.x);
+        assert!(empty.iter().all(|&v| v == 0.0));
+        for i in 0..ds.n() {
+            m.ingest(ds.x.row(i), ds.y[i]);
+        }
+        let batch = m.predict_rows(&ds.x);
+        for i in 0..ds.n() {
+            assert_eq!(batch[i].to_bits(), m.predict_one(ds.x.row(i)).to_bits(), "row {i}");
+        }
     }
 
     #[test]

@@ -35,6 +35,7 @@ fn sa_relative_error_decreases_with_n() {
             lambda,
             p_true: ds.p_true.as_deref(),
             inner_m: 16,
+            cache: None,
         };
         let sa = est.estimate(&ctx, &mut rng);
         let mut rels: Vec<f64> = (0..n)
