@@ -1,0 +1,12 @@
+//! `cargo bench --bench serve -- [--full] [--reps k] [--seed s]`
+//! HTTP serving tier: sustained QPS + p50/p95/p99 latency vs batcher
+//! max_batch and replica count; writes machine-readable
+//! `BENCH_serve.json`.
+//! See `leverkrr::bench_harness::experiments::serve` for the setting.
+fn main() {
+    let opts = leverkrr::bench_harness::ExpOptions::parse_cli(
+        "serve",
+        "HTTP serving tier throughput/latency experiment driver",
+    );
+    leverkrr::bench_harness::experiments::serve::run(&opts);
+}

@@ -9,6 +9,7 @@
 //! | [`perf::run`] | §Perf hot-path microbenches | EXPERIMENTS.md §Perf |
 //! | [`stream::run`] | streaming update latency vs periodic refit | ROADMAP §streaming |
 //! | [`persist::run`] | artifact save/load/restore latency vs n, m | ROADMAP §persistence |
+//! | [`serve::run`] | HTTP-tier QPS + tail latency vs batch size, replicas | ROADMAP §serving |
 
 pub mod ablation;
 pub mod fig1;
@@ -16,6 +17,7 @@ pub mod fig2;
 pub mod fig3;
 pub mod perf;
 pub mod persist;
+pub mod serve;
 pub mod stream;
 pub mod table1;
 

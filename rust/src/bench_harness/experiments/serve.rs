@@ -1,0 +1,151 @@
+//! bench-serve — sustained throughput and tail latency through the HTTP
+//! serving tier, swept over batcher `max_batch` and replica count.
+//!
+//! Each grid cell starts `replicas` independent [`Server`]+[`HttpServer`]
+//! pairs over one shared fitted model (the in-process stand-in for N
+//! replica processes on one box), partitions keep-alive clients across
+//! them round-robin, and drives closed-loop load for a fixed window.
+//! QPS is completed-requests / wall; latencies are measured client-side
+//! (connect-to-response, the number an SLO is written against).
+//!
+//! Results land in `BENCH_serve.json` — one row per cell with
+//! qps / p50_ms / p95_ms / p99_ms — so serve-path regressions are
+//! machine-trackable across PRs like `BENCH_perf.json` is for the
+//! compute core.
+
+use crate::bench_harness::ExpOptions;
+use crate::coordinator::{
+    fit_with_backend, FitConfig, FittedModel, HttpClient, HttpConfig, HttpServer, Server,
+    ServerConfig,
+};
+use crate::data;
+use crate::metrics::quantile_sorted;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+pub fn run(opts: &ExpOptions) {
+    let _g = opts.pool_guard();
+    println!("bench-serve: HTTP tier sustained load (seed {})", opts.seed);
+    let mut rng = Rng::seed_from_u64(opts.seed);
+    let n = if opts.full { 4000 } else { 1200 };
+    let ds = data::dist1d(data::Dist1d::Uniform, n, &mut rng);
+    let cfg = FitConfig::default_for(&ds);
+    let model = Arc::new(fit_with_backend(&ds, &cfg, opts.backend()).expect("fit failed"));
+    let d = ds.d();
+
+    let batches: Vec<usize> = if opts.full { vec![8, 32, 128] } else { vec![8, 64] };
+    let replicas: Vec<usize> = if opts.full { vec![1, 2, 4] } else { vec![1, 2] };
+    let duration = Duration::from_millis(if opts.full { 2500 } else { 800 });
+
+    let mut rows = Vec::new();
+    for &mb in &batches {
+        for &nrep in &replicas {
+            let (qps, lats) = run_cell(&model, mb, nrep, d, duration);
+            let total = lats.len();
+            let p = percentiles(&lats);
+            println!(
+                "max_batch {mb:>4}  replicas {nrep}  {qps:>9.0} req/s   p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms  ({total} reqs)",
+                p[0] * 1e3,
+                p[1] * 1e3,
+                p[2] * 1e3,
+            );
+            rows.push(Json::obj(vec![
+                ("name", Json::Str(format!("serve.http.b{mb}.r{nrep}"))),
+                ("n", Json::Num(n as f64)),
+                ("m", Json::Num(cfg.m_sub as f64)),
+                ("d", Json::Num(d as f64)),
+                ("threads", Json::Num(crate::util::pool::current_threads() as f64)),
+                ("max_batch", Json::Num(mb as f64)),
+                ("replicas", Json::Num(nrep as f64)),
+                ("requests", Json::Num(total as f64)),
+                ("qps", Json::Num(qps)),
+                ("p50_ms", Json::Num(p[0] * 1e3)),
+                ("p95_ms", Json::Num(p[1] * 1e3)),
+                ("p99_ms", Json::Num(p[2] * 1e3)),
+            ]));
+        }
+    }
+
+    let doc = Json::obj(vec![
+        ("experiment", Json::Str("serve".into())),
+        ("full", Json::Bool(opts.full)),
+        ("reps", Json::Num(opts.reps as f64)),
+        ("seed", Json::Num(opts.seed as f64)),
+        ("threads", Json::Num(crate::util::pool::current_threads() as f64)),
+        ("results", Json::Arr(rows)),
+    ]);
+    match std::fs::write("BENCH_serve.json", doc.to_string_pretty()) {
+        Ok(()) => println!("\nwrote BENCH_serve.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_serve.json: {e}"),
+    }
+}
+
+/// One grid cell: returns (qps, sorted client-side latencies in secs).
+fn run_cell(
+    model: &Arc<FittedModel>,
+    max_batch: usize,
+    nrep: usize,
+    d: usize,
+    duration: Duration,
+) -> (f64, Vec<f64>) {
+    let mut pairs = Vec::with_capacity(nrep);
+    for _ in 0..nrep {
+        let scfg = ServerConfig {
+            max_batch,
+            max_wait: Duration::from_millis(1),
+            ..ServerConfig::default()
+        };
+        let server = Arc::new(Server::start(model.clone(), scfg));
+        let http = HttpServer::start(server.clone(), HttpConfig::default()).expect("bind failed");
+        pairs.push((server, http));
+    }
+    let clients = (nrep * 4).min(16);
+    let t0 = Instant::now();
+    let chunks: Vec<Vec<f64>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let addr = pairs[c % nrep].1.addr().to_string();
+                s.spawn(move || {
+                    let mut lats = Vec::new();
+                    let Ok(mut client) = HttpClient::connect(&addr) else { return lats };
+                    let mut rng = Rng::seed_from_u64(c as u64 + 1);
+                    let deadline = Instant::now() + duration;
+                    while Instant::now() < deadline {
+                        let x: Vec<f64> = (0..d).map(|_| rng.f64()).collect();
+                        let body = Json::obj(vec![("x", Json::arr_f64(&x))]).to_string();
+                        let t = Instant::now();
+                        match client.request("POST", "/predict", &body) {
+                            Ok((200, _)) => lats.push(t.elapsed().as_secs_f64()),
+                            _ => break,
+                        }
+                    }
+                    lats
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap_or_default()).collect()
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    for (server, http) in pairs {
+        http.shutdown();
+        // stop() alone suffices: batcher and workers exit once the
+        // intake sender drops, no join needed between cells
+        server.stop();
+    }
+    let mut lats: Vec<f64> = chunks.into_iter().flatten().collect();
+    lats.sort_by(f64::total_cmp);
+    (lats.len() as f64 / wall.max(1e-9), lats)
+}
+
+fn percentiles(sorted: &[f64]) -> [f64; 3] {
+    if sorted.is_empty() {
+        return [f64::NAN; 3];
+    }
+    [
+        quantile_sorted(sorted, 0.50),
+        quantile_sorted(sorted, 0.95),
+        quantile_sorted(sorted, 0.99),
+    ]
+}

@@ -92,7 +92,7 @@ pub fn bench_reps(warmup: usize, reps: usize, mut f: impl FnMut()) -> Vec<f64> {
         f();
         times.push(t0.elapsed().as_secs_f64());
     }
-    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times.sort_by(f64::total_cmp);
     times
 }
 

@@ -16,11 +16,17 @@
 //! dynamic batcher (max-batch / max-wait), turning point queries into
 //! batched K(X_q, X_m)·β evaluations — the same structure a model server
 //! uses for GPU batching, here amortizing kernel-block dispatch.
+//! [`net::HttpServer`] puts a dependency-free HTTP/1.1 + JSON front on
+//! that batcher (bounded admission, 429 backpressure, graceful drain),
+//! and [`net::spawn_replica_poller`] hot-swaps newly exported artifact
+//! versions into a running server — see [`net`] for the topology.
 
 pub mod config;
+pub mod net;
 pub mod server;
 
 pub use config::{PersistSection, RunConfig};
+pub use net::{spawn_replica_poller, HttpClient, HttpConfig, HttpServer, ReplicaPoller};
 pub use server::{Prediction, Server, ServerClosed, ServerConfig};
 
 use crate::data::Dataset;

@@ -1,0 +1,824 @@
+//! Dependency-free HTTP/1.1 serving tier over [`Server`], plus the
+//! replica half of the "fit once, serve everywhere" topology.
+//!
+//! # Design
+//!
+//! [`HttpServer`] puts a hand-rolled HTTP/1.1 listener in front of an
+//! in-process [`Server`]. The pieces:
+//!
+//! - **Bounded admission.** The accept thread pushes connections into a
+//!   `sync_channel(queue_cap)`. When the queue is full the connection is
+//!   answered inline with `429 Too Many Requests` + `Retry-After` and
+//!   closed — admitted work is bounded by `handlers + queue_cap`
+//!   connections, never an unbounded backlog.
+//! - **Cross-request micro-batching.** Each handler submits its request
+//!   through [`Server::predict_async`]; the inner batcher coalesces
+//!   concurrent HTTP requests into one blocked Gram evaluation exactly
+//!   like `ingest_batch` amortizes streaming updates. `/predict_batch`
+//!   submits every row before receiving any, so a single client also
+//!   benefits.
+//! - **Graceful drain.** [`HttpServer::stop`] flips a flag and wakes the
+//!   accept loop with a dummy connection. Accepted connections are still
+//!   served: handlers finish the request in flight (a started request
+//!   line is always read to completion), then close idle keep-alive
+//!   connections at the next read-timeout tick, then drain the
+//!   connection queue and exit when the accept thread drops its sender.
+//!   Once the inner [`Server`] is stopped, predictions answer with a
+//!   typed `503` JSON error instead of hanging or panicking.
+//! - **Lazy request parsing.** `/predict` pulls `"x"` out of the body
+//!   with [`crate::util::json::scan_f64s`] — one structural pass, no
+//!   document tree on the hot path.
+//!
+//! # Endpoints
+//!
+//! | Endpoint              | Body                 | Response                          |
+//! |-----------------------|----------------------|-----------------------------------|
+//! | `POST /predict`       | `{"x": [..]}`        | `{"y": .., "model_version": ..}`  |
+//! | `POST /predict_batch` | `{"xs": [[..], ..]}` | `{"ys": [..], "model_version": ..}` |
+//! | `GET /healthz`        | —                    | `{"status": "ok", "model_version": ..}` |
+//! | `GET /metrics`        | —                    | QPS, p50/p95/p99 ms, full registry snapshot |
+//!
+//! Errors are JSON too: `{"error": "..."}` with the appropriate status
+//! (400 malformed, 404 unknown route, 405 wrong method, 413 oversized
+//! body, 429 over admission, 431 oversized head, 503 stopped).
+//!
+//! # Replica topology
+//!
+//! ```text
+//!   writer process                shared volume              N replicas
+//!   fit/stream → Store::save ──► artifacts/<name>/vK ──► poller: Store::latest
+//!                                                          │ new version?
+//!                                                          ▼
+//!                                              load_model → ModelHandle::publish
+//!                                              (in-flight requests keep the old Arc)
+//! ```
+//!
+//! [`spawn_replica_poller`] is that right-hand box: it watches a
+//! [`Store`] directory and hot-swaps newly exported artifact versions
+//! into the serving [`ModelHandle`]. Corrupt or half-written artifacts
+//! are counted (`replica.load_errors`) and skipped — the replica keeps
+//! serving the old model and retries on the next poll.
+
+use super::server::Server;
+use crate::metrics::{Registry, Throughput};
+use crate::persist::Store;
+use crate::stream::ModelHandle;
+use crate::util::json::{self, Json};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Request line + headers may not exceed this many bytes (431 beyond).
+const MAX_HEAD_BYTES: usize = 8 * 1024;
+/// Read-timeout ticks a *started* request may stall before the
+/// connection is dropped (ticks are `read_timeout` long).
+const MAX_STALL_TICKS: u32 = 40;
+/// Read-timeout ticks an idle keep-alive connection may sit before the
+/// server closes it.
+const MAX_IDLE_TICKS: u32 = 2400;
+
+/// Listener configuration. `addr` of `"127.0.0.1:0"` binds an ephemeral
+/// port (read it back from [`HttpServer::addr`]).
+#[derive(Clone, Debug)]
+pub struct HttpConfig {
+    pub addr: String,
+    /// Connections that may wait for a handler; beyond this, 429.
+    pub queue_cap: usize,
+    /// Handler threads (each owns one connection at a time).
+    pub handlers: usize,
+    /// Value of the `Retry-After` header on 429 responses.
+    pub retry_after_secs: u64,
+    /// Bodies beyond this get 413 and the connection is closed.
+    pub max_body_bytes: usize,
+    /// Socket read timeout: the tick at which handlers notice stop.
+    pub read_timeout: Duration,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig {
+            addr: "127.0.0.1:0".to_string(),
+            queue_cap: 256,
+            // serving concurrency, like ServerConfig::workers deliberately
+            // independent of LEVERKRR_THREADS
+            handlers: crate::util::pool::machine_threads().min(8),
+            retry_after_secs: 1,
+            max_body_bytes: 1 << 20,
+            read_timeout: Duration::from_millis(250),
+        }
+    }
+}
+
+/// A running HTTP listener. Dropping it stops the listener (without
+/// joining); call [`HttpServer::shutdown`] for a joined, drained stop.
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    qps: Arc<Throughput>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind and start serving `server` over HTTP. All HTTP metrics
+    /// (`http.requests`, `http.rejected`, `http.bad_request`,
+    /// `http.connections`, timer `http.request.secs`) land in
+    /// `server.metrics` next to the batching metrics.
+    pub fn start(server: Arc<Server>, cfg: HttpConfig) -> std::io::Result<HttpServer> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let qps = Arc::new(Throughput::new());
+        let (conn_tx, conn_rx) = sync_channel::<TcpStream>(cfg.queue_cap.max(1));
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let mut threads = Vec::new();
+        for _ in 0..cfg.handlers.max(1) {
+            let server = server.clone();
+            let conn_rx = conn_rx.clone();
+            let cfg = cfg.clone();
+            let qps = qps.clone();
+            let stop = stop.clone();
+            threads.push(std::thread::spawn(move || loop {
+                // lock released before handling so other handlers can pull
+                let conn = { conn_rx.lock().unwrap_or_else(|p| p.into_inner()).recv() };
+                let Ok(conn) = conn else { break }; // accept loop gone + queue drained
+                handle_connection(conn, &server, &cfg, &qps, &stop);
+            }));
+        }
+        {
+            let server = server.clone();
+            let stop = stop.clone();
+            let retry = cfg.retry_after_secs;
+            threads.push(std::thread::spawn(move || {
+                for incoming in listener.incoming() {
+                    if stop.load(Ordering::SeqCst) {
+                        break; // woken by the dummy connection from stop()
+                    }
+                    let Ok(mut conn) = incoming else { continue };
+                    match conn_tx.try_send(conn) {
+                        Ok(()) => {}
+                        Err(TrySendError::Full(c)) => {
+                            // explicit backpressure instead of unbounded queueing
+                            conn = c;
+                            server.metrics.incr("http.rejected", 1);
+                            let _ = write_response(
+                                &mut conn,
+                                429,
+                                &err_body("admission queue is full"),
+                                true,
+                                &[("Retry-After", retry.to_string())],
+                            );
+                        }
+                        Err(TrySendError::Disconnected(_)) => break,
+                    }
+                }
+                // conn_tx drops here: handlers drain the queue, then exit
+            }));
+        }
+        Ok(HttpServer { addr, stop, qps, threads })
+    }
+
+    /// The bound address (useful with an ephemeral `:0` bind).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Requests served per second since start.
+    pub fn qps(&self) -> f64 {
+        self.qps.per_sec()
+    }
+
+    /// Begin a graceful drain: no new connections are admitted, accepted
+    /// requests are answered. Idempotent; does not join.
+    pub fn stop(&self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // unblock the accept loop
+        let _ = TcpStream::connect(self.addr);
+    }
+
+    /// Stop and join every listener/handler thread.
+    pub fn shutdown(mut self) {
+        self.stop();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+// ---- connection handling -------------------------------------------------
+
+struct HttpRequest {
+    method: String,
+    path: String,
+    body: String,
+    close: bool,
+}
+
+enum Incoming {
+    Req(HttpRequest),
+    /// Clean close, IO error, or stop observed while idle.
+    Close,
+    /// Protocol error: answer with this status, then close.
+    Reject(u16, String),
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    server: &Server,
+    cfg: &HttpConfig,
+    qps: &Throughput,
+    stop: &AtomicBool,
+) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(cfg.read_timeout));
+    let Ok(mut writer) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(stream);
+    server.metrics.incr("http.connections", 1);
+    loop {
+        let req = match read_request(&mut reader, cfg, stop) {
+            Incoming::Req(r) => r,
+            Incoming::Close => break,
+            Incoming::Reject(status, msg) => {
+                server.metrics.incr("http.bad_request", 1);
+                let _ = write_response(&mut writer, status, &err_body(&msg), true, &[]);
+                break;
+            }
+        };
+        let t0 = Instant::now();
+        let (status, body) = dispatch(&req, server, qps);
+        server.metrics.incr("http.requests", 1);
+        if status == 400 {
+            server.metrics.incr("http.bad_request", 1);
+        }
+        qps.add(1);
+        // during a drain, answer the in-flight request but don't keep
+        // the connection alive past it
+        let close = req.close || stop.load(Ordering::SeqCst);
+        let wrote = write_response(&mut writer, status, &body, close, &[]);
+        server.metrics.record("http.request.secs", t0.elapsed().as_secs_f64());
+        if wrote.is_err() || close {
+            break;
+        }
+    }
+}
+
+fn dispatch(req: &HttpRequest, server: &Server, qps: &Throughput) -> (u16, String) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/predict") => {
+            // lazy scan: no tree allocation on the hot path
+            let Some(x) = json::scan_f64s(&req.body, "x") else {
+                return (400, err_body(r#"expected body {"x": [numbers]}"#));
+            };
+            if x.is_empty() {
+                return (400, err_body("x must be non-empty"));
+            }
+            match server.try_predict(&x) {
+                Ok(p) => (
+                    200,
+                    Json::obj(vec![
+                        ("y", Json::Num(p.value)),
+                        ("model_version", Json::Num(p.model_version as f64)),
+                    ])
+                    .to_string(),
+                ),
+                Err(_) => (503, err_body("prediction server is stopped")),
+            }
+        }
+        ("POST", "/predict_batch") => predict_batch(&req.body, server),
+        ("GET", "/healthz") => (
+            200,
+            Json::obj(vec![
+                ("status", Json::Str("ok".to_string())),
+                ("model_version", Json::Num(server.model_handle().version() as f64)),
+            ])
+            .to_string(),
+        ),
+        ("GET", "/metrics") => {
+            let q = server.metrics.timer_quantiles("http.request.secs", &[0.5, 0.95, 0.99]);
+            (
+                200,
+                Json::obj(vec![
+                    ("qps", Json::Num(qps.per_sec())),
+                    ("requests", Json::Num(qps.total() as f64)),
+                    ("p50_ms", Json::Num(q[0] * 1e3)),
+                    ("p95_ms", Json::Num(q[1] * 1e3)),
+                    ("p99_ms", Json::Num(q[2] * 1e3)),
+                    ("snapshot", server.metrics.snapshot()),
+                ])
+                .to_string(),
+            )
+        }
+        (_, "/predict" | "/predict_batch" | "/healthz" | "/metrics") => {
+            (405, err_body("method not allowed"))
+        }
+        _ => (404, err_body("no such endpoint")),
+    }
+}
+
+fn predict_batch(body: &str, server: &Server) -> (u16, String) {
+    let Some(raw) = json::scan_raw(body, "xs") else {
+        return (400, err_body(r#"expected body {"xs": [[numbers], ..]}"#));
+    };
+    let Ok(rows) = Json::parse(raw) else {
+        return (400, err_body("xs is not valid JSON"));
+    };
+    let Some(rows) = rows.as_arr() else {
+        return (400, err_body("xs must be an array of arrays"));
+    };
+    let mut xs: Vec<Vec<f64>> = Vec::with_capacity(rows.len());
+    for row in rows {
+        let Some(elems) = row.as_arr() else {
+            return (400, err_body("xs must be an array of arrays"));
+        };
+        let mut x = Vec::with_capacity(elems.len());
+        for e in elems {
+            let Some(v) = e.as_f64() else {
+                return (400, err_body("xs entries must be numbers"));
+            };
+            x.push(v);
+        }
+        if x.is_empty() {
+            return (400, err_body("xs rows must be non-empty"));
+        }
+        xs.push(x);
+    }
+    if xs.is_empty() {
+        return (400, err_body("xs must be non-empty"));
+    }
+    // submit everything before receiving anything: the inner batcher
+    // coalesces the whole request into as few Gram evaluations as
+    // max_batch allows
+    let mut rxs = Vec::with_capacity(xs.len());
+    for x in &xs {
+        match server.predict_async(x) {
+            Ok(rx) => rxs.push(rx),
+            Err(_) => return (503, err_body("prediction server is stopped")),
+        }
+    }
+    let mut ys = Vec::with_capacity(rxs.len());
+    let mut version = 0u64;
+    for rx in rxs {
+        match rx.recv() {
+            Ok(p) => {
+                ys.push(p.value);
+                version = version.max(p.model_version);
+            }
+            Err(_) => return (503, err_body("prediction server is stopped")),
+        }
+    }
+    (
+        200,
+        Json::obj(vec![
+            ("ys", Json::arr_f64(&ys)),
+            ("model_version", Json::Num(version as f64)),
+        ])
+        .to_string(),
+    )
+}
+
+// ---- request parsing -----------------------------------------------------
+
+enum LineRead {
+    Line(String),
+    Closed,
+    TooLong,
+}
+
+/// Read one CRLF-terminated line, polling through read timeouts.
+///
+/// With `idle_stop` set this is a drain point: while *no* byte of the
+/// line has arrived, a set stop flag closes the connection. Once bytes
+/// have arrived the line is always finished (bounded by
+/// [`MAX_STALL_TICKS`]) so an in-flight request is never truncated by a
+/// drain.
+fn read_crlf_line(
+    reader: &mut BufReader<TcpStream>,
+    max_len: usize,
+    idle_stop: Option<&AtomicBool>,
+) -> LineRead {
+    let mut line = String::new();
+    let mut ticks: u32 = 0;
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(0) => return LineRead::Closed,
+            Ok(_) => {
+                if !line.ends_with('\n') {
+                    return LineRead::Closed; // EOF mid-line
+                }
+                if line.len() > max_len {
+                    return LineRead::TooLong;
+                }
+                while line.ends_with('\n') || line.ends_with('\r') {
+                    line.pop();
+                }
+                return LineRead::Line(line);
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock
+                ) =>
+            {
+                // partial bytes (if any) are already appended to `line`
+                // and kept across retries
+                if line.is_empty() {
+                    if let Some(stop) = idle_stop {
+                        if stop.load(Ordering::SeqCst) {
+                            return LineRead::Closed;
+                        }
+                    }
+                }
+                if line.len() > max_len {
+                    return LineRead::TooLong;
+                }
+                ticks += 1;
+                let cap = if line.is_empty() && idle_stop.is_some() {
+                    MAX_IDLE_TICKS
+                } else {
+                    MAX_STALL_TICKS
+                };
+                if ticks > cap {
+                    return LineRead::Closed;
+                }
+            }
+            Err(_) => return LineRead::Closed,
+        }
+    }
+}
+
+/// Read `n` body bytes, polling through read timeouts.
+fn read_exact_poll(reader: &mut BufReader<TcpStream>, n: usize) -> Option<Vec<u8>> {
+    let mut buf = vec![0u8; n];
+    let mut filled = 0usize;
+    let mut ticks: u32 = 0;
+    while filled < n {
+        match reader.read(&mut buf[filled..]) {
+            Ok(0) => return None,
+            Ok(k) => {
+                filled += k;
+                ticks = 0;
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock
+                ) =>
+            {
+                ticks += 1;
+                if ticks > MAX_STALL_TICKS {
+                    return None;
+                }
+            }
+            Err(_) => return None,
+        }
+    }
+    Some(buf)
+}
+
+fn read_request(
+    reader: &mut BufReader<TcpStream>,
+    cfg: &HttpConfig,
+    stop: &AtomicBool,
+) -> Incoming {
+    let req_line = match read_crlf_line(reader, MAX_HEAD_BYTES, Some(stop)) {
+        LineRead::Line(l) => l,
+        LineRead::Closed => return Incoming::Close,
+        LineRead::TooLong => return Incoming::Reject(431, "request line too long".to_string()),
+    };
+    let mut parts = req_line.split_whitespace();
+    let (method, path) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v)) if v.starts_with("HTTP/1.") => {
+            (m.to_string(), p.to_string())
+        }
+        _ => return Incoming::Reject(400, "malformed request line".to_string()),
+    };
+    let mut content_len = 0usize;
+    let mut close = false;
+    let mut head_bytes = req_line.len();
+    loop {
+        let line = match read_crlf_line(reader, MAX_HEAD_BYTES, None) {
+            LineRead::Line(l) => l,
+            LineRead::Closed => return Incoming::Close,
+            LineRead::TooLong => return Incoming::Reject(431, "header too long".to_string()),
+        };
+        if line.is_empty() {
+            break;
+        }
+        head_bytes += line.len();
+        if head_bytes > MAX_HEAD_BYTES {
+            return Incoming::Reject(431, "headers too long".to_string());
+        }
+        if let Some((name, value)) = line.split_once(':') {
+            let value = value.trim();
+            match name.trim().to_ascii_lowercase().as_str() {
+                "content-length" => match value.parse::<usize>() {
+                    Ok(n) => content_len = n,
+                    Err(_) => return Incoming::Reject(400, "bad content-length".to_string()),
+                },
+                "connection" => close = value.eq_ignore_ascii_case("close"),
+                _ => {}
+            }
+        }
+    }
+    if content_len > cfg.max_body_bytes {
+        return Incoming::Reject(
+            413,
+            format!("body exceeds {} bytes", cfg.max_body_bytes),
+        );
+    }
+    let body = if content_len > 0 {
+        let Some(bytes) = read_exact_poll(reader, content_len) else {
+            return Incoming::Close;
+        };
+        match String::from_utf8(bytes) {
+            Ok(s) => s,
+            Err(_) => return Incoming::Reject(400, "body is not UTF-8".to_string()),
+        }
+    } else {
+        String::new()
+    };
+    Incoming::Req(HttpRequest { method, path, body, close })
+}
+
+// ---- response writing ----------------------------------------------------
+
+fn err_body(msg: &str) -> String {
+    Json::obj(vec![("error", Json::Str(msg.to_string()))]).to_string()
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    body: &str,
+    close: bool,
+    extra: &[(&str, String)],
+) -> std::io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n",
+        status,
+        reason(status),
+        body.len(),
+        if close { "close" } else { "keep-alive" }
+    );
+    for (k, v) in extra {
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+// ---- replica poller ------------------------------------------------------
+
+/// Handle to a running replica poll loop; stopping joins the thread.
+/// Dropping also stops it.
+pub struct ReplicaPoller {
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl ReplicaPoller {
+    /// Stop polling and join.
+    pub fn stop(mut self) {
+        self.halt();
+    }
+
+    fn halt(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for ReplicaPoller {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+/// Watch `store_dir` for new versions of artifact `name` and hot-swap
+/// them into `handle` — the replica side of one-writer/N-reader model
+/// distribution over a shared volume.
+///
+/// Starts from the version recorded in the `serve.artifact_version`
+/// gauge (set by [`Server::start_from_artifact`]; 0 when absent, so a
+/// freshly fit server adopts the first exported artifact it sees).
+/// Swaps never interrupt in-flight requests: readers hold their model
+/// `Arc` for the whole batch (see [`ModelHandle`]).
+pub fn spawn_replica_poller(
+    store_dir: PathBuf,
+    name: String,
+    handle: ModelHandle,
+    metrics: Arc<Registry>,
+    interval: Duration,
+) -> ReplicaPoller {
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let thread = std::thread::spawn(move || {
+        let mut current = metrics.gauge("serve.artifact_version") as u64;
+        while !stop2.load(Ordering::SeqCst) {
+            poll_once(&store_dir, &name, &handle, &metrics, &mut current);
+            // sleep in short slices so stop() is prompt even with a
+            // long poll interval
+            let mut left = interval;
+            while !stop2.load(Ordering::SeqCst) && left > Duration::ZERO {
+                let step = left.min(Duration::from_millis(25));
+                std::thread::sleep(step);
+                left = left.saturating_sub(step);
+            }
+        }
+    });
+    ReplicaPoller { stop, thread: Some(thread) }
+}
+
+fn poll_once(
+    dir: &Path,
+    name: &str,
+    handle: &ModelHandle,
+    metrics: &Registry,
+    current: &mut u64,
+) {
+    let Ok(store) = Store::open(dir) else {
+        metrics.incr("replica.poll_errors", 1);
+        return;
+    };
+    let Some(latest) = store.latest(name) else { return };
+    if latest <= *current {
+        return;
+    }
+    match store.load_model(name, Some(latest)) {
+        Ok((v, model)) => {
+            handle.publish(Arc::new(model));
+            *current = v;
+            metrics.gauge_set("serve.artifact_version", v as f64);
+            metrics.incr("replica.swaps", 1);
+        }
+        Err(_) => {
+            // half-written or corrupt artifact: keep serving the old
+            // model, count it, retry next poll
+            metrics.incr("replica.load_errors", 1);
+        }
+    }
+}
+
+// ---- minimal client (tests, bench drivers, CLI smoke) --------------------
+
+/// Persistent keep-alive HTTP client for load generation and tests.
+pub struct HttpClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    host: String,
+}
+
+impl HttpClient {
+    pub fn connect(addr: &str) -> std::io::Result<HttpClient> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        let writer = stream.try_clone()?;
+        Ok(HttpClient { reader: BufReader::new(stream), writer, host: addr.to_string() })
+    }
+
+    /// Send one request and block for the response `(status, body)`.
+    /// The connection is reused across calls (keep-alive).
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &str,
+    ) -> std::io::Result<(u16, String)> {
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n",
+            self.host,
+            body.len()
+        );
+        self.writer.write_all(head.as_bytes())?;
+        self.writer.write_all(body.as_bytes())?;
+        self.writer.flush()?;
+        read_client_response(&mut self.reader)
+    }
+}
+
+/// One-shot request on a fresh connection.
+pub fn http_request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> std::io::Result<(u16, String)> {
+    let mut client = HttpClient::connect(addr)?;
+    client.request(method, path, body)
+}
+
+fn read_client_response(reader: &mut BufReader<TcpStream>) -> std::io::Result<(u16, String)> {
+    use std::io::{Error, ErrorKind};
+    let mut status_line = String::new();
+    if reader.read_line(&mut status_line)? == 0 {
+        return Err(Error::new(ErrorKind::UnexpectedEof, "connection closed"));
+    }
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| Error::new(ErrorKind::InvalidData, "bad status line"))?;
+    let mut content_len = 0usize;
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            return Err(Error::new(ErrorKind::UnexpectedEof, "truncated headers"));
+        }
+        let line = line.trim_end();
+        if line.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = line.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_len = v
+                    .trim()
+                    .parse()
+                    .map_err(|_| Error::new(ErrorKind::InvalidData, "bad content-length"))?;
+            }
+        }
+    }
+    let mut body = vec![0u8; content_len];
+    reader.read_exact(&mut body)?;
+    let body = String::from_utf8(body)
+        .map_err(|_| Error::new(ErrorKind::InvalidData, "non-UTF-8 body"))?;
+    Ok((status, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{fit_with_backend, FitConfig, ServerConfig};
+    use crate::data;
+    use crate::runtime::Backend;
+    use crate::util::rng::Rng;
+
+    fn tiny_server() -> (Arc<Server>, Arc<crate::coordinator::FittedModel>) {
+        let mut rng = Rng::seed_from_u64(11);
+        let ds = data::dist1d(data::Dist1d::Uniform, 120, &mut rng);
+        let cfg = FitConfig::default_for(&ds);
+        let model = Arc::new(fit_with_backend(&ds, &cfg, Backend::Native).unwrap());
+        (Arc::new(Server::start(model.clone(), ServerConfig::default())), model)
+    }
+
+    #[test]
+    fn http_smoke_predict_and_routes() {
+        let (server, model) = tiny_server();
+        let http = HttpServer::start(server.clone(), HttpConfig::default()).unwrap();
+        let addr = http.addr().to_string();
+
+        let (status, body) = http_request(&addr, "POST", "/predict", r#"{"x": [0.25]}"#).unwrap();
+        assert_eq!(status, 200, "{body}");
+        let parsed = Json::parse(&body).unwrap();
+        // bitwise: the served value goes through the shortest-round-trip
+        // float writer, so text equality implies bit equality
+        assert_eq!(
+            parsed.get("y").as_f64().unwrap().to_bits(),
+            model.predict_one(&[0.25]).to_bits()
+        );
+
+        let (status, _) = http_request(&addr, "GET", "/healthz", "").unwrap();
+        assert_eq!(status, 200);
+        let (status, _) = http_request(&addr, "GET", "/nope", "").unwrap();
+        assert_eq!(status, 404);
+        let (status, _) = http_request(&addr, "GET", "/predict", "").unwrap();
+        assert_eq!(status, 405);
+        let (status, body) = http_request(&addr, "POST", "/predict", "not json").unwrap();
+        assert_eq!(status, 400, "{body}");
+
+        http.shutdown();
+        server.stop();
+    }
+}

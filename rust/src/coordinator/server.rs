@@ -25,7 +25,6 @@ use super::FittedModel;
 use crate::linalg::Mat;
 use crate::metrics::Registry;
 use crate::stream::ModelHandle;
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
@@ -83,7 +82,6 @@ pub struct Server {
     tx: RwLock<Option<Sender<Request>>>,
     pub metrics: Arc<Registry>,
     handle: ModelHandle,
-    shutdown: Arc<AtomicBool>,
     threads: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -117,7 +115,6 @@ impl Server {
     pub fn start_with_handle(handle: ModelHandle, cfg: ServerConfig) -> Server {
         let (tx, rx) = channel::<Request>();
         let metrics = Arc::new(Registry::new());
-        let shutdown = Arc::new(AtomicBool::new(false));
         // batch channel feeding the worker pool
         let (btx, brx) = channel::<Vec<Request>>();
         let brx = Arc::new(Mutex::new(brx));
@@ -125,10 +122,9 @@ impl Server {
         // batcher thread
         {
             let metrics = metrics.clone();
-            let shutdown = shutdown.clone();
             let cfg = cfg.clone();
             threads.push(std::thread::spawn(move || {
-                batcher_loop(rx, btx, &cfg, &metrics, &shutdown);
+                batcher_loop(rx, btx, &cfg, &metrics);
             }));
         }
         // workers
@@ -145,7 +141,7 @@ impl Server {
                 serve_batch(&handle, batch, &metrics);
             }));
         }
-        Server { tx: RwLock::new(Some(tx)), metrics, handle, shutdown, threads }
+        Server { tx: RwLock::new(Some(tx)), metrics, handle, threads }
     }
 
     /// The swap slot this server reads from (publish through it to
@@ -180,10 +176,15 @@ impl Server {
 
     /// Close the intake: queued requests are still answered, later calls
     /// get `Err(ServerClosed)`. Idempotent; does not join the threads.
+    ///
+    /// The drain mechanism is the channel itself: taking `tx` drops the
+    /// last intake `Sender`, so once the batcher has drained every
+    /// request that was queued before the drop, its `recv_timeout`
+    /// returns `Disconnected` — it flushes the final partial batch and
+    /// exits, the batch channel closes behind it, and the workers exit
+    /// after answering everything in flight. No flag is involved;
+    /// `shutdown_drains_pending` pins the behavior.
     pub fn stop(&self) {
-        self.shutdown.store(true, Ordering::SeqCst);
-        // dropping the sender closes the request channel; the batcher
-        // drains what was already queued and exits
         self.tx.write().unwrap_or_else(|p| p.into_inner()).take();
     }
 
@@ -197,19 +198,31 @@ impl Server {
     }
 }
 
+/// Dispatch the pending batch to the workers and clear the deadline.
+fn flush_pending(
+    pending: &mut Vec<Request>,
+    deadline: &mut Option<Instant>,
+    btx: &Sender<Vec<Request>>,
+    metrics: &Registry,
+) {
+    if pending.is_empty() {
+        return;
+    }
+    metrics.record("serve.batch_size", pending.len() as f64);
+    metrics.incr("serve.batches", 1);
+    let _ = btx.send(std::mem::take(pending));
+    *deadline = None;
+}
+
 fn batcher_loop(
     rx: Receiver<Request>,
     btx: Sender<Vec<Request>>,
     cfg: &ServerConfig,
     metrics: &Registry,
-    shutdown: &AtomicBool,
 ) {
     let mut pending: Vec<Request> = Vec::new();
     let mut deadline: Option<Instant> = None;
     loop {
-        if shutdown.load(Ordering::Relaxed) && pending.is_empty() {
-            // still drain remaining queued requests below via recv errors
-        }
         let timeout = match deadline {
             Some(d) => d.saturating_duration_since(Instant::now()),
             None => Duration::from_millis(50),
@@ -220,27 +233,23 @@ fn batcher_loop(
                     deadline = Some(Instant::now() + cfg.max_wait);
                 }
                 pending.push(req);
-                if pending.len() >= cfg.max_batch {
-                    metrics.record("serve.batch_size", pending.len() as f64);
-                    metrics.incr("serve.batches", 1);
-                    let _ = btx.send(std::mem::take(&mut pending));
-                    deadline = None;
+                // The deadline must be honored on *this* arm too: when
+                // the intake channel is never empty at poll time (a
+                // sustained arrival stream), `recv_timeout(0)` keeps
+                // returning `Ok` and the `Timeout` arm below never runs
+                // — without this check a sub-`max_batch` batch would sit
+                // pending for as long as the load lasts.
+                if pending.len() >= cfg.max_batch
+                    || matches!(deadline, Some(d) if Instant::now() >= d)
+                {
+                    flush_pending(&mut pending, &mut deadline, &btx, metrics);
                 }
             }
             Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
-                if !pending.is_empty() {
-                    metrics.record("serve.batch_size", pending.len() as f64);
-                    metrics.incr("serve.batches", 1);
-                    let _ = btx.send(std::mem::take(&mut pending));
-                    deadline = None;
-                }
+                flush_pending(&mut pending, &mut deadline, &btx, metrics);
             }
             Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
-                if !pending.is_empty() {
-                    metrics.record("serve.batch_size", pending.len() as f64);
-                    metrics.incr("serve.batches", 1);
-                    let _ = btx.send(std::mem::take(&mut pending));
-                }
+                flush_pending(&mut pending, &mut deadline, &btx, metrics);
                 break; // btx drops → workers exit
             }
         }
@@ -340,6 +349,80 @@ mod tests {
             reg.counter("serve.batches") < n_req as u64 / 2,
             "batches = {}",
             reg.counter("serve.batches")
+        );
+    }
+
+    #[test]
+    fn max_wait_honored_under_sustained_submax_load() {
+        // Regression: with a sustained arrival stream the intake channel
+        // is never empty when the batcher polls, so `recv_timeout(0)`
+        // kept returning `Ok` after the deadline elapsed and the pending
+        // batch was never flushed (the `Timeout` arm is the only place
+        // that flushed) — per-request latency grew to the length of the
+        // load. Drive `batcher_loop` directly: two tight-loop feeders
+        // (aggregate send rate above one batcher's pop rate keeps the
+        // channel stocked) with a total far below `max_batch`, so every
+        // flush must come from the `max_wait` deadline.
+        const PER_FEEDER: usize = 150_000;
+        const TOTAL: usize = 2 * PER_FEEDER;
+        let max_wait = Duration::from_millis(1);
+        let (tx, rx) = channel::<Request>();
+        let (btx, brx) = channel::<Vec<Request>>();
+        let batcher = std::thread::spawn(move || {
+            let cfg = ServerConfig { max_batch: 1_000_000, max_wait, workers: 1 };
+            let metrics = Registry::new();
+            batcher_loop(rx, btx, &cfg, &metrics);
+        });
+        let feeders: Vec<_> = (0..2)
+            .map(|_| {
+                let tx = tx.clone();
+                std::thread::spawn(move || {
+                    // one response channel for the whole feeder: nothing
+                    // answers here, the test only watches the batch side
+                    let (resp, _keep) = channel::<Prediction>();
+                    for _ in 0..PER_FEEDER {
+                        let _ = tx.send(Request {
+                            x: vec![0.5],
+                            resp: resp.clone(),
+                            enqueued: Instant::now(),
+                        });
+                    }
+                })
+            })
+            .collect();
+        drop(tx); // feeders hold the only senders; channel closes when they finish
+        let mut lats: Vec<f64> = Vec::with_capacity(TOTAL);
+        let mut largest = 0usize;
+        let mut batches = 0usize;
+        while let Ok(batch) = brx.recv() {
+            let now = Instant::now();
+            largest = largest.max(batch.len());
+            batches += 1;
+            for r in &batch {
+                lats.push(now.saturating_duration_since(r.enqueued).as_secs_f64());
+            }
+        }
+        for f in feeders {
+            f.join().unwrap();
+        }
+        batcher.join().unwrap();
+        assert_eq!(lats.len(), TOTAL, "every request reaches a batch");
+        lats.sort_by(f64::total_cmp);
+        let p99 = lats[(TOTAL as f64 * 0.99) as usize - 1];
+        // pre-fix: one or two giant batches at end-of-load (p99 ≈ the
+        // whole load window, tens of ms; largest ≈ TOTAL). Post-fix:
+        // a flush every ~max_wait, so batches stay small and p99 stays
+        // within a few multiples of max_wait (bound is generous for CI
+        // scheduling noise but far below the pre-fix failure mode).
+        assert!(
+            p99 <= 25.0 * max_wait.as_secs_f64(),
+            "p99 latency {:.1} ms breaches max_wait={} ms",
+            p99 * 1e3,
+            max_wait.as_millis()
+        );
+        assert!(
+            largest <= TOTAL / 5 && batches >= 5,
+            "deadline flushes missing: {batches} batches, largest {largest}/{TOTAL}"
         );
     }
 

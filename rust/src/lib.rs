@@ -118,7 +118,9 @@
 //! * [`runtime`] — PJRT engine executing AOT-lowered JAX/Pallas artifacts
 //!   (behind the `xla-runtime` feature; an API-compatible stub otherwise).
 //! * [`coordinator`] — fit pipeline + dynamic-batching predict server
-//!   with hot-swappable, versioned models.
+//!   with hot-swappable, versioned models, and the dependency-free
+//!   HTTP/JSON network tier + replica poller ([`coordinator::net`], see
+//!   "Network serving" below).
 //! * [`stream`] — online ingestion: sequential-leverage-score Nyström
 //!   dictionary, O(m²) incremental model updates via rank-one Cholesky
 //!   update/append/delete sweeps (a downdate completes the routine set
@@ -163,6 +165,44 @@
 //! `models` CLI subcommands, `stream --warm-start`, and the `persist`
 //! JSON config section.
 //!
+//! ## Network serving
+//!
+//! [`coordinator::net::HttpServer`] turns the in-process predict server
+//! into a service: a hand-rolled, dependency-free HTTP/1.1 listener with
+//! JSON bodies (parsed lazily — `/predict` pulls `"x"` out of the body
+//! in one structural pass via [`util::json::scan_f64s`], no document
+//! tree on the hot path).
+//!
+//! Endpoints: `POST /predict` `{"x": [..]}` → `{"y": .., "model_version": ..}`;
+//! `POST /predict_batch` `{"xs": [[..], ..]}`; `GET /healthz`;
+//! `GET /metrics` (QPS + p50/p95/p99 + full registry snapshot).
+//!
+//! Admission is bounded: connections queue up to `queue_cap`, and beyond
+//! that the accept loop answers `429 Too Many Requests` + `Retry-After`
+//! inline — explicit backpressure, never an unbounded backlog. Served
+//! values are **bit-identical** to `FittedModel::predict_one` (the JSON
+//! writer is shortest-round-trip), concurrent requests micro-batch
+//! through the same dynamic batcher as in-process callers, and stopping
+//! drains gracefully: accepted requests are answered, the listener
+//! closes, later predictions get a typed `503` JSON error.
+//!
+//! Replica topology ("fit/stream once, serve everywhere"):
+//!
+//! ```text
+//!   writer: fit/stream ─ save ─► shared artifact store ◄─ poll ─ replica 1..N
+//!                                 <dir>/<name>/vK          │ new version?
+//!                                                          ▼
+//!                                      load_model → ModelHandle::publish
+//!                                      (in-flight requests keep the old Arc)
+//! ```
+//!
+//! [`coordinator::net::spawn_replica_poller`] watches the store and
+//! hot-swaps new versions into a running server; corrupt artifacts are
+//! skipped (typed + counted) and the old model keeps serving. CLI:
+//! `leverkrr serve --http <addr> [--replica <dir> --name <artifact>]`;
+//! `bench-serve` sweeps QPS / tail latency over batch size × replica
+//! count into `BENCH_serve.json`.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -196,7 +236,9 @@ pub mod bench_harness;
 
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {
-    pub use crate::coordinator::{fit, FitConfig, FittedModel};
+    pub use crate::coordinator::{
+        fit, FitConfig, FittedModel, HttpClient, HttpConfig, HttpServer, Server, ServerConfig,
+    };
     pub use crate::data::Dataset;
     pub use crate::kernels::{Kernel, KernelSpec};
     pub use crate::leverage::{LeverageEstimator, LeverageMethod};

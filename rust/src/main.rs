@@ -3,7 +3,9 @@
 //! Subcommands:
 //! * `fit`        — fit a Nyström-KRR model on a dataset and report risk.
 //! * `leverage`   — estimate leverage scores and dump them (JSON).
-//! * `serve`      — fit then run the batched predict server demo.
+//! * `serve`      — fit then run the batched predict server: in-process
+//!   demo by default, network serving with `--http` (HTTP/1.1 + JSON),
+//!   artifact-store replica mode with `--replica`.
 //! * `stream`     — replay a dataset as an arrival stream through the
 //!   online Nyström coordinator; report accuracy-vs-time, update-latency
 //!   quantiles, and the final gap to a full batch fit.
@@ -13,7 +15,10 @@
 //! * `selftest`   — quick end-to-end sanity run (native + XLA if built).
 
 use leverkrr::bench_harness::{experiments, ExpOptions};
-use leverkrr::coordinator::{fit_with_backend, FitConfig, Server, ServerConfig};
+use leverkrr::coordinator::{
+    fit_with_backend, spawn_replica_poller, FitConfig, HttpConfig, HttpServer, Server,
+    ServerConfig,
+};
 use leverkrr::data::{self, Dataset};
 use leverkrr::kernels::KernelSpec;
 use leverkrr::leverage::{LeverageContext, LeverageMethod};
@@ -72,6 +77,10 @@ fn main() {
             experiments::persist::run(&exp_opts("bench-persist", &rest));
             0
         }
+        "bench-serve" => {
+            experiments::serve::run(&exp_opts("bench-serve", &rest));
+            0
+        }
         "selftest" => cmd_selftest(),
         "--help" | "-h" | "help" => {
             print_usage();
@@ -97,7 +106,9 @@ commands:
   run          fit + serve from a JSON config file
   tune         cross-validated λ grid search over fixed landmarks
   leverage     estimate leverage scores, dump JSON
-  serve        fit + run the dynamic-batching predict server demo
+  serve        fit + run the dynamic-batching predict server; --http serves
+               JSON over HTTP/1.1, --replica polls an artifact store and
+               hot-swaps newly exported model versions
   stream       replay a dataset as an arrival stream (online Nyström);
                --warm-start resumes a persisted checkpoint
   export       fit a model and save it into the versioned artifact store
@@ -112,6 +123,7 @@ commands:
   bench-ablation SA design-choice ablations
   bench-stream streaming update latency vs periodic full refit
   bench-persist artifact save/load/checkpoint-restore latency vs n, m
+  bench-serve  HTTP-tier sustained QPS + tail latency vs batch size, replicas
   selftest     quick end-to-end sanity run"
     );
 }
@@ -285,10 +297,28 @@ fn cmd_leverage(argv: &[String]) -> i32 {
 }
 
 fn cmd_serve(argv: &[String]) -> i32 {
-    let cmd = data_flags(Command::new("serve", "fit + run the predict server demo"))
-        .flag("requests", "10000", "number of demo requests")
-        .flag("max-batch", "128", "batcher max batch size")
-        .flag("max-wait-ms", "2", "batcher max wait (ms)");
+    let cmd = data_flags(Command::new(
+        "serve",
+        "fit + run the predict server (in-process demo, or HTTP with --http)",
+    ))
+    .flag("requests", "10000", "in-process demo: number of requests")
+    .flag("max-batch", "128", "batcher max batch size")
+    .flag("max-wait-ms", "2", "batcher max wait (ms)")
+    .flag("http", "", "serve over HTTP on this address (e.g. 127.0.0.1:8080)")
+    .flag(
+        "replica",
+        "",
+        "artifact store dir to poll for new versions (skips fitting; requires --http)",
+    )
+    .flag("name", "model", "artifact name for --replica mode")
+    .flag("poll-ms", "200", "replica poll interval (ms)")
+    .flag(
+        "duration-s",
+        "",
+        "HTTP mode: drain and exit after this many seconds (default: run until killed)",
+    )
+    .flag("queue-cap", "256", "HTTP admission queue capacity (429 beyond)")
+    .flag("handlers", "", "HTTP handler threads (default: min(cores, 8))");
     let a = match cmd.parse(argv) {
         Ok(a) => a,
         Err(m) => {
@@ -296,16 +326,28 @@ fn cmd_serve(argv: &[String]) -> i32 {
             return 2;
         }
     };
-    let (ds, _) = dataset_from(&a);
-    let cfg = build_cfg(&a, &ds);
-    let backend = backend_from(&a);
-    let model =
-        std::sync::Arc::new(fit_with_backend(&ds, &cfg, backend).expect("fit failed"));
     let scfg = ServerConfig {
         max_batch: a.get_usize("max-batch").unwrap_or(128),
         max_wait: std::time::Duration::from_millis(a.get_u64("max-wait-ms").unwrap_or(2)),
         workers: leverkrr::util::pool::machine_threads().min(4),
     };
+    let replica_dir = a.get("replica").filter(|s| !s.is_empty()).map(String::from);
+    let http_addr = a.get("http").filter(|s| !s.is_empty()).map(String::from);
+    let name = a.get("name").unwrap_or("model").to_string();
+    if replica_dir.is_some() && http_addr.is_none() {
+        eprintln!("--replica requires --http (a replica is a network serving process)");
+        return 2;
+    }
+
+    if let Some(addr) = http_addr {
+        return serve_http(&a, addr, replica_dir, &name, scfg);
+    }
+
+    let (ds, _) = dataset_from(&a);
+    let cfg = build_cfg(&a, &ds);
+    let backend = backend_from(&a);
+    let model =
+        std::sync::Arc::new(fit_with_backend(&ds, &cfg, backend).expect("fit failed"));
     let server = Server::start(model, scfg);
     let n_req = a.get_usize("requests").unwrap_or(10_000);
     let d = ds.d();
@@ -339,6 +381,103 @@ fn cmd_serve(argv: &[String]) -> i32 {
         ps[0] * 1e3,
         ps[1] * 1e3,
         ps[2] * 1e3,
+    );
+    print_global_counters();
+    0
+}
+
+/// `serve --http`: network serving. Fits in-process (default) or
+/// cold-starts from the latest store artifact (`--replica <dir>`, which
+/// also spawns the poller that hot-swaps newly exported versions).
+fn serve_http(
+    a: &leverkrr::util::cli::Args,
+    addr: String,
+    replica_dir: Option<String>,
+    name: &str,
+    scfg: ServerConfig,
+) -> i32 {
+    let server = if let Some(dir) = &replica_dir {
+        let store = match leverkrr::persist::Store::open(dir) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("cannot open store '{dir}': {e}");
+                return 1;
+            }
+        };
+        match Server::start_from_artifact(&store, name, None, scfg) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("cannot load artifact '{name}': {e}");
+                return 1;
+            }
+        }
+    } else {
+        let (ds, _) = dataset_from(a);
+        let cfg = build_cfg(a, &ds);
+        let model = std::sync::Arc::new(
+            fit_with_backend(&ds, &cfg, backend_from(a)).expect("fit failed"),
+        );
+        Server::start(model, scfg)
+    };
+    let server = std::sync::Arc::new(server);
+    let mut hcfg = HttpConfig { addr, ..HttpConfig::default() };
+    if let Some(q) = a.get_usize("queue-cap") {
+        hcfg.queue_cap = q;
+    }
+    if let Some(h) = a.get_usize("handlers") {
+        hcfg.handlers = h;
+    }
+    let http = match HttpServer::start(server.clone(), hcfg) {
+        Ok(h) => h,
+        Err(e) => {
+            eprintln!("cannot bind HTTP listener: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "serving HTTP on {} (model version {})",
+        http.addr(),
+        server.model_handle().version()
+    );
+    let poll_ms = a.get_u64("poll-ms").unwrap_or(200).max(1);
+    let poller = replica_dir.map(|dir| {
+        println!("replica mode: polling {dir} for '{name}' every {poll_ms} ms");
+        spawn_replica_poller(
+            std::path::PathBuf::from(dir),
+            name.to_string(),
+            server.model_handle(),
+            server.metrics.clone(),
+            std::time::Duration::from_millis(poll_ms),
+        )
+    });
+    match a.get_f64("duration-s") {
+        Some(secs) if secs > 0.0 => {
+            std::thread::sleep(std::time::Duration::from_secs_f64(secs))
+        }
+        _ => loop {
+            // run until killed
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        },
+    }
+    // bounded run: graceful drain, then a summary
+    if let Some(p) = poller {
+        p.stop();
+    }
+    let qps = http.qps();
+    http.shutdown();
+    server.stop();
+    let reg = &server.metrics;
+    let ps = reg.timer_quantiles("http.request.secs", &[0.50, 0.95, 0.99]);
+    println!(
+        "served {} http requests ({} rejected, {} bad) at {:.0} req/s; p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms; {} swaps",
+        reg.counter("http.requests"),
+        reg.counter("http.rejected"),
+        reg.counter("http.bad_request"),
+        qps,
+        ps[0] * 1e3,
+        ps[1] * 1e3,
+        ps[2] * 1e3,
+        reg.counter("replica.swaps"),
     );
     print_global_counters();
     0

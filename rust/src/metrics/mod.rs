@@ -123,9 +123,10 @@ impl Quantiles {
         if self.xs.is_empty() {
             return f64::NAN;
         }
-        let mut v = self.xs.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        quantile_sorted(&v, q)
+        // total_cmp, not partial_cmp().unwrap(): one NaN sample must not
+        // panic the snapshot of a live serving process. NaNs order
+        // deterministically at the extremes, so mid quantiles stay finite.
+        quantile_sorted(&sort_samples(self.xs.clone()), q)
     }
 }
 
@@ -379,6 +380,26 @@ mod tests {
         assert!((q.quantile(0.0) - 1.0).abs() < 1e-12);
         assert!((q.quantile(1.0) - 4.0).abs() < 1e-12);
         assert!((q.quantile(0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_survives_nan_sample() {
+        // one poisoned latency sample must not panic the snapshot — and
+        // quantiles over the rest must stay finite
+        let mut q = Quantiles::default();
+        q.extend(&[4.0, 1.0, f64::NAN, 3.0, 2.0]);
+        assert_eq!(q.quantile(0.0), 1.0);
+        assert!((q.quantile(0.5) - 2.5).abs() < 1e-12);
+        assert!(q.quantile(1.0).is_nan()); // NaN orders at the top end
+
+        let r = Registry::new();
+        r.record("lat", 1.0);
+        r.record("lat", f64::NAN);
+        r.record("lat", 3.0);
+        let p50 = r.timer_quantile("lat", 0.5);
+        assert!(p50.is_finite(), "p50 poisoned: {p50}");
+        let snap = r.snapshot();
+        assert!(Json::parse(&snap.to_string_pretty()).is_ok());
     }
 
     #[test]

@@ -1,9 +1,23 @@
-//! Minimal JSON: value model, recursive-descent parser, writer.
+//! Minimal JSON: value model, recursive-descent parser, writer, and a
+//! lazy partial-field scanner.
 //!
 //! Replaces serde_json (not in the vendor set). Used for the AOT artifact
-//! manifest (`artifacts/manifest.json`), experiment configs, and bench
-//! result files. Supports the full JSON grammar minus exotic escapes
-//! (\uXXXX is decoded for the BMP; surrogate pairs are combined).
+//! manifest (`artifacts/manifest.json`), experiment configs, bench
+//! result files, and the HTTP serving tier's request/response bodies.
+//! Supports the full JSON grammar minus exotic escapes (\uXXXX is
+//! decoded for the BMP; surrogate pairs are combined).
+//!
+//! Writer invariants: output is always *valid* JSON — non-finite numbers
+//! serialize as `null` (JSON has no NaN/Infinity tokens), and integral
+//! values beyond the exact-`i64` range print through Rust's
+//! shortest-round-trip float formatter instead of a saturating cast, so
+//! every finite `f64` reparses to the same bit pattern.
+//!
+//! For request hot paths, [`scan_raw`] / [`scan_f64s`] extract a single
+//! top-level field in one structural pass over the bytes — no tree is
+//! allocated (the mik-sdk ADR-002 "lazy scanning instead of full-tree
+//! parse" pattern): `POST /predict` pulls its `"x"` array out of the
+//! body this way.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -125,7 +139,18 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 9.0e15 {
+                if !x.is_finite() {
+                    // JSON has no NaN/Infinity tokens: writing them
+                    // verbatim corrupts the document (every BENCH_*.json
+                    // reader would choke). `null` keeps the file valid.
+                    out.push_str("null");
+                } else if x.fract() == 0.0 && x.abs() < 9.0e15 {
+                    // integral and exactly representable as i64: print
+                    // without the fraction. The magnitude guard matters —
+                    // `as i64` saturates, so 1e30 must take the `{x}`
+                    // branch below (Rust's shortest-round-trip Display
+                    // never uses exponent notation, so it stays valid
+                    // JSON and reparses to the same bits).
                     out.push_str(&format!("{}", *x as i64));
                 } else {
                     out.push_str(&format!("{x}"));
@@ -398,6 +423,164 @@ impl<'a> Parser<'a> {
         let s = std::str::from_utf8(&self.b[start..self.i]).unwrap();
         s.parse::<f64>().map(Json::Num).map_err(|_| self.err("bad number"))
     }
+
+    /// Structurally skip one value without building it. Same grammar as
+    /// [`Parser::value`], but allocation-free — the backbone of the lazy
+    /// field scanner.
+    fn skip_value(&mut self) -> Result<(), JsonError> {
+        match self.peek() {
+            Some(b'n') => self.lit("null", Json::Null).map(|_| ()),
+            Some(b't') => self.lit("true", Json::Bool(true)).map(|_| ()),
+            Some(b'f') => self.lit("false", Json::Bool(false)).map(|_| ()),
+            Some(b'"') => self.skip_string(),
+            Some(b'[') => {
+                self.i += 1;
+                self.ws();
+                if self.peek() == Some(b']') {
+                    self.i += 1;
+                    return Ok(());
+                }
+                loop {
+                    self.ws();
+                    self.skip_value()?;
+                    self.ws();
+                    match self.peek() {
+                        Some(b',') => self.i += 1,
+                        Some(b']') => {
+                            self.i += 1;
+                            return Ok(());
+                        }
+                        _ => return Err(self.err("expected ',' or ']'")),
+                    }
+                }
+            }
+            Some(b'{') => {
+                self.i += 1;
+                self.ws();
+                if self.peek() == Some(b'}') {
+                    self.i += 1;
+                    return Ok(());
+                }
+                loop {
+                    self.ws();
+                    self.skip_string()?;
+                    self.ws();
+                    self.eat(b':')?;
+                    self.ws();
+                    self.skip_value()?;
+                    self.ws();
+                    match self.peek() {
+                        Some(b',') => self.i += 1,
+                        Some(b'}') => {
+                            self.i += 1;
+                            return Ok(());
+                        }
+                        _ => return Err(self.err("expected ',' or '}'")),
+                    }
+                }
+            }
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number().map(|_| ()),
+            _ => Err(self.err("unexpected character")),
+        }
+    }
+
+    /// Skip a string literal byte-wise. `\` always escapes exactly the
+    /// next byte — the hex digits of `\uXXXX` contain neither `"` nor
+    /// `\`, and UTF-8 continuation bytes can't equal either — so the
+    /// closing quote is found without decoding escapes.
+    fn skip_string(&mut self) -> Result<(), JsonError> {
+        self.eat(b'"')?;
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(());
+                }
+                Some(b'\\') => self.i += 2,
+                Some(_) => self.i += 1,
+            }
+        }
+    }
+}
+
+// ---- lazy partial-field scanning ----------------------------------------
+
+/// Extract the raw source slice of one top-level object field without
+/// building a tree: scan bytes, skip values structurally, and return the
+/// exact text of `key`'s value. `None` for malformed documents,
+/// non-object roots, or a missing key. ~One allocation per *key* scanned
+/// past (for escape decoding), zero per value — the point of the lazy
+/// layer is that a caller who needs one field of a large body never pays
+/// for the rest of the document.
+pub fn scan_raw<'a>(text: &'a str, key: &str) -> Option<&'a str> {
+    let mut p = Parser { b: text.as_bytes(), i: 0 };
+    p.ws();
+    p.eat(b'{').ok()?;
+    p.ws();
+    if p.peek() == Some(b'}') {
+        return None;
+    }
+    loop {
+        p.ws();
+        let k = p.string().ok()?;
+        p.ws();
+        p.eat(b':').ok()?;
+        p.ws();
+        let start = p.i;
+        p.skip_value().ok()?;
+        if k == key {
+            // both bounds sit on structural ASCII the scanner validated,
+            // so the byte range is a char boundary slice of `text`
+            return Some(&text[start..p.i]);
+        }
+        p.ws();
+        match p.peek() {
+            Some(b',') => p.i += 1,
+            _ => return None,
+        }
+    }
+}
+
+/// Scan a top-level `key` whose value is a flat JSON array of numbers
+/// straight into a `Vec<f64>` — one pass, no tree. The `POST /predict`
+/// body hot path.
+pub fn scan_f64s(text: &str, key: &str) -> Option<Vec<f64>> {
+    parse_f64_array(scan_raw(text, key)?)
+}
+
+/// Parse a standalone JSON array of numbers without building a tree.
+/// `None` on anything but a flat numeric array (including `null`
+/// elements: a query coordinate has no meaningful null).
+pub fn parse_f64_array(raw: &str) -> Option<Vec<f64>> {
+    let mut p = Parser { b: raw.as_bytes(), i: 0 };
+    p.ws();
+    p.eat(b'[').ok()?;
+    let mut out = Vec::new();
+    p.ws();
+    if p.peek() == Some(b']') {
+        p.i += 1;
+    } else {
+        loop {
+            p.ws();
+            let Json::Num(x) = p.number().ok()? else { return None };
+            out.push(x);
+            p.ws();
+            match p.peek() {
+                Some(b',') => p.i += 1,
+                Some(b']') => {
+                    p.i += 1;
+                    break;
+                }
+                _ => return None,
+            }
+        }
+    }
+    p.ws();
+    if p.i != p.b.len() {
+        return None;
+    }
+    Some(out)
 }
 
 fn utf8_len(b: u8) -> usize {
@@ -457,6 +640,87 @@ mod tests {
         let pretty = v.to_string_pretty();
         assert!(pretty.contains('\n'));
         assert_eq!(Json::parse(&pretty).unwrap(), v);
+    }
+
+    #[test]
+    fn writer_nonfinite_and_huge_values_stay_valid_json() {
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).to_string(), "null");
+        // integral magnitudes beyond i64 must not go through the
+        // saturating cast (1e30 used to print as i64::MAX)
+        let s = Json::Num(1e30).to_string();
+        assert!(!s.contains("9223372036854775807"), "saturated: {s}");
+        let back = Json::parse(&s).unwrap().as_f64().unwrap();
+        assert_eq!(back.to_bits(), 1e30f64.to_bits());
+        // a document with a NaN cell still reparses (cell becomes null)
+        let doc = Json::obj(vec![("qps", Json::Num(f64::NAN)), ("p50", Json::Num(0.5))]);
+        let re = Json::parse(&doc.to_string_pretty()).unwrap();
+        assert_eq!(*re.get("qps"), Json::Null);
+        assert_eq!(re.get("p50").as_f64(), Some(0.5));
+    }
+
+    #[test]
+    fn prop_roundtrip_extreme_numbers() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::seed_from_u64(7);
+        for _ in 0..2000 {
+            // uniform over bit patterns: hits subnormals, huge
+            // magnitudes, NaN payloads, and both infinities
+            let x = f64::from_bits(rng.next_u64());
+            let s = Json::Num(x).to_string();
+            let back = Json::parse(&s).unwrap_or_else(|e| panic!("{e}: {s} (x={x:e})"));
+            if x.is_finite() {
+                let y = back.as_f64().unwrap();
+                assert!(
+                    y.to_bits() == x.to_bits() || (x == 0.0 && y == 0.0),
+                    "{x:e} -> {s} -> {y:e}"
+                );
+            } else {
+                assert_eq!(back, Json::Null, "{x:e} -> {s}");
+            }
+        }
+        for x in [f64::MAX, f64::MIN, 1e30, -1e30, 9.0e15, -9.0e15, 5e-324, f64::EPSILON] {
+            let s = Json::Num(x).to_string();
+            let y = Json::parse(&s).unwrap().as_f64().unwrap();
+            assert_eq!(y.to_bits(), x.to_bits(), "{x:e} -> {s}");
+        }
+    }
+
+    #[test]
+    fn lazy_scan_extracts_without_full_parse() {
+        let body = r#"{"id": "req-1{not a brace}", "x": [0.25, -1.5e2, 3], "meta": {"a": [1, 2]}}"#;
+        assert_eq!(scan_f64s(body, "x").unwrap(), vec![0.25, -150.0, 3.0]);
+        assert_eq!(scan_raw(body, "meta").unwrap(), r#"{"a": [1, 2]}"#);
+        assert_eq!(scan_raw(body, "id").unwrap(), r#""req-1{not a brace}""#);
+        assert!(scan_raw(body, "missing").is_none());
+        assert!(scan_raw("[1, 2]", "x").is_none()); // non-object root
+        assert!(scan_raw(r#"{"x": [1,"#, "x").is_none()); // truncated value
+        assert!(scan_f64s(r#"{"x": ["no"]}"#, "x").is_none());
+        assert!(scan_f64s(r#"{"x": [1, null]}"#, "x").is_none());
+        assert_eq!(parse_f64_array("[]").unwrap(), Vec::<f64>::new());
+        assert!(parse_f64_array("[1] trailing").is_none());
+    }
+
+    #[test]
+    fn prop_lazy_scan_agrees_with_full_parse() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::seed_from_u64(41);
+        for _ in 0..200 {
+            let mut obj = BTreeMap::new();
+            for i in 0..rng.usize(5) + 1 {
+                obj.insert(format!("k{i}"), random_json(&mut rng, 2));
+            }
+            let doc = Json::Obj(obj.clone());
+            let text =
+                if rng.f64() < 0.5 { doc.to_string() } else { doc.to_string_pretty() };
+            for (k, v) in &obj {
+                let raw = scan_raw(&text, k)
+                    .unwrap_or_else(|| panic!("field {k} not found in {text}"));
+                assert_eq!(&Json::parse(raw).unwrap(), v, "{text}");
+            }
+            assert!(scan_raw(&text, "absent").is_none());
+        }
     }
 
     #[test]

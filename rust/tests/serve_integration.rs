@@ -1,0 +1,274 @@
+//! HTTP serving tier invariants (the crate-external view):
+//!
+//! 1. **Bitwise fidelity** — a prediction served over the socket equals
+//!    `FittedModel::predict_one` bit for bit (the JSON writer is
+//!    shortest-round-trip, so text equality is bit equality), for single
+//!    requests, concurrent keep-alive clients, and `/predict_batch`.
+//! 2. **Bounded admission** — with the queue full, a new connection is
+//!    answered `429` + `Retry-After` immediately instead of queueing
+//!    unboundedly.
+//! 3. **Graceful drain** — accepted requests are answered on stop; once
+//!    the inner server is stopped, predictions answer with a typed `503`
+//!    JSON error; once the listener is shut down, connects fail.
+//! 4. **Replica distribution** — a replica polling a shared artifact
+//!    store hot-swaps a newly exported version and serves the new model
+//!    bitwise, without dropping in-flight traffic.
+//! 5. **Protocol edges** — unknown route 404, wrong method 405,
+//!    malformed body 400, oversized body 413.
+
+use leverkrr::coordinator::{
+    fit_with_backend, spawn_replica_poller, FitConfig, FittedModel, HttpClient, HttpConfig,
+    HttpServer, Server, ServerConfig,
+};
+use leverkrr::data;
+use leverkrr::persist::Store;
+use leverkrr::runtime::Backend;
+use leverkrr::util::json::Json;
+use leverkrr::util::rng::Rng;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn fit_model(seed: u64, n: usize) -> Arc<FittedModel> {
+    let mut rng = Rng::seed_from_u64(seed);
+    let ds = data::dist1d(data::Dist1d::Uniform, n, &mut rng);
+    let cfg = FitConfig::default_for(&ds);
+    Arc::new(fit_with_backend(&ds, &cfg, Backend::Native).unwrap())
+}
+
+fn start_http(model: Arc<FittedModel>, hcfg: HttpConfig) -> (Arc<Server>, HttpServer, String) {
+    let server = Arc::new(Server::start(model, ServerConfig::default()));
+    let http = HttpServer::start(server.clone(), hcfg).unwrap();
+    let addr = http.addr().to_string();
+    (server, http, addr)
+}
+
+fn predict_body(x: f64) -> String {
+    Json::obj(vec![("x", Json::arr_f64(&[x]))]).to_string()
+}
+
+/// Served `y` for one request, asserting a 200.
+fn served_y(client: &mut HttpClient, x: f64) -> f64 {
+    let (status, body) = client.request("POST", "/predict", &predict_body(x)).unwrap();
+    assert_eq!(status, 200, "{body}");
+    Json::parse(&body).unwrap().get("y").as_f64().unwrap()
+}
+
+#[test]
+fn served_predictions_bitwise_identical_to_predict_one() {
+    let model = fit_model(1, 150);
+    let (server, http, addr) = start_http(model.clone(), HttpConfig::default());
+    let mut client = HttpClient::connect(&addr).unwrap();
+    let mut rng = Rng::seed_from_u64(2);
+    for _ in 0..40 {
+        let x = rng.f64();
+        assert_eq!(
+            served_y(&mut client, x).to_bits(),
+            model.predict_one(&[x]).to_bits(),
+            "x={x}"
+        );
+    }
+    http.shutdown();
+    server.stop();
+}
+
+#[test]
+fn concurrent_keepalive_clients_all_get_exact_answers() {
+    let model = fit_model(3, 150);
+    let (server, http, addr) = start_http(model.clone(), HttpConfig::default());
+    std::thread::scope(|s| {
+        for c in 0..8u64 {
+            let addr = addr.clone();
+            let model = model.clone();
+            s.spawn(move || {
+                let mut client = HttpClient::connect(&addr).unwrap();
+                let mut rng = Rng::seed_from_u64(100 + c);
+                for _ in 0..50 {
+                    let x = rng.f64();
+                    assert_eq!(
+                        served_y(&mut client, x).to_bits(),
+                        model.predict_one(&[x]).to_bits()
+                    );
+                }
+            });
+        }
+    });
+    assert!(server.metrics.counter("http.requests") >= 400);
+    http.shutdown();
+    server.stop();
+}
+
+#[test]
+fn predict_batch_matches_predict_one_bitwise() {
+    let model = fit_model(5, 150);
+    let (server, http, addr) = start_http(model.clone(), HttpConfig::default());
+    let xs: Vec<f64> = (0..32).map(|i| i as f64 / 32.0).collect();
+    let rows = Json::Arr(xs.iter().map(|&x| Json::arr_f64(&[x])).collect());
+    let body = Json::obj(vec![("xs", rows)]).to_string();
+    let mut client = HttpClient::connect(&addr).unwrap();
+    let (status, resp) = client.request("POST", "/predict_batch", &body).unwrap();
+    assert_eq!(status, 200, "{resp}");
+    let parsed = Json::parse(&resp).unwrap();
+    let ys = parsed.get("ys").as_arr().unwrap();
+    assert_eq!(ys.len(), xs.len());
+    for (x, y) in xs.iter().zip(ys) {
+        assert_eq!(
+            y.as_f64().unwrap().to_bits(),
+            model.predict_one(&[*x]).to_bits(),
+            "x={x}"
+        );
+    }
+    http.shutdown();
+    server.stop();
+}
+
+#[test]
+fn full_admission_queue_answers_429_with_retry_after() {
+    let model = fit_model(7, 120);
+    let hcfg = HttpConfig {
+        handlers: 1,
+        queue_cap: 1,
+        retry_after_secs: 3,
+        ..HttpConfig::default()
+    };
+    let (server, http, addr) = start_http(model, hcfg);
+
+    // occupy the only handler: a connection with a half-sent request
+    // (the handler is reading it, bounded-stall, and stays busy)
+    let mut busy = TcpStream::connect(&addr).unwrap();
+    busy.write_all(b"POST /predict HTTP/1.1\r\nContent-Length: 12\r\n").unwrap();
+    busy.flush().unwrap();
+    std::thread::sleep(Duration::from_millis(400)); // handler picks it up
+
+    // fill the one queue slot
+    let _queued = TcpStream::connect(&addr).unwrap();
+    std::thread::sleep(Duration::from_millis(200));
+
+    // over admission: answered 429 inline by the accept loop
+    let mut rejected = TcpStream::connect(&addr).unwrap();
+    rejected.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut raw = String::new();
+    rejected.read_to_string(&mut raw).unwrap();
+    assert!(raw.starts_with("HTTP/1.1 429"), "{raw}");
+    assert!(raw.contains("Retry-After: 3"), "{raw}");
+    assert!(server.metrics.counter("http.rejected") >= 1);
+
+    // release the handler so shutdown is quick
+    busy.write_all(b"\r\n{\"x\": [0.5]}").unwrap();
+    busy.flush().unwrap();
+    http.shutdown();
+    server.stop();
+}
+
+#[test]
+fn drain_is_graceful_and_stopped_server_answers_typed_503() {
+    let model = fit_model(9, 150);
+    let (server, http, addr) = start_http(model.clone(), HttpConfig::default());
+    let mut client = HttpClient::connect(&addr).unwrap();
+    // accepted traffic is answered exactly
+    assert_eq!(
+        served_y(&mut client, 0.3).to_bits(),
+        model.predict_one(&[0.3]).to_bits()
+    );
+    // stop the inner prediction server but keep HTTP up: typed error
+    server.stop();
+    let mut c2 = HttpClient::connect(&addr).unwrap();
+    let (status, body) = c2.request("POST", "/predict", &predict_body(0.3)).unwrap();
+    assert_eq!(status, 503, "{body}");
+    assert!(Json::parse(&body).unwrap().get("error").as_str().is_some(), "{body}");
+    // health endpoints still answer during the drain
+    let (status, _) = c2.request("GET", "/healthz", "").unwrap();
+    assert_eq!(status, 200);
+    // full shutdown closes the listener
+    http.shutdown();
+    assert!(TcpStream::connect(&addr).is_err(), "listener still accepting after shutdown");
+}
+
+#[test]
+fn protocol_edges_get_typed_status_codes() {
+    let model = fit_model(11, 120);
+    let hcfg = HttpConfig { max_body_bytes: 256, ..HttpConfig::default() };
+    let (server, http, addr) = start_http(model, hcfg);
+    let mut client = HttpClient::connect(&addr).unwrap();
+    let (status, _) = client.request("GET", "/nope", "").unwrap();
+    assert_eq!(status, 404);
+    let (status, _) = client.request("GET", "/predict", "").unwrap();
+    assert_eq!(status, 405);
+    let (status, _) = client.request("POST", "/predict", "definitely not json").unwrap();
+    assert_eq!(status, 400);
+    let (status, _) = client.request("POST", "/predict", r#"{"x": []}"#).unwrap();
+    assert_eq!(status, 400);
+    // oversized body: 413, connection closed by the server after
+    let big = predict_body(0.5) + &" ".repeat(512);
+    let mut one_shot = HttpClient::connect(&addr).unwrap();
+    let (status, _) = one_shot.request("POST", "/predict", &big).unwrap();
+    assert_eq!(status, 413);
+    assert!(server.metrics.counter("http.bad_request") >= 2);
+    http.shutdown();
+    server.stop();
+}
+
+#[test]
+fn replica_hot_swaps_newly_exported_artifact() {
+    let dir = std::env::temp_dir().join(format!(
+        "leverkrr-serve-it-replica-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = Store::open(&dir).unwrap();
+
+    // writer process exports v1
+    let m1 = fit_model(21, 150);
+    store.save_model("m", &m1).unwrap();
+
+    // replica cold-starts from the store and begins polling
+    let server = Arc::new(
+        Server::start_from_artifact(&store, "m", None, ServerConfig::default()).unwrap(),
+    );
+    let http = HttpServer::start(server.clone(), HttpConfig::default()).unwrap();
+    let addr = http.addr().to_string();
+    let poller = spawn_replica_poller(
+        PathBuf::from(&dir),
+        "m".to_string(),
+        server.model_handle(),
+        server.metrics.clone(),
+        Duration::from_millis(50),
+    );
+
+    let mut client = HttpClient::connect(&addr).unwrap();
+    assert_eq!(
+        served_y(&mut client, 0.4).to_bits(),
+        m1.predict_one(&[0.4]).to_bits()
+    );
+    let (_, health) = client.request("GET", "/healthz", "").unwrap();
+    assert_eq!(Json::parse(&health).unwrap().get("model_version").as_f64(), Some(1.0));
+
+    // writer exports v2 (different data → different predictions)
+    let m2 = fit_model(22, 180);
+    assert_ne!(
+        m1.predict_one(&[0.4]).to_bits(),
+        m2.predict_one(&[0.4]).to_bits(),
+        "models must differ for the swap to be observable"
+    );
+    store.save_model("m", &m2).unwrap();
+
+    // the replica picks it up and serves the new model bitwise
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let y = served_y(&mut client, 0.4);
+        if y.to_bits() == m2.predict_one(&[0.4]).to_bits() {
+            break;
+        }
+        assert!(Instant::now() < deadline, "replica never swapped to v2 (serving {y})");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    assert_eq!(server.metrics.counter("replica.swaps"), 1);
+    assert_eq!(server.metrics.gauge("serve.artifact_version"), 2.0);
+
+    poller.stop();
+    http.shutdown();
+    server.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+}
