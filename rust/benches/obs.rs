@@ -1,0 +1,7 @@
+//! `cargo bench --bench obs -- [--full] [--reps N]`
+//! Measures span-tracer overhead on the fig1 pipeline (budget <2%).
+//! See `leverkrr::bench_harness::experiments::obs` for the setting.
+fn main() {
+    let opts = leverkrr::bench_harness::ExpOptions::parse_cli("obs", "tracing overhead driver");
+    leverkrr::bench_harness::experiments::obs::run(&opts);
+}

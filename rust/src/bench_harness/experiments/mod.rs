@@ -10,11 +10,13 @@
 //! | [`stream::run`] | streaming update latency vs periodic refit | ROADMAP §streaming |
 //! | [`persist::run`] | artifact save/load/restore latency vs n, m | ROADMAP §persistence |
 //! | [`serve::run`] | HTTP-tier QPS + tail latency vs batch size, replicas | ROADMAP §serving |
+//! | [`obs::run`] | span-tracer overhead on the fig1 pipeline | ROADMAP §observability |
 
 pub mod ablation;
 pub mod fig1;
 pub mod fig2;
 pub mod fig3;
+pub mod obs;
 pub mod perf;
 pub mod persist;
 pub mod serve;

@@ -1,0 +1,111 @@
+//! §Obs — span-tracer overhead on the fig1 fit pipeline.
+//!
+//! The tracer's contract is "off means free, on means cheap": span call
+//! sites sit at layer boundaries (pool dispatch, Gram-cache block
+//! evaluation, leverage/Nyström/serve stages), never inside inner
+//! loops, so enabling tracing must not move the figures. This driver
+//! measures the same Figure-1 pipeline (SA leverage → landmark sampling
+//! → Nyström solve) with tracing off and on, plus the raw per-span
+//! cost in both states, and writes the overhead ratio to
+//! `BENCH_obs.json` — the budget is <2% with tracing on.
+
+use crate::bench_harness::{bench_reps, timing_row, ExpOptions};
+use crate::coordinator::{fit_with_backend, FitConfig};
+use crate::data;
+use crate::nystrom;
+use crate::runtime::Backend;
+use crate::trace;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+pub fn run(opts: &ExpOptions) {
+    let _pool = opts.pool_guard();
+    let mut rng = Rng::seed_from_u64(opts.seed);
+    let reps = opts.reps.max(3);
+    let n = if opts.full { 4000 } else { 2000 };
+    let ds = data::bimodal3(n, 0.4, &mut rng);
+    let cfg = FitConfig {
+        m_sub: nystrom::subsize::fig1(ds.n()),
+        ..FitConfig::default_for(&ds)
+    };
+    let threads = crate::util::pool::current_threads();
+    println!("# §Obs tracing overhead (fig1 pipeline, n={n}, m={}, reps={reps})\n", cfg.m_sub);
+    let mut rows: Vec<Json> = Vec::new();
+    let mut rec = |name: &str, n: usize, m: usize, d: usize, secs: f64| {
+        rows.push(Json::obj(vec![
+            ("name", Json::Str(name.into())),
+            ("n", Json::Num(n as f64)),
+            ("m", Json::Num(m as f64)),
+            ("d", Json::Num(d as f64)),
+            ("threads", Json::Num(threads as f64)),
+            ("ns_per_op", Json::Num(secs * 1e9)),
+        ]));
+    };
+
+    // ---- raw span cost: disabled vs enabled -------------------------------
+    // Disabled must be branch-cheap (one relaxed load); enabled pays the
+    // clock reads plus the ring push under a mutex.
+    let span_iters = 1_000_000usize;
+    trace::set_enabled(false);
+    let t_span_off = bench_reps(1, reps, || {
+        for _ in 0..span_iters {
+            let _g = trace::span("obs.probe");
+            std::hint::black_box(&_g);
+        }
+    });
+    trace::set_enabled(true);
+    trace::reset();
+    let t_span_on = bench_reps(1, reps, || {
+        for _ in 0..span_iters {
+            let _g = trace::span("obs.probe");
+            std::hint::black_box(&_g);
+        }
+    });
+    trace::set_enabled(false);
+    trace::reset();
+    let (off_ns, on_ns) =
+        (t_span_off[0] * 1e9 / span_iters as f64, t_span_on[0] * 1e9 / span_iters as f64);
+    println!("span cost: disabled {off_ns:.2} ns/span, enabled {on_ns:.1} ns/span");
+    rec("span_disabled", span_iters, 0, 0, t_span_off[0] / span_iters as f64);
+    rec("span_enabled", span_iters, 0, 0, t_span_on[0] / span_iters as f64);
+
+    // ---- fig1 pipeline: tracing off vs on ---------------------------------
+    trace::set_enabled(false);
+    let t_off = bench_reps(1, reps, || {
+        std::hint::black_box(fit_with_backend(&ds, &cfg, Backend::Native).unwrap());
+    });
+    trace::set_enabled(true);
+    trace::reset();
+    let t_on = bench_reps(1, reps, || {
+        std::hint::black_box(fit_with_backend(&ds, &cfg, Backend::Native).unwrap());
+    });
+    let span_count = trace::aggregate().iter().map(|(_, a)| a.count).sum::<u64>();
+    trace::set_enabled(false);
+    trace::reset();
+
+    println!("{}", timing_row("fit pipeline, tracing off", &t_off));
+    println!("{}", timing_row("fit pipeline, tracing on", &t_on));
+    // min-over-reps is the noise-robust basis for a ratio this tight
+    let overhead_pct = 100.0 * (t_on[0] - t_off[0]) / t_off[0].max(1e-12);
+    println!(
+        "    tracing overhead: {overhead_pct:+.3}%  ({span_count} spans across {} traced reps; budget <2%)",
+        reps + 1
+    );
+    rec("fit_pipeline_trace_off", n, cfg.m_sub, 3, t_off[0]);
+    rec("fit_pipeline_trace_on", n, cfg.m_sub, 3, t_on[0]);
+
+    let doc = Json::obj(vec![
+        ("experiment", Json::Str("obs".into())),
+        ("full", Json::Bool(opts.full)),
+        ("reps", Json::Num(reps as f64)),
+        ("seed", Json::Num(opts.seed as f64)),
+        ("threads", Json::Num(threads as f64)),
+        ("overhead_pct", Json::Num(overhead_pct)),
+        ("overhead_budget_pct", Json::Num(2.0)),
+        ("results", Json::Arr(rows)),
+    ]);
+    match std::fs::write("BENCH_obs.json", doc.to_string_pretty()) {
+        Ok(()) => println!("\nwrote BENCH_obs.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_obs.json: {e}"),
+    }
+}

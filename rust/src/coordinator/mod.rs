@@ -36,6 +36,7 @@ use crate::linalg::Mat;
 use crate::metrics::time_it;
 use crate::nystrom::NystromKrr;
 use crate::runtime::Backend;
+use crate::trace;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -169,6 +170,7 @@ pub fn fit_with_backend(
     // (restored on drop). Purely a wall-clock knob: scores, landmarks and
     // β are identical at any setting.
     let _pool_guard = cfg.threads.map(crate::util::pool::override_threads);
+    let _span = trace::span("fit");
     let t_total = std::time::Instant::now();
 
     // One landmark Gram workspace for the whole fit: the algebraic
@@ -186,6 +188,7 @@ pub fn fit_with_backend(
     ctx.inner_m = cfg.inner_m;
     ctx.cache = Some(&gram);
     let (scores, lev_secs) = time_it(|| {
+        let _g = trace::span("fit.leverage");
         if let (LeverageMethod::Sa | LeverageMethod::SaQuadrature, Some(h)) =
             (cfg.method, cfg.kde_bandwidth)
         {
@@ -206,13 +209,17 @@ pub fn fit_with_backend(
     let q = crate::leverage::normalize(&scores);
 
     // Stage 3: landmark sampling.
-    let (idx, sample_secs) =
-        time_it(|| crate::nystrom::sample_landmarks(&q, cfg.m_sub, &mut rng));
+    let (idx, sample_secs) = time_it(|| {
+        let _g = trace::span("fit.sample");
+        crate::nystrom::sample_landmarks(&q, cfg.m_sub, &mut rng)
+    });
 
     // Stage 4+5: assembly + solve. The native path consumes the shared
     // workspace (columns the estimator already evaluated are hits); the
     // XLA path keeps its own block dispatch.
-    let (nystrom, solve_secs) = time_it(|| match backend {
+    let (nystrom, solve_secs) = time_it(|| {
+        let _g = trace::span("fit.solve");
+        match backend {
         Backend::Native => {
             NystromKrr::fit_with_cache(&ds.y, cfg.lambda, &idx, &mut gram.borrow_mut())
         }
@@ -224,6 +231,7 @@ pub fn fit_with_backend(
             &idx,
             &backend,
         ),
+        }
     });
     let nystrom = nystrom?;
 

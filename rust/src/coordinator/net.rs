@@ -35,12 +35,25 @@
 //! |-----------------------|----------------------|-----------------------------------|
 //! | `POST /predict`       | `{"x": [..]}`        | `{"y": .., "model_version": ..}`  |
 //! | `POST /predict_batch` | `{"xs": [[..], ..]}` | `{"ys": [..], "model_version": ..}` |
-//! | `GET /healthz`        | —                    | `{"status": "ok", "model_version": ..}` |
-//! | `GET /metrics`        | —                    | QPS, p50/p95/p99 ms, full registry snapshot |
+//! | `GET /healthz`        | —                    | status, model/artifact version, uptime, build version |
+//! | `GET /metrics`        | —                    | JSON snapshot; Prometheus text with `Accept: text/plain` |
+//! | `GET /trace`          | —                    | Chrome/Perfetto trace-event JSON of the span ring |
 //!
 //! Errors are JSON too: `{"error": "..."}` with the appropriate status
 //! (400 malformed, 404 unknown route, 405 wrong method, 413 oversized
 //! body, 429 over admission, 431 oversized head, 503 stopped).
+//!
+//! # Per-request observability
+//!
+//! Every response carries a process-monotone `X-Request-Id` header.
+//! `POST /predict?trace=1` echoes the request's latency breakdown
+//! (`timing.batch_wait_ms` / `timing.eval_ms` from the inner batcher).
+//! Admission-queue wait is recorded per connection
+//! (`http.admission.wait.secs` timer, `http.queue.wait` span), JSON
+//! serialization as the `http.serialize` span, and requests slower than
+//! [`HttpConfig::slow_request_threshold`] bump the `http.slow_requests`
+//! counter — together the span ring covers admission wait → batcher
+//! wait → kernel eval → serialize for any slow request.
 //!
 //! # Replica topology
 //!
@@ -63,13 +76,14 @@ use super::server::Server;
 use crate::metrics::{Registry, Throughput};
 use crate::persist::Store;
 use crate::stream::ModelHandle;
+use crate::trace;
 use crate::util::json::{self, Json};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -81,6 +95,16 @@ const MAX_STALL_TICKS: u32 = 40;
 /// Read-timeout ticks an idle keep-alive connection may sit before the
 /// server closes it.
 const MAX_IDLE_TICKS: u32 = 2400;
+
+const CT_JSON: &str = "application/json";
+const CT_PROMETHEUS: &str = "text/plain; version=0.0.4";
+
+/// Pinned when the first listener starts; `/healthz` reports uptime
+/// relative to it.
+static PROC_START: OnceLock<Instant> = OnceLock::new();
+
+/// Monotone id stamped on every response as `X-Request-Id`.
+static NEXT_REQUEST_ID: AtomicU64 = AtomicU64::new(1);
 
 /// Listener configuration. `addr` of `"127.0.0.1:0"` binds an ephemeral
 /// port (read it back from [`HttpServer::addr`]).
@@ -97,6 +121,8 @@ pub struct HttpConfig {
     pub max_body_bytes: usize,
     /// Socket read timeout: the tick at which handlers notice stop.
     pub read_timeout: Duration,
+    /// Requests slower than this bump the `http.slow_requests` counter.
+    pub slow_request_threshold: Duration,
 }
 
 impl Default for HttpConfig {
@@ -110,6 +136,7 @@ impl Default for HttpConfig {
             retry_after_secs: 1,
             max_body_bytes: 1 << 20,
             read_timeout: Duration::from_millis(250),
+            slow_request_threshold: Duration::from_millis(250),
         }
     }
 }
@@ -129,11 +156,14 @@ impl HttpServer {
     /// `http.connections`, timer `http.request.secs`) land in
     /// `server.metrics` next to the batching metrics.
     pub fn start(server: Arc<Server>, cfg: HttpConfig) -> std::io::Result<HttpServer> {
+        PROC_START.get_or_init(Instant::now);
         let listener = TcpListener::bind(&cfg.addr)?;
         let addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let qps = Arc::new(Throughput::new());
-        let (conn_tx, conn_rx) = sync_channel::<TcpStream>(cfg.queue_cap.max(1));
+        // connections carry their admission timestamp so handlers can
+        // attribute queue wait per connection
+        let (conn_tx, conn_rx) = sync_channel::<(TcpStream, Instant)>(cfg.queue_cap.max(1));
         let conn_rx = Arc::new(Mutex::new(conn_rx));
         let mut threads = Vec::new();
         for _ in 0..cfg.handlers.max(1) {
@@ -145,7 +175,11 @@ impl HttpServer {
             threads.push(std::thread::spawn(move || loop {
                 // lock released before handling so other handlers can pull
                 let conn = { conn_rx.lock().unwrap_or_else(|p| p.into_inner()).recv() };
-                let Ok(conn) = conn else { break }; // accept loop gone + queue drained
+                // accept loop gone + queue drained
+                let Ok((conn, admitted)) = conn else { break };
+                let wait = admitted.elapsed();
+                server.metrics.record("http.admission.wait.secs", wait.as_secs_f64());
+                trace::record_manual("http.queue.wait", admitted, wait);
                 handle_connection(conn, &server, &cfg, &qps, &stop);
             }));
         }
@@ -159,15 +193,16 @@ impl HttpServer {
                         break; // woken by the dummy connection from stop()
                     }
                     let Ok(mut conn) = incoming else { continue };
-                    match conn_tx.try_send(conn) {
+                    match conn_tx.try_send((conn, Instant::now())) {
                         Ok(()) => {}
-                        Err(TrySendError::Full(c)) => {
+                        Err(TrySendError::Full((c, _))) => {
                             // explicit backpressure instead of unbounded queueing
                             conn = c;
                             server.metrics.incr("http.rejected", 1);
                             let _ = write_response(
                                 &mut conn,
                                 429,
+                                CT_JSON,
                                 &err_body("admission queue is full"),
                                 true,
                                 &[("Retry-After", retry.to_string())],
@@ -222,6 +257,10 @@ impl Drop for HttpServer {
 struct HttpRequest {
     method: String,
     path: String,
+    /// Raw query string (`trace=1` from `/predict?trace=1`; empty if none).
+    query: String,
+    /// Lower-cased `Accept` header (drives `/metrics` negotiation).
+    accept: String,
     body: String,
     close: bool,
 }
@@ -252,12 +291,17 @@ fn handle_connection(
             Incoming::Close => break,
             Incoming::Reject(status, msg) => {
                 server.metrics.incr("http.bad_request", 1);
-                let _ = write_response(&mut writer, status, &err_body(&msg), true, &[]);
+                let _ =
+                    write_response(&mut writer, status, CT_JSON, &err_body(&msg), true, &[]);
                 break;
             }
         };
+        let req_id = NEXT_REQUEST_ID.fetch_add(1, Ordering::Relaxed);
         let t0 = Instant::now();
-        let (status, body) = dispatch(&req, server, qps);
+        let (status, ctype, body) = {
+            let _g = trace::span("http.request");
+            dispatch(&req, server, qps)
+        };
         server.metrics.incr("http.requests", 1);
         if status == 400 {
             server.metrics.incr("http.bad_request", 1);
@@ -266,49 +310,76 @@ fn handle_connection(
         // during a drain, answer the in-flight request but don't keep
         // the connection alive past it
         let close = req.close || stop.load(Ordering::SeqCst);
-        let wrote = write_response(&mut writer, status, &body, close, &[]);
-        server.metrics.record("http.request.secs", t0.elapsed().as_secs_f64());
+        let wrote = write_response(
+            &mut writer,
+            status,
+            ctype,
+            &body,
+            close,
+            &[("X-Request-Id", req_id.to_string())],
+        );
+        let elapsed = t0.elapsed();
+        server.metrics.record("http.request.secs", elapsed.as_secs_f64());
+        if elapsed >= cfg.slow_request_threshold {
+            server.metrics.incr("http.slow_requests", 1);
+        }
         if wrote.is_err() || close {
             break;
         }
     }
 }
 
-fn dispatch(req: &HttpRequest, server: &Server, qps: &Throughput) -> (u16, String) {
+fn dispatch(req: &HttpRequest, server: &Server, qps: &Throughput) -> (u16, &'static str, String) {
     match (req.method.as_str(), req.path.as_str()) {
         ("POST", "/predict") => {
             // lazy scan: no tree allocation on the hot path
             let Some(x) = json::scan_f64s(&req.body, "x") else {
-                return (400, err_body(r#"expected body {"x": [numbers]}"#));
+                return (400, CT_JSON, err_body(r#"expected body {"x": [numbers]}"#));
             };
             if x.is_empty() {
-                return (400, err_body("x must be non-empty"));
+                return (400, CT_JSON, err_body("x must be non-empty"));
             }
             match server.try_predict(&x) {
-                Ok(p) => (
-                    200,
-                    Json::obj(vec![
+                Ok(p) => {
+                    let mut fields = vec![
                         ("y", Json::Num(p.value)),
                         ("model_version", Json::Num(p.model_version as f64)),
-                    ])
-                    .to_string(),
-                ),
-                Err(_) => (503, err_body("prediction server is stopped")),
+                    ];
+                    // ?trace=1: echo this request's latency breakdown so a
+                    // client sees where its time went without scraping
+                    if has_query_flag(&req.query, "trace") {
+                        fields.push((
+                            "timing",
+                            Json::obj(vec![
+                                ("batch_wait_ms", Json::Num(p.batch_wait_secs * 1e3)),
+                                ("eval_ms", Json::Num(p.eval_secs * 1e3)),
+                            ]),
+                        ));
+                    }
+                    let t_ser = Instant::now();
+                    let body = Json::obj(fields).to_string();
+                    trace::record_manual("http.serialize", t_ser, t_ser.elapsed());
+                    (200, CT_JSON, body)
+                }
+                Err(_) => (503, CT_JSON, err_body("prediction server is stopped")),
             }
         }
-        ("POST", "/predict_batch") => predict_batch(&req.body, server),
-        ("GET", "/healthz") => (
-            200,
-            Json::obj(vec![
-                ("status", Json::Str("ok".to_string())),
-                ("model_version", Json::Num(server.model_handle().version() as f64)),
-            ])
-            .to_string(),
-        ),
+        ("POST", "/predict_batch") => {
+            let (status, body) = predict_batch(&req.body, server);
+            (status, CT_JSON, body)
+        }
+        ("GET", "/healthz") => (200, CT_JSON, healthz_body(server)),
+        ("GET", "/trace") => (200, CT_JSON, trace::chrome_trace_json().to_string()),
         ("GET", "/metrics") => {
+            // content negotiation: Prometheus scrapers ask for text/plain,
+            // everyone else keeps the JSON snapshot
+            if req.accept.contains("text/plain") {
+                return (200, CT_PROMETHEUS, server.metrics.prometheus_text());
+            }
             let q = server.metrics.timer_quantiles("http.request.secs", &[0.5, 0.95, 0.99]);
             (
                 200,
+                CT_JSON,
                 Json::obj(vec![
                     ("qps", Json::Num(qps.per_sec())),
                     ("requests", Json::Num(qps.total() as f64)),
@@ -320,11 +391,38 @@ fn dispatch(req: &HttpRequest, server: &Server, qps: &Throughput) -> (u16, Strin
                 .to_string(),
             )
         }
-        (_, "/predict" | "/predict_batch" | "/healthz" | "/metrics") => {
-            (405, err_body("method not allowed"))
+        (_, "/predict" | "/predict_batch" | "/healthz" | "/metrics" | "/trace") => {
+            (405, CT_JSON, err_body("method not allowed"))
         }
-        _ => (404, err_body("no such endpoint")),
+        _ => (404, CT_JSON, err_body("no such endpoint")),
     }
+}
+
+/// `?flag=1` (or bare `?flag`) in a query string; `flag=0` is off.
+fn has_query_flag(query: &str, flag: &str) -> bool {
+    query.split('&').any(|kv| {
+        kv == flag
+            || kv
+                .strip_prefix(flag)
+                .and_then(|rest| rest.strip_prefix('='))
+                .map_or(false, |v| !v.is_empty() && v != "0")
+    })
+}
+
+fn healthz_body(server: &Server) -> String {
+    let uptime = PROC_START.get().map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
+    let version = match std::env::var("LEVERKRR_BUILD_ID") {
+        Ok(id) if !id.is_empty() => format!("{}+{id}", env!("CARGO_PKG_VERSION")),
+        _ => env!("CARGO_PKG_VERSION").to_string(),
+    };
+    Json::obj(vec![
+        ("status", Json::Str("ok".to_string())),
+        ("model_version", Json::Num(server.model_handle().version() as f64)),
+        ("artifact_version", Json::Num(server.metrics.gauge("serve.artifact_version"))),
+        ("uptime_secs", Json::Num(uptime)),
+        ("version", Json::Str(version)),
+    ])
+    .to_string()
 }
 
 fn predict_batch(body: &str, server: &Server) -> (u16, String) {
@@ -498,14 +596,19 @@ fn read_request(
         LineRead::TooLong => return Incoming::Reject(431, "request line too long".to_string()),
     };
     let mut parts = req_line.split_whitespace();
-    let (method, path) = match (parts.next(), parts.next(), parts.next()) {
+    let (method, path, query) = match (parts.next(), parts.next(), parts.next()) {
         (Some(m), Some(p), Some(v)) if v.starts_with("HTTP/1.") => {
-            (m.to_string(), p.to_string())
+            let (path, query) = match p.split_once('?') {
+                Some((a, b)) => (a.to_string(), b.to_string()),
+                None => (p.to_string(), String::new()),
+            };
+            (m.to_string(), path, query)
         }
         _ => return Incoming::Reject(400, "malformed request line".to_string()),
     };
     let mut content_len = 0usize;
     let mut close = false;
+    let mut accept = String::new();
     let mut head_bytes = req_line.len();
     loop {
         let line = match read_crlf_line(reader, MAX_HEAD_BYTES, None) {
@@ -528,6 +631,7 @@ fn read_request(
                     Err(_) => return Incoming::Reject(400, "bad content-length".to_string()),
                 },
                 "connection" => close = value.eq_ignore_ascii_case("close"),
+                "accept" => accept = value.to_ascii_lowercase(),
                 _ => {}
             }
         }
@@ -549,7 +653,7 @@ fn read_request(
     } else {
         String::new()
     };
-    Incoming::Req(HttpRequest { method, path, body, close })
+    Incoming::Req(HttpRequest { method, path, query, accept, body, close })
 }
 
 // ---- response writing ----------------------------------------------------
@@ -575,14 +679,16 @@ fn reason(status: u16) -> &'static str {
 fn write_response(
     stream: &mut TcpStream,
     status: u16,
+    content_type: &str,
     body: &str,
     close: bool,
     extra: &[(&str, String)],
 ) -> std::io::Result<()> {
     let mut head = format!(
-        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n",
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n",
         status,
         reason(status),
+        content_type,
         body.len(),
         if close { "close" } else { "keep-alive" }
     );

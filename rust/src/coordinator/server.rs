@@ -23,6 +23,7 @@
 
 use super::FittedModel;
 use crate::linalg::Mat;
+use crate::trace;
 use crate::metrics::Registry;
 use crate::stream::ModelHandle;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -49,11 +50,18 @@ impl Default for ServerConfig {
     }
 }
 
-/// A served prediction plus the version of the model that produced it.
+/// A served prediction plus the version of the model that produced it
+/// and a per-request latency breakdown (what the HTTP tier echoes back
+/// under `?trace=1`).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Prediction {
     pub value: f64,
     pub model_version: u64,
+    /// Enqueue → evaluation start: time spent waiting in the batcher.
+    pub batch_wait_secs: f64,
+    /// Kernel eval + matvec wall time of the batch group that answered
+    /// this request (shared across the group's requests).
+    pub eval_secs: f64,
 }
 
 /// The server is no longer accepting requests (stopped or shut down).
@@ -260,6 +268,7 @@ fn serve_batch(handle: &ModelHandle, batch: Vec<Request>, metrics: &Registry) {
     if batch.is_empty() {
         return;
     }
+    let _span = trace::span("serve.batch");
     // one model load per batch: in-flight work keeps this Arc even if a
     // publish lands mid-batch
     let current = handle.load();
@@ -274,13 +283,17 @@ fn serve_batch(handle: &ModelHandle, batch: Vec<Request>, metrics: &Registry) {
         groups.entry(req.x.len()).or_default().push(req);
     }
     for (d, group) in groups {
+        let t_eval = Instant::now();
         let preds: Vec<f64> = if d == want_d {
+            let _g = trace::span("serve.batch.eval");
             let xq = Mat::from_fn(group.len(), d, |i, j| group[i].x[j]);
             current.model.predict_batch(&xq)
         } else {
             metrics.incr("serve.bad_dimension", group.len() as u64);
             vec![f64::NAN; group.len()]
         };
+        let eval_secs = t_eval.elapsed().as_secs_f64();
+        metrics.record("serve.eval.secs", eval_secs);
         let now = Instant::now();
         for (req, pred) in group.into_iter().zip(preds) {
             metrics.record(
@@ -288,9 +301,14 @@ fn serve_batch(handle: &ModelHandle, batch: Vec<Request>, metrics: &Registry) {
                 now.saturating_duration_since(req.enqueued).as_secs_f64(),
             );
             metrics.incr("serve.requests", 1);
-            let _ = req
-                .resp
-                .send(Prediction { value: pred, model_version: current.version });
+            let _ = req.resp.send(Prediction {
+                value: pred,
+                model_version: current.version,
+                batch_wait_secs: t_eval
+                    .saturating_duration_since(req.enqueued)
+                    .as_secs_f64(),
+                eval_secs,
+            });
         }
     }
 }

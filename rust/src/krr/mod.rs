@@ -7,6 +7,7 @@
 
 use crate::kernels::Kernel;
 use crate::linalg::{Cholesky, Mat};
+use crate::trace;
 
 /// λ rules used by the paper's experiments.
 pub mod tune;
@@ -48,6 +49,7 @@ pub struct ExactKrr {
 impl ExactKrr {
     /// Solve the full problem. O(n³) time, O(n²) space.
     pub fn fit(kernel: Kernel, x: &Mat, y: &[f64], lambda: f64) -> anyhow::Result<ExactKrr> {
+        let _span = trace::span("krr.fit");
         let n = x.rows;
         anyhow::ensure!(y.len() == n, "y length mismatch");
         let mut a = kernel.matrix_sym(x);
@@ -67,6 +69,7 @@ impl ExactKrr {
     }
 
     pub fn predict(&self, xq: &Mat) -> Vec<f64> {
+        let _span = trace::span("krr.predict");
         let kq = self.kernel.matrix(xq, &self.x_train);
         crate::linalg::matvec(&kq, &self.omega)
     }
@@ -81,6 +84,7 @@ impl ExactKrr {
     /// K(K+nλI)^{−1} = I − nλ(K+nλI)^{−1}, so the i-th diagonal is
     /// 1 − nλ·eᵢᵀ(K+nλI)^{−1}eᵢ = 1 − nλ·‖L^{−1}eᵢ‖².
     pub fn rescaled_leverage(&self) -> Vec<f64> {
+        let _span = trace::span("krr.rescaled_leverage");
         let n = self.x_train.rows;
         let nlam = n as f64 * self.lambda;
         let out = crate::util::pool::par_chunks(n, |range| {

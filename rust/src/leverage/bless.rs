@@ -14,6 +14,7 @@
 use super::rls::dictionary_rls_in;
 use super::{LeverageContext, LeverageEstimator};
 use crate::linalg::GramCache;
+use crate::trace;
 use crate::util::rng::{AliasTable, Rng};
 
 #[derive(Clone, Debug)]
@@ -36,6 +37,7 @@ impl LeverageEstimator for Bless {
     }
 
     fn estimate(&self, ctx: &LeverageContext, rng: &mut Rng) -> Vec<f64> {
+        let _span = trace::span("leverage.bless");
         match ctx.cache {
             Some(shared) => self.run(ctx, &mut shared.borrow_mut(), rng),
             None => {

@@ -2,6 +2,7 @@
 
 use super::{LeverageContext, LeverageEstimator};
 use crate::linalg::Cholesky;
+use crate::trace;
 use crate::util::rng::Rng;
 
 /// diag(K(K+nλI)^{−1}) computed exactly. Used as the reference in Table 1
@@ -43,6 +44,7 @@ impl LeverageEstimator for ExactEstimator {
     }
 
     fn estimate(&self, ctx: &LeverageContext, _rng: &mut Rng) -> Vec<f64> {
+        let _span = trace::span("leverage.exact");
         rescaled_leverage_exact(ctx.x, ctx.kernel, ctx.lambda)
     }
 }

@@ -22,6 +22,7 @@
 use super::{LeverageContext, LeverageEstimator};
 use crate::kernels::Kernel;
 use crate::linalg::{Cholesky, GramCache, Mat};
+use crate::trace;
 use crate::util::rng::{AliasTable, Rng};
 
 /// Approximate rescaled leverage scores of the rows of `x` using landmark
@@ -183,6 +184,7 @@ impl LeverageEstimator for RecursiveRls {
     }
 
     fn estimate(&self, ctx: &LeverageContext, rng: &mut Rng) -> Vec<f64> {
+        let _span = trace::span("leverage.rls");
         match ctx.cache {
             Some(shared) => self.run(ctx, &mut shared.borrow_mut(), rng),
             None => {

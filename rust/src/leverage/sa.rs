@@ -42,6 +42,7 @@ use crate::kde::{self, KdeMethod};
 use crate::kernels::{Kernel, KernelSpec};
 use crate::quadrature::{integrate_semi_infinite_panels, GaussLegendre};
 use crate::special::{lgamma, polylog_neg, sphere_surface};
+use crate::trace;
 use crate::util::rng::Rng;
 use std::f64::consts::PI;
 
@@ -285,6 +286,7 @@ impl SaEstimator {
                 // per-point quadrature on the shared pool (each point's
                 // panels are evaluated independently → thread-count
                 // invariant)
+                let _span = trace::span("leverage.sa.quadrature");
                 crate::util::pool::par_rows(n, |i| {
                     sa_value_quadrature(stab(p_hat[i]), &sd, lambda, &gl)
                 })
@@ -302,23 +304,28 @@ impl LeverageEstimator for SaEstimator {
     }
 
     fn estimate(&self, ctx: &LeverageContext, rng: &mut Rng) -> Vec<f64> {
+        let _span = trace::span("leverage.sa");
         let n = ctx.n();
-        let p_hat: Vec<f64> = if self.use_true_density {
-            ctx.p_true
-                .expect("use_true_density requires ctx.p_true")
-                .to_vec()
-        } else {
-            let h = self
-                .bandwidth
-                .unwrap_or_else(|| kde::bandwidth::scott(n, ctx.d()));
-            let mut p = kde::density_at_points(ctx.x, h, self.kde, rng);
-            if self.loo {
-                for pi in &mut p {
-                    *pi = kde::loo_correct(*pi, n, ctx.d(), h);
+        let p_hat: Vec<f64> = {
+            let _kde = trace::span("leverage.sa.density");
+            if self.use_true_density {
+                ctx.p_true
+                    .expect("use_true_density requires ctx.p_true")
+                    .to_vec()
+            } else {
+                let h = self
+                    .bandwidth
+                    .unwrap_or_else(|| kde::bandwidth::scott(n, ctx.d()));
+                let mut p = kde::density_at_points(ctx.x, h, self.kde, rng);
+                if self.loo {
+                    for pi in &mut p {
+                        *pi = kde::loo_correct(*pi, n, ctx.d(), h);
+                    }
                 }
+                p
             }
-            p
         };
+        let _scores = trace::span("leverage.sa.scores");
         self.scores_from_density(&p_hat, ctx.kernel, ctx.lambda, ctx.d())
     }
 }

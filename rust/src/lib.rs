@@ -101,7 +101,10 @@
 //!   above.
 //! * [`metrics`] — timers / counters / streaming summaries, plus a
 //!   process-global registry ([`metrics::global`]) for library-internal
-//!   events (e.g. KDE grid fallbacks).
+//!   events (e.g. KDE grid fallbacks), with bounded log-scale timer
+//!   histograms and Prometheus text exposition (see "Observability").
+//! * [`trace`] — hierarchical RAII spans, off by default, exported as
+//!   Chrome/Perfetto trace-event JSON (see "Observability").
 //! * [`linalg`] — dense row-major matrices, blocked matmul, Cholesky
 //!   (rank-one *and* fused rank-k up/downdates), the [`linalg::blocked`]
 //!   pairwise distance/Gram engine behind every pairwise hot path, and
@@ -203,6 +206,42 @@
 //! `bench-serve` sweeps QPS / tail latency over batch size × replica
 //! count into `BENCH_serve.json`.
 //!
+//! ## Observability
+//!
+//! Two dependency-free layers answer "where does the time go" without
+//! perturbing any determinism contract:
+//!
+//! **Hierarchical spans** ([`trace`]): `trace::span("leverage.sa")`
+//! returns an RAII guard; on drop the span lands in a bounded ring
+//! ([`trace::RING_CAP`] records — oldest overwritten, drops counted)
+//! and a per-path count/total/self-time aggregate. Self-time is total
+//! minus same-thread children, via thread-local frame stacks. Tracing
+//! is **off by default** — a disabled [`trace::span`] is one relaxed
+//! atomic load, no clock read — and enabled by `LEVERKRR_TRACE=1`, the
+//! `--trace` CLI switch, or [`trace::set_enabled`]. Spans only *read*
+//! the clock, so results are bit-identical with tracing on or off
+//! (`rust/tests/trace_parity.rs` pins this at 1 and 4 threads), and
+//! `bench-obs` pins the disabled-path overhead at <2% on the fig1
+//! pipeline. Instrumented layers: the pool (dispatch/compute), the
+//! blocked engine, the Gram cache (hit/miss-attributed eval), every
+//! leverage estimator, Nyström, KRR, stream ingestion, persistence,
+//! and the serving path (per-request admission → batch → solve →
+//! serialize breakdown; `?trace=1` echoes it per response). Export:
+//! [`trace::chrome_trace_json`] renders Chrome/Perfetto trace-event
+//! JSON (`trace` CLI subcommand, serve-tier `GET /trace`).
+//!
+//! **Bounded metrics** ([`metrics`]): `Registry` timers are fixed-size
+//! log-scale histograms — 32 geometric buckets/decade over `1e-9..1e4`
+//! seconds plus exact count/sum/min/max, so memory per timer is a
+//! constant ~3.3 KiB at any request volume and quantiles (bucket walk
+//! + linear interpolation, ≤ ~3.8% relative error) cover the whole
+//! run. Snapshots are sorted-map JSON, byte-identical for identical
+//! state; [`metrics::Registry::prometheus_text`] renders the same
+//! state as Prometheus text exposition (`leverkrr_` prefix, `_total`
+//! counters, `_seconds` histograms with a per-decade `le` ladder,
+//! NaN/inf skipped, families sorted) — `GET /metrics` serves it to any
+//! client whose `Accept` header asks for `text/plain`.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -218,6 +257,7 @@
 
 pub mod util;
 pub mod metrics;
+pub mod trace;
 pub mod linalg;
 pub mod special;
 pub mod quadrature;

@@ -37,6 +37,7 @@
 //! `map_matrix_sym(x, f)` equals `map_matrix(x, x, f)` bit for bit.
 
 use super::Mat;
+use crate::trace;
 use crate::util::pool;
 
 /// Packed tile width (columns of `y` per transpose-packed tile). Purely
@@ -100,6 +101,7 @@ fn tile_r2(xi: &[f64], nxi: f64, yt: &[f64], ny_tile: &[f64], acc: &mut [f64]) {
 /// `out[(i, j)] = f(r²(x_i, y_j))` — the blocked cross-matrix map behind
 /// [`crate::kernels::Kernel::matrix`] and [`sqdist_matrix`].
 pub fn map_matrix(x: &Mat, y: &Mat, f: impl Fn(f64) -> f64 + Sync) -> Mat {
+    let _span = trace::span("blocked.map_matrix");
     assert_eq!(x.cols, y.cols, "dimension mismatch");
     let (n, m, d) = (x.rows, y.rows, x.cols);
     if n == 0 || m == 0 {
@@ -135,6 +137,7 @@ pub fn map_matrix(x: &Mat, y: &Mat, f: impl Fn(f64) -> f64 + Sync) -> Mat {
 /// above the diagonal, mirrors the rest (bitwise-identical — see the
 /// module docs).
 pub fn map_matrix_sym(x: &Mat, f: impl Fn(f64) -> f64 + Sync) -> Mat {
+    let _span = trace::span("blocked.map_matrix_sym");
     let (n, d) = (x.rows, x.cols);
     if n == 0 {
         return Mat { rows: 0, cols: 0, data: Vec::new() };
@@ -185,6 +188,7 @@ pub fn sqdist_matrix(x: &Mat, y: &Mat) -> Mat {
 /// ascending into a single accumulator, so the reduction tree depends
 /// only on the data order, never on threads or tile width.
 pub fn row_reduce(q: &Mat, data: &Mat, f: impl Fn(f64) -> f64 + Sync) -> Vec<f64> {
+    let _span = trace::span("blocked.row_reduce");
     assert_eq!(q.cols, data.cols, "dimension mismatch");
     let (n, m, d) = (q.rows, data.rows, q.cols);
     if n == 0 {
@@ -224,6 +228,7 @@ pub fn row_reduce(q: &Mat, data: &Mat, f: impl Fn(f64) -> f64 + Sync) -> Vec<f64
 /// The streaming dictionary's kernel-row path; bitwise consistent with
 /// the matching [`map_matrix_sym`] entries (shared [`tile_r2`]).
 pub fn map_row(x: &[f64], y: &Mat, f: impl Fn(f64) -> f64 + Sync) -> Vec<f64> {
+    let _span = trace::span("blocked.map_row");
     assert_eq!(x.len(), y.cols, "dimension mismatch");
     let (m, d) = (y.rows, y.cols);
     if m == 0 {
@@ -248,6 +253,7 @@ pub fn map_row(x: &[f64], y: &Mat, f: impl Fn(f64) -> f64 + Sync) -> Vec<f64> {
 /// Nearest center per row: `out[i] = (argmin_j r²(x_i, c_j), min r²)`,
 /// ties broken toward the lower index. The k-means assignment step.
 pub fn nearest_rows(x: &Mat, centers: &Mat) -> Vec<(usize, f64)> {
+    let _span = trace::span("blocked.nearest_rows");
     assert_eq!(x.cols, centers.cols, "dimension mismatch");
     let (n, k, d) = (x.rows, centers.rows, x.cols);
     assert!(k > 0, "need at least one center");

@@ -54,6 +54,7 @@
 
 use super::{Cholesky, Mat};
 use crate::kernels::Kernel;
+use crate::trace;
 use std::collections::{HashMap, VecDeque};
 
 /// Default bound on cached columns (each column is n `f64`s): cap the
@@ -224,6 +225,7 @@ impl<'a> GramCache<'a> {
         if dict == self.dict.as_slice() {
             return;
         }
+        let _span = trace::span("gramcache.set_landmarks");
         for &j in dict {
             assert!(j < self.x.rows, "landmark index {j} out of range (n = {})", self.x.rows);
         }
@@ -312,6 +314,7 @@ impl<'a> GramCache<'a> {
     /// mode gathers from the cached columns; reference mode evaluates
     /// the requested block directly — bitwise identical outputs.
     pub fn block(&mut self, rows: Option<&[usize]>) -> Mat {
+        let _span = trace::span("gramcache.block");
         let m = self.dict.len();
         if m == 0 {
             let nrows = rows.map_or(self.x.rows, <[usize]>::len);
@@ -343,6 +346,7 @@ impl<'a> GramCache<'a> {
         let n = self.x.rows;
         if !self.caching {
             self.miss(idxs.len());
+            let _span = trace::span("gramcache.miss.eval");
             return self.kernel.matrix(self.x, &gather_rows(self.x, idxs));
         }
         let mut missing: Vec<usize> = Vec::new();
@@ -357,6 +361,9 @@ impl<'a> GramCache<'a> {
             }
         }
         if !missing.is_empty() {
+            // miss-attributed kernel eval: the only place a caching
+            // workspace pays for K columns
+            let _span = trace::span("gramcache.miss.eval");
             let blk = self.kernel.matrix(self.x, &gather_rows(self.x, &missing));
             for (c, &j) in missing.iter().enumerate() {
                 let col: Vec<f64> = (0..n).map(|i| blk[(i, c)]).collect();
@@ -366,8 +373,9 @@ impl<'a> GramCache<'a> {
             self.miss(missing.len());
         }
         self.hit(hits);
-        // resolve the m column slices once — the gather itself must not
-        // pay a hash probe per element
+        // hit-attributed gather; resolve the m column slices once — the
+        // gather itself must not pay a hash probe per element
+        let _span = trace::span("gramcache.hit.gather");
         let cols: Vec<&[f64]> = idxs.iter().map(|j| self.cols[j].as_slice()).collect();
         Mat::from_fn(n, idxs.len(), |i, c| cols[c][i])
     }

@@ -10,9 +10,14 @@
 //!   online Nyström coordinator; report accuracy-vs-time, update-latency
 //!   quantiles, and the final gap to a full batch fit.
 //! * `gen-data`   — write a synthetic dataset to CSV.
+//! * `trace`      — run a traced fit → serve exercise, print the span
+//!   summary, and dump Chrome/Perfetto trace-event JSON.
 //! * `bench-fig1` / `bench-table1` / `bench-fig2` / `bench-fig3` /
 //!   `bench-perf` / `bench-stream` — regenerate tables & figures.
 //! * `selftest`   — quick end-to-end sanity run (native + XLA if built).
+//!
+//! The global `--trace` switch (any command) enables span tracing for
+//! the run, equivalent to `LEVERKRR_TRACE=1`.
 
 use leverkrr::bench_harness::{experiments, ExpOptions};
 use leverkrr::coordinator::{
@@ -28,7 +33,13 @@ use leverkrr::util::json::Json;
 use leverkrr::util::rng::Rng;
 
 fn main() {
-    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    // global switch: `--trace` anywhere enables span tracing for the run
+    // (same effect as LEVERKRR_TRACE=1, but wins over the environment)
+    if let Some(pos) = args.iter().position(|a| a == "--trace") {
+        args.remove(pos);
+        leverkrr::trace::set_enabled(true);
+    }
     let Some((cmd, rest)) = args.split_first() else {
         print_usage();
         std::process::exit(2);
@@ -40,6 +51,7 @@ fn main() {
         "tune" => cmd_tune(&rest),
         "leverage" => cmd_leverage(&rest),
         "serve" => cmd_serve(&rest),
+        "trace" => cmd_trace(&rest),
         "stream" => cmd_stream(&rest),
         "export" => cmd_export(&rest),
         "import" => cmd_import(&rest),
@@ -81,6 +93,10 @@ fn main() {
             experiments::serve::run(&exp_opts("bench-serve", &rest));
             0
         }
+        "bench-obs" => {
+            experiments::obs::run(&exp_opts("bench-obs", &rest));
+            0
+        }
         "selftest" => cmd_selftest(),
         "--help" | "-h" | "help" => {
             print_usage();
@@ -115,6 +131,8 @@ commands:
   import       load an artifact in a fresh process, verify + serve it
   models       list / garbage-collect the artifact store
   gen-data     write a synthetic dataset (CSV)
+  trace        traced fit + serve exercise: span summary table on stdout,
+               Chrome/Perfetto trace-event JSON to --out
   bench-fig1   Figure 1: runtime vs error trade-off (3-d bimodal)
   bench-table1 Table 1: leverage approximation accuracy (UCI-like)
   bench-fig2   Figure 2: SA vs exact rescaled leverage (1-d)
@@ -124,7 +142,11 @@ commands:
   bench-stream streaming update latency vs periodic full refit
   bench-persist artifact save/load/checkpoint-restore latency vs n, m
   bench-serve  HTTP-tier sustained QPS + tail latency vs batch size, replicas
-  selftest     quick end-to-end sanity run"
+  bench-obs    span-tracer overhead on the fig1 pipeline (<2% budget)
+  selftest     quick end-to-end sanity run
+
+global flags:
+  --trace      enable span tracing for any command (= LEVERKRR_TRACE=1)"
     );
 }
 
@@ -480,6 +502,55 @@ fn serve_http(
         reg.counter("replica.swaps"),
     );
     print_global_counters();
+    0
+}
+
+/// `trace`: run the full pipeline — fit (leverage → landmark sampling →
+/// Nyström solve) then a served predict burst — with span tracing
+/// forced on, print the per-path aggregation table, and write the span
+/// ring as Chrome/Perfetto trace-event JSON (load it at
+/// chrome://tracing or ui.perfetto.dev).
+fn cmd_trace(argv: &[String]) -> i32 {
+    let cmd = data_flags(Command::new(
+        "trace",
+        "traced fit + serve exercise: span summary + Chrome trace JSON",
+    ))
+    .flag("out", "trace.json", "write Chrome/Perfetto trace-event JSON here")
+    .flag("requests", "256", "served predict requests to trace");
+    let a = match cmd.parse(argv) {
+        Ok(a) => a,
+        Err(m) => {
+            eprintln!("{m}");
+            return 2;
+        }
+    };
+    leverkrr::trace::set_enabled(true);
+    leverkrr::trace::reset();
+    let (ds, _) = dataset_from(&a);
+    let cfg = build_cfg(&a, &ds);
+    let model = std::sync::Arc::new(
+        fit_with_backend(&ds, &cfg, backend_from(&a)).expect("fit failed"),
+    );
+    // a served burst so the serving-path spans (serve.batch /
+    // serve.batch.eval) land in the ring next to the fit pipeline's
+    let server = Server::start(model, ServerConfig::default());
+    let n_req = a.get_usize("requests").unwrap_or(256);
+    let d = ds.d();
+    let mut rng = Rng::seed_from_u64(7);
+    for _ in 0..n_req {
+        let q: Vec<f64> = (0..d).map(|_| rng.f64()).collect();
+        std::hint::black_box(server.predict(&q));
+    }
+    server.shutdown();
+    print!("{}", leverkrr::trace::summary_table());
+    let out = a.get("out").unwrap_or("trace.json");
+    let doc = leverkrr::trace::chrome_trace_json();
+    std::fs::write(out, doc.to_string_pretty()).expect("write trace json");
+    println!(
+        "wrote {out} ({} spans, {} dropped)",
+        leverkrr::trace::records().len(),
+        leverkrr::trace::dropped()
+    );
     0
 }
 

@@ -3,7 +3,18 @@
 //!
 //! Every pipeline stage in the coordinator and every bench driver records
 //! through these types; `Registry` snapshots serialize to JSON so bench
-//! outputs are machine-readable.
+//! outputs are machine-readable, and [`Registry::prometheus_text`]
+//! renders the same state in Prometheus text exposition format for
+//! scrapers hitting the serve tier's `GET /metrics`.
+//!
+//! Timers are **fixed-bucket log-scale histograms** (see
+//! [`LogHistogram`]): geometric buckets, [`HIST_BUCKETS_PER_DECADE`] per
+//! decade over `1e-9..1e4` seconds, with exact count/sum/min/max kept by
+//! a streaming [`Summary`]. Memory per timer is a constant ~3.3 KiB no
+//! matter how many durations are recorded — a week of sustained serving
+//! costs the same as a unit test — and quantiles are answered by
+//! cumulative-count walk + linear interpolation inside the landing
+//! bucket (≤ ~3.8% relative error at 32 buckets/decade).
 
 use crate::util::json::Json;
 use std::collections::BTreeMap;
@@ -95,7 +106,8 @@ impl Summary {
     }
 }
 
-/// Exact small-sample quantiles (stores samples; fine for bench scale).
+/// Exact small-sample quantiles (stores samples; fine for bench scale —
+/// the [`Registry`] timers use bounded [`LogHistogram`]s instead).
 #[derive(Clone, Debug, Default)]
 pub struct Quantiles {
     xs: Vec<f64>,
@@ -146,45 +158,155 @@ pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
     }
 }
 
-/// Samples retained per timer for quantile estimation. A ring of the
-/// most recent values: bounds memory for always-on servers/streams while
-/// keeping quantiles exact over the trailing window (and exact over the
-/// whole run for anything that records fewer samples than the cap).
-const TIMER_SAMPLE_CAP: usize = 8192;
+/// Sort a sample clone (used by [`Quantiles`]; `total_cmp` so NaN
+/// samples order at the top instead of panicking monitoring code).
+fn sort_samples(mut v: Vec<f64>) -> Vec<f64> {
+    v.sort_by(f64::total_cmp);
+    v
+}
 
-/// Per-timer state: streaming moments + a bounded recent-sample ring.
+/// Geometric bucket resolution of timer histograms. 32 buckets/decade
+/// gives a bucket width ratio of 10^(1/32) ≈ 1.075, so a quantile read
+/// from linear interpolation inside one bucket is within ~3.8% of the
+/// true value.
+pub const HIST_BUCKETS_PER_DECADE: usize = 32;
+/// Lowest representable duration: 1e-9 s (1 ns). Anything smaller
+/// (including zero) lands in the underflow count.
+const HIST_MIN_EXP: i32 = -9;
+/// Highest representable duration: 1e4 s (~2.8 h). Anything larger —
+/// or NaN — lands in the overflow count.
+const HIST_MAX_EXP: i32 = 4;
+/// Total bucket count: 13 decades × 32 = 416 u64 slots ≈ 3.3 KiB.
+pub const HIST_BUCKETS: usize =
+    (HIST_MAX_EXP - HIST_MIN_EXP) as usize * HIST_BUCKETS_PER_DECADE;
+
+/// Fixed-bucket log-scale histogram over seconds. Constant memory:
+/// [`HIST_BUCKETS`] u64 counts plus underflow/overflow slots and an
+/// exact sum of the finite samples.
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    underflow: u64,
+    overflow: u64,
+    /// Exact sum of finite samples (NaN/±inf excluded so exposition
+    /// stays finite).
+    sum: f64,
+    total: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram {
+            counts: vec![0; HIST_BUCKETS],
+            underflow: 0,
+            overflow: 0,
+            sum: 0.0,
+            total: 0,
+        }
+    }
+}
+
+/// Upper bound (seconds) of native bucket `i`:
+/// `10^(HIST_MIN_EXP + (i+1)/HIST_BUCKETS_PER_DECADE)`.
+fn bucket_upper(i: usize) -> f64 {
+    10f64.powf(HIST_MIN_EXP as f64 + (i as f64 + 1.0) / HIST_BUCKETS_PER_DECADE as f64)
+}
+
+fn bucket_lower(i: usize) -> f64 {
+    10f64.powf(HIST_MIN_EXP as f64 + i as f64 / HIST_BUCKETS_PER_DECADE as f64)
+}
+
+impl LogHistogram {
+    fn add(&mut self, x: f64) {
+        self.total += 1;
+        if x.is_finite() {
+            self.sum += x;
+        }
+        if x.is_nan() || x >= 10f64.powi(HIST_MAX_EXP) {
+            self.overflow += 1;
+        } else if x < 10f64.powi(HIST_MIN_EXP) {
+            self.underflow += 1;
+        } else {
+            let idx = ((x.log10() - HIST_MIN_EXP as f64)
+                * HIST_BUCKETS_PER_DECADE as f64)
+                .floor() as usize;
+            self.counts[idx.min(HIST_BUCKETS - 1)] += 1;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Resident footprint in bytes — constant, asserted by the
+    /// bounded-memory regression test.
+    pub fn resident_bytes(&self) -> usize {
+        std::mem::size_of::<Self>() + self.counts.len() * std::mem::size_of::<u64>()
+    }
+
+    /// Quantile via cumulative-count walk + linear interpolation inside
+    /// the landing bucket. Underflow resolves to `min`, overflow to
+    /// `max` (the `Summary` tracks both exactly), so tail quantiles of
+    /// out-of-range samples stay honest.
+    fn quantile(&self, q: f64, min: f64, max: f64) -> f64 {
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        let target = q.clamp(0.0, 1.0) * self.total as f64;
+        let mut cum = self.underflow as f64;
+        if target <= cum && self.underflow > 0 {
+            return min;
+        }
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let next = cum + c as f64;
+            if target <= next {
+                let lo = bucket_lower(i).max(min);
+                let hi = bucket_upper(i).min(max);
+                let frac = ((target - cum) / c as f64).clamp(0.0, 1.0);
+                return lo + frac * (hi - lo).max(0.0);
+            }
+            cum = next;
+        }
+        // Landed in overflow (or ran past the last bucket): the exact
+        // max (f64::max ignores a NaN sample) is the best answer.
+        max
+    }
+
+    /// Cumulative count of samples ≤ `le` seconds, where `le` must be a
+    /// native bucket upper bound (used by the Prometheus renderer).
+    fn cumulative_through(&self, bucket_idx_exclusive: usize) -> u64 {
+        self.underflow
+            + self.counts[..bucket_idx_exclusive.min(HIST_BUCKETS)]
+                .iter()
+                .sum::<u64>()
+    }
+}
+
+/// Per-timer state: streaming moments + the bounded histogram.
 #[derive(Clone, Debug, Default)]
 struct TimerStats {
     summary: Summary,
-    samples: Vec<f64>,
-    /// Next ring slot to overwrite once `samples` reaches the cap.
-    cursor: usize,
+    hist: LogHistogram,
 }
 
 impl TimerStats {
     fn add(&mut self, x: f64) {
         self.summary.add(x);
-        if self.samples.len() < TIMER_SAMPLE_CAP {
-            self.samples.push(x);
-        } else {
-            self.samples[self.cursor] = x;
-            self.cursor = (self.cursor + 1) % TIMER_SAMPLE_CAP;
-        }
+        self.hist.add(x);
     }
-
-}
-
-/// Sort a sample clone taken under the registry lock — called with the
-/// lock already released so the O(cap·log cap) sort never blocks
-/// hot-path `record` calls.
-fn sort_samples(mut v: Vec<f64>) -> Vec<f64> {
-    // total_cmp: monitoring must never panic, even on NaN samples
-    v.sort_by(f64::total_cmp);
-    v
 }
 
 /// Thread-safe named counters, last-value gauges, and timing summaries
-/// (with p50/p95/p99).
+/// (with p50/p95/p99). Snapshots are deterministically ordered: every
+/// section is a sorted map, so two snapshots of identical state are
+/// byte-identical.
 #[derive(Default)]
 pub struct Registry {
     counters: Mutex<BTreeMap<String, AtomicU64>>,
@@ -227,9 +349,7 @@ impl Registry {
     /// Record a duration (seconds) under a named timer.
     pub fn record(&self, name: &str, secs: f64) {
         let mut m = self.timers.lock().unwrap();
-        m.entry(name.to_string())
-            .or_insert_with(|| TimerStats { summary: Summary::new(), ..Default::default() })
-            .add(secs);
+        m.entry(name.to_string()).or_default().add(secs);
     }
 
     /// Time a closure and record under `name`.
@@ -253,35 +373,45 @@ impl Registry {
             .lock()
             .unwrap()
             .get(name)
-            .map(|s| s.summary.mean() * s.summary.count() as f64)
+            .map(|s| s.hist.sum())
             .unwrap_or(0.0)
     }
 
-    /// Linear-interpolation quantile of a timer's recorded values
-    /// (q ∈ [0,1]; NaN for an unknown timer). Exact over the trailing
-    /// sample window — see [`TIMER_SAMPLE_CAP`]. The sort happens
-    /// outside the registry lock.
+    /// Histogram-interpolated quantile of a timer's recorded values
+    /// (q ∈ [0,1]; NaN for an unknown timer). Covers the *whole run* —
+    /// the log-scale buckets never age out — with ≤ ~3.8% relative
+    /// error from in-bucket interpolation.
     pub fn timer_quantile(&self, name: &str, q: f64) -> f64 {
         self.timer_quantiles(name, &[q])[0]
     }
 
-    /// Several quantiles of one timer with a single sample clone + sort
+    /// Several quantiles of one timer under a single lock acquisition
     /// (what the serve/stream CLIs use for p50/p95/p99 lines).
     pub fn timer_quantiles(&self, name: &str, qs: &[f64]) -> Vec<f64> {
-        let samples =
-            self.timers.lock().unwrap().get(name).map(|s| s.samples.clone());
-        match samples {
-            Some(v) => {
-                let sorted = sort_samples(v);
-                qs.iter().map(|&q| quantile_sorted(&sorted, q)).collect()
-            }
+        let m = self.timers.lock().unwrap();
+        match m.get(name) {
+            Some(s) => qs
+                .iter()
+                .map(|&q| s.hist.quantile(q, s.summary.min(), s.summary.max()))
+                .collect(),
             None => vec![f64::NAN; qs.len()],
         }
     }
 
-    /// Timer snapshots include the streaming moments plus p50/p95/p99
-    /// over the retained sample window. Sample sorting happens after the
-    /// locks are released, so a snapshot never stalls hot-path `record`s.
+    /// Resident bytes held by one timer's histogram — constant, used by
+    /// the bounded-memory regression test.
+    pub fn timer_resident_bytes(&self, name: &str) -> usize {
+        self.timers
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|s| s.hist.resident_bytes())
+            .unwrap_or(0)
+    }
+
+    /// Timer snapshots include the streaming moments plus histogram
+    /// p50/p95/p99. Every section is a sorted `BTreeMap`, so snapshots
+    /// of identical state serialize byte-identically.
     pub fn snapshot(&self) -> Json {
         let mut cj = BTreeMap::new();
         {
@@ -290,22 +420,29 @@ impl Registry {
                 cj.insert(k.clone(), Json::Num(v.load(Ordering::Relaxed) as f64));
             }
         }
-        let timer_data: Vec<(String, Json, Vec<f64>)> = {
-            let timers = self.timers.lock().unwrap();
-            timers
-                .iter()
-                .map(|(k, v)| (k.clone(), v.summary.to_json(), v.samples.clone()))
-                .collect()
-        };
         let mut tj = BTreeMap::new();
-        for (k, mut entry, samples) in timer_data {
-            if let Json::Obj(map) = &mut entry {
-                let sorted = sort_samples(samples);
-                map.insert("p50".to_string(), Json::Num(quantile_sorted(&sorted, 0.50)));
-                map.insert("p95".to_string(), Json::Num(quantile_sorted(&sorted, 0.95)));
-                map.insert("p99".to_string(), Json::Num(quantile_sorted(&sorted, 0.99)));
+        {
+            let timers = self.timers.lock().unwrap();
+            for (k, v) in timers.iter() {
+                let mut entry = v.summary.to_json();
+                if let Json::Obj(map) = &mut entry {
+                    let min = v.summary.min();
+                    let max = v.summary.max();
+                    map.insert(
+                        "p50".to_string(),
+                        Json::Num(v.hist.quantile(0.50, min, max)),
+                    );
+                    map.insert(
+                        "p95".to_string(),
+                        Json::Num(v.hist.quantile(0.95, min, max)),
+                    );
+                    map.insert(
+                        "p99".to_string(),
+                        Json::Num(v.hist.quantile(0.99, min, max)),
+                    );
+                }
+                tj.insert(k.clone(), entry);
             }
-            tj.insert(k, entry);
         }
         let mut gj = BTreeMap::new();
         {
@@ -320,6 +457,80 @@ impl Registry {
         obj.insert("timers".to_string(), Json::Obj(tj));
         Json::Obj(obj)
     }
+
+    /// Prometheus text exposition (version 0.0.4) of the full registry.
+    ///
+    /// Rules: metric families are prefixed `leverkrr_`, names are
+    /// sanitized (non-`[a-zA-Z0-9_]` → `_`), counters get a `_total`
+    /// suffix, timers render as `<name>_seconds` histograms with a
+    /// decade ladder of `le` bounds plus `+Inf`, `_sum`, `_count`.
+    /// Families are emitted in sorted order and NaN/±inf values are
+    /// skipped entirely, so the output is scrape-clean.
+    pub fn prometheus_text(&self) -> String {
+        // family name -> (type, body lines); BTreeMap for sorted output
+        let mut fams: BTreeMap<String, (&'static str, Vec<String>)> = BTreeMap::new();
+        {
+            let counters = self.counters.lock().unwrap();
+            for (k, v) in counters.iter() {
+                let name = format!("leverkrr_{}_total", sanitize_metric_name(k));
+                let val = v.load(Ordering::Relaxed);
+                fams.insert(name.clone(), ("counter", vec![format!("{name} {val}")]));
+            }
+        }
+        {
+            let gauges = self.gauges.lock().unwrap();
+            for (k, v) in gauges.iter() {
+                if !v.is_finite() {
+                    continue; // never emit NaN/inf
+                }
+                let name = format!("leverkrr_{}", sanitize_metric_name(k));
+                fams.insert(name.clone(), ("gauge", vec![format!("{name} {v}")]));
+            }
+        }
+        {
+            let timers = self.timers.lock().unwrap();
+            for (k, v) in timers.iter() {
+                let name = format!("leverkrr_{}_seconds", sanitize_metric_name(k));
+                let mut lines = Vec::new();
+                // One `le` bound per decade: coarse enough to stay
+                // readable, aligned exactly on native bucket edges so
+                // the cumulative counts are exact.
+                for exp in HIST_MIN_EXP..=HIST_MAX_EXP {
+                    let idx = ((exp - HIST_MIN_EXP) as usize) * HIST_BUCKETS_PER_DECADE;
+                    let cum = v.hist.cumulative_through(idx);
+                    lines.push(format!(
+                        "{name}_bucket{{le=\"1e{exp}\"}} {cum}"
+                    ));
+                }
+                lines.push(format!(
+                    "{name}_bucket{{le=\"+Inf\"}} {}",
+                    v.hist.count()
+                ));
+                let sum = v.hist.sum();
+                let sum = if sum.is_finite() { sum } else { 0.0 };
+                lines.push(format!("{name}_sum {sum}"));
+                lines.push(format!("{name}_count {}", v.hist.count()));
+                fams.insert(name, ("histogram", lines));
+            }
+        }
+        let mut out = String::new();
+        for (name, (kind, lines)) in fams {
+            out.push_str(&format!("# TYPE {name} {kind}\n"));
+            for l in lines {
+                out.push_str(&l);
+                out.push('\n');
+            }
+        }
+        out
+    }
+}
+
+/// Prometheus metric-name sanitization: `[a-zA-Z0-9_]` pass through,
+/// everything else (dots in our timer names) becomes `_`.
+fn sanitize_metric_name(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' { c } else { '_' })
+        .collect()
 }
 
 /// Throughput meter: items processed per second over a window.
@@ -400,6 +611,9 @@ mod tests {
         assert!(p50.is_finite(), "p50 poisoned: {p50}");
         let snap = r.snapshot();
         assert!(Json::parse(&snap.to_string_pretty()).is_ok());
+        // and the Prometheus exposition stays NaN-free
+        let text = r.prometheus_text();
+        assert!(!text.contains("NaN") && !text.contains("inf"), "{text}");
     }
 
     #[test]
@@ -421,15 +635,32 @@ mod tests {
         for i in 1..=100 {
             r.record("lat", i as f64);
         }
-        assert!((r.timer_quantile("lat", 0.5) - 50.5).abs() < 1e-9);
+        // histogram quantiles: within one log-bucket (≤ ~8% relative)
+        let p50 = r.timer_quantile("lat", 0.5);
+        assert!((p50 - 50.5).abs() / 50.5 < 0.08, "p50 = {p50}");
         assert!(r.timer_quantile("nope", 0.5).is_nan());
         let snap = r.snapshot();
         let lat = snap.get("timers").get("lat");
-        assert!((lat.get("p50").as_f64().unwrap() - 50.5).abs() < 1e-9);
-        assert!((lat.get("p95").as_f64().unwrap() - 95.05).abs() < 1e-9);
-        assert!((lat.get("p99").as_f64().unwrap() - 99.01).abs() < 1e-9);
+        let p95 = lat.get("p95").as_f64().unwrap();
+        let p99 = lat.get("p99").as_f64().unwrap();
+        assert!((p95 - 95.05).abs() / 95.05 < 0.08, "p95 = {p95}");
+        assert!((p99 - 99.01).abs() / 99.01 < 0.08, "p99 = {p99}");
+        assert!(p50 < p95 && p95 <= p99);
         // the streaming summary fields are still there
         assert_eq!(lat.get("n").as_f64(), Some(100.0));
+    }
+
+    #[test]
+    fn histogram_tail_quantiles_are_exact_min_max() {
+        let r = Registry::new();
+        for x in [0.001, 0.002, 0.004, 0.008, 5000.0] {
+            r.record("lat", x);
+        }
+        // q=0 clamps to min, q=1 to max — not smeared across a bucket
+        assert!((r.timer_quantile("lat", 0.0) - 0.001).abs() < 1e-6);
+        assert!((r.timer_quantile("lat", 1.0) - 5000.0).abs() < 1e-6);
+        // exact sum survives the histogram
+        assert!((r.timer_total("lat") - 5000.015).abs() < 1e-9);
     }
 
     #[test]
@@ -446,23 +677,90 @@ mod tests {
     }
 
     #[test]
-    fn timer_samples_are_bounded_to_a_recent_window() {
+    fn timer_memory_is_bounded_after_one_million_records() {
         let r = Registry::new();
-        for _ in 0..TIMER_SAMPLE_CAP {
-            r.record("lat", 1.0);
+        r.record("lat", 0.5);
+        let before = r.timer_resident_bytes("lat");
+        assert!(before > 0);
+        // a simple xorshift spreads samples over several decades so the
+        // test exercises many buckets, not just one
+        let mut s: u64 = 0x9E3779B97F4A7C15;
+        for _ in 0..1_000_000 {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            r.record("lat", 1e-6 * (1.0 + (s % 1_000_000) as f64));
         }
-        assert!((r.timer_quantile("lat", 0.5) - 1.0).abs() < 1e-12);
-        // a full second generation overwrites the ring entirely
-        for _ in 0..TIMER_SAMPLE_CAP {
-            r.record("lat", 2.0);
-        }
-        assert!((r.timer_quantile("lat", 0.0) - 2.0).abs() < 1e-12);
-        assert!((r.timer_quantile("lat", 1.0) - 2.0).abs() < 1e-12);
-        // the streaming summary still spans the whole run
+        // footprint is byte-identical: the histogram never grows
+        assert_eq!(r.timer_resident_bytes("lat"), before);
         let snap = r.snapshot();
-        let lat = snap.get("timers").get("lat");
-        assert_eq!(lat.get("n").as_f64(), Some(2.0 * TIMER_SAMPLE_CAP as f64));
-        assert_eq!(lat.get("min").as_f64(), Some(1.0));
+        assert_eq!(
+            snap.get("timers").get("lat").get("n").as_f64(),
+            Some(1_000_001.0)
+        );
+        // quantiles still answer over the whole run
+        assert!(r.timer_quantile("lat", 0.5).is_finite());
+    }
+
+    #[test]
+    fn snapshots_of_identical_state_are_byte_identical() {
+        // same logical state reached in different insertion orders must
+        // serialize to the same bytes (sorted sections, no iteration
+        //-order leakage) — the diffable-snapshot contract
+        let a = Registry::new();
+        a.incr("z.count", 1);
+        a.incr("a.count", 2);
+        a.gauge_set("g.two", 2.0);
+        a.gauge_set("g.one", 1.0);
+        a.record("t.late", 0.5);
+        a.record("t.early", 0.25);
+
+        let b = Registry::new();
+        b.record("t.early", 0.25);
+        b.record("t.late", 0.5);
+        b.gauge_set("g.one", 1.0);
+        b.gauge_set("g.two", 2.0);
+        b.incr("a.count", 2);
+        b.incr("z.count", 1);
+
+        assert_eq!(a.snapshot().to_string_pretty(), b.snapshot().to_string_pretty());
+        assert_eq!(a.prometheus_text(), b.prometheus_text());
+    }
+
+    #[test]
+    fn prometheus_exposition_is_well_formed() {
+        let r = Registry::new();
+        r.incr("serve.requests", 42);
+        r.gauge_set("serve.model_version", 3.0);
+        r.gauge_set("never.set", f64::NAN); // must be skipped
+        for i in 1..=50 {
+            r.record("http.request.secs", i as f64 * 1e-3);
+        }
+        let text = r.prometheus_text();
+        assert!(text.contains("# TYPE leverkrr_serve_requests_total counter"));
+        assert!(text.contains("leverkrr_serve_requests_total 42"));
+        assert!(text.contains("# TYPE leverkrr_serve_model_version gauge"));
+        assert!(text.contains("leverkrr_serve_model_version 3"));
+        assert!(!text.contains("never_set"), "NaN gauge leaked:\n{text}");
+        assert!(text.contains("# TYPE leverkrr_http_request_secs_seconds histogram"));
+        assert!(text.contains("leverkrr_http_request_secs_seconds_bucket{le=\"+Inf\"} 50"));
+        assert!(text.contains("leverkrr_http_request_secs_seconds_count 50"));
+        assert!(!text.contains("NaN") && !text.contains("inf "), "{text}");
+        // families are sorted and type lines precede their samples
+        let type_lines: Vec<&str> =
+            text.lines().filter(|l| l.starts_with("# TYPE ")).collect();
+        let mut sorted = type_lines.clone();
+        sorted.sort();
+        assert_eq!(type_lines, sorted);
+        // cumulative bucket counts are monotone
+        let cums: Vec<u64> = text
+            .lines()
+            .filter(|l| l.contains("_bucket{"))
+            .map(|l| l.rsplit(' ').next().unwrap().parse().unwrap())
+            .collect();
+        for w in cums.windows(2) {
+            assert!(w[1] >= w[0] || w[1] == 0, "non-monotone buckets: {cums:?}");
+        }
     }
 
     #[test]

@@ -19,6 +19,7 @@
 
 use crate::kernels::Kernel;
 use crate::linalg::{Cholesky, GramCache, Mat};
+use crate::trace;
 use crate::util::rng::{AliasTable, Rng};
 
 /// Sub-sample size rules used by the paper's experiments.
@@ -129,15 +130,22 @@ impl NystromKrr {
         anyhow::ensure!(idx.len() == m, "landmark index/row mismatch");
         anyhow::ensure!(knm.cols == m, "K_nm column mismatch");
         anyhow::ensure!(kmm.rows == m && kmm.cols == m, "K_mm shape mismatch");
+        let _span = trace::span("nystrom.fit");
         // normal matrix  A = K_mn K_nm + nλ K_mm
-        let mut a = knm.gram();
+        let mut a = {
+            let _g = trace::span("nystrom.normal_matrix");
+            knm.gram()
+        };
         for i in 0..m {
             for j in 0..m {
                 a[(i, j)] += n as f64 * lambda * kmm[(i, j)];
             }
         }
-        let chol = Cholesky::factor_jittered(&a)
-            .map_err(|e| anyhow::anyhow!("Nyström normal equations singular: {e}"))?;
+        let chol = {
+            let _g = trace::span("nystrom.factor");
+            Cholesky::factor_jittered(&a)
+                .map_err(|e| anyhow::anyhow!("Nyström normal equations singular: {e}"))?
+        };
         // rhs = K_mn y — fixed-block partial sums folded in block order,
         // so the accumulation is bit-identical for any pool size (serial
         // dispatch below the parallel-worthwhile threshold).
@@ -161,7 +169,10 @@ impl NystromKrr {
                 *rj += pj;
             }
         }
-        let beta = chol.solve(&rhs);
+        let beta = {
+            let _g = trace::span("nystrom.solve");
+            chol.solve(&rhs)
+        };
         Ok(NystromKrr { kernel, landmarks, idx: idx.to_vec(), beta, lambda })
     }
 
@@ -230,6 +241,7 @@ impl NystromKrr {
     }
 
     pub fn predict(&self, xq: &Mat) -> Vec<f64> {
+        let _span = trace::span("nystrom.predict");
         let kq = self.kernel.matrix(xq, &self.landmarks);
         crate::linalg::matvec(&kq, &self.beta)
     }

@@ -26,6 +26,7 @@ use super::codec::{self, ArtifactKind};
 use super::PersistError;
 use crate::coordinator::FittedModel;
 use crate::stream::StreamCheckpoint;
+use crate::trace;
 use crate::util::json::Json;
 use std::path::{Path, PathBuf};
 
@@ -321,6 +322,7 @@ impl Store {
     /// Save a fitted model; returns its manifest entry (with the new
     /// version).
     pub fn save_model(&self, name: &str, model: &FittedModel) -> Result<ArtifactMeta, PersistError> {
+        let _span = trace::span("persist.save_model");
         let bytes = codec::encode_model(model);
         self.save_bytes(
             name,
@@ -339,6 +341,7 @@ impl Store {
         name: &str,
         chk: &StreamCheckpoint,
     ) -> Result<ArtifactMeta, PersistError> {
+        let _span = trace::span("persist.save_checkpoint");
         let bytes = codec::encode_checkpoint(chk);
         self.save_bytes(
             name,
@@ -395,6 +398,7 @@ impl Store {
         name: &str,
         version: Option<u64>,
     ) -> Result<(u64, FittedModel), PersistError> {
+        let _span = trace::span("persist.load_model");
         Self::check_name(name)?;
         Self::reject_if_corrupt(
             self.load_bytes(name, version)
@@ -408,6 +412,7 @@ impl Store {
         name: &str,
         version: Option<u64>,
     ) -> Result<(u64, StreamCheckpoint), PersistError> {
+        let _span = trace::span("persist.load_checkpoint");
         Self::check_name(name)?;
         Self::reject_if_corrupt(
             self.load_bytes(name, version)

@@ -57,6 +57,7 @@ use crate::coordinator::FitConfig;
 use crate::data::Dataset;
 use crate::kernels::{Kernel, KernelSpec};
 use crate::metrics::Registry;
+use crate::trace;
 use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::Instant;
@@ -342,6 +343,7 @@ impl StreamCoordinator {
     /// Ingest one labeled arrival: predict (prequential), train, and
     /// publish if the refresh policy fires. O(m²) on the model path.
     pub fn ingest(&mut self, x: &[f64], y: f64) -> IngestOutcome {
+        let _span = trace::span("stream.ingest");
         let t0 = Instant::now();
         // quarantine malformed arrivals instead of folding them into the
         // streaming sums — one NaN/inf or wrong-dimension point would
@@ -435,6 +437,7 @@ impl StreamCoordinator {
     /// boundary rather than between arrivals. Returns the publish (if
     /// any) triggered by the batch.
     pub fn ingest_batch(&mut self, xs: &crate::linalg::Mat, ys: &[f64]) -> Option<u64> {
+        let _span = trace::span("stream.ingest_batch");
         assert_eq!(xs.rows, ys.len());
         let t0 = Instant::now();
         // quarantine malformed arrivals (same rule as `ingest`)

@@ -1,0 +1,507 @@
+//! Lightweight hierarchical span tracing — dependency-free, off by default.
+//!
+//! A span is an RAII guard over a named region of work:
+//!
+//! ```
+//! {
+//!     let _g = leverkrr::trace::span("leverage.sa.quadrature");
+//!     // ... hot work ...
+//! } // guard drop records the span
+//! ```
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Determinism is sacred.** Spans only *read* the clock; they never
+//!    steer computation, so every parity contract (1-vs-N threads,
+//!    cached-vs-uncached, trace-on-vs-off) holds bitwise. The test suite
+//!    enforces this (`tests/trace_parity.rs`).
+//! 2. **Off means free.** When disabled (the default), [`span`] costs a
+//!    single relaxed atomic load and a branch — no `Instant::now()`, no
+//!    allocation, no lock. Call sites can therefore live inside hot
+//!    loops' *callers* without measurable overhead (`bench-obs` keeps
+//!    this honest with a <2% budget on the fig1 pipeline).
+//! 3. **Bounded memory.** Completed spans land in a fixed-capacity ring
+//!    ([`RING_CAP`]); once full, the oldest records are overwritten and
+//!    counted in [`dropped`]. Per-path aggregation (count / total /
+//!    self-time) is a small map keyed by the static span name, so a
+//!    week-long serve cannot leak through the tracer.
+//!
+//! Enablement: `LEVERKRR_TRACE=1` in the environment, the `--trace` CLI
+//! switch, or [`set_enabled`] from code (tests, the serve tier).
+//!
+//! Self-time accounting: each thread keeps a stack of open frames; when
+//! a child span ends it adds its duration to the parent frame, and a
+//! span's *self* time is its total minus its children's totals. That is
+//! what [`aggregate`] reports alongside the raw totals, and what makes
+//! "where does the time actually go" answerable without a flamegraph.
+//!
+//! Export: [`chrome_trace_json`] renders the ring as Chrome/Perfetto
+//! trace-event JSON (`{"traceEvents": [{"ph": "X", ...}]}`) — load it at
+//! `chrome://tracing` or <https://ui.perfetto.dev>. The `trace` CLI
+//! subcommand and the serve tier's `GET /trace` endpoint both use it.
+
+use crate::util::json::Json;
+use std::cell::{Cell, RefCell};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+/// Capacity of the completed-span ring buffer. 64Ki records × 48 bytes
+/// ≈ 3 MiB worst case — bounded regardless of run length.
+pub const RING_CAP: usize = 65_536;
+
+/// Tri-state enablement flag: 0 = uninitialised (consult the
+/// environment on first use), 1 = off, 2 = on. A single relaxed load
+/// decides the disabled fast path.
+static STATE: AtomicU8 = AtomicU8::new(0);
+
+const STATE_UNINIT: u8 = 0;
+const STATE_OFF: u8 = 1;
+const STATE_ON: u8 = 2;
+
+/// Is tracing currently enabled? First call resolves `LEVERKRR_TRACE`
+/// (any value other than empty/`0` enables); later calls are one
+/// relaxed atomic load.
+#[inline]
+pub fn enabled() -> bool {
+    match STATE.load(Ordering::Relaxed) {
+        STATE_ON => true,
+        STATE_OFF => false,
+        _ => init_from_env(),
+    }
+}
+
+#[cold]
+fn init_from_env() -> bool {
+    let on = match std::env::var("LEVERKRR_TRACE") {
+        Ok(v) => !v.is_empty() && v != "0",
+        Err(_) => false,
+    };
+    let want = if on { STATE_ON } else { STATE_OFF };
+    // Racing first calls agree (they read the same env), so a plain
+    // store is fine; set_enabled() may already have won, keep its value.
+    let _ = STATE.compare_exchange(
+        STATE_UNINIT,
+        want,
+        Ordering::Relaxed,
+        Ordering::Relaxed,
+    );
+    STATE.load(Ordering::Relaxed) == STATE_ON
+}
+
+/// Force tracing on or off, overriding the environment (used by the
+/// `--trace` CLI switch, the serve tier, and tests).
+pub fn set_enabled(on: bool) {
+    STATE.store(if on { STATE_ON } else { STATE_OFF }, Ordering::Relaxed);
+}
+
+/// Process-wide epoch all span timestamps are relative to. Initialised
+/// on the first recorded span; monotonic (`Instant`), so timestamps
+/// never go backwards.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Stable per-thread ids for trace export. `std::thread::ThreadId` has
+/// no stable integer accessor, so we hand out our own dense u64s in
+/// first-span order.
+fn thread_id() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    thread_local! {
+        static TID: Cell<u64> = const { Cell::new(0) };
+    }
+    TID.with(|t| {
+        let mut id = t.get();
+        if id == 0 {
+            id = NEXT.fetch_add(1, Ordering::Relaxed);
+            t.set(id);
+        }
+        id
+    })
+}
+
+/// One completed span. `path` is the static name passed to [`span`]
+/// (dotted hierarchy by convention: `"leverage.sa.quadrature"`).
+#[derive(Clone, Copy, Debug)]
+pub struct SpanRecord {
+    pub path: &'static str,
+    /// Start offset from the process trace epoch, in nanoseconds.
+    pub start_ns: u64,
+    /// Total wall duration.
+    pub dur_ns: u64,
+    /// Duration minus time spent in child spans on the same thread.
+    pub self_ns: u64,
+    /// Dense per-process thread id (first-span order, starts at 1).
+    pub thread: u64,
+    /// Nesting depth at record time (0 = root span on its thread).
+    pub depth: u16,
+}
+
+/// Per-path aggregate: how often, how long, how much of it was *self*.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PathAgg {
+    pub count: u64,
+    pub total_ns: u64,
+    pub self_ns: u64,
+}
+
+struct Collector {
+    ring: Vec<SpanRecord>,
+    /// Next slot to overwrite once the ring is full.
+    head: usize,
+    dropped: u64,
+    agg: BTreeMap<&'static str, PathAgg>,
+}
+
+fn collector() -> &'static Mutex<Collector> {
+    static C: OnceLock<Mutex<Collector>> = OnceLock::new();
+    C.get_or_init(|| {
+        Mutex::new(Collector {
+            ring: Vec::new(),
+            head: 0,
+            dropped: 0,
+            agg: BTreeMap::new(),
+        })
+    })
+}
+
+fn push_record(rec: SpanRecord) {
+    let mut c = collector().lock().unwrap();
+    let a = c.agg.entry(rec.path).or_default();
+    a.count += 1;
+    a.total_ns += rec.dur_ns;
+    a.self_ns += rec.self_ns;
+    if c.ring.len() < RING_CAP {
+        c.ring.push(rec);
+    } else {
+        let head = c.head;
+        c.ring[head] = rec;
+        c.head = (head + 1) % RING_CAP;
+        c.dropped += 1;
+    }
+}
+
+thread_local! {
+    /// Open-frame stack: each entry accumulates the wall time of its
+    /// completed children, so the parent can compute self-time on drop.
+    static FRAMES: RefCell<Vec<u64>> = const { RefCell::new(Vec::new()) };
+}
+
+/// RAII guard for an open span. Created by [`span`]; records on drop.
+/// When tracing is disabled the guard is inert and construction did no
+/// clock read.
+pub struct SpanGuard {
+    path: &'static str,
+    start: Option<Instant>,
+}
+
+impl SpanGuard {
+    /// True if this guard will record a span on drop.
+    pub fn is_active(&self) -> bool {
+        self.start.is_some()
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(start) = self.start else { return };
+        let dur = start.elapsed();
+        let dur_ns = dur.as_nanos().min(u64::MAX as u128) as u64;
+        let (child_ns, depth) = FRAMES.with(|f| {
+            let mut f = f.borrow_mut();
+            let child_ns = f.pop().unwrap_or(0);
+            if let Some(parent) = f.last_mut() {
+                *parent += dur_ns;
+            }
+            (child_ns, f.len() as u16)
+        });
+        push_record(SpanRecord {
+            path: self.path,
+            start_ns: dur_ns_since_epoch(start),
+            dur_ns,
+            self_ns: dur_ns.saturating_sub(child_ns),
+            thread: thread_id(),
+            depth,
+        });
+    }
+}
+
+fn dur_ns_since_epoch(t: Instant) -> u64 {
+    t.saturating_duration_since(epoch()).as_nanos().min(u64::MAX as u128) as u64
+}
+
+/// Open a span named `path`. Returns an RAII guard; the span is
+/// recorded when the guard drops. Bind it (`let _g = ...`), never
+/// discard it (`let _ = ...` drops immediately).
+#[inline]
+pub fn span(path: &'static str) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { path, start: None };
+    }
+    span_slow(path)
+}
+
+#[cold]
+fn span_slow(path: &'static str) -> SpanGuard {
+    // Pin the epoch before the first start read so start_ns ≥ 0.
+    epoch();
+    FRAMES.with(|f| f.borrow_mut().push(0));
+    SpanGuard { path, start: Some(Instant::now()) }
+}
+
+/// Record a span measured externally (start `Instant` + duration) —
+/// used where the waiting side of a handoff can't hold a guard, e.g.
+/// the serve tier attributing admission-queue wait to a request.
+/// Recorded flat (no parent/child bookkeeping): `self == total`.
+pub fn record_manual(path: &'static str, start: Instant, dur: Duration) {
+    if !enabled() {
+        return;
+    }
+    epoch();
+    let dur_ns = dur.as_nanos().min(u64::MAX as u128) as u64;
+    push_record(SpanRecord {
+        path,
+        start_ns: dur_ns_since_epoch(start),
+        dur_ns,
+        self_ns: dur_ns,
+        thread: thread_id(),
+        depth: 0,
+    });
+}
+
+/// Clear the ring, the aggregation map, and the dropped counter.
+/// (Does not touch enablement.)
+pub fn reset() {
+    let mut c = collector().lock().unwrap();
+    c.ring.clear();
+    c.head = 0;
+    c.dropped = 0;
+    c.agg.clear();
+}
+
+/// Snapshot of the completed-span ring in chronological (record) order.
+pub fn records() -> Vec<SpanRecord> {
+    let c = collector().lock().unwrap();
+    let mut out = Vec::with_capacity(c.ring.len());
+    if c.ring.len() == RING_CAP {
+        out.extend_from_slice(&c.ring[c.head..]);
+        out.extend_from_slice(&c.ring[..c.head]);
+    } else {
+        out.extend_from_slice(&c.ring);
+    }
+    out
+}
+
+/// Spans lost to ring overwrite since the last [`reset`].
+pub fn dropped() -> u64 {
+    collector().lock().unwrap().dropped
+}
+
+/// Per-path aggregates, sorted by path (deterministic output).
+pub fn aggregate() -> Vec<(&'static str, PathAgg)> {
+    let c = collector().lock().unwrap();
+    c.agg.iter().map(|(k, v)| (*k, *v)).collect()
+}
+
+/// Render the ring as Chrome/Perfetto trace-event JSON. Timestamps are
+/// microseconds from the process trace epoch; `ph: "X"` complete events
+/// nest visually by (tid, ts, dur).
+pub fn chrome_trace_json() -> Json {
+    let recs = records();
+    let events: Vec<Json> = recs
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("name", Json::Str(r.path.to_string())),
+                ("ph", Json::Str("X".to_string())),
+                ("ts", Json::Num(r.start_ns as f64 / 1e3)),
+                ("dur", Json::Num(r.dur_ns as f64 / 1e3)),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(r.thread as f64)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+        ("dropped", Json::Num(dropped() as f64)),
+    ])
+}
+
+/// Plain-text aggregation table (path, count, total, self), sorted by
+/// total descending — what the `trace` CLI subcommand prints.
+pub fn summary_table() -> String {
+    let mut rows = aggregate();
+    rows.sort_by(|a, b| b.1.total_ns.cmp(&a.1.total_ns).then(a.0.cmp(b.0)));
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<40} {:>10} {:>14} {:>14}\n",
+        "span", "count", "total", "self"
+    ));
+    for (path, a) in rows {
+        out.push_str(&format!(
+            "{:<40} {:>10} {:>14} {:>14}\n",
+            path,
+            a.count,
+            fmt_ns(a.total_ns),
+            fmt_ns(a.self_ns),
+        ));
+    }
+    out
+}
+
+fn fmt_ns(ns: u64) -> String {
+    let s = ns as f64 / 1e9;
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.3} µs", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_lock {
+    use std::sync::{Mutex, MutexGuard, OnceLock};
+
+    /// Tests that flip the global trace flag serialize through this
+    /// lock so parallel test threads can't observe each other's state.
+    pub fn hold() -> MutexGuard<'static, ()> {
+        static L: OnceLock<Mutex<()>> = OnceLock::new();
+        match L.get_or_init(|| Mutex::new(())).lock() {
+            Ok(g) => g,
+            Err(poison) => poison.into_inner(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn with_tracing<T>(f: impl FnOnce() -> T) -> T {
+        let _guard = test_lock::hold();
+        set_enabled(true);
+        reset();
+        let out = f();
+        set_enabled(false);
+        out
+    }
+
+    #[test]
+    fn disabled_span_records_nothing() {
+        let _guard = test_lock::hold();
+        set_enabled(false);
+        reset();
+        {
+            let g = span("test.disabled");
+            assert!(!g.is_active());
+        }
+        assert!(records().is_empty());
+        assert!(aggregate().is_empty());
+    }
+
+    #[test]
+    fn nested_spans_attribute_self_time_to_parent() {
+        with_tracing(|| {
+            {
+                let _outer = span("test.outer");
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                {
+                    let _inner = span("test.inner");
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+            }
+            let recs = records();
+            assert_eq!(recs.len(), 2);
+            // inner drops first
+            let inner = recs[0];
+            let outer = recs[1];
+            assert_eq!(inner.path, "test.inner");
+            assert_eq!(outer.path, "test.outer");
+            assert_eq!(inner.depth, 1);
+            assert_eq!(outer.depth, 0);
+            assert!(outer.dur_ns >= inner.dur_ns);
+            // parent self-time excludes the child's whole duration
+            assert_eq!(outer.self_ns, outer.dur_ns - inner.dur_ns);
+            assert_eq!(inner.self_ns, inner.dur_ns);
+
+            let agg: std::collections::BTreeMap<_, _> =
+                aggregate().into_iter().collect();
+            assert_eq!(agg["test.outer"].count, 1);
+            assert_eq!(agg["test.inner"].count, 1);
+            assert_eq!(
+                agg["test.outer"].self_ns,
+                agg["test.outer"].total_ns - agg["test.inner"].total_ns
+            );
+        });
+    }
+
+    #[test]
+    fn ring_is_bounded_and_counts_drops() {
+        with_tracing(|| {
+            for _ in 0..(RING_CAP + 10) {
+                let _g = span("test.ring");
+            }
+            assert_eq!(records().len(), RING_CAP);
+            assert_eq!(dropped(), 10);
+            // aggregation still saw every span
+            let agg: std::collections::BTreeMap<_, _> =
+                aggregate().into_iter().collect();
+            assert_eq!(agg["test.ring"].count, (RING_CAP + 10) as u64);
+        });
+    }
+
+    #[test]
+    fn chrome_export_is_valid_json_with_events() {
+        with_tracing(|| {
+            {
+                let _a = span("test.export.outer");
+                let _b = span("test.export.inner");
+            }
+            let doc = chrome_trace_json();
+            let text = doc.to_string_pretty();
+            let parsed = Json::parse(&text).expect("chrome trace parses");
+            let events = parsed.get("traceEvents");
+            match events {
+                Json::Arr(v) => {
+                    assert_eq!(v.len(), 2);
+                    for e in v {
+                        assert_eq!(e.get("ph").as_str(), Some("X"));
+                        assert!(e.get("ts").as_f64().unwrap() >= 0.0);
+                        assert!(e.get("dur").as_f64().unwrap() >= 0.0);
+                    }
+                }
+                other => panic!("traceEvents not an array: {other:?}"),
+            }
+        });
+    }
+
+    #[test]
+    fn record_manual_lands_flat() {
+        with_tracing(|| {
+            let t0 = Instant::now();
+            record_manual("test.manual", t0, Duration::from_micros(5));
+            let recs = records();
+            assert_eq!(recs.len(), 1);
+            assert_eq!(recs[0].path, "test.manual");
+            assert_eq!(recs[0].self_ns, recs[0].dur_ns);
+            assert_eq!(recs[0].depth, 0);
+        });
+    }
+
+    #[test]
+    fn summary_table_lists_paths() {
+        with_tracing(|| {
+            {
+                let _g = span("test.table");
+            }
+            let t = summary_table();
+            assert!(t.contains("test.table"));
+            assert!(t.contains("count"));
+        });
+    }
+}

@@ -72,11 +72,13 @@
 //! A resolved count of 1 short-circuits to a serial reference path: the
 //! closure runs on the caller's thread and the pool is never touched.
 
+use crate::trace;
 use std::collections::VecDeque;
 use std::ops::Range;
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Instant;
 
 /// 0 = no override; otherwise the forced worker count.
 static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
@@ -234,6 +236,10 @@ struct BatchState<'a, T, F> {
 impl<T: Send, F: Fn(Range<usize>) -> T + Sync> BatchState<'_, T, F> {
     /// Claim and execute ranges until none remain (or the batch aborts).
     fn run_jobs(&self) {
+        // Executor-side compute span: on the caller it nests inside
+        // `pool.dispatch`, so dispatch self-time isolates queue/wait
+        // overhead from actual range work.
+        let _span = trace::span("pool.compute");
         loop {
             if self.aborted.load(Ordering::SeqCst) {
                 return;
@@ -262,6 +268,7 @@ impl<T: Send, F: Fn(Range<usize>) -> T + Sync> BatchState<'_, T, F> {
 /// plus the caller. Returns results in range order; re-raises the first
 /// worker panic with its original payload.
 fn run_batch<T: Send, F: Fn(Range<usize>) -> T + Sync>(ranges: Vec<Range<usize>>, f: &F) -> Vec<T> {
+    let _span = trace::span("pool.dispatch");
     let k = ranges.len();
     let state = BatchState {
         f,
@@ -277,11 +284,19 @@ fn run_batch<T: Send, F: Fn(Range<usize>) -> T + Sync>(ranges: Vec<Range<usize>>
         ensure_workers(helpers);
         let batch_id = p.next_batch.fetch_add(1, Ordering::SeqCst);
         let ctl = Arc::new(BatchCtl { running: Mutex::new(0), done_cv: Condvar::new() });
+        // One timestamp per batch (only when tracing): helpers report
+        // enqueue→start latency as `pool.queue.wait`.
+        let t_enq = if trace::enabled() { Some(Instant::now()) } else { None };
         {
             let mut q = p.queue.lock().unwrap_or_else(|e| e.into_inner());
             for _ in 0..helpers {
                 let sref: &BatchState<'_, T, F> = &state;
-                let task: Box<dyn FnOnce() + Send + '_> = Box::new(move || sref.run_jobs());
+                let task: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    if let Some(t0) = t_enq {
+                        trace::record_manual("pool.queue.wait", t0, t0.elapsed());
+                    }
+                    sref.run_jobs()
+                });
                 // SAFETY: the task borrows `state`/`ranges`/`f` from this
                 // stack frame. We do not return until every queued copy is
                 // either removed from the queue (revocation below, under

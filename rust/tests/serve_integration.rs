@@ -15,6 +15,11 @@
 //!    bitwise, without dropping in-flight traffic.
 //! 5. **Protocol edges** — unknown route 404, wrong method 405,
 //!    malformed body 400, oversized body 413.
+//! 6. **Observability surface** — `/healthz` reports uptime + build
+//!    version, `/metrics` negotiates Prometheus text on
+//!    `Accept: text/plain`, `/trace` returns Chrome trace JSON, every
+//!    response carries `X-Request-Id`, and `?trace=1` echoes the
+//!    per-request latency breakdown.
 
 use leverkrr::coordinator::{
     fit_with_backend, spawn_replica_poller, FitConfig, FittedModel, HttpClient, HttpConfig,
@@ -271,4 +276,132 @@ fn replica_hot_swaps_newly_exported_artifact() {
     http.shutdown();
     server.stop();
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// One-shot raw HTTP exchange (`Connection: close`) returning the full
+/// response text — headers included, which [`HttpClient`] hides.
+fn raw_exchange(addr: &str, req: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.write_all(req.as_bytes()).unwrap();
+    s.flush().unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    out
+}
+
+#[test]
+fn healthz_reports_uptime_version_and_artifact_gauge() {
+    let model = fit_model(31, 150);
+    let (server, http, addr) = start_http(model, HttpConfig::default());
+    let mut client = HttpClient::connect(&addr).unwrap();
+    let (status, body) = client.request("GET", "/healthz", "").unwrap();
+    assert_eq!(status, 200, "{body}");
+    let h = Json::parse(&body).unwrap();
+    assert_eq!(h.get("status").as_str(), Some("ok"));
+    assert!(h.get("uptime_secs").as_f64().unwrap() >= 0.0, "{body}");
+    let v = h.get("version").as_str().unwrap();
+    assert!(v.starts_with(env!("CARGO_PKG_VERSION")), "version '{v}'");
+    assert!(h.get("artifact_version").as_f64().is_some(), "{body}");
+    assert!(h.get("model_version").as_f64().is_some(), "{body}");
+    http.shutdown();
+    server.stop();
+}
+
+#[test]
+fn metrics_negotiates_prometheus_text_and_stays_scrape_clean() {
+    let model = fit_model(33, 150);
+    let (server, http, addr) = start_http(model, HttpConfig::default());
+    let mut client = HttpClient::connect(&addr).unwrap();
+    // traffic first, so request counters and latency histograms exist
+    for i in 0..5 {
+        let _ = served_y(&mut client, i as f64 / 5.0);
+    }
+    // default (no text/plain Accept): the JSON document, as before
+    let (status, body) = client.request("GET", "/metrics", "").unwrap();
+    assert_eq!(status, 200);
+    assert!(Json::parse(&body).unwrap().get("snapshot").as_obj().is_some(), "{body}");
+
+    // Accept: text/plain → Prometheus exposition 0.0.4
+    let raw = raw_exchange(
+        &addr,
+        &format!(
+            "GET /metrics HTTP/1.1\r\nHost: {addr}\r\nAccept: text/plain\r\nConnection: close\r\n\r\n"
+        ),
+    );
+    assert!(raw.starts_with("HTTP/1.1 200"), "{raw}");
+    assert!(raw.contains("Content-Type: text/plain; version=0.0.4"), "{raw}");
+    let text = raw.split("\r\n\r\n").nth(1).unwrap();
+    assert!(text.contains("# TYPE leverkrr_http_requests_total counter"), "{text}");
+    assert!(
+        text.contains("# TYPE leverkrr_http_request_secs_seconds histogram"),
+        "{text}"
+    );
+    assert!(text.contains("le=\"+Inf\""), "{text}");
+    assert!(!text.contains("NaN"), "exposition leaked a NaN: {text}");
+    // type lines arrive in sorted (deterministic) family order
+    let fams: Vec<&str> = text
+        .lines()
+        .filter_map(|l| l.strip_prefix("# TYPE "))
+        .map(|l| l.split_whitespace().next().unwrap())
+        .collect();
+    let mut sorted = fams.clone();
+    sorted.sort_unstable();
+    assert_eq!(fams, sorted, "families not sorted");
+    http.shutdown();
+    server.stop();
+}
+
+#[test]
+fn responses_carry_request_ids_and_trace_query_echoes_timing() {
+    let model = fit_model(35, 150);
+    let hcfg = HttpConfig {
+        // a zero threshold makes every request "slow": the counter must move
+        slow_request_threshold: Duration::ZERO,
+        ..HttpConfig::default()
+    };
+    let (server, http, addr) = start_http(model.clone(), hcfg);
+    let body = predict_body(0.25);
+    let raw = raw_exchange(
+        &addr,
+        &format!(
+            "POST /predict?trace=1 HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        ),
+    );
+    assert!(raw.starts_with("HTTP/1.1 200"), "{raw}");
+    assert!(raw.contains("X-Request-Id: "), "{raw}");
+    let resp = Json::parse(raw.split("\r\n\r\n").nth(1).unwrap()).unwrap();
+    // the echo rides along without disturbing the served value
+    assert_eq!(
+        resp.get("y").as_f64().unwrap().to_bits(),
+        model.predict_one(&[0.25]).to_bits()
+    );
+    let timing = resp.get("timing");
+    assert!(timing.get("batch_wait_ms").as_f64().unwrap() >= 0.0, "{raw}");
+    assert!(timing.get("eval_ms").as_f64().unwrap() >= 0.0, "{raw}");
+    // without ?trace=1 the echo is absent
+    let mut client = HttpClient::connect(&addr).unwrap();
+    let (_, plain) = client.request("POST", "/predict", &body).unwrap();
+    assert!(Json::parse(&plain).unwrap().get("timing").as_f64().is_none(), "{plain}");
+    assert!(server.metrics.counter("http.slow_requests") >= 1);
+    http.shutdown();
+    server.stop();
+}
+
+#[test]
+fn trace_endpoint_returns_chrome_trace_json() {
+    let model = fit_model(37, 120);
+    let (server, http, addr) = start_http(model, HttpConfig::default());
+    let mut client = HttpClient::connect(&addr).unwrap();
+    let _ = served_y(&mut client, 0.5);
+    let (status, body) = client.request("GET", "/trace", "").unwrap();
+    assert_eq!(status, 200, "{body}");
+    let doc = Json::parse(&body).unwrap();
+    assert!(doc.get("traceEvents").as_arr().is_some(), "{body}");
+    assert!(doc.get("dropped").as_f64().is_some(), "{body}");
+    let (status, _) = client.request("POST", "/trace", "").unwrap();
+    assert_eq!(status, 405);
+    http.shutdown();
+    server.stop();
 }

@@ -1,0 +1,160 @@
+//! Determinism under tracing: span guards only *read* the clock — they
+//! must never steer computation. Representative cases from the three
+//! existing parity suites (parallel, gramcache, stream) run with
+//! tracing off and on and must produce **bit-identical** results, at 1
+//! and at 4 pool workers.
+//!
+//! Both the trace flag and the pool override are process-global, so
+//! every test here serializes on one lock.
+
+use leverkrr::coordinator::{fit_with_backend, FitConfig};
+use leverkrr::data::{self, Dataset};
+use leverkrr::kernels::{Kernel, KernelSpec};
+use leverkrr::leverage::rls::RecursiveRls;
+use leverkrr::leverage::{LeverageContext, LeverageEstimator};
+use leverkrr::linalg::GramCache;
+use leverkrr::runtime::Backend;
+use leverkrr::stream::{replay, CheckpointPolicy, RefreshPolicy, StreamConfig};
+use leverkrr::trace;
+use leverkrr::util::pool;
+use leverkrr::util::rng::Rng;
+use std::cell::RefCell;
+use std::sync::Mutex;
+
+static TRACE_LOCK: Mutex<()> = Mutex::new(());
+
+/// Evaluate `f` with tracing off, then again with tracing on (ring
+/// reset in between), under a pool override of `nt` workers. Leaves the
+/// traced run's spans in the ring for coverage assertions.
+fn off_then_on<T>(nt: usize, mut f: impl FnMut() -> T) -> (T, T) {
+    let _guard = pool::override_threads(nt);
+    trace::set_enabled(false);
+    trace::reset();
+    let off = f();
+    trace::set_enabled(true);
+    trace::reset();
+    let on = f();
+    trace::set_enabled(false);
+    (off, on)
+}
+
+fn to_bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn traced_paths() -> Vec<&'static str> {
+    trace::aggregate().into_iter().map(|(p, _)| p).collect()
+}
+
+// ---------------------------------------------------------------------------
+// fit pipeline (parallel_parity's territory): pool + blocked engine +
+// leverage + Nyström, end to end
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fit_pipeline_bitwise_identical_under_tracing() {
+    let _lock = TRACE_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let mut rng = Rng::seed_from_u64(7);
+    let ds = data::bimodal3(600, 0.4, &mut rng);
+    let fingerprint = || {
+        let cfg = FitConfig::default_for(&ds);
+        let model = fit_with_backend(&ds, &cfg, Backend::Native).unwrap();
+        model.predict_batch(&ds.x)
+    };
+    for nt in [1usize, 4] {
+        let (off, on) = off_then_on(nt, fingerprint);
+        assert_eq!(
+            to_bits(&off),
+            to_bits(&on),
+            "fit predictions diverged under tracing at {nt} threads"
+        );
+        // coverage: the traced run recorded the pipeline's span hierarchy
+        let paths = traced_paths();
+        for want in ["fit", "fit.leverage", "leverage.sa", "nystrom.fit", "nystrom.solve"] {
+            assert!(paths.contains(&want), "span '{want}' missing at {nt} threads: {paths:?}");
+        }
+    }
+    trace::reset();
+}
+
+// ---------------------------------------------------------------------------
+// shared landmark Gram cache (gramcache_parity's territory)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cached_recursive_rls_bitwise_identical_under_tracing() {
+    let _lock = TRACE_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let mut rng = Rng::seed_from_u64(23);
+    let ds = data::dist1d(data::Dist1d::Bimodal, 500, &mut rng);
+    let kernel = Kernel::new(KernelSpec::Matern { nu: 1.5, a: 1.0 });
+    let fingerprint = || {
+        let gram = RefCell::new(GramCache::new(kernel.clone(), &ds.x));
+        let mut ctx = LeverageContext::new(&ds.x, &kernel, 1e-3);
+        ctx.inner_m = 16;
+        ctx.cache = Some(&gram);
+        let mut erng = Rng::seed_from_u64(99);
+        RecursiveRls::default().estimate(&ctx, &mut erng)
+    };
+    for nt in [1usize, 4] {
+        let (off, on) = off_then_on(nt, fingerprint);
+        assert_eq!(
+            to_bits(&off),
+            to_bits(&on),
+            "cached RLS scores diverged under tracing at {nt} threads"
+        );
+        let paths = traced_paths();
+        for want in ["leverage.rls", "gramcache.block"] {
+            assert!(paths.contains(&want), "span '{want}' missing at {nt} threads: {paths:?}");
+        }
+    }
+    trace::reset();
+}
+
+// ---------------------------------------------------------------------------
+// streaming replay (stream_parity's territory): dictionary decisions,
+// coefficients, and predictions
+// ---------------------------------------------------------------------------
+
+fn stream_fingerprint(n: usize, budget: usize) -> (Vec<u64>, Vec<f64>, Vec<f64>) {
+    let mut rng = Rng::seed_from_u64(41);
+    let ds: Dataset = data::dist1d(data::Dist1d::Bimodal, n, &mut rng);
+    let cfg = StreamConfig {
+        kernel: KernelSpec::Matern { nu: 1.5, a: 1.0 },
+        mu: n as f64 * 1e-3,
+        budget,
+        accept_threshold: 0.01,
+        refresh: RefreshPolicy { every: 64, drift: 0.0 },
+        threads: None,
+        checkpoint: CheckpointPolicy::default(),
+    };
+    let (sc, _report) = replay(&ds, &cfg, 0);
+    let arrivals = sc.model().dict().arrivals().to_vec();
+    let beta = sc.model().beta().to_vec();
+    let snap = sc.model().snapshot();
+    let grid = leverkrr::linalg::Mat::from_fn(64, 1, |i, _| 1.5 * i as f64 / 63.0);
+    let preds = snap.predict_batch(&grid);
+    (arrivals, beta, preds)
+}
+
+#[test]
+fn stream_replay_bitwise_identical_under_tracing() {
+    let _lock = TRACE_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    for nt in [1usize, 4] {
+        let (off, on) = off_then_on(nt, || stream_fingerprint(400, 48));
+        assert_eq!(off.0, on.0, "dictionary trajectories diverged under tracing at {nt} threads");
+        assert_eq!(
+            to_bits(&off.1),
+            to_bits(&on.1),
+            "coefficients diverged under tracing at {nt} threads"
+        );
+        assert_eq!(
+            to_bits(&off.2),
+            to_bits(&on.2),
+            "predictions diverged under tracing at {nt} threads"
+        );
+        assert!(!on.0.is_empty());
+        let paths = traced_paths();
+        assert!(paths.contains(&"stream.ingest"), "stream span missing: {paths:?}");
+    }
+    trace::reset();
+}
