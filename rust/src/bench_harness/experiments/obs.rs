@@ -6,7 +6,8 @@
 //! loops, so enabling tracing must not move the figures. This driver
 //! measures the same Figure-1 pipeline (SA leverage → landmark sampling
 //! → Nyström solve) with tracing off and on, plus the raw per-span
-//! cost in both states, and writes the overhead ratio to
+//! cost in both states — and in the every-8th-span sampled profiler
+//! mode (`LEVERKRR_TRACE_SAMPLE`) — and writes the overhead ratio to
 //! `BENCH_obs.json` — the budget is <2% with tracing on.
 
 use crate::bench_harness::{bench_reps, timing_row, ExpOptions};
@@ -61,13 +62,33 @@ pub fn run(opts: &ExpOptions) {
             std::hint::black_box(&_g);
         }
     });
+    // Sampled profiler mode: every-8th-span recording — the long-serve
+    // configuration (`LEVERKRR_TRACE_SAMPLE`). Costs one counter RMW per
+    // skipped span instead of the ring push, so it sits between off and
+    // fully on.
+    trace::set_enabled(true);
+    trace::set_sample_every(8);
+    trace::reset();
+    let t_span_sampled = bench_reps(1, reps, || {
+        for _ in 0..span_iters {
+            let _g = trace::span("obs.probe");
+            std::hint::black_box(&_g);
+        }
+    });
+    trace::set_sample_every(1);
     trace::set_enabled(false);
     trace::reset();
-    let (off_ns, on_ns) =
-        (t_span_off[0] * 1e9 / span_iters as f64, t_span_on[0] * 1e9 / span_iters as f64);
-    println!("span cost: disabled {off_ns:.2} ns/span, enabled {on_ns:.1} ns/span");
+    let (off_ns, on_ns, sampled_ns) = (
+        t_span_off[0] * 1e9 / span_iters as f64,
+        t_span_on[0] * 1e9 / span_iters as f64,
+        t_span_sampled[0] * 1e9 / span_iters as f64,
+    );
+    println!(
+        "span cost: disabled {off_ns:.2} ns/span, enabled {on_ns:.1} ns/span, sampled 1/8 {sampled_ns:.1} ns/span"
+    );
     rec("span_disabled", span_iters, 0, 0, t_span_off[0] / span_iters as f64);
     rec("span_enabled", span_iters, 0, 0, t_span_on[0] / span_iters as f64);
+    rec("span_enabled_sampled_8", span_iters, 0, 0, t_span_sampled[0] / span_iters as f64);
 
     // ---- fig1 pipeline: tracing off vs on ---------------------------------
     trace::set_enabled(false);

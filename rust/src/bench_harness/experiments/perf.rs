@@ -2,8 +2,10 @@
 //!
 //! Covers every layer:
 //! * L3 native substrate: kernel-block assembly (blocked engine vs the
-//!   scalar reference), Cholesky, alias sampling, SA closed form +
-//!   quadrature, KDE (exact / grid / subsampled);
+//!   scalar reference), the blocked r² engine's SIMD-vs-scalar and
+//!   mixed-vs-f64 tile paths (with the autotuned tile geometry on each
+//!   row), Cholesky, alias sampling, SA closed form + quadrature, KDE
+//!   (exact / grid / subsampled);
 //! * Pool: persistent-dispatch vs per-call scoped-spawn overhead, and
 //!   the 1-vs-N kernel-matrix scaling curve;
 //! * Runtime: XLA kernel-block + KDE dispatch (when artifacts exist),
@@ -47,14 +49,35 @@ impl PerfLog {
     /// [`PerfLog::rec`] with an explicit thread count — for benches that
     /// run at a count other than the resolved one.
     fn rec_at(&mut self, name: &str, n: usize, m: usize, d: usize, threads: usize, secs: f64) {
-        self.rows.push(Json::obj(vec![
+        self.rec_ext_at(name, n, m, d, threads, secs, Vec::new());
+    }
+
+    /// [`PerfLog::rec`] plus extra machine-readable fields on the row
+    /// (tile geometry, SIMD label, speedup ratios, accuracy deltas).
+    fn rec_ext(&mut self, name: &str, n: usize, m: usize, d: usize, secs: f64, extra: Vec<(&str, Json)>) {
+        self.rec_ext_at(name, n, m, d, crate::util::pool::current_threads(), secs, extra);
+    }
+
+    fn rec_ext_at(
+        &mut self,
+        name: &str,
+        n: usize,
+        m: usize,
+        d: usize,
+        threads: usize,
+        secs: f64,
+        extra: Vec<(&str, Json)>,
+    ) {
+        let mut fields = vec![
             ("name", Json::Str(name.into())),
             ("n", Json::Num(n as f64)),
             ("m", Json::Num(m as f64)),
             ("d", Json::Num(d as f64)),
             ("threads", Json::Num(threads as f64)),
             ("ns_per_op", Json::Num(secs * 1e9)),
-        ]));
+        ];
+        fields.extend(extra);
+        self.rows.push(Json::obj(fields));
     }
 
     fn write(self, opts: &ExpOptions) {
@@ -125,6 +148,125 @@ pub fn run(opts: &ExpOptions) {
     );
     let flops = 2.0 * n as f64 * m as f64 * d as f64;
     println!("    ~{:.2} Gflop-equiv/s (dist part)", flops / t_blocked[0] / 1e9);
+
+    // ---- blocked engine: SIMD vs scalar tiles, mixed vs f64 ---------------
+    // Same r² workload the kernel assemblies above route through, at a
+    // SIMD-friendly width (d=32) so the tile kernel — not the map —
+    // dominates. The f64 SIMD path is bitwise identical to scalar
+    // (tests/simd_parity.rs); mixed precision is the opt-in f32-tile
+    // mode, reported with its accuracy delta. Tile geometry on each row
+    // is whatever the autotune probe (or LEVERKRR_TILE) resolved.
+    {
+        use crate::linalg::blocked::{self, Precision};
+        use crate::linalg::simd;
+        let n_b = if opts.full { 4096 } else { 2048 };
+        let m_b = 1024;
+        let d_b = 32;
+        let mut brng = rng.fork(21);
+        let xb = Mat::from_fn(n_b, d_b, |_, _| brng.normal());
+        let yb = Mat::from_fn(m_b, d_b, |_, _| brng.normal());
+
+        let (t_sc, tile_sc) = {
+            let _g = simd::force_simd(false);
+            let eng = blocked::Engine::current();
+            let t = bench_reps(1, reps, || {
+                std::hint::black_box(blocked::sqdist_matrix(&xb, &yb));
+            });
+            (t, eng.tile)
+        };
+        let (t_simd, eng_simd) = {
+            let _g = simd::force_simd(true);
+            let eng = blocked::Engine::current();
+            let t = bench_reps(1, reps, || {
+                std::hint::black_box(blocked::sqdist_matrix(&xb, &yb));
+            });
+            (t, eng)
+        };
+        let simd_label = if eng_simd.simd { "avx2" } else { "scalar" };
+        let speedup = t_sc[0] / t_simd[0].max(1e-12);
+        println!(
+            "{}",
+            timing_row(&format!("r² blocked scalar tiles ({n_b}x{m_b}, d={d_b}, tile={tile_sc})"), &t_sc)
+        );
+        println!(
+            "{}",
+            timing_row(
+                &format!("r² blocked {simd_label} tiles  ({n_b}x{m_b}, d={d_b}, tile={})", eng_simd.tile),
+                &t_simd
+            )
+        );
+        println!("    simd-vs-scalar r² speedup: {speedup:.2}x ({simd_label} dispatch)");
+        log.rec_ext(
+            "blocked_scalar",
+            n_b,
+            m_b,
+            d_b,
+            t_sc[0],
+            vec![
+                ("tile", Json::Num(tile_sc as f64)),
+                ("precision", Json::Str("f64".into())),
+                ("simd", Json::Str("scalar".into())),
+            ],
+        );
+        log.rec_ext(
+            "blocked_simd",
+            n_b,
+            m_b,
+            d_b,
+            t_simd[0],
+            vec![
+                ("tile", Json::Num(eng_simd.tile as f64)),
+                ("precision", Json::Str("f64".into())),
+                ("simd", Json::Str(simd_label.into())),
+                ("speedup_vs_scalar", Json::Num(speedup)),
+            ],
+        );
+
+        // mixed precision: f32 tile storage, f64 accumulation — opt-in.
+        // The f64 reference is the forced-SIMD timing above (same
+        // dispatch the mixed run resolves on an AVX2 machine).
+        let base = blocked::sqdist_matrix(&xb, &yb);
+        let (t_mx, eng_mx, mixed) = {
+            let _p = blocked::override_precision(Precision::Mixed);
+            let eng = blocked::Engine::current();
+            let t = bench_reps(1, reps, || {
+                std::hint::black_box(blocked::sqdist_matrix(&xb, &yb));
+            });
+            let mx = blocked::sqdist_matrix(&xb, &yb);
+            (t, eng, mx)
+        };
+        let max_abs_err = base
+            .data
+            .iter()
+            .zip(&mixed.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        let speedup_mx = t_simd[0] / t_mx[0].max(1e-12);
+        println!(
+            "{}",
+            timing_row(
+                &format!("r² blocked mixed (f32 tiles) ({n_b}x{m_b}, d={d_b}, tile={})", eng_mx.tile),
+                &t_mx
+            )
+        );
+        println!(
+            "    mixed-vs-f64 r² speedup: {speedup_mx:.2}x, max |Δr²| = {max_abs_err:.3e}"
+        );
+        log.rec_ext(
+            "blocked_mixed",
+            n_b,
+            m_b,
+            d_b,
+            t_mx[0],
+            vec![
+                ("tile", Json::Num(eng_mx.tile as f64)),
+                ("precision", Json::Str("mixed".into())),
+                ("simd", Json::Str(if eng_mx.simd { "avx2" } else { "scalar" }.into())),
+                ("speedup_vs_f64", Json::Num(speedup_mx)),
+                ("max_abs_err", Json::Num(max_abs_err)),
+            ],
+        );
+    }
 
     // ---- pool scaling: kernel-matrix assembly at 1 vs N threads -----------
     // The headline knob of the parallel compute core: same inputs, same

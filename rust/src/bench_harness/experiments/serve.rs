@@ -12,6 +12,13 @@
 //! qps / p50_ms / p95_ms / p99_ms — so serve-path regressions are
 //! machine-trackable across PRs like `BENCH_perf.json` is for the
 //! compute core.
+//!
+//! Each cell additionally runs with tracing enabled and embeds the
+//! per-path span aggregates (`serve.batch*` / `http.*`: count, total,
+//! self) as a `spans` object on the row — server-side time attribution
+//! next to the client-side latency it explains. Tracing is flipped on
+//! per cell and off again afterwards; spans read clocks but never steer
+//! computation, so the measured tier is the shipped tier.
 
 use crate::bench_harness::ExpOptions;
 use crate::coordinator::{
@@ -42,7 +49,12 @@ pub fn run(opts: &ExpOptions) {
     let mut rows = Vec::new();
     for &mb in &batches {
         for &nrep in &replicas {
+            crate::trace::set_enabled(true);
+            crate::trace::reset();
             let (qps, lats) = run_cell(&model, mb, nrep, d, duration);
+            let spans = serve_span_aggregates();
+            crate::trace::set_enabled(false);
+            crate::trace::reset();
             let total = lats.len();
             let p = percentiles(&lats);
             println!(
@@ -64,6 +76,7 @@ pub fn run(opts: &ExpOptions) {
                 ("p50_ms", Json::Num(p[0] * 1e3)),
                 ("p95_ms", Json::Num(p[1] * 1e3)),
                 ("p99_ms", Json::Num(p[2] * 1e3)),
+                ("spans", spans),
             ]));
         }
     }
@@ -80,6 +93,27 @@ pub fn run(opts: &ExpOptions) {
         Ok(()) => println!("\nwrote BENCH_serve.json"),
         Err(e) => eprintln!("\ncould not write BENCH_serve.json: {e}"),
     }
+}
+
+/// Serving-tier span aggregates for the cell just driven: one object per
+/// `serve.batch*` / `http.*` path with count / total_ns / self_ns.
+/// Deterministic key order (BTreeMap-backed aggregation).
+fn serve_span_aggregates() -> Json {
+    let fields: Vec<(&'static str, Json)> = crate::trace::aggregate()
+        .into_iter()
+        .filter(|(p, _)| p.starts_with("serve.batch") || p.starts_with("http."))
+        .map(|(p, a)| {
+            (
+                p,
+                Json::obj(vec![
+                    ("count", Json::Num(a.count as f64)),
+                    ("total_ns", Json::Num(a.total_ns as f64)),
+                    ("self_ns", Json::Num(a.self_ns as f64)),
+                ]),
+            )
+        })
+        .collect();
+    Json::obj(fields)
 }
 
 /// One grid cell: returns (qps, sorted client-side latencies in secs).

@@ -12,6 +12,7 @@
 //!   "m_sub": 180,
 //!   "kde_bandwidth": 0.031,
 //!   "threads": 8,
+//!   "precision": "mixed",
 //!   "serve": {"max_batch": 256, "max_wait_ms": 4, "workers": 4},
 //!   "stream": {"every": 64, "drift": 0.25, "serve": true, "budget": 128},
 //!   "persist": {"dir": "models", "name": "prod", "checkpoint_every": 256,
@@ -93,6 +94,9 @@ pub struct RunConfig {
     pub kde_bandwidth: Option<f64>,
     /// Worker threads for the compute pool (`util::pool`).
     pub threads: Option<usize>,
+    /// Blocked-engine tile precision (`"f64"` | `"mixed"`); None → env /
+    /// f64 default. Mixed is approximate and strictly opt-in.
+    pub precision: Option<crate::linalg::blocked::Precision>,
     pub serve: ServerConfig,
     /// Streaming refresh policy (`stream` document section).
     pub refresh: RefreshPolicy,
@@ -128,6 +132,13 @@ impl RunConfig {
             Json::Null => None,
             other => return Err(anyhow!("method must be a string, got {other}")),
         };
+        let precision = match doc.get("precision") {
+            Json::Str(s) => {
+                Some(crate::linalg::blocked::Precision::parse(s).map_err(|e| anyhow!(e))?)
+            }
+            Json::Null => None,
+            other => return Err(anyhow!("precision must be a string, got {other}")),
+        };
         let serve = doc.get("serve");
         let default_serve = ServerConfig::default();
         let stream = doc.get("stream");
@@ -146,6 +157,7 @@ impl RunConfig {
             m_sub: doc.get("m_sub").as_usize(),
             kde_bandwidth: doc.get("kde_bandwidth").as_f64(),
             threads: doc.get("threads").as_usize(),
+            precision,
             serve: ServerConfig {
                 max_batch: serve
                     .get("max_batch")
@@ -278,6 +290,9 @@ impl RunConfig {
         if self.threads.is_some() {
             cfg.threads = self.threads;
         }
+        if self.precision.is_some() {
+            cfg.precision = self.precision;
+        }
         cfg.refresh = self.refresh;
         cfg
     }
@@ -394,5 +409,23 @@ mod tests {
     fn rejects_bad_kernel() {
         assert!(RunConfig::from_json_str(r#"{"kernel": "rbf"}"#).is_err());
         assert!(RunConfig::from_json_str(r#"{"kernel": 12}"#).is_err());
+    }
+
+    #[test]
+    fn precision_parses_and_threads_through() {
+        use crate::linalg::blocked::Precision;
+        let cfg = RunConfig::from_json_str(
+            r#"{"data": {"name": "uniform1", "n": 200}, "precision": "mixed"}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.precision, Some(Precision::Mixed));
+        let ds = cfg.build_dataset().unwrap();
+        assert_eq!(cfg.fit_config(&ds).precision, Some(Precision::Mixed));
+        // absent → None → the fit inherits env/default (never mixed)
+        let cfg = RunConfig::from_json_str(r#"{"data": {"name": "uniform1"}}"#).unwrap();
+        assert_eq!(cfg.precision, None);
+        // invalid value is a config error, not a silent fallback
+        assert!(RunConfig::from_json_str(r#"{"precision": "f16"}"#).is_err());
+        assert!(RunConfig::from_json_str(r#"{"precision": 64}"#).is_err());
     }
 }

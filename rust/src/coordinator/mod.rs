@@ -57,6 +57,10 @@ pub struct FitConfig {
     /// (None → `LEVERKRR_THREADS` / available parallelism). Results are
     /// bit-identical for every value — see `util::pool`.
     pub threads: Option<usize>,
+    /// Blocked-engine tile precision for this fit (None → `LEVERKRR_PRECISION`
+    /// / f64). `Mixed` stores distance tiles in f32 with f64 accumulation —
+    /// faster, approximate, and strictly opt-in: it is never a default.
+    pub precision: Option<crate::linalg::blocked::Precision>,
     /// Streaming refresh policy: when [`crate::stream::StreamCoordinator`]
     /// publishes updated snapshots into the serving path (ignored by the
     /// one-shot batch fit itself).
@@ -80,6 +84,7 @@ impl FitConfig {
             kde_bandwidth: Some(crate::kde::bandwidth::table1(n)),
             seed: 0,
             threads: None,
+            precision: None,
             refresh: crate::stream::RefreshPolicy::default(),
         }
     }
@@ -170,6 +175,9 @@ pub fn fit_with_backend(
     // (restored on drop). Purely a wall-clock knob: scores, landmarks and
     // β are identical at any setting.
     let _pool_guard = cfg.threads.map(crate::util::pool::override_threads);
+    // Same guard pattern for the blocked-engine precision: scoped to this
+    // fit, restored on drop, opt-in only (None leaves env/default alone).
+    let _prec_guard = cfg.precision.map(crate::linalg::blocked::override_precision);
     let _span = trace::span("fit");
     let t_total = std::time::Instant::now();
 

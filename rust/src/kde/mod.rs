@@ -136,7 +136,15 @@ pub fn exact(q: &Mat, data: &Mat, h: f64) -> Vec<f64> {
     }
     let inv2h2 = 1.0 / (2.0 * h * h);
     let c = norm_const(data.cols, h) / data.rows as f64;
-    let sums = crate::linalg::blocked::row_reduce(q, data, |r2| (-r2 * inv2h2).exp());
+    let f = |r2: f64| (-r2 * inv2h2).exp();
+    let sums = if std::ptr::eq(q, data) {
+        // self-evaluation (the dominant call shape: density of the sample
+        // at the sample): one norms pass serves both sides bit-for-bit
+        let nq = crate::linalg::blocked::row_sqnorms(q);
+        crate::linalg::blocked::row_reduce_pre(q, &nq, data, &nq, f)
+    } else {
+        crate::linalg::blocked::row_reduce(q, data, f)
+    };
     sums.into_iter().map(|s| s * c).collect()
 }
 

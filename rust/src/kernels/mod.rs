@@ -137,6 +137,16 @@ impl Kernel {
         crate::linalg::blocked::map_matrix(x, y, |r2| self.eval_sq(r2))
     }
 
+    /// [`Kernel::matrix`] with caller-precomputed row norms
+    /// (`nx[i] = ‖x_i‖²`, `ny[j] = ‖y_j‖²`, exact
+    /// [`crate::linalg::blocked::row_sqnorms`] values). Bitwise
+    /// identical to [`Kernel::matrix`]; lets callers that assemble many
+    /// blocks against one point set (the landmark Gram cache) pay the
+    /// norms pass once instead of per call.
+    pub fn matrix_pre(&self, x: &Mat, nx: &[f64], y: &Mat, ny: &[f64]) -> Mat {
+        crate::linalg::blocked::map_matrix_pre(x, nx, y, ny, |r2| self.eval_sq(r2))
+    }
+
     /// Symmetric kernel matrix K(X, X) — blocked engine, block-upper
     /// tiles only; the mirror is bitwise identical to direct evaluation
     /// (see [`crate::linalg::blocked`]).

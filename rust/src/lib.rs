@@ -50,6 +50,43 @@
 //! shift, while `rust/tests/parallel_parity.rs` pins cross-thread
 //! bitwise parity for every rebased path.
 //!
+//! ## Raw speed
+//!
+//! The blocked engine's inner tile is explicitly vectorized and
+//! self-tuning ([`linalg::simd`]):
+//!
+//! * **SIMD tile kernel** — an AVX2 micro-kernel (4 rows × 8 columns of
+//!   `__m256d` accumulators, runtime-dispatched via
+//!   `is_x86_feature_detected!`) computes each r² by *exactly* the
+//!   scalar per-element sequence: one norms add, a k-ascending
+//!   mul-then-add fold (no FMA contraction), and a max-with-zero clamp
+//!   whose tie/NaN semantics match the scalar branch. The f64 SIMD path
+//!   is therefore **bitwise identical** to scalar — register-blocking
+//!   only interleaves independent per-element chains —
+//!   property-pinned across shapes, NaN/subnormal inputs, and dispatch
+//!   boundaries in `rust/tests/simd_parity.rs`. Kill switch:
+//!   `LEVERKRR_SIMD=0` (or [`linalg::simd::force_simd`] in tests).
+//! * **Mixed precision (opt-in)** — [`linalg::blocked::Precision::Mixed`]
+//!   stores packed y-tiles in f32 while keeping x-side data and all
+//!   accumulation in f64 (~half the tile memory traffic, ~1e-7 relative
+//!   input rounding). It is never a silent default: enable per fit via
+//!   [`coordinator::FitConfig::precision`] / the `"precision"` config
+//!   key / `--precision mixed`, or process-wide via
+//!   `LEVERKRR_PRECISION=mixed`. Within the mode, scalar and SIMD are
+//!   still bitwise identical (f32→f64 widening is exact); accuracy vs
+//!   the f64 oracle is pinned in `simd_parity.rs`, end to end through a
+//!   fit.
+//! * **Autotuned tile width** — pool startup runs a one-shot
+//!   deterministic micro-probe over the tile ladder
+//!   [`linalg::blocked::TILE_LADDER`] (64/128/256/512) per precision and
+//!   caches the winner for the process. `LEVERKRR_TILE=w` pins the
+//!   width, `LEVERKRR_AUTOTUNE=0` skips the probe (default
+//!   [`linalg::blocked::TILE_J`]). Tile width is wall-clock-only: every
+//!   result is bit-identical at every width (pinned in
+//!   `linalg::blocked`'s property tests), so the probe can never steer
+//!   results. `bench-perf` records simd-vs-scalar and mixed-vs-f64
+//!   speedups with the resolved tile geometry in `BENCH_perf.json`.
+//!
 //! ## Landmark Gram cache
 //!
 //! Every landmark consumer — Recursive-RLS's recursion levels, BLESS's
@@ -107,7 +144,9 @@
 //!   Chrome/Perfetto trace-event JSON (see "Observability").
 //! * [`linalg`] — dense row-major matrices, blocked matmul, Cholesky
 //!   (rank-one *and* fused rank-k up/downdates), the [`linalg::blocked`]
-//!   pairwise distance/Gram engine behind every pairwise hot path, and
+//!   pairwise distance/Gram engine behind every pairwise hot path (with
+//!   the [`linalg::simd`] AVX2 tile kernel, mixed-precision tile
+//!   storage, and autotuned tile widths — see "Raw speed" above), and
 //!   the [`linalg::gramcache`] versioned landmark Gram workspace (see
 //!   "Landmark Gram cache" above).
 //! * [`special`] — Γ, erf, modified Bessel K_ν, polylogarithm Li_s.

@@ -10,25 +10,39 @@
 //!   r²(i, j) = ‖x_i‖² + ‖y_j‖² − 2⟨x_i, y_j⟩
 //! ```
 //!
-//! with row norms precomputed once ([`row_sqnorms`]), each y-tile
-//! transposed into a contiguous scratch buffer so the inner loop is a
-//! unit-stride multiply-add over the tile (SIMD-friendly at opt-level
-//! 3), and a caller-supplied map `f(r²)` applied per tile —
-//! `Kernel::eval_sq` for kernel matrices, a Gaussian `exp` for KDE,
-//! the identity for raw distances.
+//! with row norms precomputed once ([`row_sqnorms`], or supplied by the
+//! caller through the `*_pre` entry points so repeated calls against the
+//! same point set never recompute them), each y-tile transposed into a
+//! contiguous scratch buffer ([`super::simd::TilePack`]) so the inner
+//! loop is a unit-stride multiply-add over the tile, and a
+//! caller-supplied map `f(r²)` applied per tile — `Kernel::eval_sq` for
+//! kernel matrices, a Gaussian `exp` for KDE, the identity for raw
+//! distances.
+//!
+//! The inner multiply-add runs through explicit AVX2 micro-kernels when
+//! the CPU has them (groups of up to [`super::simd::MR`] rows share each
+//! packed y-strip, accumulators held in registers), with a bitwise
+//! identical scalar fallback everywhere else — see [`super::simd`] for
+//! the dispatch rules and the bitwise argument. Storage precision and
+//! tile width come from the process-wide [`Engine`] config below.
 //!
 //! # Determinism contract
 //!
-//! Tile partitioning is **shape-derived** (the fixed [`TILE_J`] width on
-//! a 0-aligned grid — never the thread count), every output element is
+//! Tile partitioning is **shape-derived** (a fixed tile width on a
+//! 0-aligned grid — never the thread count), every output element is
 //! produced by exactly one worker with a fixed inner summation order
 //! (k ascending over the feature dimension), and the row reductions in
 //! [`row_reduce`] fold j ascending into a single accumulator per row.
 //! Results are therefore **bit-identical at every thread count** — and
-//! independent of the tile width itself. The expansion's values may
-//! differ from the scalar two-pass `sqdist` path by O(ε·‖x‖²)
-//! cancellation error; negative round-off is clamped at zero and the
-//! crate's tolerance-based accuracy tests absorb the shift.
+//! independent of the tile width itself, which is what makes the
+//! autotuned geometry ([`warm_autotune`]) and the `LEVERKRR_TILE`
+//! override pure speed knobs. The SIMD-vs-scalar choice is equally
+//! value-free on the f64 path (pinned by `rust/tests/simd_parity.rs`);
+//! only the opt-in [`Precision::Mixed`] storage mode changes values, and
+//! it is never a silent default. The expansion's values may differ from
+//! the scalar two-pass `sqdist` path by O(ε·‖x‖²) cancellation error;
+//! negative round-off is clamped at zero and the crate's
+//! tolerance-based accuracy tests absorb the shift.
 //!
 //! Symmetric assembly ([`map_matrix_sym`]) computes only block-upper
 //! tiles and mirrors: the per-element evaluation sequence is exactly
@@ -36,13 +50,20 @@
 //! so the mirror is bitwise identical to direct evaluation and
 //! `map_matrix_sym(x, f)` equals `map_matrix(x, x, f)` bit for bit.
 
+use super::simd::{self, TilePack, MR};
 use super::Mat;
 use crate::trace;
 use crate::util::pool;
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::sync::OnceLock;
 
-/// Packed tile width (columns of `y` per transpose-packed tile). Purely
-/// a cache/SIMD knob: results do not depend on it (see module docs).
+/// Default packed tile width (columns of `y` per transpose-packed tile)
+/// when autotuning is disabled. Purely a cache/SIMD knob: results do not
+/// depend on it (see module docs).
 pub const TILE_J: usize = 128;
+
+/// Tile widths the startup micro-probe measures ([`warm_autotune`]).
+pub const TILE_LADDER: [usize; 4] = [64, 128, 256, 512];
 
 /// Work threshold (n·m·d) below which matrix-shaped maps dispatch
 /// serially — matches the pre-blocked per-path thresholds.
@@ -51,80 +72,291 @@ const PAR_MIN_WORK: usize = 32 * 32 * 32;
 /// Work threshold (m·d) for the single-row paths ([`map_row`]).
 const ROW_MIN_WORK: usize = 64 * 64;
 
+// ---------------------------------------------------------------------------
+// engine configuration: precision + tile geometry
+// ---------------------------------------------------------------------------
+
+/// Storage precision of the packed y-tiles. Accumulation is always f64.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    /// f64 tile storage — the default and the bitwise oracle.
+    F64,
+    /// f32 tile storage with f64 accumulation: ~2× less tile memory
+    /// traffic at ~1e-7 relative input rounding. Opt-in only
+    /// (accuracy-tested, never a silent default).
+    Mixed,
+}
+
+impl Precision {
+    /// Parse a config/CLI precision name.
+    pub fn parse(s: &str) -> Result<Precision, String> {
+        match s {
+            "f64" => Ok(Precision::F64),
+            "mixed" | "f32" => Ok(Precision::Mixed),
+            other => Err(format!("unknown precision '{other}' (expected f64|mixed)")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::Mixed => "mixed",
+        }
+    }
+}
+
+/// 0 = no override; 1 = F64; 2 = Mixed.
+static PREC_OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+/// RAII guard restoring the previous precision override on drop.
+pub struct PrecisionGuard {
+    prev: u8,
+}
+
+impl Drop for PrecisionGuard {
+    fn drop(&mut self) {
+        PREC_OVERRIDE.store(self.prev, Ordering::SeqCst);
+    }
+}
+
+/// Scope the engine's storage precision until the guard drops (used by
+/// `FitConfig::precision` and the bench harness). Process-global, like
+/// [`pool::override_threads`].
+pub fn override_precision(p: Precision) -> PrecisionGuard {
+    let code = match p {
+        Precision::F64 => 1,
+        Precision::Mixed => 2,
+    };
+    PrecisionGuard { prev: PREC_OVERRIDE.swap(code, Ordering::SeqCst) }
+}
+
+fn env_precision() -> Precision {
+    static ENV: OnceLock<Precision> = OnceLock::new();
+    *ENV.get_or_init(|| match std::env::var("LEVERKRR_PRECISION") {
+        Ok(v) => Precision::parse(&v).unwrap_or_else(|e| {
+            eprintln!("LEVERKRR_PRECISION: {e}; using f64");
+            Precision::F64
+        }),
+        Err(_) => Precision::F64,
+    })
+}
+
+/// Resolved storage precision: scoped override > `LEVERKRR_PRECISION`
+/// (`f64`|`mixed`) > [`Precision::F64`].
+pub fn current_precision() -> Precision {
+    match PREC_OVERRIDE.load(Ordering::Relaxed) {
+        1 => Precision::F64,
+        2 => Precision::Mixed,
+        _ => env_precision(),
+    }
+}
+
+/// 0 = no override; otherwise the forced tile width.
+static TILE_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// RAII guard restoring the previous tile override on drop.
+pub struct TileGuard {
+    prev: usize,
+}
+
+impl Drop for TileGuard {
+    fn drop(&mut self) {
+        TILE_OVERRIDE.store(self.prev, Ordering::SeqCst);
+    }
+}
+
+/// Force the packed tile width until the guard drops — a speed knob for
+/// benches and the tile-independence property tests; results are
+/// bitwise identical at any width.
+pub fn override_tile(w: usize) -> TileGuard {
+    TileGuard { prev: TILE_OVERRIDE.swap(w.max(1), Ordering::SeqCst) }
+}
+
+fn env_tile() -> Option<usize> {
+    static ENV: OnceLock<Option<usize>> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("LEVERKRR_TILE").ok().and_then(|v| v.parse::<usize>().ok()).filter(|&t| t > 0)
+    })
+}
+
+fn autotune_enabled() -> bool {
+    static ENV: OnceLock<bool> = OnceLock::new();
+    *ENV.get_or_init(|| std::env::var("LEVERKRR_AUTOTUNE").map(|v| v != "0").unwrap_or(true))
+}
+
+/// Resolved tile width for a precision: scoped [`override_tile`] >
+/// `LEVERKRR_TILE` > the cached autotune winner (unless
+/// `LEVERKRR_AUTOTUNE=0`) > [`TILE_J`].
+pub fn current_tile(prec: Precision) -> usize {
+    let forced = TILE_OVERRIDE.load(Ordering::Relaxed);
+    if forced > 0 {
+        return forced;
+    }
+    if let Some(t) = env_tile() {
+        return t;
+    }
+    if autotune_enabled() {
+        tuned_tile(prec)
+    } else {
+        TILE_J
+    }
+}
+
+fn tuned_tile(prec: Precision) -> usize {
+    static TUNED_F64: OnceLock<usize> = OnceLock::new();
+    static TUNED_MIXED: OnceLock<usize> = OnceLock::new();
+    let slot = match prec {
+        Precision::F64 => &TUNED_F64,
+        Precision::Mixed => &TUNED_MIXED,
+    };
+    *slot.get_or_init(|| probe_tile(prec))
+}
+
+/// One-shot micro-probe: time the pack + r²-rows inner loop over
+/// [`TILE_LADDER`] on a small deterministic synthetic workload and keep
+/// the fastest width (min over reps; ties go to the smallest width).
+/// Runs on the caller's thread with no pool dispatch, so it is safe to
+/// call from pool initialization. Values are formula-generated — no RNG,
+/// no clock-derived inputs — and the result only ever changes *speed*.
+fn probe_tile(prec: Precision) -> usize {
+    let (m, d, nrows) = (512usize, 32usize, 8usize);
+    let y = Mat::from_fn(m, d, |i, j| ((i * 31 + j * 7) % 97) as f64 * 0.013 - 0.5);
+    let x = Mat::from_fn(nrows, d, |i, j| ((i * 17 + j * 5) % 89) as f64 * 0.011 - 0.4);
+    let ny = row_sqnorms(&y);
+    let nx = row_sqnorms(&x);
+    let mut best = (TILE_J, f64::INFINITY);
+    for &tile in &TILE_LADDER {
+        let mut pack = TilePack::new(prec, tile, d);
+        let mut accs = vec![0.0; MR * tile];
+        let mut t_best = f64::INFINITY;
+        let mut sink = 0.0;
+        for _rep in 0..3 {
+            let t0 = std::time::Instant::now();
+            let mut j0 = 0;
+            while j0 < m {
+                let w = tile.min(m - j0);
+                pack.pack(&y, j0, w, &ny);
+                let mut i = 0;
+                while i < nrows {
+                    let g = MR.min(nrows - i);
+                    let mut xs: [&[f64]; MR] = [&[]; MR];
+                    for (r, slot) in xs.iter_mut().enumerate().take(g) {
+                        *slot = x.row(i + r);
+                    }
+                    pack.r2_rows(&xs[..g], &nx[i..i + g], &mut accs[..g * w]);
+                    sink += accs[0];
+                    i += g;
+                }
+                j0 += w;
+            }
+            let secs = t0.elapsed().as_secs_f64();
+            if secs < t_best {
+                t_best = secs;
+            }
+        }
+        assert!(sink.is_finite(), "probe workload must stay finite");
+        if t_best < best.1 {
+            best = (tile, t_best);
+        }
+    }
+    best.0
+}
+
+/// Prime the f64 autotune cache (called once from pool initialization so
+/// the probe never races a real workload). No-op when an override, the
+/// `LEVERKRR_TILE` env, or `LEVERKRR_AUTOTUNE=0` pins the width.
+pub fn warm_autotune() {
+    if TILE_OVERRIDE.load(Ordering::Relaxed) > 0 || env_tile().is_some() || !autotune_enabled() {
+        return;
+    }
+    let _ = tuned_tile(Precision::F64);
+}
+
+/// The engine's resolved per-call configuration: storage precision,
+/// packed tile width, and whether the AVX2 kernels will actually run.
+/// Every knob is a pure speed knob except `precision`, which is opt-in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Engine {
+    pub precision: Precision,
+    pub tile: usize,
+    pub simd: bool,
+}
+
+impl Engine {
+    /// Resolve the current process-wide configuration (see
+    /// [`current_precision`], [`current_tile`], [`simd::simd_active`]).
+    pub fn current() -> Engine {
+        let precision = current_precision();
+        Engine { precision, tile: current_tile(precision), simd: simd::simd_active() }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// entry points
+// ---------------------------------------------------------------------------
+
 /// ‖row_i‖² for every row, via the same unrolled [`super::dot`] the rest
 /// of the crate uses.
 pub fn row_sqnorms(x: &Mat) -> Vec<f64> {
     (0..x.rows).map(|i| super::dot(x.row(i), x.row(i))).collect()
 }
 
-/// Transpose rows `[j0, j0+w)` of `y` into `yt` so `yt[k·w + jj] =
-/// y[(j0+jj, k)]` — feature-major, unit stride over the tile.
-#[inline]
-fn pack_tile(y: &Mat, j0: usize, w: usize, yt: &mut [f64]) {
-    let d = y.cols;
-    for jj in 0..w {
-        let row = y.row(j0 + jj);
-        for k in 0..d {
-            yt[k * w + jj] = row[k];
-        }
-    }
-}
-
-/// Squared distances from one x-row against a packed tile:
-/// `acc[jj] = max(0, nxi + ny_tile[jj] − 2⟨xi, y_{j0+jj}⟩)`.
-///
-/// The evaluation sequence per element — one `nxi + nyj` add, then
-/// `(−2·x_k)·y_k` terms folded k-ascending, then the clamp — is the
-/// single source of truth shared by every engine entry point, so kernel
-/// rows computed through [`map_row`] are bitwise consistent with the
-/// matching [`map_matrix_sym`] entries.
-#[inline]
-fn tile_r2(xi: &[f64], nxi: f64, yt: &[f64], ny_tile: &[f64], acc: &mut [f64]) {
-    let w = acc.len();
-    for (a, &nyj) in acc.iter_mut().zip(ny_tile) {
-        *a = nxi + nyj;
-    }
-    for (k, &xk) in xi.iter().enumerate() {
-        let c = -2.0 * xk; // exact: scaling by a power of two
-        let yrow = &yt[k * w..(k + 1) * w];
-        for (a, &yv) in acc.iter_mut().zip(yrow) {
-            *a += c * yv;
-        }
-    }
-    for a in acc.iter_mut() {
-        if *a < 0.0 {
-            *a = 0.0;
-        }
-    }
-}
-
 /// `out[(i, j)] = f(r²(x_i, y_j))` — the blocked cross-matrix map behind
 /// [`crate::kernels::Kernel::matrix`] and [`sqdist_matrix`].
 pub fn map_matrix(x: &Mat, y: &Mat, f: impl Fn(f64) -> f64 + Sync) -> Mat {
+    let nx = row_sqnorms(x);
+    let ny = row_sqnorms(y);
+    map_matrix_pre(x, &nx, y, &ny, f)
+}
+
+/// [`map_matrix`] with caller-precomputed row norms (`nx[i] = ‖x_i‖²`,
+/// `ny[j] = ‖y_j‖²`, exact [`row_sqnorms`] values). Bitwise identical to
+/// recomputing them — the per-norm arithmetic is deterministic — which
+/// is what lets `GramCache` reuse one norms pass across every landmark
+/// block it assembles.
+pub fn map_matrix_pre(
+    x: &Mat,
+    nx: &[f64],
+    y: &Mat,
+    ny: &[f64],
+    f: impl Fn(f64) -> f64 + Sync,
+) -> Mat {
     let _span = trace::span("blocked.map_matrix");
     assert_eq!(x.cols, y.cols, "dimension mismatch");
+    assert_eq!(nx.len(), x.rows, "x norms length mismatch");
+    assert_eq!(ny.len(), y.rows, "y norms length mismatch");
     let (n, m, d) = (x.rows, y.rows, x.cols);
     if n == 0 || m == 0 {
         return Mat { rows: n, cols: m, data: Vec::new() };
     }
-    let nx = row_sqnorms(x);
-    let ny = row_sqnorms(y);
+    let eng = Engine::current();
+    let tile = eng.tile;
     let nt = if n * m * d.max(1) > PAR_MIN_WORK { pool::current_threads() } else { 1 };
-    let (f, nx, ny) = (&f, &nx, &ny);
+    let f = &f;
     let blocks = pool::par_chunks_with(nt, n, |range| {
         let mut out = vec![0.0; range.len() * m];
-        let mut yt = vec![0.0; TILE_J * d];
-        let mut acc = vec![0.0; TILE_J];
+        let mut pack = TilePack::new(eng.precision, tile, d);
+        let mut accs = vec![0.0; MR * tile];
         let mut j0 = 0;
         while j0 < m {
-            let w = TILE_J.min(m - j0);
-            pack_tile(y, j0, w, &mut yt);
-            for (bi, i) in range.clone().enumerate() {
-                tile_r2(x.row(i), nx[i], &yt, &ny[j0..j0 + w], &mut acc[..w]);
-                let dst = &mut out[bi * m + j0..bi * m + j0 + w];
-                for (o, &a) in dst.iter_mut().zip(acc[..w].iter()) {
-                    *o = f(a);
+            let w = tile.min(m - j0);
+            pack.pack(y, j0, w, ny);
+            let mut i = range.start;
+            while i < range.end {
+                let g = MR.min(range.end - i);
+                let mut xs: [&[f64]; MR] = [&[]; MR];
+                for (r, slot) in xs.iter_mut().enumerate().take(g) {
+                    *slot = x.row(i + r);
                 }
+                pack.r2_rows(&xs[..g], &nx[i..i + g], &mut accs[..g * w]);
+                for r in 0..g {
+                    let bi = i + r - range.start;
+                    let dst = &mut out[bi * m + j0..bi * m + j0 + w];
+                    for (o, &a) in dst.iter_mut().zip(accs[r * w..r * w + w].iter()) {
+                        *o = f(a);
+                    }
+                }
+                i += g;
             }
             j0 += w;
         }
@@ -143,27 +375,40 @@ pub fn map_matrix_sym(x: &Mat, f: impl Fn(f64) -> f64 + Sync) -> Mat {
         return Mat { rows: 0, cols: 0, data: Vec::new() };
     }
     let nx = row_sqnorms(x);
+    let eng = Engine::current();
+    let tile = eng.tile;
     let nt = if n * n * d.max(1) > PAR_MIN_WORK { pool::current_threads() } else { 1 };
     let (f, nx) = (&f, &nx);
     let blocks = pool::par_chunks_with(nt, n, |range| {
         let mut out = vec![0.0; range.len() * n];
-        let mut yt = vec![0.0; TILE_J * d];
-        let mut acc = vec![0.0; TILE_J];
+        let mut pack = TilePack::new(eng.precision, tile, d);
+        let mut accs = vec![0.0; MR * tile];
         // first 0-aligned tile that intersects column range.start..n
-        let mut j0 = (range.start / TILE_J) * TILE_J;
+        let mut j0 = (range.start / tile) * tile;
         while j0 < n {
-            let w = TILE_J.min(n - j0);
-            pack_tile(x, j0, w, &mut yt);
-            for (bi, i) in range.clone().enumerate() {
-                if j0 + w <= i {
-                    continue; // tile entirely below this row's diagonal
+            let w = tile.min(n - j0);
+            pack.pack(x, j0, w, nx);
+            // rows with i >= j0 + w lie entirely below this tile's
+            // diagonal span and are mirrored later
+            let row_end = range.end.min(j0 + w);
+            let mut i = range.start;
+            while i < row_end {
+                let g = MR.min(row_end - i);
+                let mut xs: [&[f64]; MR] = [&[]; MR];
+                for (r, slot) in xs.iter_mut().enumerate().take(g) {
+                    *slot = x.row(i + r);
                 }
-                tile_r2(x.row(i), nx[i], &yt, &nx[j0..j0 + w], &mut acc[..w]);
-                let lo = i.saturating_sub(j0).min(w);
-                let dst = &mut out[bi * n + j0 + lo..bi * n + j0 + w];
-                for (o, &a) in dst.iter_mut().zip(acc[lo..w].iter()) {
-                    *o = f(a);
+                pack.r2_rows(&xs[..g], &nx[i..i + g], &mut accs[..g * w]);
+                for r in 0..g {
+                    let ii = i + r;
+                    let bi = ii - range.start;
+                    let lo = ii.saturating_sub(j0).min(w);
+                    let dst = &mut out[bi * n + j0 + lo..bi * n + j0 + w];
+                    for (o, &a) in dst.iter_mut().zip(accs[r * w + lo..r * w + w].iter()) {
+                        *o = f(a);
+                    }
                 }
+                i += g;
             }
             j0 += w;
         }
@@ -188,8 +433,25 @@ pub fn sqdist_matrix(x: &Mat, y: &Mat) -> Mat {
 /// ascending into a single accumulator, so the reduction tree depends
 /// only on the data order, never on threads or tile width.
 pub fn row_reduce(q: &Mat, data: &Mat, f: impl Fn(f64) -> f64 + Sync) -> Vec<f64> {
+    let nq = row_sqnorms(q);
+    let ndata = row_sqnorms(data);
+    row_reduce_pre(q, &nq, data, &ndata, f)
+}
+
+/// [`row_reduce`] with caller-precomputed row norms (see
+/// [`map_matrix_pre`] for the reuse contract) — the self-KDE path passes
+/// one norms vector for both sides.
+pub fn row_reduce_pre(
+    q: &Mat,
+    nq: &[f64],
+    data: &Mat,
+    ndata: &[f64],
+    f: impl Fn(f64) -> f64 + Sync,
+) -> Vec<f64> {
     let _span = trace::span("blocked.row_reduce");
     assert_eq!(q.cols, data.cols, "dimension mismatch");
+    assert_eq!(nq.len(), q.rows, "q norms length mismatch");
+    assert_eq!(ndata.len(), data.rows, "data norms length mismatch");
     let (n, m, d) = (q.rows, data.rows, q.cols);
     if n == 0 {
         return Vec::new();
@@ -197,25 +459,34 @@ pub fn row_reduce(q: &Mat, data: &Mat, f: impl Fn(f64) -> f64 + Sync) -> Vec<f64
     if m == 0 {
         return vec![0.0; n];
     }
-    let nq = row_sqnorms(q);
-    let ndata = row_sqnorms(data);
+    let eng = Engine::current();
+    let tile = eng.tile;
     let nt = if n * m * d.max(1) > PAR_MIN_WORK { pool::current_threads() } else { 1 };
-    let (f, nq, ndata) = (&f, &nq, &ndata);
+    let f = &f;
     let chunks = pool::par_chunks_with(nt, n, |range| {
         let mut sums = vec![0.0; range.len()];
-        let mut yt = vec![0.0; TILE_J * d];
-        let mut acc = vec![0.0; TILE_J];
+        let mut pack = TilePack::new(eng.precision, tile, d);
+        let mut accs = vec![0.0; MR * tile];
         let mut j0 = 0;
         while j0 < m {
-            let w = TILE_J.min(m - j0);
-            pack_tile(data, j0, w, &mut yt);
-            for (bi, i) in range.clone().enumerate() {
-                tile_r2(q.row(i), nq[i], &yt, &ndata[j0..j0 + w], &mut acc[..w]);
-                // fold j-ascending into the row's scalar accumulator
-                let s = &mut sums[bi];
-                for &a in acc[..w].iter() {
-                    *s += f(a);
+            let w = tile.min(m - j0);
+            pack.pack(data, j0, w, ndata);
+            let mut i = range.start;
+            while i < range.end {
+                let g = MR.min(range.end - i);
+                let mut xs: [&[f64]; MR] = [&[]; MR];
+                for (r, slot) in xs.iter_mut().enumerate().take(g) {
+                    *slot = q.row(i + r);
                 }
+                pack.r2_rows(&xs[..g], &nq[i..i + g], &mut accs[..g * w]);
+                for r in 0..g {
+                    // fold j-ascending into the row's scalar accumulator
+                    let s = &mut sums[i + r - range.start];
+                    for &a in accs[r * w..r * w + w].iter() {
+                        *s += f(a);
+                    }
+                }
+                i += g;
             }
             j0 += w;
         }
@@ -226,25 +497,40 @@ pub fn row_reduce(q: &Mat, data: &Mat, f: impl Fn(f64) -> f64 + Sync) -> Vec<f64
 
 /// One query row against every row of `y`: `out[j] = f(r²(x, y_j))`.
 /// The streaming dictionary's kernel-row path; bitwise consistent with
-/// the matching [`map_matrix_sym`] entries (shared [`tile_r2`]).
+/// the matching [`map_matrix_sym`] entries (shared per-element
+/// sequence in [`TilePack::r2_rows`]).
 pub fn map_row(x: &[f64], y: &Mat, f: impl Fn(f64) -> f64 + Sync) -> Vec<f64> {
+    let nx = super::dot(x, x);
+    let ny = row_sqnorms(y);
+    map_row_pre(x, nx, y, &ny, f)
+}
+
+/// [`map_row`] with a precomputed query norm and y norms (see
+/// [`map_matrix_pre`] for the reuse contract).
+pub fn map_row_pre(
+    x: &[f64],
+    nx: f64,
+    y: &Mat,
+    ny: &[f64],
+    f: impl Fn(f64) -> f64 + Sync,
+) -> Vec<f64> {
     let _span = trace::span("blocked.map_row");
     assert_eq!(x.len(), y.cols, "dimension mismatch");
+    assert_eq!(ny.len(), y.rows, "y norms length mismatch");
     let (m, d) = (y.rows, y.cols);
     if m == 0 {
         return Vec::new();
     }
-    let nx = super::dot(x, x);
-    let ny = row_sqnorms(y);
+    let eng = Engine::current();
+    let tile = eng.tile;
     let nt = if m * d.max(1) > ROW_MIN_WORK { pool::current_threads() } else { 1 };
-    let ny_ref = &ny;
     let f = &f;
-    let parts = pool::par_blocks_with(nt, m, TILE_J, |tile| {
-        let (j0, w) = (tile.start, tile.len());
-        let mut yt = vec![0.0; w * d];
+    let parts = pool::par_blocks_with(nt, m, tile, |tile_range| {
+        let (j0, w) = (tile_range.start, tile_range.len());
+        let mut pack = TilePack::new(eng.precision, w, d);
         let mut acc = vec![0.0; w];
-        pack_tile(y, j0, w, &mut yt);
-        tile_r2(x, nx, &yt, &ny_ref[j0..j0 + w], &mut acc);
+        pack.pack(y, j0, w, ny);
+        pack.r2_rows(&[x], &[nx], &mut acc);
         acc.iter().map(|&a| f(a)).collect::<Vec<f64>>()
     });
     parts.into_iter().flatten().collect()
@@ -262,24 +548,35 @@ pub fn nearest_rows(x: &Mat, centers: &Mat) -> Vec<(usize, f64)> {
     }
     let nx = row_sqnorms(x);
     let nc = row_sqnorms(centers);
+    let eng = Engine::current();
+    let tile = eng.tile;
     let nt = if n * k * d.max(1) > PAR_MIN_WORK { pool::current_threads() } else { 1 };
     let (nx, nc) = (&nx, &nc);
     let chunks = pool::par_chunks_with(nt, n, |range| {
-        let mut yt = vec![0.0; TILE_J * d];
-        let mut acc = vec![0.0; TILE_J];
+        let mut pack = TilePack::new(eng.precision, tile, d);
+        let mut accs = vec![0.0; MR * tile];
         let mut best = vec![(0usize, f64::INFINITY); range.len()];
         let mut j0 = 0;
         while j0 < k {
-            let w = TILE_J.min(k - j0);
-            pack_tile(centers, j0, w, &mut yt);
-            for (bi, i) in range.clone().enumerate() {
-                tile_r2(x.row(i), nx[i], &yt, &nc[j0..j0 + w], &mut acc[..w]);
-                let b = &mut best[bi];
-                for (jj, &a) in acc[..w].iter().enumerate() {
-                    if a < b.1 {
-                        *b = (j0 + jj, a);
+            let w = tile.min(k - j0);
+            pack.pack(centers, j0, w, nc);
+            let mut i = range.start;
+            while i < range.end {
+                let g = MR.min(range.end - i);
+                let mut xs: [&[f64]; MR] = [&[]; MR];
+                for (r, slot) in xs.iter_mut().enumerate().take(g) {
+                    *slot = x.row(i + r);
+                }
+                pack.r2_rows(&xs[..g], &nx[i..i + g], &mut accs[..g * w]);
+                for r in 0..g {
+                    let b = &mut best[i + r - range.start];
+                    for (jj, &a) in accs[r * w..r * w + w].iter().enumerate() {
+                        if a < b.1 {
+                            *b = (j0 + jj, a);
+                        }
                     }
                 }
+                i += g;
             }
             j0 += w;
         }
@@ -294,6 +591,10 @@ mod tests {
     use crate::linalg::sqdist;
     use crate::util::prop;
     use crate::util::rng::Rng;
+    use std::sync::Mutex;
+
+    // Tests that flip the global tile/precision overrides serialize here.
+    static ENGINE_LOCK: Mutex<()> = Mutex::new(());
 
     fn random_mat(rng: &mut Rng, rows: usize, cols: usize) -> Mat {
         Mat::from_fn(rows, cols, |_, _| rng.normal())
@@ -424,5 +725,93 @@ mod tests {
         let r = sqdist_matrix(&z, &Mat::zeros(2, 0));
         assert_eq!((r.rows, r.cols), (3, 2));
         assert!(r.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn results_are_bitwise_independent_of_tile_width() {
+        // The autotune safety property: every entry point returns the
+        // same bits at any tile width, including non-power-of-two.
+        let _lock = ENGINE_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let mut rng = Rng::seed_from_u64(37);
+        let x = random_mat(&mut rng, 67, 3);
+        let y = random_mat(&mut rng, 201, 3);
+        let xr: Vec<f64> = (0..3).map(|_| rng.normal()).collect();
+        let run = || {
+            (
+                sqdist_matrix(&x, &y).data,
+                map_matrix_sym(&x, |r2| (-r2).exp()).data,
+                row_reduce(&x, &y, |r2| (-0.5 * r2).exp()),
+                map_row(&xr, &y, |r2| (-r2).exp()),
+                nearest_rows(&x, &y),
+            )
+        };
+        let baseline = run();
+        for &tile in &[64usize, 37, 128, 256, 512, 1] {
+            let _g = override_tile(tile);
+            assert_eq!(run(), baseline, "tile width {tile} changed results");
+        }
+    }
+
+    #[test]
+    fn pre_variants_are_bitwise_the_norms_recomputing_paths() {
+        let mut rng = Rng::seed_from_u64(38);
+        let x = random_mat(&mut rng, 41, 4);
+        let y = random_mat(&mut rng, 133, 4);
+        let (nx, ny) = (row_sqnorms(&x), row_sqnorms(&y));
+        assert_eq!(
+            map_matrix_pre(&x, &nx, &y, &ny, |r2| (-r2).exp()).data,
+            map_matrix(&x, &y, |r2| (-r2).exp()).data,
+        );
+        assert_eq!(
+            row_reduce_pre(&x, &nx, &y, &ny, |r2| (-0.5 * r2).exp()),
+            row_reduce(&x, &y, |r2| (-0.5 * r2).exp()),
+        );
+        let q = x.row(7);
+        let nq = crate::linalg::dot(q, q);
+        assert_eq!(
+            map_row_pre(q, nq, &y, &ny, |r2| (-r2).exp()),
+            map_row(q, &y, |r2| (-r2).exp()),
+        );
+    }
+
+    #[test]
+    fn mixed_precision_is_close_but_opt_in() {
+        let _lock = ENGINE_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let mut rng = Rng::seed_from_u64(39);
+        let x = random_mat(&mut rng, 50, 5);
+        let y = random_mat(&mut rng, 170, 5);
+        assert_eq!(current_precision(), Precision::F64, "mixed must never be a default");
+        let exact = sqdist_matrix(&x, &y);
+        let mixed = {
+            let _g = override_precision(Precision::Mixed);
+            assert_eq!(Engine::current().precision, Precision::Mixed);
+            sqdist_matrix(&x, &y)
+        };
+        let scale: f64 =
+            exact.data.iter().fold(0.0f64, |m, &v| m.max(v.abs())).max(1.0);
+        for (a, b) in exact.data.iter().zip(mixed.data.iter()) {
+            assert!((a - b).abs() <= 1e-5 * scale, "mixed drifted: {a} vs {b}");
+        }
+        // guard restored the default
+        assert_eq!(current_precision(), Precision::F64);
+    }
+
+    #[test]
+    fn probe_picks_a_ladder_width_and_resolution_orders_hold() {
+        let _lock = ENGINE_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        warm_autotune();
+        for prec in [Precision::F64, Precision::Mixed] {
+            let t = current_tile(prec);
+            // env/autotune resolution must yield a positive width; with
+            // autotune on and no env pin, it is one of the ladder's
+            assert!(t > 0);
+            if std::env::var("LEVERKRR_TILE").is_err() && autotune_enabled() {
+                assert!(TILE_LADDER.contains(&t), "tile {t} not in ladder");
+            }
+        }
+        // scoped override wins over everything
+        let _g = override_tile(96);
+        assert_eq!(current_tile(Precision::F64), 96);
+        assert_eq!(Engine::current().tile, 96);
     }
 }

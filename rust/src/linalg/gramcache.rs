@@ -12,7 +12,12 @@
 //!   row/column gather; a landmark column is evaluated **at most once**
 //!   for the workspace's lifetime, no matter how many recursion levels,
 //!   subsets, or consumers touch it. Missing columns are evaluated in
-//!   one blocked call ([`crate::kernels::Kernel::matrix`]) and scattered.
+//!   one blocked call ([`crate::kernels::Kernel::matrix_pre`]) and
+//!   scattered; the workspace computes ‖x_i‖² for all of `x` **once** at
+//!   construction and feeds those precomputed norms to every evaluation,
+//!   so repeated landmark blocks never re-run the norms pass (bitwise
+//!   neutral — a gathered norm is exactly what a fresh pass over the
+//!   gathered row would produce).
 //! * **Landmark workspace** — the current landmark list, its packed row
 //!   matrix (the row-major layout [`crate::linalg::blocked`] tiles), the
 //!   assembled K_JJ, and its Cholesky factor. [`GramCache::set_landmarks`]
@@ -78,6 +83,14 @@ pub const CACHE_BUDGET_FLOATS: usize = 64 << 20;
 pub struct GramCache<'a> {
     kernel: Kernel,
     x: &'a Mat,
+    /// ‖x_i‖² for every row of `x`, computed once at construction and
+    /// reused by every block the workspace assembles (via
+    /// [`Kernel::matrix_pre`]) — landmark-column assembly never pays the
+    /// per-call norms pass again. Bitwise neutral: a gathered norm is
+    /// exactly the value [`crate::linalg::blocked::row_sqnorms`] would
+    /// recompute on the gathered row (identical input bits, identical
+    /// deterministic dot).
+    xnorms: Vec<f64>,
     /// `false` → reference mode: same workspace logic, no memoization.
     caching: bool,
     max_cols: usize,
@@ -129,6 +142,7 @@ impl<'a> GramCache<'a> {
         GramCache {
             kernel,
             x,
+            xnorms: super::blocked::row_sqnorms(x),
             caching,
             max_cols: default_max_cols(x.rows),
             cols: HashMap::new(),
@@ -278,7 +292,8 @@ impl<'a> GramCache<'a> {
         } else {
             // reference mode / oversized set: evaluate without storing
             self.miss(k);
-            self.kernel.matrix(self.x, &new_mat)
+            self.kernel
+                .matrix_pre(self.x, &self.xnorms, &new_mat, &self.gathered_norms(new))
         };
         self.dict.extend_from_slice(new);
         self.landmarks.data.extend_from_slice(&new_mat.data);
@@ -325,9 +340,17 @@ impl<'a> GramCache<'a> {
             // column cache: direct (seed-path) evaluation of exactly the
             // requested block — bitwise identical to the gather
             self.miss(m);
+            let lnorms = self.gathered_norms(&self.dict);
             return match rows {
-                None => self.kernel.matrix(self.x, &self.landmarks),
-                Some(r) => self.kernel.matrix(&gather_rows(self.x, r), &self.landmarks),
+                None => self
+                    .kernel
+                    .matrix_pre(self.x, &self.xnorms, &self.landmarks, &lnorms),
+                Some(r) => self.kernel.matrix_pre(
+                    &gather_rows(self.x, r),
+                    &self.gathered_norms(r),
+                    &self.landmarks,
+                    &lnorms,
+                ),
             };
         }
         let dict = self.dict.clone();
@@ -336,6 +359,12 @@ impl<'a> GramCache<'a> {
             None => cols,
             Some(r) => Mat::from_fn(r.len(), m, |i, j| cols[(r[i], j)]),
         }
+    }
+
+    /// Precomputed ‖x_j‖² for the given row indices, in order — the
+    /// norms side-channel that pairs with a [`gather_rows`] gather.
+    fn gathered_norms(&self, idxs: &[usize]) -> Vec<f64> {
+        idxs.iter().map(|&j| self.xnorms[j]).collect()
     }
 
     /// Full n-row columns for arbitrary landmark indices, one column per
@@ -347,7 +376,12 @@ impl<'a> GramCache<'a> {
         if !self.caching {
             self.miss(idxs.len());
             let _span = trace::span("gramcache.miss.eval");
-            return self.kernel.matrix(self.x, &gather_rows(self.x, idxs));
+            return self.kernel.matrix_pre(
+                self.x,
+                &self.xnorms,
+                &gather_rows(self.x, idxs),
+                &self.gathered_norms(idxs),
+            );
         }
         let mut missing: Vec<usize> = Vec::new();
         let mut hits = 0usize;
@@ -364,7 +398,12 @@ impl<'a> GramCache<'a> {
             // miss-attributed kernel eval: the only place a caching
             // workspace pays for K columns
             let _span = trace::span("gramcache.miss.eval");
-            let blk = self.kernel.matrix(self.x, &gather_rows(self.x, &missing));
+            let blk = self.kernel.matrix_pre(
+                self.x,
+                &self.xnorms,
+                &gather_rows(self.x, &missing),
+                &self.gathered_norms(&missing),
+            );
             for (c, &j) in missing.iter().enumerate() {
                 let col: Vec<f64> = (0..n).map(|i| blk[(i, c)]).collect();
                 self.cols.insert(j, col);

@@ -16,6 +16,7 @@
 
 pub mod blocked;
 pub mod gramcache;
+pub mod simd;
 mod mat;
 mod chol;
 pub mod eigen;

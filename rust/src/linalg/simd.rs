@@ -1,0 +1,527 @@
+//! Explicit SIMD micro-kernels for the blocked distance engine.
+//!
+//! [`TilePack`] owns one transpose-packed y-tile (f64, or f32 under
+//! [`Precision::Mixed`]) plus its row norms, and [`TilePack::r2_rows`]
+//! computes squared distances for a group of up to [`MR`] x-rows against
+//! the packed tile in one pass. On x86_64 with AVX2 available at runtime
+//! the group runs through a register-blocked micro-kernel (up to 4 rows ×
+//! 8 columns of `__m256d` accumulators live across the whole feature
+//! loop); everywhere else — non-x86 targets, pre-AVX2 CPUs, or the
+//! `LEVERKRR_SIMD=0` kill-switch — a scalar fallback runs instead.
+//!
+//! # Bitwise contract (f64)
+//!
+//! The SIMD f64 path is **bit-identical** to the scalar path, by
+//! construction rather than by accident:
+//!
+//! * each output element folds its own accumulator — one `nxi + nyj`
+//!   add, then `(−2·x_k)·y_k` terms added k-ascending (`−2·x_k` is an
+//!   exact power-of-two scale), then a clamp at zero — and the vector
+//!   kernel performs exactly that scalar sequence per lane:
+//!   `_mm256_mul_pd` then `_mm256_add_pd`, never an FMA (contraction
+//!   would change the rounding);
+//! * the clamp is `_mm256_max_pd(0, acc)`: x86 `MAXPD` returns the
+//!   *second* operand on equal or unordered lanes, so `acc = NaN` stays
+//!   NaN, `acc = −0.0` stays `−0.0`, and negative round-off becomes
+//!   `+0.0` — exactly the scalar `if a < 0.0 { a = 0.0 }`;
+//! * grouping rows ([`MR`] at a time) and strip-mining columns (8 per
+//!   strip, scalar tail) only *interleaves* independent per-element
+//!   computations; it never reorders any element's own fold.
+//!
+//! `rust/tests/simd_parity.rs` pins the equivalence over random shapes,
+//! dispatch boundaries, and NaN/subnormal inputs.
+//!
+//! # Mixed precision
+//!
+//! Under [`Precision::Mixed`] the tile stores `y` values and y-norms as
+//! f32 (~2× less memory traffic on the quadratic paths) while the x-row,
+//! the `−2·x_k` coefficients, and every accumulation stay f64: each f32
+//! is widened exactly (`f32 → f64` is lossless) right before use, so the
+//! scalar-mixed and AVX2-mixed paths are bitwise identical *to each
+//! other* — mixed-vs-f64 is a measured-accuracy relationship, not a
+//! bitwise one.
+//!
+//! # Dispatch resolution
+//!
+//! Highest priority first: a scoped [`force_simd`] guard, the
+//! `LEVERKRR_SIMD` environment variable (read once per process; any
+//! value other than `0` enables), default on. The resolved *preference*
+//! only takes effect when the CPU reports AVX2
+//! (`is_x86_feature_detected!`) — see [`simd_active`].
+
+use super::blocked::Precision;
+use super::Mat;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Maximum x-rows per [`TilePack::r2_rows`] group (the register-blocked
+/// micro-kernel's row dimension). Callers may pass any group size in
+/// `1..=MR`; smaller groups dispatch to narrower kernels.
+pub const MR: usize = 4;
+
+/// 0 = no override; 1 = forced off; 2 = forced on.
+static FORCE: AtomicU8 = AtomicU8::new(0);
+
+fn env_enabled() -> bool {
+    static ENV: OnceLock<bool> = OnceLock::new();
+    *ENV.get_or_init(|| std::env::var("LEVERKRR_SIMD").map(|v| v != "0").unwrap_or(true))
+}
+
+/// RAII guard restoring the previous SIMD force state on drop.
+pub struct SimdGuard {
+    prev: u8,
+}
+
+impl Drop for SimdGuard {
+    fn drop(&mut self) {
+        FORCE.store(self.prev, Ordering::SeqCst);
+    }
+}
+
+/// Force the SIMD preference on or off until the guard drops. Process
+/// global (like [`crate::util::pool::override_threads`]); callers that
+/// need exclusivity serialize around it. Purely a speed knob on the f64
+/// path — results are bitwise identical either way.
+pub fn force_simd(on: bool) -> SimdGuard {
+    let prev = FORCE.swap(if on { 2 } else { 1 }, Ordering::SeqCst);
+    SimdGuard { prev }
+}
+
+/// The resolved SIMD *preference* (guard > env > default on) — whether
+/// the caller wants vector kernels, independent of CPU support.
+pub fn simd_enabled() -> bool {
+    match FORCE.load(Ordering::Relaxed) {
+        1 => false,
+        2 => true,
+        _ => env_enabled(),
+    }
+}
+
+/// Whether this CPU can run the AVX2 kernels at all.
+#[cfg(target_arch = "x86_64")]
+pub fn simd_available() -> bool {
+    is_x86_feature_detected!("avx2")
+}
+
+/// Whether this CPU can run the AVX2 kernels at all.
+#[cfg(not(target_arch = "x86_64"))]
+pub fn simd_available() -> bool {
+    false
+}
+
+/// Preference AND hardware support: what [`TilePack`] actually runs.
+pub fn simd_active() -> bool {
+    simd_enabled() && simd_available()
+}
+
+/// Human-readable dispatch label for bench rows ("avx2" / "scalar").
+pub fn simd_label() -> &'static str {
+    if simd_active() {
+        "avx2"
+    } else {
+        "scalar"
+    }
+}
+
+/// One transpose-packed y-tile plus row norms, in the engine's storage
+/// precision, with the SIMD dispatch decision frozen at construction
+/// (one check per pack buffer, not per tile).
+pub struct TilePack {
+    prec: Precision,
+    d: usize,
+    cur_w: usize,
+    use_avx2: bool,
+    yt64: Vec<f64>,
+    ny64: Vec<f64>,
+    yt32: Vec<f32>,
+    ny32: Vec<f32>,
+}
+
+impl TilePack {
+    /// Allocate scratch for tiles up to `tile` columns of dimension `d`.
+    pub fn new(prec: Precision, tile: usize, d: usize) -> TilePack {
+        let (yt64, ny64, yt32, ny32) = match prec {
+            Precision::F64 => (vec![0.0; tile * d], vec![0.0; tile], Vec::new(), Vec::new()),
+            Precision::Mixed => (Vec::new(), Vec::new(), vec![0.0; tile * d], vec![0.0; tile]),
+        };
+        TilePack { prec, d, cur_w: 0, use_avx2: simd_active(), yt64, ny64, yt32, ny32 }
+    }
+
+    /// Transpose rows `[j0, j0+w)` of `y` into the pack buffer so
+    /// `yt[k·w + jj] = y[(j0+jj, k)]` (feature-major, unit stride over
+    /// the tile), and stage the matching norms `ny[j0..j0+w]`.
+    pub fn pack(&mut self, y: &Mat, j0: usize, w: usize, ny: &[f64]) {
+        self.cur_w = w;
+        debug_assert_eq!(y.cols, self.d, "pack dimension mismatch");
+        match self.prec {
+            Precision::F64 => {
+                for jj in 0..w {
+                    let row = y.row(j0 + jj);
+                    for (k, &v) in row.iter().enumerate() {
+                        self.yt64[k * w + jj] = v;
+                    }
+                }
+                self.ny64[..w].copy_from_slice(&ny[j0..j0 + w]);
+            }
+            Precision::Mixed => {
+                for jj in 0..w {
+                    let row = y.row(j0 + jj);
+                    for (k, &v) in row.iter().enumerate() {
+                        self.yt32[k * w + jj] = v as f32;
+                    }
+                }
+                for (dst, &v) in self.ny32[..w].iter_mut().zip(&ny[j0..j0 + w]) {
+                    *dst = v as f32;
+                }
+            }
+        }
+    }
+
+    /// Width of the currently packed tile.
+    pub fn width(&self) -> usize {
+        self.cur_w
+    }
+
+    /// Squared distances for a group of x-rows against the packed tile:
+    /// `accs[r·w + jj] = max(0, nxs[r] + ny[jj] − 2⟨xs[r], y_jj⟩)` with
+    /// `w = self.width()`. Contract: `1 ≤ xs.len() ≤ MR`,
+    /// `nxs.len() == xs.len()`, `accs.len() == xs.len() · w`, and every
+    /// `xs[r].len() == d`.
+    pub fn r2_rows(&self, xs: &[&[f64]], nxs: &[f64], accs: &mut [f64]) {
+        let w = self.cur_w;
+        debug_assert!(!xs.is_empty() && xs.len() <= MR);
+        debug_assert_eq!(nxs.len(), xs.len());
+        debug_assert_eq!(accs.len(), xs.len() * w);
+        debug_assert!(xs.iter().all(|x| x.len() == self.d));
+        if w == 0 {
+            return;
+        }
+        #[cfg(target_arch = "x86_64")]
+        if self.use_avx2 {
+            // SAFETY: `use_avx2` was set from a runtime AVX2 check at
+            // construction; slices obey the length contract asserted
+            // above (re-checked with asserts inside the kernels).
+            unsafe {
+                match self.prec {
+                    Precision::F64 => avx2::rows_f64(self, xs, nxs, accs),
+                    Precision::Mixed => avx2::rows_mixed(self, xs, nxs, accs),
+                }
+            }
+            return;
+        }
+        match self.prec {
+            Precision::F64 => scalar_rows_f64(self, xs, nxs, accs, 0, w),
+            Precision::Mixed => scalar_rows_mixed(self, xs, nxs, accs, 0, w),
+        }
+    }
+}
+
+/// Scalar f64 reference over the column subrange `[jlo, jhi)` — the
+/// single source of truth for the per-element sequence, shared by the
+/// full scalar fallback (`jlo = 0, jhi = w`) and the AVX2 column tail.
+fn scalar_rows_f64(
+    tp: &TilePack,
+    xs: &[&[f64]],
+    nxs: &[f64],
+    accs: &mut [f64],
+    jlo: usize,
+    jhi: usize,
+) {
+    let w = tp.cur_w;
+    for (r, (xi, &nxi)) in xs.iter().zip(nxs).enumerate() {
+        let acc = &mut accs[r * w + jlo..r * w + jhi];
+        for (a, &nyj) in acc.iter_mut().zip(&tp.ny64[jlo..jhi]) {
+            *a = nxi + nyj;
+        }
+        for (k, &xk) in xi.iter().enumerate() {
+            let c = -2.0 * xk; // exact: scaling by a power of two
+            let yrow = &tp.yt64[k * w + jlo..k * w + jhi];
+            for (a, &yv) in acc.iter_mut().zip(yrow) {
+                *a += c * yv;
+            }
+        }
+        for a in acc.iter_mut() {
+            if *a < 0.0 {
+                *a = 0.0;
+            }
+        }
+    }
+}
+
+/// Scalar mixed-precision reference over `[jlo, jhi)`: f32 tile values
+/// widened exactly to f64 at use, all arithmetic in f64.
+fn scalar_rows_mixed(
+    tp: &TilePack,
+    xs: &[&[f64]],
+    nxs: &[f64],
+    accs: &mut [f64],
+    jlo: usize,
+    jhi: usize,
+) {
+    let w = tp.cur_w;
+    for (r, (xi, &nxi)) in xs.iter().zip(nxs).enumerate() {
+        let acc = &mut accs[r * w + jlo..r * w + jhi];
+        for (a, &nyj) in acc.iter_mut().zip(&tp.ny32[jlo..jhi]) {
+            *a = nxi + nyj as f64;
+        }
+        for (k, &xk) in xi.iter().enumerate() {
+            let c = -2.0 * xk;
+            let yrow = &tp.yt32[k * w + jlo..k * w + jhi];
+            for (a, &yv) in acc.iter_mut().zip(yrow) {
+                *a += c * yv as f64;
+            }
+        }
+        for a in acc.iter_mut() {
+            if *a < 0.0 {
+                *a = 0.0;
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! Register-blocked AVX2 micro-kernels: up to [`MR`] rows × 8
+    //! columns (2 × `__m256d`) of accumulators stay in registers across
+    //! the whole feature loop, with each y-strip loaded once per k and
+    //! shared by every row in the group. Per-lane op sequence is exactly
+    //! the scalar one — see the module docs for the bitwise argument.
+
+    use super::{scalar_rows_f64, scalar_rows_mixed, TilePack, MR};
+    use std::arch::x86_64::*;
+
+    /// Columns per register strip (two `__m256d` per row).
+    const STRIP: usize = 8;
+
+    /// # Safety
+    /// AVX2 must be available; slice lengths per the `r2_rows` contract.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn rows_f64(tp: &TilePack, xs: &[&[f64]], nxs: &[f64], accs: &mut [f64]) {
+        match xs.len() {
+            1 => rows_f64_n::<1>(tp, xs, nxs, accs),
+            2 => rows_f64_n::<2>(tp, xs, nxs, accs),
+            3 => rows_f64_n::<3>(tp, xs, nxs, accs),
+            4 => rows_f64_n::<4>(tp, xs, nxs, accs),
+            n => unreachable!("row group {n} exceeds MR={MR}"),
+        }
+    }
+
+    /// # Safety
+    /// AVX2 must be available; slice lengths per the `r2_rows` contract.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn rows_mixed(tp: &TilePack, xs: &[&[f64]], nxs: &[f64], accs: &mut [f64]) {
+        match xs.len() {
+            1 => rows_mixed_n::<1>(tp, xs, nxs, accs),
+            2 => rows_mixed_n::<2>(tp, xs, nxs, accs),
+            3 => rows_mixed_n::<3>(tp, xs, nxs, accs),
+            4 => rows_mixed_n::<4>(tp, xs, nxs, accs),
+            n => unreachable!("row group {n} exceeds MR={MR}"),
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn rows_f64_n<const NR: usize>(
+        tp: &TilePack,
+        xs: &[&[f64]],
+        nxs: &[f64],
+        accs: &mut [f64],
+    ) {
+        let w = tp.cur_w;
+        let d = tp.d;
+        assert!(xs.len() == NR && nxs.len() == NR && accs.len() == NR * w);
+        assert!(tp.yt64.len() >= w * d && tp.ny64.len() >= w);
+        let yt = tp.yt64.as_ptr();
+        let ny = tp.ny64.as_ptr();
+        let mut xp = [std::ptr::null::<f64>(); NR];
+        for r in 0..NR {
+            assert_eq!(xs[r].len(), d);
+            xp[r] = xs[r].as_ptr();
+        }
+        let zero = _mm256_setzero_pd();
+        let wv = w - (w % STRIP);
+        let mut j = 0;
+        while j < wv {
+            let ny0 = _mm256_loadu_pd(ny.add(j));
+            let ny1 = _mm256_loadu_pd(ny.add(j + 4));
+            let mut a0 = [zero; NR];
+            let mut a1 = [zero; NR];
+            for r in 0..NR {
+                let nx = _mm256_set1_pd(nxs[r]);
+                a0[r] = _mm256_add_pd(nx, ny0); // same order as scalar: nxi + nyj
+                a1[r] = _mm256_add_pd(nx, ny1);
+            }
+            for k in 0..d {
+                let y0 = _mm256_loadu_pd(yt.add(k * w + j));
+                let y1 = _mm256_loadu_pd(yt.add(k * w + j + 4));
+                for r in 0..NR {
+                    let c = _mm256_set1_pd(-2.0 * *xp[r].add(k));
+                    // mul then add — no FMA contraction, scalar rounding
+                    a0[r] = _mm256_add_pd(a0[r], _mm256_mul_pd(c, y0));
+                    a1[r] = _mm256_add_pd(a1[r], _mm256_mul_pd(c, y1));
+                }
+            }
+            for r in 0..NR {
+                let dst = accs.as_mut_ptr().add(r * w + j);
+                // MAXPD returns the second operand on ties/NaN: exactly
+                // the scalar `if a < 0.0 { a = 0.0 }` per lane.
+                _mm256_storeu_pd(dst, _mm256_max_pd(zero, a0[r]));
+                _mm256_storeu_pd(dst.add(4), _mm256_max_pd(zero, a1[r]));
+            }
+            j += STRIP;
+        }
+        if wv < w {
+            scalar_rows_f64(tp, xs, nxs, accs, wv, w);
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn rows_mixed_n<const NR: usize>(
+        tp: &TilePack,
+        xs: &[&[f64]],
+        nxs: &[f64],
+        accs: &mut [f64],
+    ) {
+        let w = tp.cur_w;
+        let d = tp.d;
+        assert!(xs.len() == NR && nxs.len() == NR && accs.len() == NR * w);
+        assert!(tp.yt32.len() >= w * d && tp.ny32.len() >= w);
+        let yt = tp.yt32.as_ptr();
+        let ny = tp.ny32.as_ptr();
+        let mut xp = [std::ptr::null::<f64>(); NR];
+        for r in 0..NR {
+            assert_eq!(xs[r].len(), d);
+            xp[r] = xs[r].as_ptr();
+        }
+        let zero = _mm256_setzero_pd();
+        let wv = w - (w % STRIP);
+        let mut j = 0;
+        while j < wv {
+            // f32 → f64 widening is exact, so these lanes hold exactly
+            // the values the scalar-mixed path computes with `as f64`.
+            let ny0 = _mm256_cvtps_pd(_mm_loadu_ps(ny.add(j)));
+            let ny1 = _mm256_cvtps_pd(_mm_loadu_ps(ny.add(j + 4)));
+            let mut a0 = [zero; NR];
+            let mut a1 = [zero; NR];
+            for r in 0..NR {
+                let nx = _mm256_set1_pd(nxs[r]);
+                a0[r] = _mm256_add_pd(nx, ny0);
+                a1[r] = _mm256_add_pd(nx, ny1);
+            }
+            for k in 0..d {
+                let y0 = _mm256_cvtps_pd(_mm_loadu_ps(yt.add(k * w + j)));
+                let y1 = _mm256_cvtps_pd(_mm_loadu_ps(yt.add(k * w + j + 4)));
+                for r in 0..NR {
+                    let c = _mm256_set1_pd(-2.0 * *xp[r].add(k));
+                    a0[r] = _mm256_add_pd(a0[r], _mm256_mul_pd(c, y0));
+                    a1[r] = _mm256_add_pd(a1[r], _mm256_mul_pd(c, y1));
+                }
+            }
+            for r in 0..NR {
+                let dst = accs.as_mut_ptr().add(r * w + j);
+                _mm256_storeu_pd(dst, _mm256_max_pd(zero, a0[r]));
+                _mm256_storeu_pd(dst.add(4), _mm256_max_pd(zero, a1[r]));
+            }
+            j += STRIP;
+        }
+        if wv < w {
+            scalar_rows_mixed(tp, xs, nxs, accs, wv, w);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::sync::Mutex;
+
+    // force_simd is process-global; in-module tests serialize on this.
+    static SIMD_LOCK: Mutex<()> = Mutex::new(());
+
+    fn reference_r2(x: &[f64], nx: f64, y: &Mat, j: usize, ny: f64) -> f64 {
+        let mut a = nx + ny;
+        for (k, &xk) in x.iter().enumerate() {
+            a += (-2.0 * xk) * y.row(j)[k];
+        }
+        if a < 0.0 {
+            a = 0.0;
+        }
+        a
+    }
+
+    #[test]
+    fn pack_and_rows_match_reference_f64_all_group_sizes() {
+        let _lock = SIMD_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let mut rng = Rng::seed_from_u64(91);
+        // widths crossing the 8-column strip boundary, incl. sub-strip
+        for &w in &[1usize, 3, 7, 8, 9, 16, 21, 64] {
+            let d = 1 + (w % 5);
+            let y = Mat::from_fn(w, d, |_, _| rng.normal());
+            let ny: Vec<f64> = (0..w).map(|j| crate::linalg::dot(y.row(j), y.row(j))).collect();
+            for g in 1..=MR {
+                let x = Mat::from_fn(g, d, |_, _| rng.normal());
+                let nx: Vec<f64> =
+                    (0..g).map(|i| crate::linalg::dot(x.row(i), x.row(i))).collect();
+                let xs: Vec<&[f64]> = (0..g).map(|i| x.row(i)).collect();
+                let mut got = vec![0.0; g * w];
+                let mut pack = TilePack::new(Precision::F64, w, d);
+                pack.pack(&y, 0, w, &ny);
+                pack.r2_rows(&xs, &nx, &mut got);
+                for r in 0..g {
+                    for j in 0..w {
+                        let want = reference_r2(x.row(r), nx[r], &y, j, ny[j]);
+                        assert_eq!(
+                            got[r * w + j].to_bits(),
+                            want.to_bits(),
+                            "w={w} g={g} r={r} j={j}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn forced_scalar_and_forced_simd_are_bitwise_equal() {
+        let _lock = SIMD_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let mut rng = Rng::seed_from_u64(92);
+        let (w, d, g) = (37usize, 6usize, 4usize);
+        let y = Mat::from_fn(w, d, |_, _| rng.normal());
+        let ny: Vec<f64> = (0..w).map(|j| crate::linalg::dot(y.row(j), y.row(j))).collect();
+        let x = Mat::from_fn(g, d, |_, _| rng.normal());
+        let nx: Vec<f64> = (0..g).map(|i| crate::linalg::dot(x.row(i), x.row(i))).collect();
+        let xs: Vec<&[f64]> = (0..g).map(|i| x.row(i)).collect();
+        let mut run = |prec: Precision, on: bool| {
+            let _g = force_simd(on);
+            let mut pack = TilePack::new(prec, w, d);
+            pack.pack(&y, 0, w, &ny);
+            let mut accs = vec![0.0; g * w];
+            pack.r2_rows(&xs, &nx, &mut accs);
+            accs
+        };
+        for prec in [Precision::F64, Precision::Mixed] {
+            let scalar = run(prec, false);
+            let simd = run(prec, true);
+            assert_eq!(scalar, simd, "{prec:?} scalar-vs-simd diverged");
+        }
+    }
+
+    #[test]
+    fn force_guard_restores_previous_state() {
+        let _lock = SIMD_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let base = simd_enabled();
+        {
+            let _off = force_simd(false);
+            assert!(!simd_enabled());
+            {
+                let _on = force_simd(true);
+                assert!(simd_enabled());
+            }
+            assert!(!simd_enabled());
+        }
+        assert_eq!(simd_enabled(), base);
+        // active implies enabled && available; label is consistent
+        assert_eq!(simd_active(), simd_enabled() && simd_available());
+        assert_eq!(simd_label(), if simd_active() { "avx2" } else { "scalar" });
+    }
+}

@@ -214,6 +214,7 @@ fn data_flags(c: Command) -> Command {
         .flag("method", "sa", "leverage method: sa|sa-quadrature|uniform|rc|bless|exact")
         .flag("m", "", "Nyström landmarks (default: paper rule)")
         .flag("threads", "", "compute-pool workers (default: LEVERKRR_THREADS or all cores)")
+        .flag("precision", "", "blocked-engine tile precision: f64|mixed (default: LEVERKRR_PRECISION or f64)")
         .switch("xla", "use AOT/PJRT backend (requires `make artifacts`)")
 }
 
@@ -232,6 +233,10 @@ fn build_cfg(a: &leverkrr::util::cli::Args, ds: &Dataset) -> FitConfig {
         cfg.m_sub = m;
     }
     cfg.threads = a.get_usize("threads");
+    if let Some(p) = a.get("precision").filter(|s| !s.is_empty()) {
+        cfg.precision =
+            Some(leverkrr::linalg::blocked::Precision::parse(p).expect("precision"));
+    }
     cfg.seed = a.get_u64("seed").unwrap_or(0);
     cfg
 }

@@ -29,6 +29,16 @@
 //! Enablement: `LEVERKRR_TRACE=1` in the environment, the `--trace` CLI
 //! switch, or [`set_enabled`] from code (tests, the serve tier).
 //!
+//! Sampling: `LEVERKRR_TRACE_SAMPLE=N` (or [`set_sample_every`]) records
+//! only every Nth completed span, counted process-wide across all paths
+//! — a cheap profiler mode for long serves where even the bounded ring
+//! churns too fast. Default is 1 (record everything); N=1 adds no
+//! atomic RMW to the enabled path. Under sampling, aggregate counts and
+//! totals scale by ~1/N and self-time becomes approximate: a *skipped*
+//! span opens no frame, so its children's durations charge the nearest
+//! recorded ancestor instead. Sampling never steers computation: like
+//! enablement, it only decides whether the clock readings are kept.
+//!
 //! Self-time accounting: each thread keeps a stack of open frames; when
 //! a child span ends it adds its duration to the parent frame, and a
 //! span's *self* time is its total minus its children's totals. That is
@@ -43,7 +53,7 @@
 use crate::util::json::Json;
 use std::cell::{Cell, RefCell};
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::{Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
@@ -94,6 +104,51 @@ fn init_from_env() -> bool {
 /// `--trace` CLI switch, the serve tier, and tests).
 pub fn set_enabled(on: bool) {
     STATE.store(if on { STATE_ON } else { STATE_OFF }, Ordering::Relaxed);
+}
+
+/// Sampling period: 0 = uninitialised (consult `LEVERKRR_TRACE_SAMPLE`
+/// on first use), else the resolved N (≥ 1).
+static SAMPLE_EVERY: AtomicUsize = AtomicUsize::new(0);
+
+/// Process-wide completed-span counter driving the every-Nth decision.
+static SAMPLE_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Current sampling period N (record every Nth span). First call
+/// resolves `LEVERKRR_TRACE_SAMPLE` (integer ≥ 1; anything else → 1);
+/// later calls are one relaxed load.
+#[inline]
+pub fn sample_every() -> usize {
+    match SAMPLE_EVERY.load(Ordering::Relaxed) {
+        0 => sample_init_from_env(),
+        n => n,
+    }
+}
+
+#[cold]
+fn sample_init_from_env() -> usize {
+    let n = std::env::var("LEVERKRR_TRACE_SAMPLE")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(1)
+        .max(1);
+    // Racing first calls agree; set_sample_every() may already have won.
+    let _ = SAMPLE_EVERY.compare_exchange(0, n, Ordering::Relaxed, Ordering::Relaxed);
+    SAMPLE_EVERY.load(Ordering::Relaxed)
+}
+
+/// Force the sampling period, overriding the environment (0 and 1 both
+/// mean "record every span").
+pub fn set_sample_every(n: usize) {
+    SAMPLE_EVERY.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Should this completed span be dropped by sampling? N=1 stays free of
+/// atomic read-modify-writes; N>1 ticks the process-wide counter and
+/// keeps one span in N.
+#[inline]
+fn sample_skip() -> bool {
+    let n = sample_every();
+    n > 1 && SAMPLE_COUNTER.fetch_add(1, Ordering::Relaxed) % n as u64 != 0
 }
 
 /// Process-wide epoch all span timestamps are relative to. Initialised
@@ -240,6 +295,11 @@ pub fn span(path: &'static str) -> SpanGuard {
     if !enabled() {
         return SpanGuard { path, start: None };
     }
+    if sample_skip() {
+        // sampled out: inert guard, no frame pushed — children charge
+        // the nearest recorded ancestor (see the module docs)
+        return SpanGuard { path, start: None };
+    }
     span_slow(path)
 }
 
@@ -256,7 +316,7 @@ fn span_slow(path: &'static str) -> SpanGuard {
 /// the serve tier attributing admission-queue wait to a request.
 /// Recorded flat (no parent/child bookkeeping): `self == total`.
 pub fn record_manual(path: &'static str, start: Instant, dur: Duration) {
-    if !enabled() {
+    if !enabled() || sample_skip() {
         return;
     }
     epoch();
@@ -491,6 +551,51 @@ mod tests {
             assert_eq!(recs[0].self_ns, recs[0].dur_ns);
             assert_eq!(recs[0].depth, 0);
         });
+    }
+
+    #[test]
+    fn sampling_keeps_one_span_in_n() {
+        with_tracing(|| {
+            set_sample_every(4);
+            // 8 consecutive spans hit residue 0 exactly twice, whatever
+            // phase the process-wide counter is in when we start
+            for _ in 0..8 {
+                let _g = span("test.sampled");
+            }
+            set_sample_every(1);
+            let recs = records();
+            assert_eq!(recs.len(), 2);
+            let agg: std::collections::BTreeMap<_, _> =
+                aggregate().into_iter().collect();
+            assert_eq!(agg["test.sampled"].count, 2);
+        });
+    }
+
+    #[test]
+    fn sampling_gates_manual_records_too() {
+        with_tracing(|| {
+            set_sample_every(4);
+            let t0 = Instant::now();
+            for _ in 0..8 {
+                record_manual("test.manual.sampled", t0, Duration::from_micros(1));
+            }
+            set_sample_every(1);
+            assert_eq!(records().len(), 2);
+        });
+    }
+
+    #[test]
+    fn sample_period_clamps_and_default_records_all() {
+        let _guard = test_lock::hold();
+        set_sample_every(0); // clamps to 1
+        assert_eq!(sample_every(), 1);
+        set_enabled(true);
+        reset();
+        for _ in 0..5 {
+            let _g = span("test.unsampled");
+        }
+        set_enabled(false);
+        assert_eq!(records().len(), 5);
     }
 
     #[test]

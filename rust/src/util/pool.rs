@@ -166,11 +166,18 @@ struct PoolShared {
 static POOL: OnceLock<PoolShared> = OnceLock::new();
 
 fn pool() -> &'static PoolShared {
-    POOL.get_or_init(|| PoolShared {
-        queue: Mutex::new(VecDeque::new()),
-        queue_cv: Condvar::new(),
-        workers: AtomicUsize::new(0),
-        next_batch: AtomicU64::new(0),
+    POOL.get_or_init(|| {
+        // One-shot blocked-engine tile probe before any worker exists:
+        // runs entirely on the caller's thread (no pool dispatch, so no
+        // re-entrant init) and only ever changes *speed* — results are
+        // tile-width independent (see `linalg::blocked`).
+        crate::linalg::blocked::warm_autotune();
+        PoolShared {
+            queue: Mutex::new(VecDeque::new()),
+            queue_cv: Condvar::new(),
+            workers: AtomicUsize::new(0),
+            next_batch: AtomicU64::new(0),
+        }
     })
 }
 

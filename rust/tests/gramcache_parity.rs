@@ -332,3 +332,42 @@ fn rank_k_update_is_exactly_k_fused_rank_ones() {
         }
     }
 }
+
+#[test]
+fn precomputed_norms_blocks_are_bitwise_the_fresh_norms_path() {
+    // PR 8 norm reuse: the workspace computes ‖x_i‖² once at build and
+    // feeds gathered norms to every block evaluation via
+    // `Kernel::matrix_pre`. That must be bitwise invisible — a gathered
+    // norm is the exact bits a fresh `row_sqnorms` pass over the
+    // gathered row would produce — so every workspace block equals the
+    // seed path's `Kernel::matrix` on freshly gathered matrices.
+    let ds = dataset(300, 23);
+    let k = kernel();
+    let idxs: Vec<usize> = (0..40).map(|i| (i * 7) % ds.n()).collect();
+    let rows: Vec<usize> = (0..90).map(|i| (i * 3 + 1) % ds.n()).collect();
+    let gather = |src: &Mat, ids: &[usize]| {
+        Mat::from_fn(ids.len(), src.cols, |r, c| src[(ids[r], c)])
+    };
+    let landmarks = gather(&ds.x, &idxs);
+    let (got, want) = at_1_and_4(|| {
+        let mut cache = GramCache::new(k.clone(), &ds.x);
+        cache.set_landmarks(&idxs);
+        let full = cache.block(None);
+        let sub = cache.block(Some(&rows));
+        let direct_full = k.matrix(&ds.x, &landmarks);
+        let direct_sub = k.matrix(&gather(&ds.x, &rows), &landmarks);
+        ((full.data, sub.data), (direct_full.data, direct_sub.data))
+    });
+    assert_eq!(got.0 .0, got.1 .0, "block(None) != fresh-norms matrix");
+    assert_eq!(got.0 .1, got.1 .1, "block(rows) != fresh-norms matrix");
+    // cross-thread parity of the norm-reuse path itself
+    assert_eq!(got, want, "norm-reuse blocks diverged across threads");
+
+    // the pre-norms kernel entry point is itself pinned against the
+    // norms-recomputing one
+    let nx = leverkrr::linalg::blocked::row_sqnorms(&ds.x);
+    let ny = leverkrr::linalg::blocked::row_sqnorms(&landmarks);
+    let pre = k.matrix_pre(&ds.x, &nx, &landmarks, &ny);
+    let plain = k.matrix(&ds.x, &landmarks);
+    assert_eq!(pre.data, plain.data, "matrix_pre != matrix");
+}

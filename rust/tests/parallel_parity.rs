@@ -126,24 +126,35 @@ fn kernel_matrix_bit_identical_across_threads() {
 }
 
 #[test]
-fn blocked_engine_bit_identical_across_threads() {
-    use leverkrr::linalg::blocked;
+fn blocked_engine_bit_identical_across_threads_and_simd() {
+    use leverkrr::linalg::{blocked, simd};
     let mut rng = Rng::seed_from_u64(110);
     // shapes straddling the tile width and the parallel-dispatch threshold
     for &(n, m, d) in &[(5usize, 3usize, 2usize), (130, 129, 4), (300, 257, 3)] {
         let x = random_mat(&mut rng, n, d);
         let y = random_mat(&mut rng, m, d);
-        let (a1, a4) = at_1_and_4(|| blocked::sqdist_matrix(&x, &y));
-        assert_eq!(a1.data, a4.data, "sqdist_matrix ({n},{m},{d}) diverged");
-        let (r1, r4) = at_1_and_4(|| blocked::row_reduce(&x, &y, |r2| (-r2).exp()));
-        assert_eq!(r1, r4, "row_reduce ({n},{m},{d}) diverged");
-        let (s1, s4) = at_1_and_4(|| blocked::map_matrix_sym(&x, |r2| (-r2).exp()));
-        assert_eq!(s1.data, s4.data, "map_matrix_sym ({n},{d}) diverged");
         let q: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
-        let (v1, v4) = at_1_and_4(|| blocked::map_row(&q, &y, |r2| (-r2).exp()));
-        assert_eq!(v1, v4, "map_row ({m},{d}) diverged");
-        let (n1, n4) = at_1_and_4(|| blocked::nearest_rows(&x, &y));
-        assert_eq!(n1, n4, "nearest_rows ({n},{m},{d}) diverged");
+        // all five primitives, at 1 and 4 threads, with the SIMD tile
+        // kernel forced off and forced on: the four combinations must be
+        // bitwise identical (the SIMD force flag is process-global like
+        // the thread override, so it stays inside the POOL_LOCK'd runs)
+        let mut run_both = |on: bool| {
+            at_1_and_4(|| {
+                let _g = simd::force_simd(on);
+                (
+                    blocked::sqdist_matrix(&x, &y).data,
+                    blocked::row_reduce(&x, &y, |r2| (-r2).exp()),
+                    blocked::map_matrix_sym(&x, |r2| (-r2).exp()).data,
+                    blocked::map_row(&q, &y, |r2| (-r2).exp()),
+                    blocked::nearest_rows(&x, &y),
+                )
+            })
+        };
+        let (sc1, sc4) = run_both(false);
+        let (v1, v4) = run_both(true);
+        assert_eq!(sc1, sc4, "scalar path diverged across threads ({n},{m},{d})");
+        assert_eq!(v1, v4, "simd path diverged across threads ({n},{m},{d})");
+        assert_eq!(sc1, v1, "simd-vs-scalar diverged ({n},{m},{d})");
     }
 }
 

@@ -1,0 +1,313 @@
+//! SIMD ↔ scalar parity for the blocked distance engine
+//! (`linalg::blocked` + `linalg::simd`), and the mixed-precision
+//! accuracy contract.
+//!
+//! The f64 AVX2 tile kernel promises **bitwise identity** with the
+//! scalar per-element sequence — same mul-then-add order, no FMA
+//! contraction, clamp semantics matching `if a < 0.0 { 0.0 }` including
+//! NaN propagation and signed zeros. This file is the oracle: every
+//! blocked primitive, random shapes straddling every dispatch boundary
+//! (register-block width 8, row-group height 4, tile width, the
+//! parallel work thresholds), plus adversarial inputs (NaN, subnormals,
+//! huge/tiny magnitudes).
+//!
+//! Mixed precision (f32 tile storage, f64 accumulation) is *not*
+//! bitwise vs f64 — it is pinned to (a) bitwise scalar-vs-SIMD equality
+//! *within* the mode, and (b) an accuracy envelope vs the f64 oracle,
+//! including end-to-end through a fit.
+//!
+//! The SIMD force flag, precision override, and tile override are
+//! process-global (like the pool's thread override), so every test
+//! serializes on one lock.
+
+use leverkrr::kernels::{Kernel, KernelSpec};
+use leverkrr::linalg::blocked::{self, Precision};
+use leverkrr::linalg::simd;
+use leverkrr::linalg::Mat;
+use leverkrr::util::rng::Rng;
+use std::sync::Mutex;
+
+static SIMD_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    SIMD_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn random_mat(rng: &mut Rng, rows: usize, cols: usize) -> Mat {
+    Mat::from_fn(rows, cols, |_, _| rng.normal())
+}
+
+/// Evaluate all five blocked primitives; returns raw bit-comparable data.
+type Snapshot = (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>, Vec<(usize, f64)>);
+
+fn snapshot(x: &Mat, y: &Mat, q: &[f64]) -> Snapshot {
+    (
+        blocked::sqdist_matrix(x, y).data,
+        blocked::row_reduce(x, y, |r2| (-r2).exp()),
+        blocked::map_matrix_sym(x, |r2| (-r2).exp()).data,
+        blocked::map_row(q, y, |r2| (-r2).exp()),
+        blocked::nearest_rows(x, y),
+    )
+}
+
+fn assert_bitwise_eq(a: &Snapshot, b: &Snapshot, what: &str) {
+    let eq_bits = |u: &[f64], v: &[f64]| {
+        u.len() == v.len()
+            && u.iter().zip(v).all(|(a, b)| a.to_bits() == b.to_bits())
+    };
+    assert!(eq_bits(&a.0, &b.0), "{what}: sqdist_matrix diverged");
+    assert!(eq_bits(&a.1, &b.1), "{what}: row_reduce diverged");
+    assert!(eq_bits(&a.2, &b.2), "{what}: map_matrix_sym diverged");
+    assert!(eq_bits(&a.3, &b.3), "{what}: map_row diverged");
+    assert_eq!(
+        a.4.len(),
+        b.4.len(),
+        "{what}: nearest_rows length diverged"
+    );
+    for (p, r) in a.4.iter().zip(&b.4) {
+        assert_eq!(p.0, r.0, "{what}: nearest_rows argmin diverged");
+        assert_eq!(p.1.to_bits(), r.1.to_bits(), "{what}: nearest_rows dist diverged");
+    }
+}
+
+#[test]
+fn prop_simd_is_bitwise_scalar_across_random_shapes() {
+    let _l = lock();
+    let mut rng = Rng::seed_from_u64(301);
+    for trial in 0..40 {
+        // shapes hugging the dispatch boundaries: strip width 8, row
+        // group 4, and the default/overridden tile widths
+        let n = 1 + rng.usize(70);
+        let m = 1 + rng.usize(70);
+        let d = 1 + rng.usize(12);
+        let x = random_mat(&mut rng, n, d);
+        let y = random_mat(&mut rng, m, d);
+        let q: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let scalar = {
+            let _g = simd::force_simd(false);
+            snapshot(&x, &y, &q)
+        };
+        let vector = {
+            let _g = simd::force_simd(true);
+            snapshot(&x, &y, &q)
+        };
+        assert_bitwise_eq(&scalar, &vector, &format!("trial {trial} ({n}x{m}, d={d})"));
+    }
+}
+
+#[test]
+fn simd_parity_at_strip_and_tile_boundaries() {
+    let _l = lock();
+    let mut rng = Rng::seed_from_u64(302);
+    // exact multiples and off-by-ones of the 8-wide register strip, the
+    // 4-row group, and a tiny pinned tile width
+    for &(n, m) in &[
+        (4usize, 8usize),
+        (5, 9),
+        (3, 7),
+        (8, 16),
+        (9, 17),
+        (129, 65),
+        (4, 1),
+        (1, 8),
+    ] {
+        for &d in &[1usize, 2, 5, 8] {
+            let x = random_mat(&mut rng, n, d);
+            let y = random_mat(&mut rng, m, d);
+            let q: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+            for &tile in &[1usize, 7, 64] {
+                let _t = blocked::override_tile(tile);
+                let scalar = {
+                    let _g = simd::force_simd(false);
+                    snapshot(&x, &y, &q)
+                };
+                let vector = {
+                    let _g = simd::force_simd(true);
+                    snapshot(&x, &y, &q)
+                };
+                assert_bitwise_eq(
+                    &scalar,
+                    &vector,
+                    &format!("({n}x{m}, d={d}, tile={tile})"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_parity_with_nan_subnormal_and_extreme_inputs() {
+    let _l = lock();
+    // Only inject the canonical f64::NAN bit pattern: lane ops may
+    // commute operands, and IEEE 754 does not pin which payload a binary
+    // op propagates — the canonical quiet NaN is the one pattern every
+    // path agrees on.
+    let vals = [
+        0.0,
+        -0.0,
+        1.0,
+        -1.0,
+        f64::MIN_POSITIVE,          // smallest normal
+        f64::MIN_POSITIVE / 1024.0, // subnormal
+        1e300,
+        -1e300,
+        1e-300,
+        f64::NAN,
+        f64::INFINITY,
+        f64::NEG_INFINITY,
+    ];
+    let mut rng = Rng::seed_from_u64(303);
+    let (n, m, d) = (13usize, 21usize, 5usize);
+    let x = Mat::from_fn(n, d, |i, j| {
+        if rng.f64() < 0.3 {
+            vals[(i * 7 + j * 3) % vals.len()]
+        } else {
+            rng.normal()
+        }
+    });
+    let y = Mat::from_fn(m, d, |i, j| {
+        if rng.f64() < 0.3 {
+            vals[(i * 5 + j * 11) % vals.len()]
+        } else {
+            rng.normal()
+        }
+    });
+    // sqdist_matrix alone: the map/reduce wrappers would collapse NaN
+    // through exp() anyway, the raw r² is the honest comparison
+    let scalar = {
+        let _g = simd::force_simd(false);
+        blocked::sqdist_matrix(&x, &y).data
+    };
+    let vector = {
+        let _g = simd::force_simd(true);
+        blocked::sqdist_matrix(&x, &y).data
+    };
+    assert_eq!(scalar.len(), vector.len());
+    for (i, (a, b)) in scalar.iter().zip(&vector).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "element {i}: scalar {a:?} vs simd {b:?}"
+        );
+    }
+}
+
+#[test]
+fn kill_switch_and_guards_restore_state() {
+    let _l = lock();
+    // force(false) under force(true) nests and restores
+    let outer = simd::simd_enabled();
+    {
+        let _a = simd::force_simd(true);
+        assert!(simd::simd_enabled());
+        {
+            let _b = simd::force_simd(false);
+            assert!(!simd::simd_enabled());
+        }
+        assert!(simd::simd_enabled());
+    }
+    assert_eq!(simd::simd_enabled(), outer);
+    // simd_active never claims a CPU feature that isn't there
+    if !simd::simd_available() {
+        let _a = simd::force_simd(true);
+        assert!(!simd::simd_active());
+    }
+}
+
+#[test]
+fn mixed_mode_simd_is_bitwise_mixed_scalar() {
+    let _l = lock();
+    // mixed precision changes the arithmetic vs f64 — but within the
+    // mode, the AVX2 kernel must still match the scalar tail/fallback
+    // bit for bit (f32→f64 widening is exact, the accumulation sequence
+    // is shared)
+    let mut rng = Rng::seed_from_u64(304);
+    let _p = blocked::override_precision(Precision::Mixed);
+    for &(n, m, d) in &[(7usize, 13usize, 3usize), (33, 40, 8), (130, 129, 4)] {
+        let x = random_mat(&mut rng, n, d);
+        let y = random_mat(&mut rng, m, d);
+        let q: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let scalar = {
+            let _g = simd::force_simd(false);
+            snapshot(&x, &y, &q)
+        };
+        let vector = {
+            let _g = simd::force_simd(true);
+            snapshot(&x, &y, &q)
+        };
+        assert_bitwise_eq(&scalar, &vector, &format!("mixed ({n}x{m}, d={d})"));
+    }
+}
+
+#[test]
+fn mixed_precision_kernel_matrix_accuracy() {
+    let _l = lock();
+    let mut rng = Rng::seed_from_u64(305);
+    let (n, m, d) = (200usize, 64usize, 4usize);
+    let x = random_mat(&mut rng, n, d);
+    let y = random_mat(&mut rng, m, d);
+    let k = Kernel::new(KernelSpec::Matern { nu: 1.5, a: 1.0 });
+    let exact = k.matrix(&x, &y);
+    let approx = {
+        let _p = blocked::override_precision(Precision::Mixed);
+        k.matrix(&x, &y)
+    };
+    let max_diff = exact
+        .data
+        .iter()
+        .zip(&approx.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    // f32 input rounding (~1.2e-7 relative) through a Lipschitz kernel
+    // of unit scale: comfortably inside 1e-4 absolute on N(0,1) data
+    assert!(
+        max_diff > 0.0 && max_diff < 1e-4,
+        "mixed kernel matrix max |Δ| = {max_diff:e} (expected (0, 1e-4))"
+    );
+    // and the guard restores the f64 oracle bitwise
+    let back = k.matrix(&x, &y);
+    assert_eq!(exact.data, back.data, "precision guard failed to restore f64");
+}
+
+#[test]
+fn mixed_precision_fit_stays_accurate_end_to_end() {
+    use leverkrr::coordinator::{fit_with_backend, FitConfig};
+    use leverkrr::runtime::Backend;
+    let _l = lock();
+    let mut rng = Rng::seed_from_u64(306);
+    let ds = leverkrr::data::dist1d(leverkrr::data::Dist1d::Bimodal, 400, &mut rng);
+    let fit_at = |precision: Option<Precision>| {
+        let mut cfg = FitConfig::default_for(&ds);
+        cfg.precision = precision;
+        fit_with_backend(&ds, &cfg, Backend::Native).unwrap()
+    };
+    let exact = fit_at(None);
+    let mixed = fit_at(Some(Precision::Mixed));
+    // same pipeline decisions (landmark count); fit quality must not
+    // degrade beyond noise. Mixed precision may legitimately perturb
+    // which landmarks the leverage sampler draws, so pointwise
+    // prediction identity is not the contract — in-sample risk is.
+    assert_eq!(exact.nystrom.idx.len(), mixed.nystrom.idx.len());
+    let rmse = |model: &leverkrr::coordinator::FittedModel| {
+        let p = model.predict_batch(&ds.x);
+        assert!(p.iter().all(|v| v.is_finite()), "non-finite prediction");
+        let se: f64 = p.iter().zip(&ds.y).map(|(a, b)| (a - b) * (a - b)).sum();
+        (se / ds.n() as f64).sqrt()
+    };
+    let (r_exact, r_mixed) = (rmse(&exact), rmse(&mixed));
+    assert!(
+        r_mixed <= r_exact * 1.2 + 1e-6,
+        "mixed-precision fit degraded: RMSE {r_mixed:e} vs f64 {r_exact:e}"
+    );
+}
+
+#[test]
+fn f64_default_is_never_mixed() {
+    let _l = lock();
+    // the opt-in contract: with no override and no env var, the engine
+    // resolves to f64
+    if std::env::var("LEVERKRR_PRECISION").is_err() {
+        assert_eq!(blocked::current_precision(), Precision::F64);
+        assert_eq!(blocked::Engine::current().precision, Precision::F64);
+    }
+}
