@@ -1,0 +1,8 @@
+//! `cargo bench --bench shootout -- [--full] [--tune] [--kernels ..] [--dists ..] [--out f.json]`
+//! Leverage-backend shootout: time-to-equal-prediction-accuracy for
+//! exact/SA/RC/BLESS across the kernel zoo × input-distribution grid. See
+//! `leverkrr::bench_harness::experiments::shootout` for the protocol.
+fn main() {
+    let opts = leverkrr::bench_harness::experiments::shootout::ShootoutOptions::parse_cli();
+    leverkrr::bench_harness::experiments::shootout::run(&opts);
+}

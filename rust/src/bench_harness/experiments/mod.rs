@@ -11,6 +11,7 @@
 //! | [`persist::run`] | artifact save/load/restore latency vs n, m | ROADMAP §persistence |
 //! | [`serve::run`] | HTTP-tier QPS + tail latency vs batch size, replicas | ROADMAP §serving |
 //! | [`obs::run`] | span-tracer overhead on the fig1 pipeline | ROADMAP §observability |
+//! | [`shootout::run`] | time-to-equal-accuracy: exact/SA/RC/BLESS across the kernel zoo | §1, §4 (headline claim) |
 
 pub mod ablation;
 pub mod fig1;
@@ -20,6 +21,7 @@ pub mod obs;
 pub mod perf;
 pub mod persist;
 pub mod serve;
+pub mod shootout;
 pub mod stream;
 pub mod table1;
 

@@ -1,0 +1,417 @@
+//! Leverage-backend shootout — the paper's headline claim, measured.
+//!
+//! The claim (§1, §4): the analytic spectral-density formula (SA)
+//! approximates statistical leverage scores orders of magnitude faster
+//! than RLS-type samplers *at equal prediction accuracy*. This driver
+//! makes that a first-class, continuously-benchmarked number: for every
+//! cell of a (kernel zoo × input distribution) grid it runs the
+//! exact / SA / recursive-RLS / BLESS leverage backends, sweeps the
+//! Nyström budget ladder per backend, and reports
+//! **time-to-equal-prediction-accuracy** — the wall-clock for leverage
+//! estimation + sampling + fit needed to reach a reference test error —
+//! in machine-readable `BENCH_shootout.json` (`--out`).
+//!
+//! Protocol per grid cell (kernel k, distribution P, size n):
+//! 1. Draw train (n) and held-out test (max(n/4, 200)) sets from P with
+//!    exact density annotations ([`crate::data::shootout_dist`]).
+//! 2. Fix one λ for the whole cell — the Table-1 rule
+//!    0.15·n^{−2α/(2α+d)} with α capped at 20 for the C^∞ kernels, or
+//!    k-fold CV over a λ grid with `--tune` ([`crate::krr::tune`]) — so
+//!    every backend competes at the same (tuned) operating point.
+//! 3. Per backend: time the leverage estimate once (scores are
+//!    budget-independent), then for each budget m on the ladder time a
+//!    fresh Nyström fit from the scores and evaluate test error
+//!    ‖f̂ − f*‖² on the held-out set. Leverage and fit are timed
+//!    standalone (no cross-stage Gram sharing) so each backend's
+//!    pipeline cost is its own — the cache-sharing win is benchmarked
+//!    separately in `bench-perf`.
+//! 4. The reference error is the **exact**-leverage backend's best mean
+//!    error across the ladder; the target is 1.1× that. Each backend's
+//!    m* is the smallest budget whose mean error reaches the target,
+//!    and its time-to-accuracy is lev_secs + fit_secs(m*). Backends
+//!    that never reach the target within the ladder report
+//!    `reached = false` with their top-budget numbers.
+//!
+//! Expected shape: SA's leverage time is far below RC/BLESS at equal
+//! m*, and the gap widens with n; Gaussian/Matérn take the closed-form
+//! SA path while the rational-quadratic exercises the quadrature
+//! fallback (see [`crate::leverage::sa`]).
+
+use crate::bench_harness::{maybe_write_out, ExpOptions, Table};
+use crate::data::{self, ShootoutDist};
+use crate::kernels::{Kernel, KernelSpec};
+use crate::krr;
+use crate::leverage::{LeverageContext, LeverageEstimator as _, LeverageMethod};
+use crate::metrics::time_it;
+use crate::nystrom::NystromKrr;
+use crate::util::cli::{Args, Command};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Shootout-specific options on top of the common [`ExpOptions`].
+#[derive(Clone, Debug)]
+pub struct ShootoutOptions {
+    pub base: ExpOptions,
+    /// Cross-validate λ per cell instead of the Table-1 rule.
+    pub tune: bool,
+    /// Input dimension of the synthetic designs.
+    pub d: usize,
+    pub kernels: Vec<KernelSpec>,
+    pub dists: Vec<ShootoutDist>,
+}
+
+/// The default zoo: one member per kernel family, length scales sized
+/// for the unit-cube-ish shootout designs. The rational-quadratic needs
+/// α > d/2 for its spectral density (α=2.5 covers every d ≤ 4 here).
+pub fn default_kernels() -> Vec<KernelSpec> {
+    vec![
+        KernelSpec::Gaussian { sigma: 0.25 },
+        KernelSpec::Laplacian { gamma: 2.0 },
+        KernelSpec::Matern { nu: 1.5, a: 3.0f64.sqrt() },
+        KernelSpec::Matern { nu: 2.5, a: 5.0f64.sqrt() },
+        KernelSpec::RationalQuadratic { alpha: 2.5, ell: 0.3 },
+    ]
+}
+
+impl ShootoutOptions {
+    pub fn command() -> Command {
+        ExpOptions::command(
+            "bench-shootout",
+            "leverage-backend shootout: time-to-equal-accuracy across the kernel zoo × input distributions",
+        )
+        .switch("tune", "cross-validate lambda per grid cell (krr::tune) instead of the Table-1 rule")
+        .flag("d", "2", "input dimension of the synthetic designs")
+        .flag("kernels", "", "semicolon-separated kernel specs (default: 5-member zoo)")
+        .flag("dists", "", "comma-separated distributions: uniform,gaussmix,heavytail (default: all)")
+    }
+
+    pub fn from_args(a: &Args) -> Result<ShootoutOptions, String> {
+        let base = ExpOptions::from_args(a);
+        let d = a.get_usize("d").unwrap_or(2).max(1);
+        let kernels = match a.get("kernels") {
+            Some(s) if !s.is_empty() => s
+                .split(';')
+                .map(|t| KernelSpec::parse(t.trim()).map_err(|e| e.to_string()))
+                .collect::<Result<Vec<_>, String>>()?,
+            _ => default_kernels(),
+        };
+        let dists = match a.get("dists") {
+            Some(s) if !s.is_empty() => s
+                .split(',')
+                .map(|t| ShootoutDist::parse(t.trim()))
+                .collect::<Result<Vec<_>, String>>()?,
+            _ => ShootoutDist::all().to_vec(),
+        };
+        Ok(ShootoutOptions { base, tune: a.get_bool("tune"), d, kernels, dists })
+    }
+
+    /// Parse an argv slice, exiting with usage on error (CLI entry).
+    pub fn parse_argv(argv: &[String]) -> ShootoutOptions {
+        match Self::command().parse(argv).and_then(|a| Self::from_args(&a)) {
+            Ok(o) => o,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    /// Parse process args (for the bench binary).
+    pub fn parse_cli() -> ShootoutOptions {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse_argv(&argv)
+    }
+}
+
+/// One budget step of a backend's sweep.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub m: usize,
+    pub err: f64,
+    pub fit_secs: f64,
+}
+
+/// One (kernel, dist, n, backend) result row.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub kernel: String,
+    pub dist: &'static str,
+    pub n: usize,
+    pub d: usize,
+    pub lambda: f64,
+    pub tuned: bool,
+    pub backend: &'static str,
+    pub lev_secs: f64,
+    pub sweep: Vec<SweepPoint>,
+    pub ref_err: f64,
+    pub target_err: f64,
+    /// Smallest ladder budget reaching the target (top budget if none).
+    pub m_star: usize,
+    pub reached: bool,
+    pub err_at_m_star: f64,
+    pub fit_secs_at_m_star: f64,
+    /// lev_secs + fit_secs_at_m_star — the paper's headline metric.
+    pub time_to_acc_secs: f64,
+}
+
+/// Geometric Nyström budget ladder: 8, 16, … capped by n/3 and 256.
+pub fn budget_ladder(n: usize) -> Vec<usize> {
+    let top = (n / 3).min(256);
+    let mut ladder = Vec::new();
+    let mut m = 8;
+    while m <= top {
+        ladder.push(m);
+        m *= 2;
+    }
+    if ladder.is_empty() {
+        ladder.push(top.max(2));
+    }
+    ladder
+}
+
+pub fn default_ns(full: bool) -> Vec<usize> {
+    if full {
+        vec![3_000]
+    } else {
+        vec![1_200]
+    }
+}
+
+const METHODS: [LeverageMethod; 4] = [
+    LeverageMethod::Exact,
+    LeverageMethod::Sa,
+    LeverageMethod::RecursiveRls,
+    LeverageMethod::Bless,
+];
+
+pub fn run(opts: &ShootoutOptions) -> Vec<Row> {
+    let _pool = opts.base.pool_guard();
+    let ns = opts.base.ns.clone().unwrap_or_else(|| default_ns(opts.base.full));
+    let reps = opts.base.reps;
+    let d = opts.d;
+    println!(
+        "# Shootout — {} kernels × {} dists × ns={ns:?}, d={d}, reps={reps}, lambda {}",
+        opts.kernels.len(),
+        opts.dists.len(),
+        if opts.tune { "tuned (CV)" } else { "Table-1 rule" },
+    );
+    let mut rows: Vec<Row> = Vec::new();
+    for (ki, &spec) in opts.kernels.iter().enumerate() {
+        let kernel = Kernel::new(spec);
+        for (di, &dist) in opts.dists.iter().enumerate() {
+            for &n in &ns {
+                let cell = run_cell(opts, &kernel, ki, dist, di, n, reps);
+                rows.extend(cell);
+                eprintln!("  {} × {} × n={n} done", spec.name(), dist.label());
+            }
+        }
+    }
+    print_table(&rows);
+    let json = Json::Arr(rows.iter().map(row_json).collect());
+    maybe_write_out(&opts.base, "shootout", json);
+    rows
+}
+
+/// Run every backend for one grid cell and derive the per-backend
+/// time-to-accuracy against the exact-leverage reference.
+#[allow(clippy::too_many_arguments)]
+fn run_cell(
+    opts: &ShootoutOptions,
+    kernel: &Kernel,
+    ki: usize,
+    dist: ShootoutDist,
+    di: usize,
+    n: usize,
+    reps: usize,
+) -> Vec<Row> {
+    let d = opts.d;
+    let ladder = budget_ladder(n);
+    let n_test = (n / 4).max(200);
+    // α feeds the λ rule; the C^∞ kernels report ∞ and get the same
+    // cap the tuner applies (`cmd_tune`).
+    let alpha = kernel.spec.alpha(d).min(20.0);
+    let inner = ((n as f64).powf(1.0 / 3.0).round() as usize).max(8);
+
+    // mean accumulators: [method][ladder step]
+    let mut err_sum = vec![vec![0.0f64; ladder.len()]; METHODS.len()];
+    let mut fit_sum = vec![vec![0.0f64; ladder.len()]; METHODS.len()];
+    let mut lev_sum = vec![0.0f64; METHODS.len()];
+    let mut lambda_used = 0.0;
+
+    for rep in 0..reps {
+        let mut rng = Rng::seed_from_u64(
+            opts.base.seed + 7919 * rep as u64 + 131 * ki as u64 + 17 * di as u64 + n as u64,
+        );
+        let train = data::shootout_dist(dist, n, d, &mut rng);
+        let test = data::shootout_dist(dist, n_test, d, &mut rng);
+        let lambda = if opts.tune && rep == 0 {
+            let mut trng = rng.fork(91);
+            let landmarks =
+                trng.sample_without_replacement(n, ladder.last().copied().unwrap_or(32).min(n));
+            let grid = krr::tune::lambda_grid(n, alpha, d, 7);
+            let res = krr::tune::tune_lambda(
+                kernel,
+                &train.x,
+                &train.y,
+                &landmarks,
+                &grid,
+                3,
+                &mut trng,
+            )
+            .expect("lambda tuning");
+            res.best_lambda
+        } else if opts.tune {
+            lambda_used // tuned once on the first rep, shared after
+        } else {
+            krr::lambda::table1(n, alpha, d)
+        };
+        lambda_used = lambda;
+
+        for (mi, &method) in METHODS.iter().enumerate() {
+            let mut mrng = rng.fork(method as u64 + 1);
+            let est = method.build();
+            // Leverage timed standalone (see module docs): scores are
+            // budget-independent, so each backend pays this once.
+            let mut ctx = LeverageContext::new(&train.x, kernel, lambda);
+            ctx.inner_m = inner;
+            let (scores, lev_secs) = time_it(|| est.estimate(&ctx, &mut mrng));
+            let q = crate::leverage::normalize(&scores);
+            lev_sum[mi] += lev_secs;
+            for (bi, &m) in ladder.iter().enumerate() {
+                let mut frng = mrng.fork(bi as u64 + 1);
+                let (nys, fit_secs) = time_it(|| {
+                    let mut gram =
+                        crate::linalg::GramCache::new(kernel.clone(), &train.x);
+                    NystromKrr::fit_sampled_with_cache(
+                        &train.y, lambda, &q, m, &mut frng, &mut gram,
+                    )
+                    .expect("nystrom fit")
+                });
+                let pred = nys.predict(&test.x);
+                let err = krr::in_sample_risk(&pred, &test.f_true);
+                err_sum[mi][bi] += err;
+                fit_sum[mi][bi] += fit_secs;
+            }
+        }
+    }
+
+    let rf = reps as f64;
+    let errs: Vec<Vec<f64>> =
+        err_sum.iter().map(|v| v.iter().map(|e| e / rf).collect()).collect();
+    let fits: Vec<Vec<f64>> =
+        fit_sum.iter().map(|v| v.iter().map(|t| t / rf).collect()).collect();
+
+    // Reference: exact leverage (METHODS[0]) at its best ladder point.
+    let ref_err = errs[0].iter().copied().fold(f64::INFINITY, f64::min);
+    let target = 1.1 * ref_err;
+
+    METHODS
+        .iter()
+        .enumerate()
+        .map(|(mi, &method)| {
+            let hit = errs[mi].iter().position(|&e| e <= target);
+            let bi = hit.unwrap_or(ladder.len() - 1);
+            let lev = lev_sum[mi] / rf;
+            Row {
+                kernel: kernel.spec.name(),
+                dist: dist.label(),
+                n,
+                d,
+                lambda: lambda_used,
+                tuned: opts.tune,
+                backend: super::method_label(method),
+                lev_secs: lev,
+                sweep: ladder
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &m)| SweepPoint { m, err: errs[mi][i], fit_secs: fits[mi][i] })
+                    .collect(),
+                ref_err,
+                target_err: target,
+                m_star: ladder[bi],
+                reached: hit.is_some(),
+                err_at_m_star: errs[mi][bi],
+                fit_secs_at_m_star: fits[mi][bi],
+                time_to_acc_secs: lev + fits[mi][bi],
+            }
+        })
+        .collect()
+}
+
+fn row_json(r: &Row) -> Json {
+    Json::obj(vec![
+        ("kernel", Json::Str(r.kernel.clone())),
+        ("dist", Json::Str(r.dist.into())),
+        ("n", Json::Num(r.n as f64)),
+        ("d", Json::Num(r.d as f64)),
+        ("lambda", Json::Num(r.lambda)),
+        ("tuned", Json::Bool(r.tuned)),
+        ("backend", Json::Str(r.backend.into())),
+        ("lev_secs", Json::Num(r.lev_secs)),
+        ("m_star", Json::Num(r.m_star as f64)),
+        ("reached", Json::Bool(r.reached)),
+        ("err_at_m_star", Json::Num(r.err_at_m_star)),
+        ("ref_err", Json::Num(r.ref_err)),
+        ("target_err", Json::Num(r.target_err)),
+        ("fit_secs_at_m_star", Json::Num(r.fit_secs_at_m_star)),
+        ("time_to_acc_secs", Json::Num(r.time_to_acc_secs)),
+        (
+            "sweep",
+            Json::Arr(
+                r.sweep
+                    .iter()
+                    .map(|s| {
+                        Json::obj(vec![
+                            ("m", Json::Num(s.m as f64)),
+                            ("err", Json::Num(s.err)),
+                            ("fit_secs", Json::Num(s.fit_secs)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn print_table(rows: &[Row]) {
+    let mut t = Table::new(&[
+        "kernel", "dist", "backend", "lambda", "lev_s", "m*", "t2acc_s", "err", "reached",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.kernel.clone(),
+            r.dist.to_string(),
+            r.backend.to_string(),
+            format!("{:.2e}", r.lambda),
+            format!("{:.4}", r.lev_secs),
+            r.m_star.to_string(),
+            format!("{:.4}", r.time_to_acc_secs),
+            format!("{:.5}", r.err_at_m_star),
+            r.reached.to_string(),
+        ]);
+    }
+    println!("\n## Shootout: time-to-equal-accuracy (target = 1.1 × exact-leverage best)");
+    t.print();
+    // headline ratio: SA speedup over the RLS-type samplers at equal accuracy
+    let mut sa_wins = 0usize;
+    let mut cells = 0usize;
+    for r in rows.iter().filter(|r| r.backend == "SA" && r.reached) {
+        let rc = rows.iter().find(|o| {
+            o.kernel == r.kernel && o.dist == r.dist && o.n == r.n && o.backend == "RC"
+        });
+        let bl = rows.iter().find(|o| {
+            o.kernel == r.kernel && o.dist == r.dist && o.n == r.n && o.backend == "BLESS"
+        });
+        if let (Some(rc), Some(bl)) = (rc, bl) {
+            cells += 1;
+            if r.time_to_acc_secs < rc.time_to_acc_secs
+                && r.time_to_acc_secs < bl.time_to_acc_secs
+            {
+                sa_wins += 1;
+            }
+        }
+    }
+    if cells > 0 {
+        println!("\nSA fastest-to-target in {sa_wins}/{cells} cells (vs RC and BLESS)");
+    }
+}

@@ -249,6 +249,122 @@ pub fn dist1d(which: Dist1d, n: usize, rng: &mut Rng) -> Dataset {
     finish(format!("{which:?}(n={n})"), x, p, f_star, rng)
 }
 
+// ---------------------------------------------------------------------------
+// Shootout designs — d-dim input-distribution grid for `bench-shootout`
+// ---------------------------------------------------------------------------
+
+/// d-dim input distributions for the leverage-backend shootout, each
+/// with an exact `p_true` annotation (so SA's formula error can be
+/// isolated from KDE error at any grid cell):
+///
+/// * `Uniform` — Unif[0,1]^d (flat leverage profile baseline).
+/// * `GaussMix` — 0.7·N(0.3·1, 0.12²I) + 0.3·N(0.75·1, 0.08²I):
+///   two isotropic modes of different width and weight.
+/// * `HeavyTail` — i.i.d. per-coordinate Student-t₃, location 0.5,
+///   scale 0.15: polynomial tails stress the low-density stabilization.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ShootoutDist {
+    Uniform,
+    GaussMix,
+    HeavyTail,
+}
+
+/// Gaussian-mixture parameters (weight, per-coordinate mean, sd).
+const GM_MODES: [(f64, f64, f64); 2] = [(0.7, 0.3, 0.12), (0.3, 0.75, 0.08)];
+/// Heavy-tail location / scale of the per-coordinate t₃.
+const HT_LOC: f64 = 0.5;
+const HT_SCALE: f64 = 0.15;
+
+impl ShootoutDist {
+    pub fn parse(s: &str) -> Result<ShootoutDist, String> {
+        match s {
+            "uniform" => Ok(ShootoutDist::Uniform),
+            "gaussmix" => Ok(ShootoutDist::GaussMix),
+            "heavytail" => Ok(ShootoutDist::HeavyTail),
+            _ => Err(format!("unknown shootout dist '{s}' (uniform|gaussmix|heavytail)")),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ShootoutDist::Uniform => "uniform",
+            ShootoutDist::GaussMix => "gaussmix",
+            ShootoutDist::HeavyTail => "heavytail",
+        }
+    }
+
+    pub fn all() -> [ShootoutDist; 3] {
+        [ShootoutDist::Uniform, ShootoutDist::GaussMix, ShootoutDist::HeavyTail]
+    }
+
+    /// Exact density at a point.
+    pub fn density(&self, x: &[f64]) -> f64 {
+        match self {
+            ShootoutDist::Uniform => {
+                if x.iter().all(|v| (0.0..=1.0).contains(v)) {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            ShootoutDist::GaussMix => {
+                let mut dens = 0.0;
+                for (w, mu, s) in GM_MODES {
+                    let norm = 1.0 / (s * (2.0 * std::f64::consts::PI).sqrt());
+                    let mut m = w;
+                    for &v in x {
+                        let z = (v - mu) / s;
+                        m *= norm * (-0.5 * z * z).exp();
+                    }
+                    dens += m;
+                }
+                dens
+            }
+            ShootoutDist::HeavyTail => {
+                // standard t₃ density: c·(1+u²/3)^{−2}, c = 2/(π√3)
+                let c = 2.0 / (std::f64::consts::PI * 3.0f64.sqrt());
+                let mut dens = 1.0;
+                for &v in x {
+                    let u = (v - HT_LOC) / HT_SCALE;
+                    dens *= c / HT_SCALE * (1.0 + u * u / 3.0).powi(-2);
+                }
+                dens
+            }
+        }
+    }
+}
+
+/// Sample the shootout design at dimension d, with exact density
+/// annotations and the §B.1 regression target f*(x) = g(‖x‖₂/d).
+pub fn shootout_dist(which: ShootoutDist, n: usize, d: usize, rng: &mut Rng) -> Dataset {
+    let mut x = Mat::zeros(n, d);
+    for i in 0..n {
+        match which {
+            ShootoutDist::Uniform => {
+                for j in 0..d {
+                    x[(i, j)] = rng.f64();
+                }
+            }
+            ShootoutDist::GaussMix => {
+                let (_, mu, s) = if rng.f64() < GM_MODES[0].0 { GM_MODES[0] } else { GM_MODES[1] };
+                for j in 0..d {
+                    x[(i, j)] = rng.normal_ms(mu, s);
+                }
+            }
+            ShootoutDist::HeavyTail => {
+                for j in 0..d {
+                    // t₃ = z·√(3/w), w ~ χ²₃ as a sum of squared normals
+                    let z = rng.normal();
+                    let w: f64 = (0..3).map(|_| rng.normal().powi(2)).sum();
+                    x[(i, j)] = HT_LOC + HT_SCALE * z * (3.0 / w.max(1e-12)).sqrt();
+                }
+            }
+        }
+    }
+    let p: Vec<f64> = (0..n).map(|i| which.density(x.row(i))).collect();
+    finish(format!("{}{d}(n={n})", which.label()), x, p, f_star, rng)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -337,6 +453,67 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn shootout_densities_integrate_to_one_1d() {
+        // Riemann check of the 1-d marginals (the d-dim densities are
+        // products of these). HeavyTail has u^{−4} tails: ±60 scale
+        // units truncate ≲ 2e-6 of mass.
+        let m = 400_000;
+        for (which, lo, hi) in [
+            (ShootoutDist::Uniform, -0.5, 1.5),
+            (ShootoutDist::GaussMix, -0.5, 1.5),
+            (ShootoutDist::HeavyTail, 0.5 - 60.0 * HT_SCALE, 0.5 + 60.0 * HT_SCALE),
+        ] {
+            let step = (hi - lo) / m as f64;
+            let mut s = 0.0;
+            for i in 0..m {
+                let x = lo + (i as f64 + 0.5) * step;
+                s += which.density(&[x]) * step;
+            }
+            assert!((s - 1.0).abs() < 1e-4, "{which:?}: ∫p = {s}");
+        }
+    }
+
+    #[test]
+    fn shootout_samples_have_positive_density_and_sane_moments() {
+        let mut rng = Rng::seed_from_u64(11);
+        for which in ShootoutDist::all() {
+            for d in [1usize, 2] {
+                let ds = shootout_dist(which, 4000, d, &mut rng);
+                assert_eq!((ds.n(), ds.d()), (4000, d));
+                let p = ds.p_true.as_ref().unwrap();
+                for i in 0..ds.n() {
+                    assert!(p[i] > 0.0, "{which:?} d={d} row {i}: p={}", p[i]);
+                    assert!(
+                        (p[i] - which.density(ds.x.row(i))).abs() < 1e-12,
+                        "{which:?}: annotation mismatch"
+                    );
+                }
+                // first-coordinate mean: uniform 0.5, gaussmix 0.435
+                // (= 0.7·0.3 + 0.3·0.75), heavytail 0.5 (symmetric)
+                let want = match which {
+                    ShootoutDist::Uniform | ShootoutDist::HeavyTail => 0.5,
+                    ShootoutDist::GaussMix => 0.435,
+                };
+                let mean: f64 =
+                    (0..ds.n()).map(|i| ds.x[(i, 0)]).sum::<f64>() / ds.n() as f64;
+                assert!((mean - want).abs() < 0.03, "{which:?} d={d}: mean {mean}");
+            }
+        }
+    }
+
+    #[test]
+    fn heavy_tail_actually_has_outliers() {
+        // A Gaussian with the same scale would put ~0 mass beyond 6σ;
+        // the t₃ should produce several such points at n=4000.
+        let mut rng = Rng::seed_from_u64(12);
+        let ds = shootout_dist(ShootoutDist::HeavyTail, 4000, 1, &mut rng);
+        let far = (0..ds.n())
+            .filter(|&i| (ds.x[(i, 0)] - HT_LOC).abs() > 6.0 * HT_SCALE)
+            .count();
+        assert!(far >= 5, "only {far} points beyond 6 scale units");
     }
 
     #[test]

@@ -1,16 +1,23 @@
 //! Stationary kernels and their spectral densities.
 //!
-//! The paper works with Matérn kernels
-//!   C_ν(r) = 2^{1−ν}/Γ(ν) · (a r)^ν · K_ν(a r),   a > 0,
-//! (half-integer ν uses closed forms; general ν falls back to the Bessel
-//! integral in [`crate::special`]) and Gaussian kernels
-//!   K(r) = exp(−r² / (2σ²)).
+//! The kernel zoo (all isotropic, k(0) = 1):
 //!
-//! Spectral densities enter the SA leverage formula (Eqn 6). With the
-//! paper's simplification C_α = D_α = 1 (App. A.1) the Matérn α = ν + d/2
-//! spectral density is m_α(s) = (1 + ‖s‖²)^{−α}; the Gaussian one is
-//! m(s) = (2πσ²)^{d/2}·e^{−2π²σ²‖s‖²} (only its shape matters: the SA
-//! scores are normalized).
+//! | spec | k(r) | spectral density m(‖s‖) | SA integration |
+//! |------|------|--------------------------|----------------|
+//! | `Matern{nu,a}` | 2^{1−ν}/Γ(ν)·(ar)^ν K_ν(ar) | C_m(a²+4π²r²)^{−α}, α=ν+d/2 | closed form |
+//! | `Laplacian{gamma}` | e^{−γr} (≡ Matérn ν=½, a=γ) | C_m(γ²+4π²r²)^{−(d+1)/2} | closed form |
+//! | `Gaussian{sigma}` | e^{−r²/(2σ²)} | (2πσ²)^{d/2} e^{−2π²σ²r²} | polylog closed form |
+//! | `RationalQuadratic{alpha,ell}` | (1+r²/(2αℓ²))^{−α} | c·t^ν K_ν(t), t=2πℓ√(2α)·r, ν=α−d/2 | quadrature |
+//!
+//! All densities are in the e^{−2πi⟨x,s⟩} Fourier convention, with the
+//! kernels' *true* spectral constants (not the paper's C_α = D_α = 1
+//! simplification of App. A.1), so ∫_{R^d} m(‖s‖) ds = k(0) = 1 exactly
+//! and the SA values overlay the true leverage curve G in Figure 2.
+//! [`SpectralDensity`] carries the precomputed constants; half-integer
+//! ν uses closed forms for both k and t^ν K_ν(t), general ν falls back
+//! to the Bessel integral in [`crate::special`]. The rational-quadratic
+//! density follows from its Gamma(α, 1/(2αℓ²)) scale-mixture-of-Gaussians
+//! representation and requires α > d/2.
 //!
 //! The native assembly functions here are the *fallback / oracle* path;
 //! the production path assembles kernel blocks through the AOT-compiled
@@ -19,6 +26,7 @@
 
 use crate::linalg::{sqdist, Mat};
 use crate::special::{bessel_k, lgamma};
+use std::f64::consts::PI;
 
 /// Serializable kernel description (config-level).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -27,26 +35,138 @@ pub enum KernelSpec {
     Matern { nu: f64, a: f64 },
     /// Gaussian exp(−r²/(2σ²)).
     Gaussian { sigma: f64 },
+    /// Laplacian (exponential) exp(−γr) — the Matérn ν=½ kernel with a=γ,
+    /// kept as a first-class spec so configs can name it directly.
+    Laplacian { gamma: f64 },
+    /// Rational-quadratic (1 + r²/(2αℓ²))^{−α}: a Gamma-mixture of
+    /// Gaussians over inverse squared length-scales; α→∞ recovers the
+    /// Gaussian with σ=ℓ.
+    RationalQuadratic { alpha: f64, ell: f64 },
+}
+
+/// The accepted CLI/config spellings, with their parameters and defaults.
+pub const SUPPORTED_KERNELS: &[&str] = &[
+    "matern:nu=1.5,a=1.0",
+    "matern12:a=1.0",
+    "matern32:a=1.0",
+    "matern52:a=1.0",
+    "laplacian:gamma=1.0",
+    "gaussian:sigma=1.0",
+    "rq:alpha=2.0,ell=1.0",
+];
+
+/// Typed error from [`KernelSpec::parse`]. The `Display` form of
+/// [`KernelParseError::UnknownKernel`] lists every supported spelling so
+/// a CLI typo is self-correcting.
+#[derive(Clone, Debug, PartialEq)]
+pub enum KernelParseError {
+    /// The kernel name isn't one of the supported spellings.
+    UnknownKernel { name: String },
+    /// A parameter clause failed to split as `k=v` or its value failed to
+    /// parse as a float.
+    BadParam { param: String, detail: String },
+    /// A parameter name this kernel doesn't accept.
+    UnknownParam { kernel: &'static str, param: String, accepts: &'static str },
+    /// A parameter value outside the kernel's valid domain.
+    InvalidValue { kernel: &'static str, param: &'static str, value: f64, expect: &'static str },
+}
+
+impl std::fmt::Display for KernelParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KernelParseError::UnknownKernel { name } => {
+                write!(f, "unknown kernel '{name}'; supported: {}", SUPPORTED_KERNELS.join(" | "))
+            }
+            KernelParseError::BadParam { param, detail } => {
+                write!(f, "bad kernel param '{param}': {detail}")
+            }
+            KernelParseError::UnknownParam { kernel, param, accepts } => {
+                write!(f, "kernel '{kernel}' has no param '{param}' (accepts: {accepts})")
+            }
+            KernelParseError::InvalidValue { kernel, param, value, expect } => {
+                write!(f, "kernel '{kernel}': {param}={value} invalid (expected {expect})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for KernelParseError {}
+
+/// Check a parsed parameter map against a kernel's accepted names, then
+/// fetch one value (falling back to its default) and require it finite
+/// and strictly positive — every zoo parameter is a scale or smoothness.
+fn take_param(
+    kernel: &'static str,
+    accepts: &'static [&'static str],
+    accepts_str: &'static str,
+    kv: &std::collections::BTreeMap<String, f64>,
+    param: &'static str,
+    default: f64,
+) -> Result<f64, KernelParseError> {
+    for k in kv.keys() {
+        if !accepts.contains(&k.as_str()) {
+            return Err(KernelParseError::UnknownParam {
+                kernel,
+                param: k.clone(),
+                accepts: accepts_str,
+            });
+        }
+    }
+    let v = *kv.get(param).unwrap_or(&default);
+    if !v.is_finite() || v <= 0.0 {
+        return Err(KernelParseError::InvalidValue {
+            kernel,
+            param,
+            value: v,
+            expect: "a finite value > 0",
+        });
+    }
+    Ok(v)
 }
 
 impl KernelSpec {
-    /// Parse "matern:nu=1.5,a=1.0" / "gaussian:sigma=0.5" CLI syntax.
-    pub fn parse(s: &str) -> Result<KernelSpec, String> {
+    /// Parse `"matern:nu=1.5,a=1.0"` / `"gaussian:sigma=0.5"` /
+    /// `"matern32:a=2"` / `"laplacian:gamma=1"` / `"rq:alpha=2,ell=0.5"`
+    /// CLI syntax. Unknown names, unknown params, and non-positive or
+    /// non-finite values are typed [`KernelParseError`]s.
+    pub fn parse(s: &str) -> Result<KernelSpec, KernelParseError> {
         let (name, rest) = s.split_once(':').unwrap_or((s, ""));
         let mut kv = std::collections::BTreeMap::new();
         for part in rest.split(',').filter(|p| !p.is_empty()) {
-            let (k, v) = part
-                .split_once('=')
-                .ok_or_else(|| format!("bad kernel param '{part}'"))?;
-            kv.insert(k.trim(), v.trim().parse::<f64>().map_err(|e| e.to_string())?);
+            let (k, v) = part.split_once('=').ok_or_else(|| KernelParseError::BadParam {
+                param: part.trim().to_string(),
+                detail: "expected k=v".to_string(),
+            })?;
+            let val = v.trim().parse::<f64>().map_err(|e| KernelParseError::BadParam {
+                param: part.trim().to_string(),
+                detail: e.to_string(),
+            })?;
+            kv.insert(k.trim().to_string(), val);
         }
-        match name {
+        match name.trim() {
             "matern" => Ok(KernelSpec::Matern {
-                nu: *kv.get("nu").unwrap_or(&1.5),
-                a: *kv.get("a").unwrap_or(&1.0),
+                nu: take_param("matern", &["nu", "a"], "nu, a", &kv, "nu", 1.5)?,
+                a: take_param("matern", &["nu", "a"], "nu, a", &kv, "a", 1.0)?,
             }),
-            "gaussian" => Ok(KernelSpec::Gaussian { sigma: *kv.get("sigma").unwrap_or(&1.0) }),
-            _ => Err(format!("unknown kernel '{name}' (matern|gaussian)")),
+            fixed @ ("matern12" | "matern32" | "matern52") => Ok(KernelSpec::Matern {
+                nu: match fixed {
+                    "matern12" => 0.5,
+                    "matern32" => 1.5,
+                    _ => 2.5,
+                },
+                a: take_param(fixed, &["a"], "a", &kv, "a", 1.0)?,
+            }),
+            "laplacian" | "laplace" => Ok(KernelSpec::Laplacian {
+                gamma: take_param("laplacian", &["gamma"], "gamma", &kv, "gamma", 1.0)?,
+            }),
+            "gaussian" => Ok(KernelSpec::Gaussian {
+                sigma: take_param("gaussian", &["sigma"], "sigma", &kv, "sigma", 1.0)?,
+            }),
+            "rq" | "rational-quadratic" => Ok(KernelSpec::RationalQuadratic {
+                alpha: take_param("rq", &["alpha", "ell"], "alpha, ell", &kv, "alpha", 2.0)?,
+                ell: take_param("rq", &["alpha", "ell"], "alpha, ell", &kv, "ell", 1.0)?,
+            }),
+            other => Err(KernelParseError::UnknownKernel { name: other.to_string() }),
         }
     }
 
@@ -58,9 +178,12 @@ impl KernelSpec {
     pub fn alpha(&self, d: usize) -> f64 {
         match self {
             KernelSpec::Matern { nu, .. } => nu + d as f64 / 2.0,
-            // Gaussian: the paper (App. C.2) treats σ via an "equivalent α";
-            // callers use the polylog path instead of α for SA.
-            KernelSpec::Gaussian { .. } => f64::INFINITY,
+            KernelSpec::Laplacian { .. } => 0.5 + d as f64 / 2.0,
+            // Gaussian / RQ: C^∞ kernels with super-polynomial spectral
+            // decay — no finite Sobolev order. The paper (App. C.2)
+            // treats these via an "equivalent α"; callers that feed α
+            // into λ rules cap it (e.g. `.min(20.0)` in the tuner).
+            KernelSpec::Gaussian { .. } | KernelSpec::RationalQuadratic { .. } => f64::INFINITY,
         }
     }
 
@@ -68,6 +191,10 @@ impl KernelSpec {
         match self {
             KernelSpec::Matern { nu, a } => format!("matern(nu={nu},a={a})"),
             KernelSpec::Gaussian { sigma } => format!("gaussian(sigma={sigma})"),
+            KernelSpec::Laplacian { gamma } => format!("laplacian(gamma={gamma})"),
+            KernelSpec::RationalQuadratic { alpha, ell } => {
+                format!("rq(alpha={alpha},ell={ell})")
+            }
         }
     }
 }
@@ -116,7 +243,20 @@ impl Kernel {
                     self.matern_norm * t.powf(nu) * bessel_k(nu, t)
                 }
             }
+            // Same operation sequence as the Matérn ν=½ arm so the two
+            // spellings are *bitwise* identical (pinned by test).
+            KernelSpec::Laplacian { gamma } => {
+                let r = r2.max(0.0).sqrt();
+                let t = gamma * r;
+                if t <= 1e-12 {
+                    return 1.0;
+                }
+                (-t).exp()
+            }
             KernelSpec::Gaussian { sigma } => (-r2 / (2.0 * sigma * sigma)).exp(),
+            KernelSpec::RationalQuadratic { alpha, ell } => {
+                (1.0 + r2.max(0.0) / (2.0 * alpha * ell * ell)).powf(-alpha)
+            }
         }
     }
 
@@ -179,19 +319,139 @@ impl Kernel {
         Mat { rows: n, cols: m, data: blocks.into_iter().flatten().collect() }
     }
 
-    /// The kernel's spectral density m(‖s‖) as a function of the radial
-    /// frequency, under the paper's normalization (App. A.1: C_α=D_α=1 for
-    /// Matérn). For the Gaussian, m(r) = (2πσ²)^{d/2} e^{−2π²σ²r²}
-    /// (Fourier pair of e^{−‖x‖²/2σ²} under the e^{−2πi⟨x,s⟩} convention).
+    /// The kernel's exact spectral density m(‖s‖) at radial frequency
+    /// `r` in dimension `d` (e^{−2πi⟨x,s⟩} convention, ∫ m = k(0) = 1).
+    /// Convenience wrapper over [`SpectralDensity`]; hot callers build
+    /// the [`SpectralDensity`] once and reuse it.
     pub fn spectral_density(&self, r: f64, d: usize) -> f64 {
-        match self.spec {
-            KernelSpec::Matern { nu, .. } => {
-                let alpha = nu + d as f64 / 2.0;
-                (1.0 + r * r).powf(-alpha)
+        SpectralDensity::new(self, d).eval(r)
+    }
+}
+
+/// t^ν K_ν(t) with half-integer closed forms (exact at every t, no
+/// Bessel quadrature) and the general-ν fallback through
+/// [`crate::special::bessel_k`]. As t→0⁺ this tends to 2^{ν−1}Γ(ν).
+fn t_pow_nu_knu(nu: f64, t: f64) -> f64 {
+    let h = (PI / 2.0).sqrt();
+    if (nu - 0.5).abs() < 1e-12 {
+        h * (-t).exp()
+    } else if (nu - 1.5).abs() < 1e-12 {
+        h * (-t).exp() * (t + 1.0)
+    } else if (nu - 2.5).abs() < 1e-12 {
+        h * (-t).exp() * (t * t + 3.0 * t + 3.0)
+    } else {
+        t.powf(nu) * bessel_k(nu, t)
+    }
+}
+
+/// True spectral-density description m(r) = c_m·g(r) for the kernel zoo,
+/// in the e^{−2πi⟨x,s⟩} Fourier convention (∫_{R^d} m = K(0) = 1), with
+/// every constant precomputed at construction:
+///
+/// * Matérn / Laplacian: m(r) = C_m (a² + 4π²r²)^{−α}, α = ν + d/2,
+///   C_m = 2^d π^{d/2} Γ(α) a^{2ν} / Γ(ν) (Laplacian is ν=½, a=γ).
+/// * Gaussian: m(r) = (2πσ²)^{d/2} e^{−2π²σ²r²}.
+/// * Rational-quadratic: by the Gamma(α, 1/(2αℓ²)) scale-mixture
+///   representation, m(r) = c·t^ν K_ν(t) with t = 2πℓ√(2α)·r,
+///   ν = α − d/2 (**requires α > d/2**), and
+///   c = 2^{1−ν} π^{d/2} (2αℓ²)^{d/2} / Γ(α).
+pub struct SpectralDensity {
+    pub d: usize,
+    pub spec: KernelSpec,
+    /// Matérn/Laplacian: C_m with m(r) = C_m (a² + 4π²r²)^{−α}.
+    pub matern_cm: f64,
+    /// Power-law Sobolev exponent; ∞ for the Gaussian / RQ.
+    pub alpha: f64,
+    /// RQ amplitude c in m(r) = c·t^ν K_ν(t).
+    pub rq_cm: f64,
+    /// RQ Bessel order ν = α − d/2.
+    pub rq_nu: f64,
+    /// RQ frequency scale: t = rq_as·r, rq_as = 2πℓ√(2α).
+    pub rq_as: f64,
+    /// m(0) — finite for every kernel in the zoo.
+    pub m0: f64,
+}
+
+impl SpectralDensity {
+    pub fn new(kernel: &Kernel, d: usize) -> Self {
+        let df = d as f64;
+        let mut sd = SpectralDensity {
+            d,
+            spec: kernel.spec,
+            matern_cm: 0.0,
+            alpha: f64::INFINITY,
+            rq_cm: 0.0,
+            rq_nu: 0.0,
+            rq_as: 0.0,
+            m0: 0.0,
+        };
+        match kernel.spec {
+            KernelSpec::Matern { nu, a } => {
+                let alpha = nu + df / 2.0;
+                // C_m = 2^d π^{d/2} Γ(α) a^{2ν} / Γ(ν)
+                let ln_cm = df * std::f64::consts::LN_2 + (df / 2.0) * PI.ln() + lgamma(alpha)
+                    + 2.0 * nu * a.ln()
+                    - lgamma(nu);
+                sd.matern_cm = ln_cm.exp();
+                sd.alpha = alpha;
+                sd.m0 = sd.matern_cm * (a * a).powf(-alpha);
+            }
+            KernelSpec::Laplacian { gamma } => {
+                // Matérn ν = ½ with a = γ: C_m = 2^d π^{d/2} Γ(α) γ / Γ(½)
+                let nu = 0.5;
+                let alpha = nu + df / 2.0;
+                let ln_cm = df * std::f64::consts::LN_2 + (df / 2.0) * PI.ln() + lgamma(alpha)
+                    + 2.0 * nu * gamma.ln()
+                    - lgamma(nu);
+                sd.matern_cm = ln_cm.exp();
+                sd.alpha = alpha;
+                sd.m0 = sd.matern_cm * (gamma * gamma).powf(-alpha);
             }
             KernelSpec::Gaussian { sigma } => {
-                let c = (2.0 * std::f64::consts::PI * sigma * sigma).powf(d as f64 / 2.0);
-                c * (-2.0 * std::f64::consts::PI.powi(2) * sigma * sigma * r * r).exp()
+                sd.m0 = (2.0 * PI * sigma * sigma).powf(df / 2.0);
+            }
+            KernelSpec::RationalQuadratic { alpha, ell } => {
+                let nu = alpha - df / 2.0;
+                assert!(
+                    nu > 0.0,
+                    "rational-quadratic spectral density needs alpha > d/2 \
+                     (got alpha={alpha}, d={d})"
+                );
+                // c = 2^{1−ν} π^{d/2} (2αℓ²)^{d/2} / Γ(α)
+                let ln_cm = (1.0 - nu) * std::f64::consts::LN_2 + (df / 2.0) * PI.ln()
+                    + (df / 2.0) * (2.0 * alpha).ln()
+                    + df * ell.ln()
+                    - lgamma(alpha);
+                sd.rq_cm = ln_cm.exp();
+                sd.rq_nu = nu;
+                sd.rq_as = 2.0 * PI * ell * (2.0 * alpha).sqrt();
+                // lim_{t→0} t^ν K_ν(t) = 2^{ν−1} Γ(ν)
+                sd.m0 = (ln_cm + (nu - 1.0) * std::f64::consts::LN_2 + lgamma(nu)).exp();
+            }
+        }
+        sd
+    }
+
+    /// m(r) at radial frequency r.
+    pub fn eval(&self, r: f64) -> f64 {
+        match self.spec {
+            KernelSpec::Matern { a, .. } => {
+                self.matern_cm * (a * a + 4.0 * PI * PI * r * r).powf(-self.alpha)
+            }
+            KernelSpec::Laplacian { gamma } => {
+                self.matern_cm * (gamma * gamma + 4.0 * PI * PI * r * r).powf(-self.alpha)
+            }
+            KernelSpec::Gaussian { sigma } => {
+                (2.0 * PI * sigma * sigma).powf(self.d as f64 / 2.0)
+                    * (-2.0 * PI * PI * sigma * sigma * r * r).exp()
+            }
+            KernelSpec::RationalQuadratic { .. } => {
+                let t = self.rq_as * r;
+                if t <= 1e-8 {
+                    self.m0
+                } else {
+                    self.rq_cm * t_pow_nu_knu(self.rq_nu, t)
+                }
             }
         }
     }
@@ -200,10 +460,25 @@ impl Kernel {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quadrature::integrate_semi_infinite;
+    use crate::special::sphere_surface;
     use crate::util::rng::Rng;
 
     fn rel(a: f64, b: f64) -> f64 {
         (a - b).abs() / b.abs().max(1e-300)
+    }
+
+    /// One instance of every zoo member, unit-ish scales.
+    fn zoo() -> Vec<KernelSpec> {
+        vec![
+            KernelSpec::Matern { nu: 0.5, a: 1.0 },
+            KernelSpec::Matern { nu: 1.5, a: 0.7 },
+            KernelSpec::Matern { nu: 2.5, a: 2.0 },
+            KernelSpec::Matern { nu: 1.1, a: 1.0 },
+            KernelSpec::Laplacian { gamma: 1.3 },
+            KernelSpec::Gaussian { sigma: 0.8 },
+            KernelSpec::RationalQuadratic { alpha: 2.5, ell: 0.6 },
+        ]
     }
 
     #[test]
@@ -217,6 +492,80 @@ mod tests {
             KernelSpec::Gaussian { sigma: 0.25 }
         );
         assert!(KernelSpec::parse("rbf").is_err());
+    }
+
+    #[test]
+    fn parse_accepts_every_supported_spelling() {
+        for (s, want) in [
+            ("matern", KernelSpec::Matern { nu: 1.5, a: 1.0 }),
+            ("matern:nu=2.5,a=0.5", KernelSpec::Matern { nu: 2.5, a: 0.5 }),
+            ("matern12", KernelSpec::Matern { nu: 0.5, a: 1.0 }),
+            ("matern12:a=2", KernelSpec::Matern { nu: 0.5, a: 2.0 }),
+            ("matern32:a=1.7", KernelSpec::Matern { nu: 1.5, a: 1.7 }),
+            ("matern52", KernelSpec::Matern { nu: 2.5, a: 1.0 }),
+            ("laplacian", KernelSpec::Laplacian { gamma: 1.0 }),
+            ("laplacian:gamma=0.4", KernelSpec::Laplacian { gamma: 0.4 }),
+            ("laplace:gamma=2", KernelSpec::Laplacian { gamma: 2.0 }),
+            ("gaussian", KernelSpec::Gaussian { sigma: 1.0 }),
+            ("rq", KernelSpec::RationalQuadratic { alpha: 2.0, ell: 1.0 }),
+            ("rq:alpha=3,ell=0.5", KernelSpec::RationalQuadratic { alpha: 3.0, ell: 0.5 }),
+            (
+                "rational-quadratic:ell=0.3",
+                KernelSpec::RationalQuadratic { alpha: 2.0, ell: 0.3 },
+            ),
+        ] {
+            assert_eq!(KernelSpec::parse(s), Ok(want), "{s}");
+        }
+        // every SUPPORTED_KERNELS listing parses back to itself
+        for s in SUPPORTED_KERNELS {
+            assert!(KernelSpec::parse(s).is_ok(), "{s}");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_bad_spellings_with_typed_errors() {
+        // unknown kernel names list the supported set
+        for s in ["rbf", "", "exp", "matern15"] {
+            match KernelSpec::parse(s) {
+                Err(KernelParseError::UnknownKernel { name }) => {
+                    let msg = KernelParseError::UnknownKernel { name }.to_string();
+                    assert!(msg.contains("laplacian"), "{msg}");
+                    assert!(msg.contains("rq"), "{msg}");
+                }
+                other => panic!("{s}: expected UnknownKernel, got {other:?}"),
+            }
+        }
+        // malformed / unparseable params
+        assert!(matches!(
+            KernelSpec::parse("matern:nu"),
+            Err(KernelParseError::BadParam { .. })
+        ));
+        assert!(matches!(
+            KernelSpec::parse("matern:nu=abc"),
+            Err(KernelParseError::BadParam { .. })
+        ));
+        // params the kernel doesn't accept
+        assert!(matches!(
+            KernelSpec::parse("gaussian:nu=1"),
+            Err(KernelParseError::UnknownParam { .. })
+        ));
+        assert!(matches!(
+            KernelSpec::parse("matern12:nu=1.5"),
+            Err(KernelParseError::UnknownParam { .. })
+        ));
+        assert!(matches!(
+            KernelSpec::parse("laplacian:sigma=1"),
+            Err(KernelParseError::UnknownParam { .. })
+        ));
+        // out-of-domain values
+        for s in ["gaussian:sigma=0", "gaussian:sigma=-1", "matern:nu=0", "rq:alpha=0",
+                  "laplacian:gamma=-2", "gaussian:sigma=nan"] {
+            assert!(
+                matches!(KernelSpec::parse(s), Err(KernelParseError::InvalidValue { .. })),
+                "{s}: {:?}",
+                KernelSpec::parse(s)
+            );
+        }
     }
 
     #[test]
@@ -235,15 +584,42 @@ mod tests {
     }
 
     #[test]
+    fn laplacian_is_bitwise_matern_half() {
+        // Same operation sequence ⇒ exactly equal, not just close — the
+        // parity suites rely on spelling not mattering.
+        let gamma = 1.7;
+        let lap = Kernel::new(KernelSpec::Laplacian { gamma });
+        let mat = Kernel::new(KernelSpec::Matern { nu: 0.5, a: gamma });
+        for &r2 in &[0.0, 1e-30, 0.01, 0.25, 1.0, 4.0, 16.0, 900.0] {
+            assert_eq!(
+                lap.eval_sq(r2).to_bits(),
+                mat.eval_sq(r2).to_bits(),
+                "r2={r2}"
+            );
+        }
+        // and their spectral densities agree (same constants)
+        let sd_l = SpectralDensity::new(&lap, 3);
+        let sd_m = SpectralDensity::new(&mat, 3);
+        for &r in &[0.0, 0.1, 1.0, 10.0] {
+            assert!(rel(sd_l.eval(r), sd_m.eval(r)) < 1e-14, "r={r}");
+        }
+    }
+
+    #[test]
+    fn rq_limits_to_gaussian_at_large_alpha() {
+        // (1 + r²/(2αℓ²))^{−α} → e^{−r²/(2ℓ²)} as α→∞.
+        let ell = 0.7;
+        let rq = Kernel::new(KernelSpec::RationalQuadratic { alpha: 5e4, ell });
+        let ga = Kernel::new(KernelSpec::Gaussian { sigma: ell });
+        for &r2 in &[0.01, 0.25, 1.0, 4.0] {
+            assert!(rel(rq.eval_sq(r2), ga.eval_sq(r2)) < 1e-3, "r2={r2}");
+        }
+    }
+
+    #[test]
     fn kernels_are_one_at_zero_and_decreasing() {
         let mut rng = Rng::seed_from_u64(1);
-        for spec in [
-            KernelSpec::Matern { nu: 0.5, a: 1.0 },
-            KernelSpec::Matern { nu: 1.5, a: 0.7 },
-            KernelSpec::Matern { nu: 2.5, a: 2.0 },
-            KernelSpec::Matern { nu: 1.1, a: 1.0 },
-            KernelSpec::Gaussian { sigma: 0.8 },
-        ] {
+        for spec in zoo() {
             let k = Kernel::new(spec);
             assert!(rel(k.eval_sq(0.0), 1.0) < 1e-9, "{spec:?} at 0");
             let mut prev = 1.0;
@@ -265,13 +641,11 @@ mod tests {
 
     #[test]
     fn kernel_matrix_psd() {
-        // K(X,X)+εI must be Cholesky-factorizable (PSD check).
+        // K(X,X)+εI must be Cholesky-factorizable (PSD check) for every
+        // zoo member — stationarity + positive spectral density ⇒ PSD.
         let mut rng = Rng::seed_from_u64(21);
         let x = Mat::from_fn(40, 3, |_, _| rng.normal());
-        for spec in [
-            KernelSpec::Matern { nu: 1.5, a: 1.0 },
-            KernelSpec::Gaussian { sigma: 1.0 },
-        ] {
+        for spec in zoo() {
             let k = Kernel::new(spec);
             let mut km = k.matrix_sym(&x);
             km.add_diag(1e-9);
@@ -283,10 +657,16 @@ mod tests {
     fn matrix_sym_matches_matrix() {
         let mut rng = Rng::seed_from_u64(22);
         let x = Mat::from_fn(33, 4, |_, _| rng.normal());
-        let k = Kernel::new(KernelSpec::Matern { nu: 1.5, a: 1.0 });
-        let a = k.matrix(&x, &x);
-        let b = k.matrix_sym(&x);
-        assert!(a.max_abs_diff(&b) < 1e-14);
+        for spec in [
+            KernelSpec::Matern { nu: 1.5, a: 1.0 },
+            KernelSpec::Laplacian { gamma: 1.0 },
+            KernelSpec::RationalQuadratic { alpha: 2.0, ell: 0.8 },
+        ] {
+            let k = Kernel::new(spec);
+            let a = k.matrix(&x, &x);
+            let b = k.matrix_sym(&x);
+            assert!(a.max_abs_diff(&b) < 1e-14, "{spec:?}");
+        }
     }
 
     #[test]
@@ -297,10 +677,7 @@ mod tests {
         for &(n, m, d) in &[(37usize, 21usize, 3usize), (150, 140, 5), (2, 1, 1)] {
             let x = Mat::from_fn(n, d, |_, _| rng.normal());
             let y = Mat::from_fn(m, d, |_, _| rng.normal());
-            for spec in [
-                KernelSpec::Matern { nu: 1.5, a: 1.0 },
-                KernelSpec::Gaussian { sigma: 0.8 },
-            ] {
+            for spec in zoo() {
                 let k = Kernel::new(spec);
                 let blocked = k.matrix(&x, &y);
                 let scalar = k.matrix_scalar(&x, &y);
@@ -315,16 +692,78 @@ mod tests {
 
     #[test]
     fn spectral_density_matern_shape() {
+        // Exact constants: m(0) = C_m·a^{−2α}, tail m(r) ≈ C_m(4π²)^{−α}r^{−2α}.
         let k = Kernel::new(KernelSpec::Matern { nu: 1.5, a: 1.0 });
         let d = 3;
-        // m(0) = 1, decreasing, tail ~ r^{-2α}
-        assert!(rel(k.spectral_density(0.0, d), 1.0) < 1e-12);
+        let sd = SpectralDensity::new(&k, d);
         let alpha: f64 = 1.5 + 1.5;
+        assert!(rel(k.spectral_density(0.0, d), sd.m0) < 1e-12);
+        assert!(rel(sd.m0, sd.matern_cm) < 1e-12, "a=1 ⇒ m(0)=C_m");
         let big: f64 = 1e4;
-        assert!(
-            rel(k.spectral_density(big, d), big.powf(-2.0 * alpha)) < 1e-3,
-            "tail exponent"
-        );
+        let tail = sd.matern_cm * (4.0 * PI * PI).powf(-alpha) * big.powf(-2.0 * alpha);
+        assert!(rel(k.spectral_density(big, d), tail) < 1e-3, "tail exponent");
+    }
+
+    #[test]
+    fn spectral_density_zoo_integrates_to_k0() {
+        // ∫ m(s) ds over R^d = K(0) = 1 (inverse FT at 0). Radially:
+        // ∫_0^∞ m(r) ω_{d-1} r^{d-1} dr = 1. Pins every zoo member's
+        // spectral constants (the RQ needs α > d/2).
+        for spec in [
+            KernelSpec::Matern { nu: 1.5, a: 1.3 },
+            KernelSpec::Matern { nu: 2.5, a: 0.8 },
+            KernelSpec::Laplacian { gamma: 1.4 },
+            KernelSpec::Gaussian { sigma: 0.7 },
+            KernelSpec::RationalQuadratic { alpha: 2.5, ell: 0.6 },
+            KernelSpec::RationalQuadratic { alpha: 4.0, ell: 1.1 },
+        ] {
+            for d in [1usize, 2, 3] {
+                let k = Kernel::new(spec);
+                let sd = SpectralDensity::new(&k, d);
+                let omega = sphere_surface(d);
+                let got = integrate_semi_infinite(
+                    |r| sd.eval(r) * omega * r.powi(d as i32 - 1),
+                    1e-12,
+                );
+                assert!(rel(got, 1.0) < 1e-5, "{spec:?} d={d}: ∫m = {got}");
+            }
+        }
+    }
+
+    #[test]
+    fn spectral_density_tails_have_correct_decay() {
+        // Matérn/Laplacian: polynomial r^{−2α}. RQ: exponential with rate
+        // rq_as — t^ν K_ν(t) ~ √(π/2)·t^{ν−1/2}e^{−t} for large t.
+        let d = 2;
+        let lap = Kernel::new(KernelSpec::Laplacian { gamma: 1.0 });
+        let sdl = SpectralDensity::new(&lap, d);
+        let (r1, r2) = (50.0, 100.0);
+        let slope = (sdl.eval(r2) / sdl.eval(r1)).ln() / (r2 / r1).ln();
+        assert!((slope - (-2.0 * sdl.alpha)).abs() < 0.01, "laplacian slope {slope}");
+
+        let rq = Kernel::new(KernelSpec::RationalQuadratic { alpha: 2.5, ell: 0.5 });
+        let sdr = SpectralDensity::new(&rq, d);
+        for &r in &[1.0, 2.0, 4.0] {
+            let t = sdr.rq_as * r;
+            let asym = sdr.rq_cm * (PI / 2.0).sqrt() * t.powf(sdr.rq_nu - 0.5) * (-t).exp();
+            assert!(rel(sdr.eval(r), asym) < 0.2, "rq r={r}: {} vs {asym}", sdr.eval(r));
+        }
+    }
+
+    #[test]
+    fn rq_spectral_density_matches_kernel_by_inverse_transform_1d() {
+        // 1-d check of the scale-mixture constants:
+        // k(u) = 2∫₀^∞ m(r) cos(2πru) dr.
+        let k = Kernel::new(KernelSpec::RationalQuadratic { alpha: 2.0, ell: 0.8 });
+        let sd = SpectralDensity::new(&k, 1);
+        for &u in &[0.1, 0.5, 1.0, 2.0] {
+            let got = integrate_semi_infinite(
+                |r| 2.0 * sd.eval(r) * (2.0 * PI * r * u).cos(),
+                1e-11,
+            );
+            let want = k.eval_sq(u * u);
+            assert!(rel(got, want) < 1e-4, "u={u}: {got} vs {want}");
+        }
     }
 
     #[test]
@@ -333,7 +772,7 @@ mod tests {
         // ∫_0^∞ m(r) ω_{d-1} r^{d-1} dr = 1.
         for d in [1usize, 2, 3] {
             let k = Kernel::new(KernelSpec::Gaussian { sigma: 0.7 });
-            let omega = crate::special::sphere_surface(d);
+            let omega = sphere_surface(d);
             let got = crate::quadrature::integrate_semi_infinite(
                 |r| k.spectral_density(r, d) * omega * r.powi(d as i32 - 1),
                 1e-12,

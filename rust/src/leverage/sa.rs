@@ -18,6 +18,12 @@
 //!   value overlays the true G in Figure 2.
 //! * **Gaussian closed form**: K̃ = −Li_{d/2}(−y)/(p·c), y = p·c/λ,
 //!   c = (2πσ²)^{d/2}, via the polylogarithm in [`crate::special`].
+//! * **Laplacian**: the Matérn ν=½ power law with a = γ — shares the
+//!   Matérn closed form exactly.
+//! * **Rational-quadratic**: its Bessel-form spectral density
+//!   (see [`crate::kernels::SpectralDensity`]) has no elementary
+//!   antiderivative, so RQ always takes the polar-reduced quadrature
+//!   route, even under [`SaIntegration::ClosedForm`].
 //!
 //! We use the kernels' true spectral constants (not the paper's C_α=D_α=1
 //! simplification) so K̃ matches G in absolute scale, which Figure 2
@@ -41,7 +47,7 @@ use super::{LeverageContext, LeverageEstimator};
 use crate::kde::{self, KdeMethod};
 use crate::kernels::{Kernel, KernelSpec};
 use crate::quadrature::{integrate_semi_infinite_panels, GaussLegendre};
-use crate::special::{lgamma, polylog_neg, sphere_surface};
+use crate::special::{polylog_neg, sphere_surface};
 use crate::trace;
 use crate::util::rng::Rng;
 use std::f64::consts::PI;
@@ -90,54 +96,23 @@ impl Default for SaEstimator {
     }
 }
 
-/// True spectral-density description m(r) = c_m·g(r) for our kernels, in
-/// the e^{−2πi⟨x,s⟩} Fourier convention (∫ m = K(0) = 1).
-pub struct SpectralDensity {
-    pub d: usize,
-    pub spec: KernelSpec,
-    /// Matérn: C_m with m(r) = C_m (a² + 4π²r²)^{−α}.
-    pub matern_cm: f64,
-    pub alpha: f64,
-}
-
-impl SpectralDensity {
-    pub fn new(kernel: &Kernel, d: usize) -> Self {
-        match kernel.spec {
-            KernelSpec::Matern { nu, a } => {
-                let alpha = nu + d as f64 / 2.0;
-                // C_m = 2^d π^{d/2} Γ(α) a^{2ν} / Γ(ν)
-                let ln_cm = d as f64 * std::f64::consts::LN_2
-                    + (d as f64 / 2.0) * PI.ln()
-                    + lgamma(alpha)
-                    + 2.0 * nu * a.ln()
-                    - lgamma(nu);
-                SpectralDensity { d, spec: kernel.spec, matern_cm: ln_cm.exp(), alpha }
-            }
-            KernelSpec::Gaussian { .. } => {
-                SpectralDensity { d, spec: kernel.spec, matern_cm: 0.0, alpha: f64::INFINITY }
-            }
-        }
-    }
-
-    /// m(r) at radial frequency r.
-    pub fn eval(&self, r: f64) -> f64 {
-        match self.spec {
-            KernelSpec::Matern { a, .. } => {
-                self.matern_cm * (a * a + 4.0 * PI * PI * r * r).powf(-self.alpha)
-            }
-            KernelSpec::Gaussian { sigma } => {
-                (2.0 * PI * sigma * sigma).powf(self.d as f64 / 2.0)
-                    * (-2.0 * PI * PI * sigma * sigma * r * r).exp()
-            }
-        }
-    }
-}
+// The spectral-density descriptions (exact constants for the full
+// kernel zoo) live with the kernels; re-exported here because SA is
+// their primary consumer and the historical home of the type.
+pub use crate::kernels::SpectralDensity;
 
 /// Evaluate K̃_λ(x,x) for a single density value p — closed form.
+///
+/// Matérn and Laplacian use the power-law integral (App. D.2); the
+/// Gaussian uses the polylog. The rational-quadratic density has no
+/// elementary antiderivative, so its "closed form" is the polar-reduced
+/// quadrature with a locally-built rule — batch callers
+/// ([`SaEstimator::scores_from_density`]) route RQ through the shared
+/// pool-parallel quadrature path instead of calling this per point.
 pub fn sa_value_closed_form(p: f64, sd: &SpectralDensity, lambda: f64) -> f64 {
     let d = sd.d as f64;
     match sd.spec {
-        KernelSpec::Matern { .. } => {
+        KernelSpec::Matern { .. } | KernelSpec::Laplacian { .. } => {
             let alpha = sd.alpha;
             // ∫ r^{d−1}/(p + B r^{2α}) dr with B = λ(2π)^{2α}/C_m, then
             // × ω_{d−1}:  value = ω_{d−1} p^{d/2α−1} B^{−d/2α} (π/2α)/sin(πd/2α)
@@ -151,6 +126,9 @@ pub fn sa_value_closed_form(p: f64, sd: &SpectralDensity, lambda: f64) -> f64 {
             let c = (2.0 * PI * sigma * sigma).powf(d / 2.0);
             let y = p * c / lambda;
             -polylog_neg(d / 2.0, y) / (p * c)
+        }
+        KernelSpec::RationalQuadratic { .. } => {
+            sa_value_quadrature(p, sd, lambda, &GaussLegendre::new(32))
         }
     }
 }
@@ -166,7 +144,7 @@ pub fn sa_value_quadrature(
     let d = sd.d as f64;
     // characteristic radius where λ/m(r) ≈ p — center the panels there
     let r0 = match sd.spec {
-        KernelSpec::Matern { a, .. } => {
+        KernelSpec::Matern { a, .. } | KernelSpec::Laplacian { gamma: a } => {
             let t = (p * sd.matern_cm / lambda).powf(1.0 / (2.0 * sd.alpha));
             ((t - a * a).max(1.0)).sqrt() / (2.0 * PI)
         }
@@ -174,6 +152,12 @@ pub fn sa_value_quadrature(
             let c = (2.0 * PI * sigma * sigma).powf(d / 2.0);
             let y = (p * c / lambda).max(2.0);
             (y.ln()).sqrt() / (PI * sigma * 2.0f64.sqrt()) + 1.0
+        }
+        KernelSpec::RationalQuadratic { .. } => {
+            // m decays like e^{−t}, t = rq_as·r: λ/m overtakes p near
+            // t ≈ ln(p·m(0)/λ).
+            let y = (p * sd.m0 / lambda).max(2.0);
+            y.ln().max(1.0) / sd.rq_as
         }
     };
     let f = |r: f64| {
@@ -263,7 +247,15 @@ impl SaEstimator {
                 p
             }
         };
-        match self.integration {
+        // The RQ spectral density has no closed form — under ClosedForm
+        // it takes the pool-parallel quadrature route (same results as
+        // SaIntegration::Quadrature, thread-count invariant).
+        let integration = if matches!(sd.spec, KernelSpec::RationalQuadratic { .. }) {
+            SaIntegration::Quadrature
+        } else {
+            self.integration
+        };
+        match integration {
             SaIntegration::ClosedForm => {
                 // Gaussian fast path: one polylog table, O(1) per point.
                 if let KernelSpec::Gaussian { sigma } = sd.spec {
@@ -403,6 +395,58 @@ mod tests {
                 let q = sa_value_quadrature(p, &sd, lambda, &gl);
                 assert!(rel(cf, q) < 0.02, "d={d} p={p} λ={lambda}: {cf} vs {q}");
             }
+        }
+    }
+
+    #[test]
+    fn laplacian_closed_form_matches_quadrature() {
+        let gl = GaussLegendre::new(32);
+        for d in [1usize, 2, 3] {
+            let k = Kernel::new(KernelSpec::Laplacian { gamma: 1.0 });
+            let sd = SpectralDensity::new(&k, d);
+            let lambda = 1e-5;
+            for &p in &[0.2, 1.0, 5.0] {
+                let cf = sa_value_closed_form(p, &sd, lambda);
+                let q = sa_value_quadrature(p, &sd, lambda, &gl);
+                assert!(rel(cf, q) < 0.05, "d={d} p={p}: closed={cf} quad={q}");
+            }
+        }
+    }
+
+    #[test]
+    fn rq_closed_form_entry_point_is_the_quadrature() {
+        // sa_value_closed_form routes RQ through quadrature with the same
+        // 32-node rule — the two entry points must agree exactly.
+        let k = Kernel::new(KernelSpec::RationalQuadratic { alpha: 2.5, ell: 0.5 });
+        let sd = SpectralDensity::new(&k, 2);
+        let gl = GaussLegendre::new(32);
+        for &(p, lambda) in &[(0.5, 1e-4), (2.0, 1e-3), (0.05, 1e-5)] {
+            let cf = sa_value_closed_form(p, &sd, lambda);
+            let q = sa_value_quadrature(p, &sd, lambda, &gl);
+            assert!(cf.is_finite() && cf > 0.0, "p={p} λ={lambda}: {cf}");
+            assert_eq!(cf.to_bits(), q.to_bits(), "p={p} λ={lambda}");
+        }
+    }
+
+    #[test]
+    fn rq_scores_positive_finite_and_decreasing_in_density() {
+        // Batch entry point: RQ under ClosedForm silently takes the
+        // quadrature route; scores must behave like every other kernel's.
+        let k = Kernel::new(KernelSpec::RationalQuadratic { alpha: 2.5, ell: 0.4 });
+        let est = SaEstimator { stabilize: false, ..Default::default() };
+        let p_hat = [0.05, 0.2, 1.0, 5.0];
+        let scores = est.scores_from_density(&p_hat, &k, 1e-4, 2);
+        for (i, &s) in scores.iter().enumerate() {
+            assert!(s.is_finite() && s > 0.0, "i={i}: {s}");
+            if i > 0 {
+                assert!(s < scores[i - 1], "not decreasing at i={i}");
+            }
+        }
+        // and the batch path agrees with the per-point evaluator
+        let sd = SpectralDensity::new(&k, 2);
+        for (i, &p) in p_hat.iter().enumerate() {
+            let direct = sa_value_closed_form(p, &sd, 1e-4);
+            assert!(rel(scores[i], direct) < 1e-12, "i={i}");
         }
     }
 

@@ -151,7 +151,9 @@
 //!   "Landmark Gram cache" above).
 //! * [`special`] — Γ, erf, modified Bessel K_ν, polylogarithm Li_s.
 //! * [`quadrature`] — Gauss–Legendre and adaptive rules.
-//! * [`kernels`] — Matérn / Gaussian kernels and their spectral densities.
+//! * [`kernels`] — the stationary kernel zoo (Matérn, Laplacian,
+//!   Gaussian, rational-quadratic) and their spectral densities (see
+//!   "Kernel zoo" below).
 //! * [`kde`] — exact and fast kernel density estimation.
 //! * [`data`] — the paper's synthetic designs + UCI-like dataset simulators.
 //! * [`leverage`] — SA (this paper), exact, uniform, Recursive-RLS, BLESS.
@@ -280,6 +282,45 @@
 //! counters, `_seconds` histograms with a per-decade `le` ladder,
 //! NaN/inf skipped, families sorted) — `GET /metrics` serves it to any
 //! client whose `Accept` header asks for `text/plain`.
+//!
+//! ## Kernel zoo
+//!
+//! SA's analytic formula needs the kernel's spectral density `m(s)` in
+//! closed form, so each [`kernels::KernelSpec`] variant ships its exact
+//! density (`e^{-2πi⟨x,s⟩}` Fourier convention, `∫ m = k(0) = 1`) wired
+//! through [`kernels::SpectralDensity`] into the SA integrand:
+//!
+//! | Spec | k(r) | m(s) (radial) | SA integration |
+//! |---|---|---|---|
+//! | `matern:nu=ν,a=a` | Matérn(ν) | `C_m (a² + 4π²s²)^{-(ν+d/2)}` | closed form (power law) |
+//! | `matern12/32/52:a=a` | fixed-ν spellings | same | closed form |
+//! | `laplacian:gamma=γ` | `e^{-γr}` | Matérn with ν = ½, a = γ | closed form |
+//! | `gaussian:sigma=σ` | `e^{-r²/2σ²}` | `(2πσ²)^{d/2} e^{-2π²σ²s²}` | closed form (polylog) |
+//! | `rq:alpha=α,ell=ℓ` | `(1 + r²/2αℓ²)^{-α}` | `c·t^ν K_ν(t)`, t ∝ s, ν = α−d/2 | quadrature (auto) |
+//!
+//! The Laplacian is *literally* Matérn ν = ½ — its `eval_sq` arm runs
+//! the identical operation sequence, so the two spellings are bitwise
+//! interchangeable everywhere (pinned in `kernels`' tests). The
+//! rational-quadratic density is the Gamma-mixture-of-Gaussians Bessel
+//! form (half-integer ν gets closed-form `t^ν K_ν(t)`); it has no
+//! closed-form SA integral, so [`leverage::sa`] routes it through the
+//! pool-parallel quadrature path even when `ClosedForm` is configured.
+//! Every density is property-pinned: it integrates to `k(0)` under the
+//! d-dimensional radial measure and decays with the correct tail
+//! exponent. Every zoo kernel rides the blocked engine and honours all
+//! standing bitwise invariants (thread count, SIMD on/off, cached vs
+//! uncached, trace on/off); [`kernels::KernelSpec::parse`] returns a
+//! typed [`kernels::KernelParseError`] that lists every supported
+//! spelling on an unknown name.
+//!
+//! The `bench-shootout` subcommand
+//! ([`bench_harness::experiments::shootout`]) races the leverage
+//! backends (exact, SA, Recursive-RLS, BLESS) across this zoo × an
+//! input-distribution grid (uniform, Gaussian mixture, heavy-tailed —
+//! [`data::shootout_dist`]), sweeping the Nyström budget and reporting
+//! **time-to-equal-prediction-accuracy** per backend into
+//! `BENCH_shootout.json` — the paper's headline claim, measured end to
+//! end.
 //!
 //! ## Quickstart
 //!

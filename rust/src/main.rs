@@ -97,6 +97,10 @@ fn main() {
             experiments::obs::run(&exp_opts("bench-obs", &rest));
             0
         }
+        "bench-shootout" => {
+            experiments::shootout::run(&experiments::shootout::ShootoutOptions::parse_argv(&rest));
+            0
+        }
         "selftest" => cmd_selftest(),
         "--help" | "-h" | "help" => {
             print_usage();
@@ -143,6 +147,8 @@ commands:
   bench-persist artifact save/load/checkpoint-restore latency vs n, m
   bench-serve  HTTP-tier sustained QPS + tail latency vs batch size, replicas
   bench-obs    span-tracer overhead on the fig1 pipeline (<2% budget)
+  bench-shootout time-to-equal-accuracy: exact/SA/RC/BLESS across the
+               kernel zoo × input-distribution grid
   selftest     quick end-to-end sanity run
 
 global flags:
@@ -194,6 +200,18 @@ fn dataset_from(a: &leverkrr::util::cli::Args) -> (Dataset, Rng) {
             let d: usize = other["bimodal".len()..].parse().expect("bimodalD");
             data::bimodal_d(n, d, 0.4, &mut rng)
         }
+        other if other.starts_with("uniform") => {
+            let d: usize = other["uniform".len()..].parse().expect("uniformD");
+            data::shootout_dist(data::ShootoutDist::Uniform, n, d, &mut rng)
+        }
+        other if other.starts_with("gaussmix") => {
+            let d: usize = other["gaussmix".len()..].parse().expect("gaussmixD");
+            data::shootout_dist(data::ShootoutDist::GaussMix, n, d, &mut rng)
+        }
+        other if other.starts_with("heavytail") => {
+            let d: usize = other["heavytail".len()..].parse().expect("heavytailD");
+            data::shootout_dist(data::ShootoutDist::HeavyTail, n, d, &mut rng)
+        }
         other if std::path::Path::new(other).exists() => {
             data::uci::load_csv(other, other).expect("csv load")
         }
@@ -206,10 +224,10 @@ fn dataset_from(a: &leverkrr::util::cli::Args) -> (Dataset, Rng) {
 }
 
 fn data_flags(c: Command) -> Command {
-    c.flag("data", "bimodal3", "dataset: bimodal3|uniform1|beta1|bimodal1|bimodalD|rqc|htru2|ccpp|<csv path>")
+    c.flag("data", "bimodal3", "dataset: bimodal3|uniform1|beta1|bimodal1|bimodalD|uniformD|gaussmixD|heavytailD|rqc|htru2|ccpp|<csv path>")
         .flag("n", "5000", "sample size")
         .flag("seed", "0", "RNG seed")
-        .flag("kernel", "matern:nu=1.5,a=1.732", "kernel spec (matern:nu=..,a=.. | gaussian:sigma=..)")
+        .flag("kernel", "matern:nu=1.5,a=1.732", "kernel spec: matern[:nu=..,a=..] | matern12|matern32|matern52[:a=..] | laplacian[:gamma=..] | gaussian[:sigma=..] | rq[:alpha=..,ell=..]")
         .flag("lambda", "", "regularization λ (default: paper rule)")
         .flag("method", "sa", "leverage method: sa|sa-quadrature|uniform|rc|bless|exact")
         .flag("m", "", "Nyström landmarks (default: paper rule)")
@@ -221,7 +239,13 @@ fn data_flags(c: Command) -> Command {
 fn build_cfg(a: &leverkrr::util::cli::Args, ds: &Dataset) -> FitConfig {
     let mut cfg = FitConfig::default_for(ds);
     if let Some(k) = a.get("kernel") {
-        cfg.kernel = KernelSpec::parse(k).expect("kernel spec");
+        cfg.kernel = match KernelSpec::parse(k) {
+            Ok(spec) => spec,
+            Err(e) => {
+                eprintln!("bad --kernel: {e}");
+                std::process::exit(2);
+            }
+        };
     }
     if let Some(l) = a.get_f64("lambda") {
         cfg.lambda = l;
@@ -250,7 +274,8 @@ fn backend_from(a: &leverkrr::util::cli::Args) -> Backend {
 }
 
 fn cmd_fit(argv: &[String]) -> i32 {
-    let cmd = data_flags(Command::new("fit", "fit Nyström-KRR and report in-sample risk"));
+    let cmd = data_flags(Command::new("fit", "fit Nyström-KRR and report in-sample risk"))
+        .switch("tune", "cross-validate λ on a small grid before fitting (overrides --lambda)");
     let a = match cmd.parse(argv) {
         Ok(a) => a,
         Err(m) => {
@@ -258,8 +283,20 @@ fn cmd_fit(argv: &[String]) -> i32 {
             return 2;
         }
     };
-    let (ds, _) = dataset_from(&a);
-    let cfg = build_cfg(&a, &ds);
+    let (ds, mut rng) = dataset_from(&a);
+    let mut cfg = build_cfg(&a, &ds);
+    if a.get_bool("tune") {
+        let kernel = cfg.kernel.build();
+        let alpha = cfg.kernel.alpha(ds.d()).min(20.0);
+        let grid = leverkrr::krr::tune::lambda_grid(ds.n(), alpha, ds.d(), 7);
+        let landmarks = rng.sample_without_replacement(ds.n(), cfg.m_sub.min(ds.n()));
+        let res = leverkrr::krr::tune::tune_lambda(
+            &kernel, &ds.x, &ds.y, &landmarks, &grid, 3, &mut rng,
+        )
+        .expect("tune");
+        println!("tuned λ = {:.4e} (paper rule was {:.4e})", res.best_lambda, cfg.lambda);
+        cfg.lambda = res.best_lambda;
+    }
     let backend = backend_from(&a);
     println!(
         "fitting {} (n={}, d={}) kernel={} λ={:.3e} m={} method={:?} backend={}",

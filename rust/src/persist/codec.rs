@@ -396,6 +396,15 @@ impl Encode for KernelSpec {
                 w.put_u8(1);
                 w.put_f64(*sigma);
             }
+            KernelSpec::Laplacian { gamma } => {
+                w.put_u8(2);
+                w.put_f64(*gamma);
+            }
+            KernelSpec::RationalQuadratic { alpha, ell } => {
+                w.put_u8(3);
+                w.put_f64(*alpha);
+                w.put_f64(*ell);
+            }
         }
     }
 }
@@ -405,6 +414,8 @@ impl Decode for KernelSpec {
         match r.u8()? {
             0 => Ok(KernelSpec::Matern { nu: r.f64()?, a: r.f64()? }),
             1 => Ok(KernelSpec::Gaussian { sigma: r.f64()? }),
+            2 => Ok(KernelSpec::Laplacian { gamma: r.f64()? }),
+            3 => Ok(KernelSpec::RationalQuadratic { alpha: r.f64()?, ell: r.f64()? }),
             _ => Err(PersistError::Malformed("unknown kernel tag".into())),
         }
     }
@@ -945,6 +956,8 @@ mod tests {
         for spec in [
             KernelSpec::Matern { nu: 1.5, a: 1.732 },
             KernelSpec::Gaussian { sigma: 0.4 },
+            KernelSpec::Laplacian { gamma: 2.25 },
+            KernelSpec::RationalQuadratic { alpha: 2.5, ell: 0.375 },
         ] {
             assert_eq!(roundtrip(&spec), spec);
         }

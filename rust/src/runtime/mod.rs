@@ -46,6 +46,11 @@ fn entry_name_for(spec: &KernelSpec) -> Option<&'static str> {
         KernelSpec::Matern { nu, .. } if (nu - 2.5).abs() < 1e-12 => Some("matern25_block"),
         KernelSpec::Matern { .. } => None,
         KernelSpec::Gaussian { .. } => Some("gaussian_block"),
+        // The Laplacian is the Matérn ν=½ kernel with a=γ — reuse its
+        // AOT entry (the scale param carries γ).
+        KernelSpec::Laplacian { .. } => Some("matern05_block"),
+        // No AOT artifact for the rational-quadratic yet → native path.
+        KernelSpec::RationalQuadratic { .. } => None,
     }
 }
 
@@ -161,6 +166,8 @@ mod pjrt {
             match spec {
                 KernelSpec::Matern { a, .. } => *a as f32,
                 KernelSpec::Gaussian { sigma } => *sigma as f32,
+                KernelSpec::Laplacian { gamma } => *gamma as f32,
+                KernelSpec::RationalQuadratic { ell, .. } => *ell as f32,
             }
         }
 

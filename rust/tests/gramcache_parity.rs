@@ -125,6 +125,32 @@ fn bless_cached_equals_uncached_bitwise() {
 }
 
 #[test]
+fn every_zoo_kernel_is_cached_equals_uncached_bitwise() {
+    // the cached-≡-uncached contract is per-kernel: a column memoized for
+    // a Laplacian or rational-quadratic Gram must be the exact bits a
+    // fresh evaluation produces, across both column-driven estimators
+    let ds = dataset(260, 21);
+    let lam = leverkrr::krr::lambda::fig2(ds.n());
+    for spec in [
+        KernelSpec::Matern { nu: 0.5, a: 1.0 },
+        KernelSpec::Matern { nu: 2.5, a: 2.2 },
+        KernelSpec::Gaussian { sigma: 0.8 },
+        KernelSpec::Laplacian { gamma: 1.3 },
+        KernelSpec::RationalQuadratic { alpha: 2.5, ell: 0.6 },
+    ] {
+        let k = Kernel::new(spec);
+        let rls = RecursiveRls::default();
+        let (cached, _, _) = estimate_with_workspace(&rls, &ds, &k, lam, 24, true);
+        let (reference, _, _) = estimate_with_workspace(&rls, &ds, &k, lam, 24, false);
+        assert_eq!(cached, reference, "{spec:?} recursive-RLS cached-vs-uncached diverged");
+        let bless = Bless::default();
+        let (cached, _, _) = estimate_with_workspace(&bless, &ds, &k, lam, 24, true);
+        let (reference, _, _) = estimate_with_workspace(&bless, &ds, &k, lam, 24, false);
+        assert_eq!(cached, reference, "{spec:?} BLESS cached-vs-uncached diverged");
+    }
+}
+
+#[test]
 fn sa_scores_are_unperturbed_by_an_attached_workspace() {
     // SA has no K_·J blocks: with a workspace attached the scores must
     // be bitwise what they are without one, and the workspace stays cold.

@@ -107,7 +107,10 @@ fn kernel_matrix_bit_identical_across_threads() {
     for spec in [
         KernelSpec::Matern { nu: 0.5, a: 1.0 },
         KernelSpec::Matern { nu: 1.5, a: 1.7 },
+        KernelSpec::Matern { nu: 2.5, a: 2.2 },
         KernelSpec::Gaussian { sigma: 0.8 },
+        KernelSpec::Laplacian { gamma: 1.3 },
+        KernelSpec::RationalQuadratic { alpha: 2.5, ell: 0.6 },
     ] {
         let k = Kernel::new(spec);
         // 101×97×4 exceeds the 32³ parallel-dispatch threshold and is not

@@ -240,6 +240,41 @@ fn mixed_mode_simd_is_bitwise_mixed_scalar() {
 }
 
 #[test]
+fn kernel_zoo_matrices_are_bitwise_scalar_vs_simd() {
+    let _l = lock();
+    // every zoo kernel rides the blocked engine through `Kernel::matrix`;
+    // the SIMD tile must not change a single bit of any of them
+    let mut rng = Rng::seed_from_u64(310);
+    for spec in [
+        KernelSpec::Matern { nu: 0.5, a: 1.0 },
+        KernelSpec::Matern { nu: 1.5, a: 1.7 },
+        KernelSpec::Matern { nu: 2.5, a: 2.2 },
+        KernelSpec::Gaussian { sigma: 0.8 },
+        KernelSpec::Laplacian { gamma: 1.3 },
+        KernelSpec::RationalQuadratic { alpha: 2.5, ell: 0.6 },
+    ] {
+        let k = Kernel::new(spec);
+        for &(n, m, d) in &[(9usize, 17usize, 3usize), (130, 65, 4)] {
+            let x = random_mat(&mut rng, n, d);
+            let y = random_mat(&mut rng, m, d);
+            let scalar = {
+                let _g = simd::force_simd(false);
+                (k.matrix(&x, &y).data, k.matrix_sym(&x).data)
+            };
+            let vector = {
+                let _g = simd::force_simd(true);
+                (k.matrix(&x, &y).data, k.matrix_sym(&x).data)
+            };
+            let eq = |u: &[f64], v: &[f64]| {
+                u.iter().zip(v).all(|(a, b)| a.to_bits() == b.to_bits())
+            };
+            assert!(eq(&scalar.0, &vector.0), "{spec:?} matrix ({n},{m},{d}) diverged");
+            assert!(eq(&scalar.1, &vector.1), "{spec:?} matrix_sym ({n},{d}) diverged");
+        }
+    }
+}
+
+#[test]
 fn mixed_precision_kernel_matrix_accuracy() {
     let _l = lock();
     let mut rng = Rng::seed_from_u64(305);

@@ -110,6 +110,36 @@ fn cached_recursive_rls_bitwise_identical_under_tracing() {
     trace::reset();
 }
 
+#[test]
+fn zoo_kernel_matrices_bitwise_identical_under_tracing() {
+    let _lock = TRACE_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let mut rng = Rng::seed_from_u64(29);
+    let x = leverkrr::linalg::Mat::from_fn(90, 3, |_, _| rng.normal());
+    let y = leverkrr::linalg::Mat::from_fn(47, 3, |_, _| rng.normal());
+    for spec in [
+        KernelSpec::Matern { nu: 2.5, a: 2.2 },
+        KernelSpec::Gaussian { sigma: 0.8 },
+        KernelSpec::Laplacian { gamma: 1.3 },
+        KernelSpec::RationalQuadratic { alpha: 2.5, ell: 0.6 },
+    ] {
+        let k = Kernel::new(spec);
+        for nt in [1usize, 4] {
+            let (off, on) = off_then_on(nt, || (k.matrix(&x, &y).data, k.matrix_sym(&x).data));
+            assert_eq!(
+                to_bits(&off.0),
+                to_bits(&on.0),
+                "{spec:?} matrix diverged under tracing at {nt} threads"
+            );
+            assert_eq!(
+                to_bits(&off.1),
+                to_bits(&on.1),
+                "{spec:?} matrix_sym diverged under tracing at {nt} threads"
+            );
+        }
+    }
+    trace::reset();
+}
+
 // ---------------------------------------------------------------------------
 // streaming replay (stream_parity's territory): dictionary decisions,
 // coefficients, and predictions
