@@ -532,6 +532,111 @@ pub fn run(opts: &ExpOptions) {
     println!("{}", timing_row(&format!("cholesky (m={m})"), &t));
     log.rec("cholesky", m, m, 0, t[0]);
 
+    // ---- factorization engine: scalar oracle vs blocked (±SIMD) ----------
+    // Same SPD input for all rows; the blocked engine is bitwise invariant
+    // across threads / SIMD / panel width, so these rows differ in
+    // wall-clock only. No minimum speedup is asserted anywhere — non-AVX2
+    // runners are valid — but the four rows must exist with positive
+    // finite timings and resolved panel geometry.
+    {
+        use crate::linalg::simd;
+        use crate::linalg::{chol, force_chol, CholMode};
+        let nb = chol::current_panel();
+        let simd_label =
+            if crate::linalg::blocked::Engine::current().simd { "avx2" } else { "scalar" };
+        let t_sc = {
+            let _g = force_chol(CholMode::Scalar);
+            bench_reps(1, reps, || {
+                std::hint::black_box(Cholesky::factor(&spd).unwrap());
+            })
+        };
+        let t_bl = {
+            let _g = force_chol(CholMode::Blocked);
+            let _s = simd::force_simd(false);
+            bench_reps(1, reps, || {
+                std::hint::black_box(Cholesky::factor(&spd).unwrap());
+            })
+        };
+        let t_bs = {
+            let _g = force_chol(CholMode::Blocked);
+            let _s = simd::force_simd(true);
+            bench_reps(1, reps, || {
+                std::hint::black_box(Cholesky::factor(&spd).unwrap());
+            })
+        };
+        let sp_bl = t_sc[0] / t_bl[0].max(1e-12);
+        let sp_bs = t_sc[0] / t_bs[0].max(1e-12);
+        println!("{}", timing_row(&format!("chol scalar oracle (m={m})"), &t_sc));
+        println!("{}", timing_row(&format!("chol blocked scalar (m={m}, nb={nb})"), &t_bl));
+        println!(
+            "{}",
+            timing_row(&format!("chol blocked {simd_label} (m={m}, nb={nb})"), &t_bs)
+        );
+        println!(
+            "    blocked-vs-scalar chol speedup: {sp_bl:.2}x scalar tiles, {sp_bs:.2}x {simd_label}"
+        );
+        log.rec_ext("chol_scalar", m, m, 0, t_sc[0], vec![("engine", Json::Str("scalar".into()))]);
+        log.rec_ext(
+            "chol_blocked",
+            m,
+            m,
+            0,
+            t_bl[0],
+            vec![
+                ("nb", Json::Num(nb as f64)),
+                ("simd", Json::Str("scalar".into())),
+                ("speedup_vs_scalar", Json::Num(sp_bl)),
+            ],
+        );
+        log.rec_ext(
+            "chol_blocked_simd",
+            m,
+            m,
+            0,
+            t_bs[0],
+            vec![
+                ("nb", Json::Num(nb as f64)),
+                ("simd", Json::Str(simd_label.into())),
+                ("speedup_vs_scalar", Json::Num(sp_bs)),
+            ],
+        );
+
+        // multi-RHS triangular solve: the exact-leverage n-RHS shape.
+        let k_rhs = 128;
+        let ch = Cholesky::factor(&spd).unwrap();
+        let rhs = Mat::from_fn(m, k_rhs, |_, _| rng2.normal());
+        let t_solve_sc = {
+            let _g = force_chol(CholMode::Scalar);
+            bench_reps(1, reps, || {
+                std::hint::black_box(ch.solve_mat(&rhs));
+            })
+        };
+        let t_solve_bl = {
+            let _g = force_chol(CholMode::Blocked);
+            bench_reps(1, reps, || {
+                std::hint::black_box(ch.solve_mat(&rhs));
+            })
+        };
+        let sp_solve = t_solve_sc[0] / t_solve_bl[0].max(1e-12);
+        println!(
+            "{}",
+            timing_row(&format!("trsm multi-RHS blocked (m={m}, k={k_rhs})"), &t_solve_bl)
+        );
+        println!("    blocked-vs-scalar multi-RHS solve speedup: {sp_solve:.2}x");
+        log.rec_ext(
+            "trsm_multi_rhs",
+            m,
+            k_rhs,
+            0,
+            t_solve_bl[0],
+            vec![
+                ("nb", Json::Num(nb as f64)),
+                ("simd", Json::Str(simd_label.into())),
+                ("speedup_vs_scalar", Json::Num(sp_solve)),
+            ],
+        );
+    }
+
     // ---- end-to-end fit + serve ------------------------------------------------
     let cfg = FitConfig {
         m_sub: nystrom::subsize::fig1(ds.n()),

@@ -82,22 +82,15 @@ impl ExactKrr {
     /// Exact rescaled statistical leverage scores G_λ(x_i, x_i) =
     /// n·[K(K+nλI)^{−1}]_ii. Uses the identity
     /// K(K+nλI)^{−1} = I − nλ(K+nλI)^{−1}, so the i-th diagonal is
-    /// 1 − nλ·eᵢᵀ(K+nλI)^{−1}eᵢ = 1 − nλ·‖L^{−1}eᵢ‖².
+    /// 1 − nλ·eᵢᵀ(K+nλI)^{−1}eᵢ = 1 − nλ·‖L^{−1}eᵢ‖²; the full
+    /// diagonal comes from the blocked multi-RHS identity solve
+    /// ([`Cholesky::inv_quad_diag`]) rather than n scalar e_i solves.
     pub fn rescaled_leverage(&self) -> Vec<f64> {
         let _span = trace::span("krr.rescaled_leverage");
         let n = self.x_train.rows;
         let nlam = n as f64 * self.lambda;
-        let out = crate::util::pool::par_chunks(n, |range| {
-            let mut v = Vec::with_capacity(range.len());
-            for i in range {
-                let mut e = vec![0.0; n];
-                e[i] = 1.0;
-                let q = self.chol.quad_form(&e);
-                v.push(n as f64 * (1.0 - nlam * q));
-            }
-            v
-        });
-        out.into_iter().flatten().collect()
+        let q = self.chol.inv_quad_diag();
+        q.into_iter().map(|qi| n as f64 * (1.0 - nlam * qi)).collect()
     }
 
     /// Statistical dimension d_stat = Tr(K(K+nλI)^{−1}) = (1/n)Σ G_λ(xᵢ,xᵢ).

@@ -12,7 +12,9 @@ pub struct ExactEstimator;
 /// Exact rescaled leverage scores G_λ(x_i,x_i) without needing responses.
 /// K_n is assembled through the blocked distance/Gram engine
 /// (`linalg::blocked` via [`crate::kernels::Kernel::matrix_sym`]); the
-/// e_i solves fan out on the shared pool.
+/// n-RHS identity solve goes through the blocked multi-RHS engine
+/// ([`Cholesky::inv_quad_diag`]) instead of n independent scalar e_i
+/// solves, and stays bit-identical for any thread count.
 pub fn rescaled_leverage_exact(
     x: &crate::linalg::Mat,
     kernel: &crate::kernels::Kernel,
@@ -23,19 +25,9 @@ pub fn rescaled_leverage_exact(
     a.add_diag(n as f64 * lambda);
     let chol = Cholesky::factor_jittered(&a).expect("K + nλI must be PD");
     let nlam = n as f64 * lambda;
-    // pool-parallel over diagonal entries: each e_i solve is independent,
-    // so scores are bit-identical for any thread count.
-    let out = crate::util::pool::par_chunks(n, |range| {
-        let mut v = Vec::with_capacity(range.len());
-        for i in range {
-            let mut e = vec![0.0; n];
-            e[i] = 1.0;
-            // G_i = n(1 − nλ·eᵢᵀ(K+nλI)^{−1}eᵢ)
-            v.push(n as f64 * (1.0 - nlam * chol.quad_form(&e)));
-        }
-        v
-    });
-    out.into_iter().flatten().collect()
+    let q = chol.inv_quad_diag();
+    // G_i = n(1 − nλ·eᵢᵀ(K+nλI)^{−1}eᵢ)
+    q.into_iter().map(|qi| n as f64 * (1.0 - nlam * qi)).collect()
 }
 
 impl LeverageEstimator for ExactEstimator {

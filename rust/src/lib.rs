@@ -87,6 +87,48 @@
 //!   results. `bench-perf` records simd-vs-scalar and mixed-vs-f64
 //!   speedups with the resolved tile geometry in `BENCH_perf.json`.
 //!
+//! ## Factorization engine
+//!
+//! The factor/solve layer ([`linalg::chol`]) runs the same playbook as
+//! the Gram engine — every SPD solve in the stack (exact KRR, exact
+//! leverage's n-RHS identity solve, Nyström's K_mm and normal-equations
+//! factors, Recursive-RLS/BLESS inner steps, gramcache rebuilds, stream
+//! refits) inherits it through [`linalg::Cholesky`]:
+//!
+//! * **Blocked right-looking factorization** — NB-column panels: a
+//!   serial scalar diagonal-block factor, a pool-parallel TRSM for the
+//!   sub-diagonal panel, and a pool-parallel SYRK trailing update
+//!   `A₂₂ −= L₂₁L₂₁ᵀ` routed through the [`linalg::simd`] panel kernel
+//!   (the 4-row AVX2 micro-kernel with a scalar-identical per-element
+//!   op sequence). Trace spans sit at panel boundaries only.
+//! * **Blocked multi-RHS substitution** — `solve_mat` partitions RHS
+//!   columns into contiguous blocks (one executor per block) and runs
+//!   forward/backward per-row full-chain recursions, so the exact-
+//!   leverage n-RHS path ([`linalg::Cholesky::inv_quad_diag`]) stops
+//!   being n independent scalar solves. The backward pass reads a
+//!   transposed (upper) factor copy cached lazily per [`linalg::Cholesky`]
+//!   on first backward solve (bitwise-pinned against the old stride-n
+//!   column walk, invalidated on every factor mutation).
+//! * **Determinism contract** — every output element evolves by one
+//!   individually-rounded t-ascending `a −= l·l` chain (mul then sub,
+//!   never FMA, never a dot tree); panel boundaries only regroup *which
+//!   phase* performs an element's subtractions, never the element's own
+//!   chain. Results are therefore **bit-identical across thread counts,
+//!   SIMD on/off, and every panel width**; blocked-vs-scalar-oracle is
+//!   tolerance-pinned (the oracle accumulates through the 4-lane
+//!   [`linalg::dot`]).
+//! * **Kill switch + autotune** — `LEVERKRR_CHOL=scalar` (or
+//!   [`linalg::force_chol`] in tests) restores the scalar oracle
+//!   end to end; the panel width NB autotunes on the 64/128/256/512
+//!   ladder at pool startup (`LEVERKRR_CHOL_NB=w` pins it,
+//!   `LEVERKRR_AUTOTUNE=0` skips the probe). Width is wall-clock-only,
+//!   so the probe can never steer results. `factor_jittered` reuses one
+//!   working buffer across jitter retries and counts
+//!   `chol.jitter.retries` in [`metrics::global`]. `bench-perf` records
+//!   `chol_scalar` / `chol_blocked` / `chol_blocked_simd` /
+//!   `trsm_multi_rhs` rows with the resolved panel geometry in
+//!   `BENCH_perf.json`.
+//!
 //! ## Landmark Gram cache
 //!
 //! Every landmark consumer — Recursive-RLS's recursion levels, BLESS's

@@ -1,4 +1,5 @@
-//! Cholesky factorization and SPD solves.
+//! Cholesky factorization and SPD solves — the blocked factorization
+//! engine.
 //!
 //! The workhorse of the whole stack:
 //! * exact KRR: solve (K_n + nλI)ω = y,
@@ -6,11 +7,223 @@
 //! * Nyström: factor K_mm and the m×m normal-equations matrix,
 //! * approximate-RLS dictionaries (Recursive-RLS / BLESS inner step).
 //!
+//! # Blocked engine
+//!
+//! [`Cholesky::factor`] / [`Cholesky::factor_jittered`] run a blocked
+//! right-looking factorization ([`chol_blocked_in_place`]): per NB-column
+//! panel, (1) a serial scalar factorization of the diagonal block,
+//! (2) a pool-parallel TRSM of the sub-diagonal panel against the
+//! transposed diagonal block, and (3) a pool-parallel SYRK trailing
+//! update `A₂₂ −= L₂₁L₂₁ᵀ` through the [`super::simd::PanelKernel`]
+//! rank-k tile kernel. [`Cholesky::solve_mat`] runs a blocked multi-RHS
+//! substitution (RHS-column-parallel, AVX2 across the RHS lanes) instead
+//! of n independent scalar solves.
+//!
+//! # Determinism contract
+//!
+//! Every element of the factor evolves by an *individually rounded* op
+//! chain: `a[i][k] −= l[i][t]·l[k][t]` one product at a time with `t`
+//! ascending (mul then sub, never an FMA, never a dot-product tree),
+//! then a finalization (`sqrt` on the diagonal, `× 1/l[k][k]` below it).
+//! Moving the panel boundary only regroups *which phase* performs each
+//! subtraction — diagonal block, TRSM, or SYRK — it never changes any
+//! element's own chain. The blocked result is therefore **bitwise
+//! invariant across panel widths**, across thread counts (each element
+//! is computed by exactly one pool executor, partitions are
+//! shape-derived), and across SIMD on/off (vector lanes hold independent
+//! elements running the identical per-lane sequence — the PR-8
+//! contract). The scalar oracle [`chol_in_place`] accumulates through
+//! [`super::dot`] instead, so blocked-vs-scalar is a *tolerance*
+//! relationship, not a bitwise one.
+//!
+//! # Kill switch and panel autotune
+//!
+//! `LEVERKRR_CHOL=scalar` (or a scoped [`force_chol`] guard) routes
+//! `factor`/`factor_jittered`/`solve_mat` back through the scalar
+//! oracle. The panel width NB resolves: [`override_panel`] guard >
+//! `LEVERKRR_CHOL_NB` > startup autotune over the
+//! [`super::blocked::TILE_LADDER`] (skipped when `LEVERKRR_AUTOTUNE=0`)
+//! > default 128. NB is bit-neutral (see above), so the wall-clock-based
+//! probe never steers results.
+//!
 //! `Cholesky::factor_jittered` retries with growing diagonal jitter — the
 //! Nyström K_JJ block is PSD but frequently numerically singular when the
-//! same column is sampled twice (sampling is with replacement).
+//! same column is sampled twice (sampling is with replacement). Retries
+//! reuse one working buffer (restoring the damaged lower triangle from
+//! the source between attempts) and are counted as
+//! `chol.jitter.retries` in [`crate::metrics::global`].
 
 use super::mat::Mat;
+use super::simd::PanelKernel;
+use crate::trace;
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Which factorization/solve engine [`Cholesky`] dispatches to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CholMode {
+    /// The unblocked scalar oracle ([`chol_in_place`] + per-column
+    /// substitution) — the kill switch / reference path.
+    Scalar,
+    /// The blocked panel engine (default).
+    Blocked,
+}
+
+/// 0 = no override; 1 = forced scalar; 2 = forced blocked.
+static FORCE_MODE: AtomicU8 = AtomicU8::new(0);
+
+/// RAII guard restoring the previous engine-force state on drop.
+pub struct CholGuard {
+    prev: u8,
+}
+
+impl Drop for CholGuard {
+    fn drop(&mut self) {
+        FORCE_MODE.store(self.prev, Ordering::SeqCst);
+    }
+}
+
+/// Force the factorization engine until the guard drops. Process-global
+/// (like [`crate::util::pool::override_threads`]); callers that need
+/// exclusivity serialize around it. Scalar-vs-blocked is a *tolerance*
+/// relationship, so flipping this mid-pipeline changes low-order bits.
+pub fn force_chol(mode: CholMode) -> CholGuard {
+    let v = match mode {
+        CholMode::Scalar => 1,
+        CholMode::Blocked => 2,
+    };
+    CholGuard { prev: FORCE_MODE.swap(v, Ordering::SeqCst) }
+}
+
+fn env_mode() -> CholMode {
+    static ENV: OnceLock<CholMode> = OnceLock::new();
+    *ENV.get_or_init(|| match std::env::var("LEVERKRR_CHOL") {
+        Ok(v) if v == "scalar" => CholMode::Scalar,
+        Ok(v) if v == "blocked" || v.is_empty() => CholMode::Blocked,
+        Ok(v) => {
+            eprintln!("LEVERKRR_CHOL: unknown engine {v:?} (want scalar|blocked), using blocked");
+            CholMode::Blocked
+        }
+        Err(_) => CholMode::Blocked,
+    })
+}
+
+/// The resolved engine: [`force_chol`] guard > `LEVERKRR_CHOL` env >
+/// default blocked.
+pub fn chol_mode() -> CholMode {
+    match FORCE_MODE.load(Ordering::Relaxed) {
+        1 => CholMode::Scalar,
+        2 => CholMode::Blocked,
+        _ => env_mode(),
+    }
+}
+
+/// Fallback panel width when autotuning is disabled and nothing is
+/// pinned.
+const DEFAULT_NB: usize = 128;
+
+/// 0 = no override.
+static NB_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// RAII guard restoring the previous panel-width override on drop.
+pub struct PanelGuard {
+    prev: usize,
+}
+
+impl Drop for PanelGuard {
+    fn drop(&mut self) {
+        NB_OVERRIDE.store(self.prev, Ordering::SeqCst);
+    }
+}
+
+/// Pin the blocked engine's panel width until the guard drops. Purely a
+/// speed knob: NB is bit-neutral by the determinism contract (pinned by
+/// property test).
+pub fn override_panel(nb: usize) -> PanelGuard {
+    assert!(nb > 0, "panel width must be positive");
+    PanelGuard { prev: NB_OVERRIDE.swap(nb, Ordering::SeqCst) }
+}
+
+fn env_nb() -> Option<usize> {
+    static ENV: OnceLock<Option<usize>> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("LEVERKRR_CHOL_NB").ok().and_then(|v| v.parse::<usize>().ok()).filter(|&w| w > 0)
+    })
+}
+
+fn autotune_enabled() -> bool {
+    static ENV: OnceLock<bool> = OnceLock::new();
+    *ENV.get_or_init(|| std::env::var("LEVERKRR_AUTOTUNE").map(|v| v != "0").unwrap_or(true))
+}
+
+/// Deterministic SPD probe matrix (Lehmer matrix + I): formula-only, no
+/// RNG or clock inputs, comfortably positive definite.
+fn probe_matrix(n: usize) -> Vec<f64> {
+    let mut a = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            a[i * n + j] = (i.min(j) + 1) as f64 / (i.max(j) + 1) as f64;
+        }
+        a[i * n + i] += 1.0;
+    }
+    a
+}
+
+/// Time the blocked factorization at each ladder width and keep the
+/// fastest (ties favor the smaller width — the ladder is ascending and
+/// only a strict improvement switches). The probe runs serially
+/// (`nt = 1`) so it is safe inside pool initialization, and NB is
+/// bit-neutral, so timing noise can never steer numeric results.
+fn probe_nb() -> usize {
+    const PROBE_N: usize = 256;
+    let base = probe_matrix(PROBE_N);
+    let mut best = (f64::INFINITY, DEFAULT_NB);
+    for &nb in &super::blocked::TILE_LADDER {
+        let mut t_min = f64::INFINITY;
+        for _ in 0..2 {
+            let mut a = base.clone();
+            let t0 = std::time::Instant::now();
+            chol_blocked_in_place(&mut a, PROBE_N, nb, 1).expect("probe matrix is SPD");
+            t_min = t_min.min(t0.elapsed().as_secs_f64());
+            assert!(a[0].is_finite());
+        }
+        if t_min < best.0 {
+            best = (t_min, nb);
+        }
+    }
+    best.1
+}
+
+fn tuned_nb() -> usize {
+    static TUNED: OnceLock<usize> = OnceLock::new();
+    *TUNED.get_or_init(probe_nb)
+}
+
+/// The resolved panel width: [`override_panel`] guard >
+/// `LEVERKRR_CHOL_NB` > autotuned ladder pick > [`DEFAULT_NB`].
+pub fn current_panel() -> usize {
+    let o = NB_OVERRIDE.load(Ordering::Relaxed);
+    if o > 0 {
+        return o;
+    }
+    if let Some(nb) = env_nb() {
+        return nb;
+    }
+    if autotune_enabled() {
+        tuned_nb()
+    } else {
+        DEFAULT_NB
+    }
+}
+
+/// Run the panel autotune eagerly (called from pool startup, next to
+/// `blocked::warm_autotune`). No-op when the width is pinned or
+/// autotuning is disabled.
+pub fn warm_autotune() {
+    if NB_OVERRIDE.load(Ordering::Relaxed) == 0 && env_nb().is_none() && autotune_enabled() {
+        let _ = tuned_nb();
+    }
+}
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct CholError {
@@ -56,6 +269,230 @@ pub fn chol_in_place(a: &mut [f64], n: usize) -> Result<(), CholError> {
     Ok(())
 }
 
+/// Serial work threshold below which the TRSM/SYRK/solve phases skip
+/// the pool (mirrors `linalg::blocked`). Shape-derived, so the
+/// serial-vs-parallel switch can never change results.
+const PAR_MIN_WORK: usize = 32 * 32 * 32;
+
+/// In-place blocked right-looking lower Cholesky of row-major `a` (n×n)
+/// with explicit panel width `nb` and worker count `nt` (callers
+/// normally pass [`current_panel`] / `pool::current_threads`; the
+/// autotune probe pins both). On success `a` holds L in its lower
+/// triangle, the upper triangle untouched — the same storage contract as
+/// [`chol_in_place`]. Per panel `[p0, p1)`:
+///
+/// 1. serial scalar factorization of the diagonal block,
+/// 2. pool-parallel TRSM of rows `[p1, n)` against the transposed
+///    diagonal block,
+/// 3. pool-parallel SYRK trailing update of the lower triangle at and
+///    right of `p1` through [`PanelKernel`].
+///
+/// Workers only *read* the shared buffer and return their updated row
+/// segments (the pool's no-shared-mutation contract); the caller copies
+/// segments back between phases. Every element's op chain is the one in
+/// the module docs, so the result is bitwise invariant in `nb`, `nt`,
+/// and SIMD dispatch.
+pub fn chol_blocked_in_place(a: &mut [f64], n: usize, nb: usize, nt: usize) -> Result<(), CholError> {
+    assert_eq!(a.len(), n * n);
+    assert!(nb > 0, "panel width must be positive");
+    let kern = PanelKernel::new();
+    let mut col = vec![0.0; nb.min(n)];
+    let mut invs = vec![0.0; nb.min(n)];
+    let mut dt = vec![0.0; nb.min(n) * nb.min(n)];
+    let mut p0 = 0;
+    while p0 < n {
+        let p1 = (p0 + nb).min(n);
+        let w = p1 - p0;
+        let _span = trace::span("chol.panel");
+        factor_diag_block(a, n, p0, p1, &mut invs[..w], &mut col[..w], &kern)?;
+        if p1 == n {
+            break;
+        }
+        // transposed diagonal block: dt[t·w + k] = L[p0+k][p0+t], k > t
+        for t in 0..w {
+            for k in (t + 1)..w {
+                dt[t * w + k] = a[(p0 + k) * n + p0 + t];
+            }
+        }
+        trsm_panel(a, n, p0, p1, &dt[..w * w], &invs[..w], nt, &kern);
+        syrk_trailing(a, n, p0, p1, nt, &kern);
+        p0 = p1;
+    }
+    Ok(())
+}
+
+/// Factor the diagonal block rows/cols `[p0, p1)` in place (serial,
+/// scalar). Per column step `t`: pivot check + `sqrt`, finalize the
+/// block column (`× 1/l[t][t]`), stage it contiguously in `col`, then
+/// subtract the rank-one term from the block's trailing rows with
+/// per-element `k`-ascending chains.
+fn factor_diag_block(
+    a: &mut [f64],
+    n: usize,
+    p0: usize,
+    p1: usize,
+    invs: &mut [f64],
+    col: &mut [f64],
+    kern: &PanelKernel,
+) -> Result<(), CholError> {
+    for t in p0..p1 {
+        let tt = t - p0;
+        let d = a[t * n + t];
+        if d <= 0.0 || !d.is_finite() {
+            return Err(CholError { pivot: t, value: d });
+        }
+        let ltt = d.sqrt();
+        a[t * n + t] = ltt;
+        let inv = 1.0 / ltt;
+        invs[tt] = inv;
+        for i in (t + 1)..p1 {
+            let v = a[i * n + t] * inv;
+            a[i * n + t] = v;
+            col[i - p0] = v;
+        }
+        for i in (t + 1)..p1 {
+            let ii = i - p0;
+            let lit = col[ii];
+            let (row, src) = (&mut a[i * n + t + 1..i * n + i + 1], &col[tt + 1..ii + 1]);
+            kern.sub_mul_row(row, lit, src);
+        }
+    }
+    Ok(())
+}
+
+/// TRSM phase: finish columns `[p0, p1)` of rows `[p1, n)` against the
+/// transposed diagonal block. Pool-parallel over rows; each worker
+/// computes its row segments into an owned buffer (reading the shared
+/// factor), and the caller copies them back.
+fn trsm_panel(
+    a: &mut [f64],
+    n: usize,
+    p0: usize,
+    p1: usize,
+    dt: &[f64],
+    invs: &[f64],
+    nt: usize,
+    kern: &PanelKernel,
+) {
+    let w = p1 - p0;
+    let rows = n - p1;
+    if rows == 0 {
+        return;
+    }
+    let nt = if rows * w * w < PAR_MIN_WORK { 1 } else { nt };
+    let segs = {
+        let ashr: &[f64] = a;
+        crate::util::pool::par_chunks_with(nt, rows, |range| {
+            let mut out = vec![0.0; range.len() * w];
+            for (ri, i) in range.clone().enumerate() {
+                let gi = p1 + i;
+                let seg = &mut out[ri * w..(ri + 1) * w];
+                seg.copy_from_slice(&ashr[gi * n + p0..gi * n + p1]);
+                for t in 0..w {
+                    seg[t] *= invs[t];
+                    if t + 1 < w {
+                        let c = seg[t];
+                        kern.sub_mul_row(&mut seg[t + 1..w], c, &dt[t * w + t + 1..t * w + w]);
+                    }
+                }
+            }
+            (range.start, out)
+        })
+    };
+    for (start, out) in segs {
+        for (ri, seg) in out.chunks_exact(w).enumerate() {
+            let gi = p1 + start + ri;
+            a[gi * n + p0..gi * n + p1].copy_from_slice(seg);
+        }
+    }
+}
+
+/// SYRK trailing update `A₂₂ −= L₂₁L₂₁ᵀ` over the lower triangle of
+/// rows/cols `[p1, n)`. Pool-parallel over rows; each worker walks
+/// column blocks (packing the needed L₂₁ rows transposed, once per
+/// block), runs diagonal-crossing rows through the single-row kernel
+/// and full-width rows through the register-blocked [`PanelKernel`]
+/// group kernel, and returns updated segments for the caller to copy
+/// back. Never writes at or above the diagonal's right.
+fn syrk_trailing(a: &mut [f64], n: usize, p0: usize, p1: usize, nt: usize, kern: &PanelKernel) {
+    let w = p1 - p0;
+    let rows = n - p1;
+    if rows == 0 || w == 0 {
+        return;
+    }
+    let jw = w; // column-block width; any value is bit-neutral
+    let nt = if rows * rows / 2 * w < PAR_MIN_WORK { 1 } else { nt };
+    let segs = {
+        let ashr: &[f64] = a;
+        crate::util::pool::par_chunks_with(nt, rows, |range| {
+            let lo = p1 + range.start;
+            let hi = p1 + range.end;
+            let mut out: Vec<f64> = Vec::new();
+            let mut pt = vec![0.0; w * jw];
+            let mut j0 = p1;
+            while j0 < hi {
+                let j1 = (j0 + jw).min(n);
+                let wj = j1 - j0;
+                let rlo = lo.max(j0);
+                // pack transposed: pt[k·wj + jj] = L[j0+jj][p0+k]
+                for jj in 0..wj {
+                    let base = (j0 + jj) * n + p0;
+                    for k in 0..w {
+                        pt[k * wj + jj] = ashr[base + k];
+                    }
+                }
+                // diagonal-crossing rows: columns [j0, i] only
+                let full_start = rlo.max(j1 - 1);
+                for i in rlo..full_start.min(hi) {
+                    let len = i + 1 - j0;
+                    let pos = out.len();
+                    out.extend_from_slice(&ashr[i * n + j0..i * n + j0 + len]);
+                    kern.sub_mul_panel(
+                        &mut out[pos..pos + len],
+                        &ashr[i * n + p0..i * n + p1],
+                        &pt[..w * wj],
+                        wj,
+                    );
+                }
+                // full-width rows, register-blocked in groups of MR
+                let mut i = full_start;
+                while i < hi {
+                    let g = (hi - i).min(super::simd::MR);
+                    let pos = out.len();
+                    for r in 0..g {
+                        out.extend_from_slice(&ashr[(i + r) * n + j0..(i + r) * n + j1]);
+                    }
+                    let mut dsts: Vec<&mut [f64]> =
+                        out[pos..pos + g * wj].chunks_exact_mut(wj).collect();
+                    let coefs: Vec<&[f64]> =
+                        (0..g).map(|r| &ashr[(i + r) * n + p0..(i + r) * n + p1]).collect();
+                    kern.syrk_rows(&mut dsts, &coefs, &pt[..w * wj], wj);
+                    i += g;
+                }
+                j0 = j1;
+            }
+            (range.clone(), out)
+        })
+    };
+    for (range, out) in segs {
+        let lo = p1 + range.start;
+        let hi = p1 + range.end;
+        let mut cur = 0;
+        let mut j0 = p1;
+        while j0 < hi {
+            let j1 = (j0 + jw).min(n);
+            let wj = j1 - j0;
+            for i in lo.max(j0)..hi {
+                let len = (i + 1 - j0).min(wj);
+                a[i * n + j0..i * n + j0 + len].copy_from_slice(&out[cur..cur + len]);
+                cur += len;
+            }
+            j0 = j1;
+        }
+        debug_assert_eq!(cur, out.len());
+    }
+}
+
 /// Rank-one update of the trailing block of a row-major lower factor:
 /// rows/cols `start..n` of `l` are refactored so that the trailing block
 /// represents T Tᵀ + w wᵀ (`w.len() == n - start`). The leading rows are
@@ -79,6 +516,20 @@ fn chol_update_raw(l: &mut [f64], n: usize, start: usize, w: &mut [f64]) {
     }
 }
 
+/// Factor `l` in place through the engine [`chol_mode`] resolves to.
+fn factor_in_place_dispatch(l: &mut [f64], n: usize) -> Result<(), CholError> {
+    let _span = trace::span("chol.factor");
+    match chol_mode() {
+        CholMode::Scalar => chol_in_place(l, n),
+        CholMode::Blocked => {
+            chol_blocked_in_place(l, n, current_panel(), crate::util::pool::current_threads())
+        }
+    }
+}
+
+/// Escalating jitter ladder for [`Cholesky::factor_jittered`].
+const JITTER_LADDER: [f64; 7] = [0.0, 1e-12, 1e-10, 1e-8, 1e-6, 1e-4, 1e-2];
+
 /// Lower-triangular Cholesky factor with solve helpers.
 #[derive(Clone, Debug)]
 pub struct Cholesky {
@@ -89,34 +540,58 @@ pub struct Cholesky {
     pub(crate) n: usize,
     /// Jitter actually applied to the diagonal (0.0 if none was needed).
     pub jitter: f64,
+    /// Lazy transposed copy of the factor (`ut[i·n+k] = l[k·n+i]`,
+    /// `k ≥ i`), built on the first backward solve so backward
+    /// substitution reads unit-stride rows instead of stride-n columns.
+    /// Pure cache: bit-exact copies of factor entries, invalidated by
+    /// every in-place factor mutation, never serialized
+    /// (`persist::codec` rebuilds it lazily on load).
+    pub(crate) ut: OnceLock<Vec<f64>>,
 }
 
 impl Cholesky {
-    /// Factor a (copied) SPD matrix.
+    /// Factor a (copied) SPD matrix through the resolved engine
+    /// ([`chol_mode`]): the blocked panel engine by default, the scalar
+    /// oracle under `LEVERKRR_CHOL=scalar`.
     pub fn factor(a: &Mat) -> Result<Cholesky, CholError> {
         assert_eq!(a.rows, a.cols, "cholesky needs a square matrix");
         let n = a.rows;
         let mut l = a.data.clone();
-        chol_in_place(&mut l, n)?;
-        Ok(Cholesky { l, n, jitter: 0.0 })
+        factor_in_place_dispatch(&mut l, n)?;
+        Ok(Cholesky { l, n, jitter: 0.0, ut: OnceLock::new() })
     }
 
     /// Factor with escalating diagonal jitter: tries τ·scale for
     /// τ ∈ {0, 1e-12, 1e-10, …, 1e-2}, scale = mean diagonal magnitude.
+    ///
+    /// One working buffer is allocated up front and reused across
+    /// retries: a failed attempt has damaged the lower triangle up to
+    /// (and, blocked, beyond) the failing pivot, so each retry restores
+    /// the lower-triangle row prefixes from the source matrix — same
+    /// bits as a fresh clone, no per-retry allocation — before applying
+    /// the next jitter. Retries are counted as `chol.jitter.retries` in
+    /// [`crate::metrics::global`] (surfaced in the `fit` summary).
     pub fn factor_jittered(a: &Mat) -> Result<Cholesky, CholError> {
+        assert_eq!(a.rows, a.cols, "cholesky needs a square matrix");
         let n = a.rows;
         let scale = (0..n).map(|i| a[(i, i)].abs()).sum::<f64>() / n.max(1) as f64;
         let scale = if scale > 0.0 { scale } else { 1.0 };
+        let mut l = a.data.clone();
         let mut last_err = None;
-        for &tau in &[0.0, 1e-12, 1e-10, 1e-8, 1e-6, 1e-4, 1e-2] {
-            let mut l = a.data.clone();
+        for (attempt, &tau) in JITTER_LADDER.iter().enumerate() {
+            if attempt > 0 {
+                crate::metrics::global().incr("chol.jitter.retries", 1);
+                for i in 0..n {
+                    l[i * n..i * n + i + 1].copy_from_slice(&a.data[i * n..i * n + i + 1]);
+                }
+            }
             if tau > 0.0 {
                 for i in 0..n {
                     l[i * n + i] += tau * scale;
                 }
             }
-            match chol_in_place(&mut l, n) {
-                Ok(()) => return Ok(Cholesky { l, n, jitter: tau * scale }),
+            match factor_in_place_dispatch(&mut l, n) {
+                Ok(()) => return Ok(Cholesky { l, n, jitter: tau * scale, ut: OnceLock::new() }),
                 Err(e) => last_err = Some(e),
             }
         }
@@ -142,14 +617,42 @@ impl Cholesky {
         }
     }
 
+    /// The transposed factor cache, built on first use (one strided
+    /// O(n²) pass; every later backward solve reads unit-stride).
+    fn ut(&self) -> &[f64] {
+        self.ut.get_or_init(|| {
+            let n = self.n;
+            let mut u = vec![0.0; n * n];
+            for i in 0..n {
+                for k in i..n {
+                    u[i * n + k] = self.l[k * n + i];
+                }
+            }
+            u
+        })
+    }
+
+    /// Any in-place mutation of the factor invalidates the transposed
+    /// cache. Called by every `&mut self` routine that rewrites `l`.
+    fn invalidate_cache(&mut self) {
+        self.ut.take();
+    }
+
     /// Solve Lᵀ z = b (backward substitution), in place.
+    ///
+    /// Reads row `i` of the transposed cache instead of walking column
+    /// `i` of `l` with stride-n loads — same values (bit-exact copies),
+    /// same `k`-ascending subtract order, same final division, so the
+    /// result is **bitwise identical** to the stride-n loop (pinned by a
+    /// unit test here).
     pub fn solve_upper_in_place(&self, b: &mut [f64]) {
         let n = self.n;
         assert_eq!(b.len(), n);
+        let ut = self.ut();
         for i in (0..n).rev() {
             let mut s = b[i];
             for k in (i + 1)..n {
-                s -= self.l(k, i) * b[k];
+                s -= ut[i * n + k] * b[k];
             }
             b[i] = s / self.l(i, i);
         }
@@ -163,12 +666,32 @@ impl Cholesky {
         x
     }
 
-    /// Solve A X = B column-wise for row-major B (n×k). Pool-parallel
-    /// over columns for wide right-hand sides (the exact-leverage path
-    /// solves n right-hand sides); each column is an independent solve,
-    /// so the result is thread-count invariant.
+    /// Solve A X = B for row-major B (n×k) through the resolved engine:
+    /// blocked multi-RHS substitution by default (RHS-column-parallel,
+    /// AVX2 across the RHS lanes), or k independent scalar column solves
+    /// under `LEVERKRR_CHOL=scalar`. Either way each column's result is
+    /// independent of the partition, so the output is thread-count
+    /// invariant.
     pub fn solve_mat(&self, b: &Mat) -> Mat {
         assert_eq!(b.rows, self.n);
+        let _span = trace::span("chol.solve_mat");
+        match chol_mode() {
+            CholMode::Scalar => self.solve_mat_columnwise(b),
+            CholMode::Blocked => {
+                let n = self.n;
+                let nt = if n * n * b.cols < PAR_MIN_WORK {
+                    1
+                } else {
+                    crate::util::pool::current_threads()
+                };
+                self.solve_mat_blocked(b, nt)
+            }
+        }
+    }
+
+    /// The scalar oracle: transpose B, solve each column independently
+    /// (pool-parallel over columns), transpose back.
+    fn solve_mat_columnwise(&self, b: &Mat) -> Mat {
         let bt = b.transpose(); // columns become contiguous rows
         let solved = crate::util::pool::par_chunks(bt.rows, |range| {
             let mut out = Vec::with_capacity(range.len() * self.n);
@@ -183,6 +706,152 @@ impl Cholesky {
         let mut xt = Mat { rows: bt.rows, cols: self.n, data: solved.into_iter().flatten().collect() };
         xt = xt.transpose();
         xt
+    }
+
+    /// Blocked multi-RHS substitution: partition the RHS columns across
+    /// workers; each worker extracts its column block contiguously,
+    /// runs the forward then backward recursion with one
+    /// [`PanelKernel::sub_mul_panel`] call per row (the whole
+    /// coefficient chain stays register-resident per element, vectorized
+    /// across the block's RHS lanes), and returns the solved block.
+    ///
+    /// Per element the chain is `t`-ascending over *all* prior rows with
+    /// one rounding per product/subtraction, then a `× 1/l[i][i]`
+    /// finalization — independent of the column partition, panel width,
+    /// and SIMD dispatch, so the result is bitwise invariant across all
+    /// three (the backward pass reads the transposed cache, which makes
+    /// the coefficient rows unit-stride). The scalar column-wise path
+    /// divides instead of multiplying by the reciprocal, so
+    /// blocked-vs-scalar is tolerance-pinned, not bitwise.
+    fn solve_mat_blocked(&self, b: &Mat, nt: usize) -> Mat {
+        let n = self.n;
+        let k = b.cols;
+        if n == 0 || k == 0 {
+            return Mat::zeros(n, k);
+        }
+        let ut = self.ut();
+        let l = &self.l;
+        let kern = PanelKernel::new();
+        let blocks = crate::util::pool::par_chunks_with(nt, k, |crange| {
+            let cw = crange.len();
+            let mut local = vec![0.0; n * cw];
+            for i in 0..n {
+                local[i * cw..(i + 1) * cw]
+                    .copy_from_slice(&b.data[i * k + crange.start..i * k + crange.end]);
+            }
+            // forward: L y = B, rows ascending
+            for i in 0..n {
+                let (head, tail) = local.split_at_mut(i * cw);
+                let row = &mut tail[..cw];
+                kern.sub_mul_panel(row, &l[i * n..i * n + i], head, cw);
+                let inv = 1.0 / l[i * n + i];
+                for v in row.iter_mut() {
+                    *v *= inv;
+                }
+            }
+            // backward: Lᵀ x = y, rows descending, coefficients from
+            // the unit-stride transposed cache
+            for i in (0..n).rev() {
+                let (head, tail) = local.split_at_mut((i + 1) * cw);
+                let row = &mut head[i * cw..];
+                kern.sub_mul_panel(row, &ut[i * n + i + 1..i * n + n], tail, cw);
+                let inv = 1.0 / l[i * n + i];
+                for v in row.iter_mut() {
+                    *v *= inv;
+                }
+            }
+            (crange, local)
+        });
+        let mut out = Mat::zeros(n, k);
+        for (crange, local) in blocks {
+            let cw = crange.len();
+            for i in 0..n {
+                out.data[i * k + crange.start..i * k + crange.end]
+                    .copy_from_slice(&local[i * cw..(i + 1) * cw]);
+            }
+        }
+        out
+    }
+
+    /// diag(A^{−1}): entry `i` is `‖L^{−1}eᵢ‖² = eᵢᵀA^{−1}eᵢ` — the
+    /// exact-leverage inner loop. Blocked mode runs one vectorized
+    /// forward recursion per identity column block (skipping the rows
+    /// above each block, which are exactly `+0.0` — bit-neutral, see the
+    /// body) instead of n independent scalar solves; scalar mode keeps
+    /// the per-eᵢ oracle. Both are thread-count invariant.
+    pub fn inv_quad_diag(&self) -> Vec<f64> {
+        let n = self.n;
+        if n == 0 {
+            return Vec::new();
+        }
+        match chol_mode() {
+            CholMode::Scalar => self.inv_quad_diag_scalar(),
+            CholMode::Blocked => {
+                let nt = if n * n * n / 6 < PAR_MIN_WORK {
+                    1
+                } else {
+                    crate::util::pool::current_threads()
+                };
+                self.inv_quad_diag_blocked(nt)
+            }
+        }
+    }
+
+    /// Oracle: one scalar forward solve per basis vector.
+    fn inv_quad_diag_scalar(&self) -> Vec<f64> {
+        let n = self.n;
+        let out = crate::util::pool::par_chunks(n, |range| {
+            let mut v = Vec::with_capacity(range.len());
+            for i in range {
+                let mut e = vec![0.0; n];
+                e[i] = 1.0;
+                v.push(self.quad_form(&e));
+            }
+            v
+        });
+        out.into_iter().flatten().collect()
+    }
+
+    /// Blocked path: forward-solve an identity column block per worker,
+    /// then sum squared column entries row-ascending.
+    ///
+    /// For identity column `c`, solution rows above `c` are exactly
+    /// `+0.0` (each is `(0 − Σ cₜ·(+0.0)) × inv`, and `x − (±0.0)`
+    /// leaves `+0.0` at `+0.0`), so starting every chain at the block's
+    /// first column `c0 ≤ c` drops only exact-`+0.0` terms whose
+    /// subtraction cannot change any bit — which is what makes the
+    /// result invariant to the column partition (and hence the thread
+    /// count) despite the per-block work skip.
+    fn inv_quad_diag_blocked(&self, nt: usize) -> Vec<f64> {
+        let n = self.n;
+        let l = &self.l;
+        let kern = PanelKernel::new();
+        let blocks = crate::util::pool::par_chunks_with(nt, n, |crange| {
+            let c0 = crange.start;
+            let cw = crange.len();
+            let mut local = vec![0.0; (n - c0) * cw];
+            for c in crange.clone() {
+                local[(c - c0) * cw + (c - c0)] = 1.0;
+            }
+            for gi in c0..n {
+                let r = gi - c0;
+                let (head, tail) = local.split_at_mut(r * cw);
+                let row = &mut tail[..cw];
+                kern.sub_mul_panel(row, &l[gi * n + c0..gi * n + gi], head, cw);
+                let inv = 1.0 / l[gi * n + gi];
+                for v in row.iter_mut() {
+                    *v *= inv;
+                }
+            }
+            let mut sums = vec![0.0; cw];
+            for r in 0..(n - c0) {
+                for (s, &v) in sums.iter_mut().zip(&local[r * cw..(r + 1) * cw]) {
+                    *s += v * v;
+                }
+            }
+            sums
+        });
+        blocks.into_iter().flatten().collect()
     }
 
     /// log det A = 2 Σ log L_ii.
@@ -206,6 +875,7 @@ impl Cholesky {
     /// term to the Nyström normal matrix.
     pub fn rank_one_update(&mut self, v: &[f64]) {
         assert_eq!(v.len(), self.n);
+        self.invalidate_cache();
         let mut w = v.to_vec();
         chol_update_raw(&mut self.l, self.n, 0, &mut w);
     }
@@ -237,6 +907,7 @@ impl Cholesky {
         if n == 0 || k == 0 {
             return;
         }
+        self.invalidate_cache();
         let mut w = vs.data.clone();
         for j in 0..n {
             for t in 0..k {
@@ -285,6 +956,7 @@ impl Cholesky {
                 w[i] = c * w[i] - s * lik;
             }
         }
+        self.invalidate_cache();
         self.l = l;
         Ok(())
     }
@@ -311,6 +983,7 @@ impl Cholesky {
         }
         l[n * m..n * m + n].copy_from_slice(&z);
         l[n * m + n] = d.sqrt();
+        self.invalidate_cache();
         self.l = l;
         self.n = m;
         Ok(())
@@ -343,6 +1016,7 @@ impl Cholesky {
         }
         // trailing block T satisfies T Tᵀ = L₂₂L₂₂ᵀ + w wᵀ
         chol_update_raw(&mut l, m, k, &mut w);
+        self.invalidate_cache();
         self.l = l;
         self.n = m;
     }
@@ -669,5 +1343,317 @@ mod tests {
                 }
             },
         );
+    }
+
+    // ------------------------------------------------------------------
+    // blocked engine
+    // ------------------------------------------------------------------
+
+    use crate::linalg::simd::{force_simd, TEST_FORCE_LOCK};
+
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        TEST_FORCE_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    #[test]
+    fn prop_blocked_matches_scalar_oracle_at_non_divisible_sizes() {
+        crate::util::prop::check(
+            78,
+            40,
+            |rng| {
+                let n = 1 + rng.usize(40);
+                let nb = [3, 5, 8, 17][rng.usize(4)];
+                (n, nb, gen::spd(rng, n, 0.5))
+            },
+            |(n, nb, data)| {
+                let (n, nb) = (*n, *nb);
+                let mut scalar = data.clone();
+                let mut blocked = data.clone();
+                let r1 = chol_in_place(&mut scalar, n);
+                let r2 = chol_blocked_in_place(&mut blocked, n, nb, 1);
+                if r1.is_err() || r2.is_err() {
+                    return r1.is_err() == r2.is_err();
+                }
+                let fro = data.iter().map(|v| v * v).sum::<f64>().sqrt();
+                (0..n).all(|i| {
+                    (0..=i).all(|j| {
+                        (scalar[i * n + j] - blocked[i * n + j]).abs() < 1e-9 * (1.0 + fro)
+                    })
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn blocked_bitwise_invariant_across_panel_widths() {
+        let mut rng = Rng::seed_from_u64(31);
+        for &n in &[1usize, 7, 45, 64] {
+            let data = gen::spd(&mut rng, n, 1.0);
+            let mut base = data.clone();
+            chol_blocked_in_place(&mut base, n, 3, 1).unwrap();
+            for &nb in &[4usize, 8, 16, 45, 64, 512] {
+                let mut other = data.clone();
+                chol_blocked_in_place(&mut other, n, nb, 1).unwrap();
+                let (bb, ob): (Vec<u64>, Vec<u64>) = (
+                    base.iter().map(|v| v.to_bits()).collect(),
+                    other.iter().map(|v| v.to_bits()).collect(),
+                );
+                assert_eq!(bb, ob, "n={n} nb=3 vs nb={nb} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_bitwise_invariant_across_threads_and_simd() {
+        let _l = lock();
+        let mut rng = Rng::seed_from_u64(32);
+        let n = 37;
+        let data = gen::spd(&mut rng, n, 1.0);
+        let mut runs = Vec::new();
+        for nt in [1usize, 4] {
+            for simd_on in [false, true] {
+                let _g = force_simd(simd_on);
+                let mut a = data.clone();
+                chol_blocked_in_place(&mut a, n, 8, nt).unwrap();
+                runs.push((nt, simd_on, a));
+            }
+        }
+        for (nt, simd_on, a) in &runs[1..] {
+            assert_eq!(
+                a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                runs[0].2.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "nt={nt} simd={simd_on} diverged from nt=1 scalar-simd"
+            );
+        }
+    }
+
+    #[test]
+    fn blocked_leaves_upper_triangle_untouched() {
+        let mut rng = Rng::seed_from_u64(33);
+        let n = 23;
+        let data = gen::spd(&mut rng, n, 1.0);
+        let mut a = data.clone();
+        chol_blocked_in_place(&mut a, n, 5, 4).unwrap();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                assert_eq!(a[i * n + j].to_bits(), data[i * n + j].to_bits(), "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_rejects_indefinite_with_pivot() {
+        // eigvals 3, -1: the diagonal-block factor must report the bad pivot
+        let a = vec![1.0, 2.0, 2.0, 1.0];
+        let mut buf = a.clone();
+        let err = chol_blocked_in_place(&mut buf, 2, 64, 1).unwrap_err();
+        assert_eq!(err.pivot, 1);
+        assert!(err.value <= 0.0);
+    }
+
+    #[test]
+    fn jitter_counts_retries_in_global_metrics() {
+        // all-ones matrix: rank 1, second pivot is exactly 0.0, so the
+        // first (tau = 0) attempt fails deterministically under either engine
+        let n = 6;
+        let a = Mat::from_fn(n, n, |_, _| 1.0);
+        let before = crate::metrics::global().counter("chol.jitter.retries");
+        let ch = Cholesky::factor_jittered(&a).unwrap();
+        let after = crate::metrics::global().counter("chol.jitter.retries");
+        assert!(ch.jitter > 0.0);
+        assert!(after >= before + 1, "retries {before} -> {after}");
+        assert!(ch.solve(&vec![1.0; n]).iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn jittered_buffer_reuse_bitwise_matches_fresh_clones() {
+        // the reused-buffer retry loop must produce exactly the factor a
+        // fresh clone at the succeeding tau would have produced
+        let _l = lock();
+        let n = 9;
+        let a = Mat::from_fn(n, n, |_, _| 1.0); // exact zero pivot at tau = 0
+        let ch = Cholesky::factor_jittered(&a).unwrap();
+        assert!(ch.jitter > 0.0);
+        let mut fresh = a.data.clone();
+        for i in 0..n {
+            fresh[i * n + i] += ch.jitter;
+        }
+        factor_in_place_dispatch(&mut fresh, n).unwrap();
+        assert_eq!(
+            ch.l.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            fresh.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn backward_solve_cache_bitwise_matches_stride_n_loop() {
+        let mut rng = Rng::seed_from_u64(36);
+        for &n in &[1usize, 4, 19, 40] {
+            let a = Mat { rows: n, cols: n, data: gen::spd(&mut rng, n, 1.0) };
+            let ch = Cholesky::factor(&a).unwrap();
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            // the old loop: walk column i of l with stride-n loads
+            let mut want = b.clone();
+            for i in (0..n).rev() {
+                let mut s = want[i];
+                for k in (i + 1)..n {
+                    s -= ch.l[k * n + i] * want[k];
+                }
+                want[i] = s / ch.l[i * n + i];
+            }
+            let mut got = b.clone();
+            ch.solve_upper_in_place(&mut got);
+            // run twice: the second call reads the now-built cache
+            let mut got2 = b.clone();
+            ch.solve_upper_in_place(&mut got2);
+            for i in 0..n {
+                assert_eq!(got[i].to_bits(), want[i].to_bits(), "n={n} i={i}");
+                assert_eq!(got2[i].to_bits(), want[i].to_bits(), "n={n} i={i} (cached)");
+            }
+        }
+    }
+
+    #[test]
+    fn mutations_invalidate_transposed_cache() {
+        let mut rng = Rng::seed_from_u64(37);
+        let n = 8;
+        let a = Mat { rows: n, cols: n, data: gen::spd(&mut rng, n, 1.0) };
+        let mut ch = Cholesky::factor(&a).unwrap();
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut warm = b.clone();
+        ch.solve_upper_in_place(&mut warm); // builds the cache
+        let v: Vec<f64> = (0..n).map(|_| rng.normal() * 0.3).collect();
+        ch.rank_one_update(&v);
+        // stale cache would solve against the old factor
+        let mut got = b.clone();
+        ch.solve_upper_in_place(&mut got);
+        let mut want = b.clone();
+        for i in (0..n).rev() {
+            let mut s = want[i];
+            for k in (i + 1)..n {
+                s -= ch.l[k * n + i] * want[k];
+            }
+            want[i] = s / ch.l[i * n + i];
+        }
+        for i in 0..n {
+            assert_eq!(got[i].to_bits(), want[i].to_bits(), "i={i}");
+        }
+    }
+
+    #[test]
+    fn solve_mat_blocked_matches_columnwise_oracle() {
+        let mut rng = Rng::seed_from_u64(38);
+        for &(n, k) in &[(1usize, 1usize), (9, 4), (33, 17), (40, 40)] {
+            let a = Mat { rows: n, cols: n, data: gen::spd(&mut rng, n, 1.0) };
+            let b = Mat::from_fn(n, k, |_, _| rng.normal());
+            let ch = Cholesky::factor(&a).unwrap();
+            let oracle = ch.solve_mat_columnwise(&b);
+            let blocked = ch.solve_mat_blocked(&b, 1);
+            let scale = 1.0 + oracle.fro();
+            assert!(blocked.max_abs_diff(&oracle) < 1e-8 * scale, "n={n} k={k}");
+            // residual check: A·X ≈ B
+            let ax = a.matmul(&blocked);
+            assert!(ax.max_abs_diff(&b) < 1e-6 * (1.0 + b.fro()), "n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn solve_mat_blocked_bitwise_invariant_across_threads_and_simd() {
+        let _l = lock();
+        let mut rng = Rng::seed_from_u64(39);
+        let (n, k) = (21, 13);
+        let a = Mat { rows: n, cols: n, data: gen::spd(&mut rng, n, 1.0) };
+        let b = Mat::from_fn(n, k, |_, _| rng.normal());
+        let ch = Cholesky::factor(&a).unwrap();
+        let mut runs = Vec::new();
+        for nt in [1usize, 4] {
+            for simd_on in [false, true] {
+                let _g = force_simd(simd_on);
+                runs.push((nt, simd_on, ch.solve_mat_blocked(&b, nt)));
+            }
+        }
+        for (nt, simd_on, x) in &runs[1..] {
+            assert_eq!(
+                x.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                runs[0].2.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "nt={nt} simd={simd_on}"
+            );
+        }
+    }
+
+    #[test]
+    fn inv_quad_diag_blocked_matches_per_basis_oracle() {
+        let _l = lock();
+        let mut rng = Rng::seed_from_u64(40);
+        for &n in &[1usize, 6, 29, 50] {
+            let a = Mat { rows: n, cols: n, data: gen::spd(&mut rng, n, 1.0) };
+            let ch = Cholesky::factor(&a).unwrap();
+            let oracle = ch.inv_quad_diag_scalar();
+            let blocked = ch.inv_quad_diag_blocked(1);
+            for i in 0..n {
+                assert!(
+                    (oracle[i] - blocked[i]).abs() < 1e-9 * (1.0 + oracle[i].abs()),
+                    "n={n} i={i}: {} vs {}",
+                    oracle[i],
+                    blocked[i]
+                );
+            }
+            // thread/simd invariance of the blocked path
+            let mut runs = Vec::new();
+            for nt in [1usize, 4] {
+                for simd_on in [false, true] {
+                    let _g = force_simd(simd_on);
+                    runs.push(ch.inv_quad_diag_blocked(nt));
+                }
+            }
+            for r in &runs[1..] {
+                assert_eq!(
+                    r.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    runs[0].iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "n={n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn panel_override_guard_restores() {
+        let base = current_panel();
+        {
+            let _g = override_panel(7);
+            assert_eq!(current_panel(), 7);
+            {
+                let _g2 = override_panel(64);
+                assert_eq!(current_panel(), 64);
+            }
+            assert_eq!(current_panel(), 7);
+        }
+        assert_eq!(current_panel(), base);
+        assert!(base > 0);
+    }
+
+    #[test]
+    fn chol_mode_guard_resolution() {
+        let _l = lock();
+        let base = chol_mode();
+        {
+            let _g = force_chol(CholMode::Scalar);
+            assert_eq!(chol_mode(), CholMode::Scalar);
+            {
+                let _g2 = force_chol(CholMode::Blocked);
+                assert_eq!(chol_mode(), CholMode::Blocked);
+            }
+            assert_eq!(chol_mode(), CholMode::Scalar);
+        }
+        assert_eq!(chol_mode(), base);
+    }
+
+    #[test]
+    fn probe_matrix_is_spd_and_probe_width_on_ladder() {
+        let n = 32;
+        let mut a = probe_matrix(n);
+        chol_blocked_in_place(&mut a, n, 8, 1).unwrap();
+        let nb = current_panel();
+        assert!(nb > 0, "resolved panel width must be positive (got {nb})");
     }
 }

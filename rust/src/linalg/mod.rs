@@ -1,8 +1,10 @@
 //! Dense linear algebra substrate (f64, row-major).
 //!
 //! Everything the KRR / Nyström / leverage stack needs, built from
-//! scratch: blocked + multithreaded matmul, syrk, Cholesky factorization
-//! (with jitter retry for near-singular Nyström blocks), triangular
+//! scratch: blocked + multithreaded matmul, syrk, a blocked pool-parallel
+//! SIMD Cholesky engine in [`chol`] (with jitter retry for near-singular
+//! Nyström blocks, and a `LEVERKRR_CHOL=scalar` kill switch back to the
+//! scalar oracle), triangular
 //! solves, SPD solves, and the exact-leverage diagonal helper — plus the
 //! cache-blocked pairwise-distance/Gram engine in [`blocked`] that every
 //! pairwise hot path (kernels, KDE, k-means, leverage, Nyström, the
@@ -18,10 +20,12 @@ pub mod blocked;
 pub mod gramcache;
 pub mod simd;
 mod mat;
-mod chol;
+pub mod chol;
 pub mod eigen;
 
-pub use chol::{chol_in_place, CholError, Cholesky};
+pub use chol::{
+    chol_blocked_in_place, chol_in_place, chol_mode, force_chol, CholError, CholMode, Cholesky,
+};
 pub use gramcache::GramCache;
 pub use eigen::{sym_eigen, SymEigen};
 pub use mat::Mat;

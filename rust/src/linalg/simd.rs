@@ -279,6 +279,114 @@ fn scalar_rows_mixed(
     }
 }
 
+/// Micro-kernels for the blocked Cholesky / triangular-solve engine
+/// (`linalg::chol`), with the SIMD dispatch decision frozen at
+/// construction — one check per factor/solve call, not per row.
+///
+/// Every kernel implements the same per-element contract: element `j` of
+/// `dst` evolves by an *individually rounded* chain
+/// `dst[j] = (…((dst[j] − c₀·s₀[j]) − c₁·s₁[j])… )` with the coefficient
+/// index ascending, each product and subtraction rounded separately
+/// (mul then sub, never FMA). Vector lanes hold independent elements
+/// performing exactly that scalar sequence, so the AVX2 paths are
+/// **bitwise identical** to the scalar fallbacks — the same contract
+/// [`TilePack`] keeps for the distance engine.
+#[derive(Clone, Copy)]
+pub struct PanelKernel {
+    use_avx2: bool,
+}
+
+impl Default for PanelKernel {
+    fn default() -> Self {
+        PanelKernel::new()
+    }
+}
+
+impl PanelKernel {
+    /// Freeze the dispatch decision (preference AND hardware support).
+    pub fn new() -> PanelKernel {
+        PanelKernel { use_avx2: simd_active() }
+    }
+
+    /// `dst[j] -= c · src[j]` for every `j` (one mul, one sub per
+    /// element). Requires `dst.len() == src.len()`.
+    pub fn sub_mul_row(&self, dst: &mut [f64], c: f64, src: &[f64]) {
+        assert_eq!(dst.len(), src.len());
+        self.sub_mul_panel(dst, std::slice::from_ref(&c), src, 0);
+    }
+
+    /// For `t` ascending over `coefs`:
+    /// `dst[j] -= coefs[t] · src[t·stride + j]` — the whole chain for
+    /// each element runs with that element's partial value carried in a
+    /// register, one rounding per product and per subtraction.
+    /// Requires `src.len() ≥ (coefs.len()−1)·stride + dst.len()` when
+    /// `coefs` is non-empty.
+    pub fn sub_mul_panel(&self, dst: &mut [f64], coefs: &[f64], src: &[f64], stride: usize) {
+        if coefs.is_empty() || dst.is_empty() {
+            return;
+        }
+        assert!(src.len() >= (coefs.len() - 1) * stride + dst.len());
+        #[cfg(target_arch = "x86_64")]
+        if self.use_avx2 {
+            // SAFETY: `use_avx2` came from a runtime AVX2 check at
+            // construction; bounds asserted above and inside the kernel.
+            unsafe { avx2::sub_mul_panel(dst, coefs, src, stride) }
+            return;
+        }
+        scalar_sub_mul_panel(dst, coefs, src, stride, 0, dst.len());
+    }
+
+    /// Register-blocked variant of [`Self::sub_mul_panel`] for a group
+    /// of up to [`MR`] rows sharing the same `src` panel: each src strip
+    /// is loaded once per coefficient index and reused by every row in
+    /// the group (the 4×8 reuse pattern of [`TilePack::r2_rows`]).
+    /// Grouping only interleaves independent per-element chains; it
+    /// never reorders any element's own chain. Requires all `dsts` the
+    /// same length and all `coefs` the same length.
+    pub fn syrk_rows(&self, dsts: &mut [&mut [f64]], coefs: &[&[f64]], src: &[f64], stride: usize) {
+        assert!(!dsts.is_empty() && dsts.len() <= MR);
+        assert_eq!(dsts.len(), coefs.len());
+        let len = dsts[0].len();
+        let nt = coefs[0].len();
+        assert!(dsts.iter().all(|d| d.len() == len));
+        assert!(coefs.iter().all(|c| c.len() == nt));
+        if nt == 0 || len == 0 {
+            return;
+        }
+        assert!(src.len() >= (nt - 1) * stride + len);
+        #[cfg(target_arch = "x86_64")]
+        if self.use_avx2 {
+            // SAFETY: runtime AVX2 check at construction; bounds
+            // asserted above and re-checked inside the kernel.
+            unsafe { avx2::syrk_rows(dsts, coefs, src, stride) }
+            return;
+        }
+        for (dst, cf) in dsts.iter_mut().zip(coefs) {
+            scalar_sub_mul_panel(dst, cf, src, stride, 0, len);
+        }
+    }
+}
+
+/// Scalar reference for the panel-update chain over columns
+/// `[jlo, jhi)` — the single source of truth for the per-element
+/// sequence, shared by the full scalar fallback and the AVX2 tails.
+fn scalar_sub_mul_panel(
+    dst: &mut [f64],
+    coefs: &[f64],
+    src: &[f64],
+    stride: usize,
+    jlo: usize,
+    jhi: usize,
+) {
+    for j in jlo..jhi {
+        let mut a = dst[j];
+        for (t, &c) in coefs.iter().enumerate() {
+            a -= c * src[t * stride + j];
+        }
+        dst[j] = a;
+    }
+}
+
 #[cfg(target_arch = "x86_64")]
 mod avx2 {
     //! Register-blocked AVX2 micro-kernels: up to [`MR`] rows × 8
@@ -287,7 +395,7 @@ mod avx2 {
     //! shared by every row in the group. Per-lane op sequence is exactly
     //! the scalar one — see the module docs for the bitwise argument.
 
-    use super::{scalar_rows_f64, scalar_rows_mixed, TilePack, MR};
+    use super::{scalar_rows_f64, scalar_rows_mixed, scalar_sub_mul_panel, TilePack, MR};
     use std::arch::x86_64::*;
 
     /// Columns per register strip (two `__m256d` per row).
@@ -427,7 +535,108 @@ mod avx2 {
             scalar_rows_mixed(tp, xs, nxs, accs, wv, w);
         }
     }
+
+    /// # Safety
+    /// AVX2 must be available; bounds per the `sub_mul_panel` contract.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sub_mul_panel(dst: &mut [f64], coefs: &[f64], src: &[f64], stride: usize) {
+        let len = dst.len();
+        let nt = coefs.len();
+        assert!(nt > 0 && src.len() >= (nt - 1) * stride + len);
+        let dp = dst.as_mut_ptr();
+        let sp = src.as_ptr();
+        let wv = len - (len % STRIP);
+        let mut j = 0;
+        while j < wv {
+            let mut a0 = _mm256_loadu_pd(dp.add(j));
+            let mut a1 = _mm256_loadu_pd(dp.add(j + 4));
+            for (t, &cv) in coefs.iter().enumerate() {
+                let c = _mm256_set1_pd(cv);
+                let b = sp.add(t * stride + j);
+                // mul then sub — no FMA contraction, scalar rounding
+                a0 = _mm256_sub_pd(a0, _mm256_mul_pd(c, _mm256_loadu_pd(b)));
+                a1 = _mm256_sub_pd(a1, _mm256_mul_pd(c, _mm256_loadu_pd(b.add(4))));
+            }
+            _mm256_storeu_pd(dp.add(j), a0);
+            _mm256_storeu_pd(dp.add(j + 4), a1);
+            j += STRIP;
+        }
+        if wv < len {
+            scalar_sub_mul_panel(dst, coefs, src, stride, wv, len);
+        }
+    }
+
+    /// # Safety
+    /// AVX2 must be available; bounds per the `syrk_rows` contract.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn syrk_rows(dsts: &mut [&mut [f64]], coefs: &[&[f64]], src: &[f64], stride: usize) {
+        match dsts.len() {
+            1 => syrk_rows_n::<1>(dsts, coefs, src, stride),
+            2 => syrk_rows_n::<2>(dsts, coefs, src, stride),
+            3 => syrk_rows_n::<3>(dsts, coefs, src, stride),
+            4 => syrk_rows_n::<4>(dsts, coefs, src, stride),
+            n => unreachable!("row group {n} exceeds MR={MR}"),
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn syrk_rows_n<const NR: usize>(
+        dsts: &mut [&mut [f64]],
+        coefs: &[&[f64]],
+        src: &[f64],
+        stride: usize,
+    ) {
+        let len = dsts[0].len();
+        let nt = coefs[0].len();
+        assert!(dsts.len() == NR && coefs.len() == NR);
+        assert!(nt > 0 && src.len() >= (nt - 1) * stride + len);
+        let sp = src.as_ptr();
+        let mut dp = [std::ptr::null_mut::<f64>(); NR];
+        let mut cp = [std::ptr::null::<f64>(); NR];
+        for r in 0..NR {
+            assert!(dsts[r].len() == len && coefs[r].len() == nt);
+            dp[r] = dsts[r].as_mut_ptr();
+            cp[r] = coefs[r].as_ptr();
+        }
+        let wv = len - (len % STRIP);
+        let mut j = 0;
+        while j < wv {
+            let mut a0 = [_mm256_setzero_pd(); NR];
+            let mut a1 = [_mm256_setzero_pd(); NR];
+            for r in 0..NR {
+                a0[r] = _mm256_loadu_pd(dp[r].add(j));
+                a1[r] = _mm256_loadu_pd(dp[r].add(j + 4));
+            }
+            for t in 0..nt {
+                let b = sp.add(t * stride + j);
+                let y0 = _mm256_loadu_pd(b);
+                let y1 = _mm256_loadu_pd(b.add(4));
+                for r in 0..NR {
+                    let c = _mm256_set1_pd(*cp[r].add(t));
+                    a0[r] = _mm256_sub_pd(a0[r], _mm256_mul_pd(c, y0));
+                    a1[r] = _mm256_sub_pd(a1[r], _mm256_mul_pd(c, y1));
+                }
+            }
+            for r in 0..NR {
+                _mm256_storeu_pd(dp[r].add(j), a0[r]);
+                _mm256_storeu_pd(dp[r].add(j + 4), a1[r]);
+            }
+            j += STRIP;
+        }
+        if wv < len {
+            for (dst, cf) in dsts.iter_mut().zip(coefs) {
+                scalar_sub_mul_panel(dst, cf, src, stride, wv, len);
+            }
+        }
+    }
 }
+
+/// Serializes in-crate unit tests that flip the process-global force
+/// switches (SIMD dispatch here, the factorization engine in
+/// `linalg::chol`) — one lock shared across test modules so concurrent
+/// guards can never interleave their swap/restore pairs.
+#[cfg(test)]
+pub(crate) static TEST_FORCE_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
 
 #[cfg(test)]
 mod tests {
@@ -436,7 +645,7 @@ mod tests {
     use std::sync::Mutex;
 
     // force_simd is process-global; in-module tests serialize on this.
-    static SIMD_LOCK: Mutex<()> = Mutex::new(());
+    static SIMD_LOCK: &Mutex<()> = &TEST_FORCE_LOCK;
 
     fn reference_r2(x: &[f64], nx: f64, y: &Mat, j: usize, ny: f64) -> f64 {
         let mut a = nx + ny;
@@ -523,5 +732,105 @@ mod tests {
         // active implies enabled && available; label is consistent
         assert_eq!(simd_active(), simd_enabled() && simd_available());
         assert_eq!(simd_label(), if simd_active() { "avx2" } else { "scalar" });
+    }
+
+    /// Naive per-element chain — the contract every PanelKernel path
+    /// must reproduce bit-for-bit.
+    fn chain_reference(dst: &[f64], coefs: &[f64], src: &[f64], stride: usize) -> Vec<f64> {
+        let mut out = dst.to_vec();
+        for (j, a) in out.iter_mut().enumerate() {
+            for (t, &c) in coefs.iter().enumerate() {
+                *a -= c * src[t * stride + j];
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn panel_kernel_matches_chain_reference_across_dispatch() {
+        let _lock = SIMD_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let mut rng = Rng::seed_from_u64(93);
+        // lengths crossing the 8-lane strip boundary, incl. sub-strip
+        for &len in &[1usize, 5, 8, 11, 16, 29, 40] {
+            for &nt in &[1usize, 2, 7, 13] {
+                let stride = len + (nt % 3); // stride ≥ len, sometimes padded
+                let dst0: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+                let coefs: Vec<f64> = (0..nt).map(|_| rng.normal()).collect();
+                let src: Vec<f64> =
+                    (0..(nt - 1) * stride + len).map(|_| rng.normal()).collect();
+                let want = chain_reference(&dst0, &coefs, &src, stride);
+                for on in [false, true] {
+                    let _g = force_simd(on);
+                    let kern = PanelKernel::new();
+                    let mut got = dst0.clone();
+                    kern.sub_mul_panel(&mut got, &coefs, &src, stride);
+                    for j in 0..len {
+                        assert_eq!(
+                            got[j].to_bits(),
+                            want[j].to_bits(),
+                            "sub_mul_panel len={len} nt={nt} simd={on} j={j}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn syrk_rows_matches_per_row_chains_all_group_sizes() {
+        let _lock = SIMD_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let mut rng = Rng::seed_from_u64(94);
+        for &len in &[3usize, 8, 17, 24] {
+            for g in 1..=MR {
+                let nt = 5 + len % 4;
+                let stride = len;
+                let src: Vec<f64> =
+                    (0..(nt - 1) * stride + len).map(|_| rng.normal()).collect();
+                let dst0: Vec<Vec<f64>> =
+                    (0..g).map(|_| (0..len).map(|_| rng.normal()).collect()).collect();
+                let cfs: Vec<Vec<f64>> =
+                    (0..g).map(|_| (0..nt).map(|_| rng.normal()).collect()).collect();
+                let want: Vec<Vec<f64>> =
+                    (0..g).map(|r| chain_reference(&dst0[r], &cfs[r], &src, stride)).collect();
+                for on in [false, true] {
+                    let _fg = force_simd(on);
+                    let kern = PanelKernel::new();
+                    let mut rows = dst0.clone();
+                    {
+                        let mut dsts: Vec<&mut [f64]> =
+                            rows.iter_mut().map(|r| r.as_mut_slice()).collect();
+                        let coefs: Vec<&[f64]> = cfs.iter().map(|c| c.as_slice()).collect();
+                        kern.syrk_rows(&mut dsts, &coefs, &src, stride);
+                    }
+                    for r in 0..g {
+                        for j in 0..len {
+                            assert_eq!(
+                                rows[r][j].to_bits(),
+                                want[r][j].to_bits(),
+                                "syrk_rows len={len} g={g} simd={on} r={r} j={j}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sub_mul_row_is_single_coefficient_panel() {
+        let _lock = SIMD_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let mut rng = Rng::seed_from_u64(95);
+        let len = 19;
+        let dst0: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+        let src: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+        let c = rng.normal();
+        let want = chain_reference(&dst0, &[c], &src, 0);
+        for on in [false, true] {
+            let _g = force_simd(on);
+            let kern = PanelKernel::new();
+            let mut got = dst0.clone();
+            kern.sub_mul_row(&mut got, c, &src);
+            assert_eq!(got, want, "simd={on}");
+        }
     }
 }

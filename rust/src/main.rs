@@ -164,11 +164,12 @@ global flags:
 fn print_global_counters() {
     let g = leverkrr::metrics::global();
     println!(
-        "gram cache: {} hits / {} misses / {} evictions; kde grid fallbacks: {}",
+        "gram cache: {} hits / {} misses / {} evictions; kde grid fallbacks: {}; chol jitter retries: {}",
         g.counter("gramcache.hit"),
         g.counter("gramcache.miss"),
         g.counter("gramcache.evict"),
         g.counter("kde.grid.fallback"),
+        g.counter("chol.jitter.retries"),
     );
 }
 
@@ -315,6 +316,8 @@ fn cmd_fit(argv: &[String]) -> i32 {
     let train_mse = leverkrr::krr::mse(&fitted, &ds.y);
     println!("report: {}", model.report.to_json());
     println!("in-sample risk ‖f̂−f*‖²_n = {risk:.6}   train mse = {train_mse:.6}");
+    let retries = leverkrr::metrics::global().counter("chol.jitter.retries");
+    println!("cholesky jitter retries: {retries}");
     0
 }
 

@@ -380,7 +380,9 @@ impl Decode for Cholesky {
         for _ in 0..n * n {
             l.push(r.f64()?);
         }
-        Ok(Cholesky { l, n, jitter })
+        // The transposed-factor cache is never serialized: it is a pure
+        // derived view, rebuilt lazily on the first backward solve.
+        Ok(Cholesky { l, n, jitter, ut: std::sync::OnceLock::new() })
     }
 }
 

@@ -89,18 +89,97 @@ fn erfc_large(x: f64) -> f64 {
     (-x * x).exp() / std::f64::consts::PI.sqrt() / (x + cf)
 }
 
-/// Modified Bessel function of the second kind K_ν(x), ν ≥ 0, x > 0,
-/// via the integral representation K_ν(x) = ∫₀^∞ e^{−x cosh t} cosh(νt) dt.
+/// Modified Bessel function of the second kind K_ν(x), ν ≥ 0, x > 0.
 ///
-/// The integrand decays like e^{−(x/2)e^t}; we truncate at the t where
-/// x·cosh(t) − νt ≳ 745 and integrate adaptively. Accuracy ~1e-10 relative
-/// for the (ν ≤ 10, 1e-6 ≤ x ≤ 30) range the Matérn kernel exercises;
-/// for x beyond ~700·ln underflow territory we return 0.
+/// Three regimes (cheapest applicable wins):
+/// * ν ≥ 50 — uniform (Debye) asymptotic expansion in 1/ν through the
+///   u₄ Debye polynomial; relative error ~ν^{−5} ≲ 3e−9.
+/// * x ≥ 18 + 2ν² — large-argument (Hankel) expansion
+///   √(π/2x)·e^{−x}·Σ aₖ/xᵏ; terminates *exactly* for half-integer ν
+///   and reaches ~1e−13 otherwise.
+/// * else — the integral representation (the oracle both fast paths are
+///   tolerance-pinned against in tests).
+///
+/// For x beyond ~700 (e^{−x} underflow territory) we return 0.
 pub fn bessel_k(nu: f64, x: f64) -> f64 {
     assert!(nu >= 0.0 && x > 0.0, "bessel_k domain: nu={nu} x={x}");
     if x > 700.0 {
         return 0.0; // e^{-x} underflows f64
     }
+    if nu >= DEBYE_MIN_NU {
+        return bessel_k_debye(nu, x);
+    }
+    if x >= 18.0 + 2.0 * nu * nu {
+        return bessel_k_hankel(nu, x);
+    }
+    bessel_k_integral(nu, x)
+}
+
+/// Order threshold for the uniform (Debye) expansion: with terms through
+/// u₄/ν⁴ the first omitted term is ≲ ν^{−5} ≈ 3e−9 at ν = 50.
+const DEBYE_MIN_NU: f64 = 50.0;
+
+/// Large-argument expansion K_ν(x) ≈ √(π/2x)·e^{−x}·Σₖ aₖ(ν)/xᵏ with
+/// a₀ = 1, aₖ = aₖ₋₁·(4ν²−(2k−1)²)/(8k) (DLMF 10.40.2). The dispatch
+/// requires x ≥ 18 + 2ν² so the asymptotic tail bottoms out far below
+/// 1e−16; for half-integer ν the numerator hits zero and the series
+/// terminates exactly (the Matérn closed forms).
+fn bessel_k_hankel(nu: f64, x: f64) -> f64 {
+    let four_nu2 = 4.0 * nu * nu;
+    let mut term = 1.0_f64;
+    let mut sum = 1.0_f64;
+    let mut prev = f64::INFINITY;
+    for k in 1..64 {
+        let kf = k as f64;
+        let odd = 2.0 * kf - 1.0;
+        term *= (four_nu2 - odd * odd) / (8.0 * kf * x);
+        if term == 0.0 {
+            break; // exact termination (half-integer ν)
+        }
+        if term.abs() >= prev {
+            break; // asymptotic tail started growing — stop at the minimum
+        }
+        sum += term;
+        if term.abs() < 1e-17 * sum.abs() {
+            break;
+        }
+        prev = term.abs();
+    }
+    (std::f64::consts::PI / (2.0 * x)).sqrt() * (-x).exp() * sum
+}
+
+/// Uniform asymptotic (Debye) expansion for large order (DLMF 10.41.4):
+/// K_ν(νz) ≈ √(π/2ν)·e^{−νη}/(1+z²)^{1/4}·Σₖ (−1)ᵏ uₖ(p)/νᵏ with
+/// p = (1+z²)^{−1/2} and η = √(1+z²) + ln(z/(1+√(1+z²))), truncated
+/// after the u₄ Debye polynomial. Valid uniformly in z = x/ν > 0.
+fn bessel_k_debye(nu: f64, x: f64) -> f64 {
+    let z = x / nu;
+    let s = (1.0 + z * z).sqrt();
+    let p = 1.0 / s;
+    let eta = s + (z / (1.0 + s)).ln();
+    let p2 = p * p;
+    let p4 = p2 * p2;
+    // Debye polynomials u₁..u₄ (DLMF 10.41.10)
+    let u1 = p * (3.0 - 5.0 * p2) / 24.0;
+    let u2 = p2 * (81.0 - 462.0 * p2 + 385.0 * p4) / 1152.0;
+    let u3 = p * p2 * (30375.0 - 369603.0 * p2 + 765765.0 * p4 - 425425.0 * p2 * p4) / 414720.0;
+    let u4 = p4
+        * (4465125.0 - 94121676.0 * p2 + 349922430.0 * p4 - 446185740.0 * p2 * p4
+            + 185910725.0 * p4 * p4)
+        / 39813120.0;
+    let inv = 1.0 / nu;
+    let series = 1.0 - u1 * inv + u2 * inv * inv - u3 * inv * inv * inv
+        + u4 * inv * inv * inv * inv;
+    (std::f64::consts::PI / (2.0 * nu)).sqrt() * (-nu * eta).exp() / s.sqrt() * series
+}
+
+/// Integral representation K_ν(x) = ∫₀^∞ e^{−x cosh t} cosh(νt) dt — the
+/// slow oracle the asymptotic paths are pinned against.
+///
+/// The integrand decays like e^{−(x/2)e^t}; we truncate at the t where
+/// x·cosh(t) − νt ≳ 745 and integrate adaptively. Accuracy ~1e-10 relative
+/// for the (ν ≤ 10, 1e-6 ≤ x ≤ 30) range the Matérn kernel exercises.
+fn bessel_k_integral(nu: f64, x: f64) -> f64 {
     // find t_max: x·cosh(t) ≈ 745 + ν t  (so the integrand is ~1e-300)
     let mut t_max: f64 = 1.0;
     while x * t_max.cosh() - nu * t_max < 745.0 && t_max < 60.0 {
@@ -254,6 +333,72 @@ mod tests {
                 let rhs = bessel_k((nu - 1.0).abs(), x) + 2.0 * nu / x * bessel_k(nu, x);
                 assert!(rel(lhs, rhs) < 1e-7, "nu={nu} x={x}: {lhs} vs {rhs}");
             }
+        }
+    }
+
+    #[test]
+    fn bessel_k_hankel_terminates_exactly_for_half_integers() {
+        // 4ν² = (2k−1)² kills the series at k = ν + 1/2, so the Hankel
+        // path reproduces the Matérn closed forms to machine precision
+        // at ANY x (termination is exact, not asymptotic)
+        for &x in &[5.0, 20.0, 50.0, 200.0, 600.0] {
+            let base = (PI / (2.0 * x)).sqrt() * (-x as f64).exp();
+            assert!(rel(bessel_k_hankel(0.5, x), base) < 1e-13, "K_1/2({x})");
+            let want32 = base * (1.0 + 1.0 / x);
+            assert!(rel(bessel_k_hankel(1.5, x), want32) < 1e-13, "K_3/2({x})");
+            let want52 = base * (1.0 + 3.0 / x + 3.0 / (x * x));
+            assert!(rel(bessel_k_hankel(2.5, x), want52) < 1e-13, "K_5/2({x})");
+        }
+    }
+
+    #[test]
+    fn bessel_k_hankel_matches_integral_oracle() {
+        // x = 12 with small ν: the series converges to ~1e-16 and the
+        // oracle's 1e-13 absolute tolerance still leaves ≥ 1e-6 relative
+        // headroom on the e^{-12}-sized values
+        for &nu in &[0.0f64, 0.4, 0.9, 1.3] {
+            let x = 12.0;
+            let fast = bessel_k_hankel(nu, x);
+            let oracle = bessel_k_integral(nu, x);
+            assert!(rel(fast, oracle) < 1e-6, "nu={nu}: {fast} vs {oracle}");
+        }
+    }
+
+    #[test]
+    fn bessel_k_hankel_recurrence_non_half_integer() {
+        // K_{ν+1} = K_{ν−1} + (2ν/x)K_ν entirely inside the fast path:
+        // a coefficient slip in a_k(ν) breaks this identity
+        for &nu in &[0.7f64, 1.3, 2.2] {
+            for &x in &[30.0, 80.0, 250.0] {
+                let lhs = bessel_k_hankel(nu + 1.0, x);
+                let rhs = bessel_k_hankel(nu - 1.0, x) + 2.0 * nu / x * bessel_k_hankel(nu, x);
+                assert!(rel(lhs, rhs) < 1e-12, "nu={nu} x={x}: {lhs} vs {rhs}");
+            }
+        }
+    }
+
+    #[test]
+    fn bessel_k_debye_matches_integral_oracle() {
+        // z = x/ν near 0.55–0.75 keeps νη = O(10), where the integral
+        // oracle is well-conditioned (integrand magnitude within a few
+        // orders of 1, absolute tolerance 1e-13)
+        for &(nu, x) in &[(50.0, 27.5), (50.0, 33.0), (50.0, 37.5), (80.0, 53.0)] {
+            let fast = bessel_k_debye(nu, x);
+            let oracle = bessel_k_integral(nu, x);
+            assert!(rel(fast, oracle) < 1e-6, "nu={nu} x={x}: {fast} vs {oracle}");
+        }
+    }
+
+    #[test]
+    fn bessel_k_debye_recurrence() {
+        // K_{ν+1} = K_{ν−1} + (2ν/x)K_ν with all three orders ≥ 50, so
+        // the public dispatch routes every evaluation through the Debye
+        // path; identity holds to the ~ν^{−5} truncation error
+        let nu = 60.0;
+        for &x in &[35.0f64, 60.0, 90.0] {
+            let lhs = bessel_k(nu + 1.0, x);
+            let rhs = bessel_k(nu - 1.0, x) + 2.0 * nu / x * bessel_k(nu, x);
+            assert!(rel(lhs, rhs) < 1e-6, "x={x}: {lhs} vs {rhs}");
         }
     }
 

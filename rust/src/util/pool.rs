@@ -172,6 +172,11 @@ fn pool() -> &'static PoolShared {
         // re-entrant init) and only ever changes *speed* — results are
         // tile-width independent (see `linalg::blocked`).
         crate::linalg::blocked::warm_autotune();
+        // Same deal for the Cholesky panel width: probed serially here
+        // (the probe pins nthreads = 1, which short-circuits before any
+        // pool dispatch), and NB only affects speed — factor results are
+        // panel-width independent (see `linalg::chol`).
+        crate::linalg::chol::warm_autotune();
         PoolShared {
             queue: Mutex::new(VecDeque::new()),
             queue_cv: Condvar::new(),

@@ -85,6 +85,9 @@ fn estimate_with_workspace(
 
 #[test]
 fn recursive_rls_cached_equals_uncached_and_each_column_evaluated_once() {
+    // bitwise comparison across two estimate runs: hold the lock so a
+    // concurrent test can't flip a process-global engine flag between them
+    let _lock = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
     let ds = dataset(420, 1);
     let k = kernel();
     let lam = leverkrr::krr::lambda::fig2(ds.n());
@@ -114,6 +117,7 @@ fn recursive_rls_cached_equals_uncached_and_each_column_evaluated_once() {
 
 #[test]
 fn bless_cached_equals_uncached_bitwise() {
+    let _lock = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
     let ds = dataset(380, 2);
     let k = kernel();
     let lam = leverkrr::krr::lambda::fig2(ds.n());
@@ -129,6 +133,7 @@ fn every_zoo_kernel_is_cached_equals_uncached_bitwise() {
     // the cached-≡-uncached contract is per-kernel: a column memoized for
     // a Laplacian or rational-quadratic Gram must be the exact bits a
     // fresh evaluation produces, across both column-driven estimators
+    let _lock = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
     let ds = dataset(260, 21);
     let lam = leverkrr::krr::lambda::fig2(ds.n());
     for spec in [
@@ -169,6 +174,7 @@ fn sa_scores_are_unperturbed_by_an_attached_workspace() {
 
 #[test]
 fn nystrom_sampled_fit_cached_equals_backend_fit_bitwise() {
+    let _lock = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
     let ds = dataset(300, 4);
     let k = kernel();
     let lam = 1e-3;
@@ -202,6 +208,7 @@ fn nystrom_sampled_fit_cached_equals_backend_fit_bitwise() {
 
 #[test]
 fn stream_micro_batch_equals_one_by_one_replay_bitwise() {
+    let _lock = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
     let ds = dataset(310, 5);
     let cfg = StreamConfig {
         kernel: KernelSpec::Matern { nu: 1.5, a: 1.0 },
@@ -315,6 +322,7 @@ fn rank_k_update_is_exactly_k_fused_rank_ones() {
     // exactness property over random shapes: the fused sweep must be
     // bitwise the sequential sweeps, and both must stay within
     // refactorization tolerance of the ground-truth factor
+    let _lock = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
     let mut rng = Rng::seed_from_u64(17);
     for case in 0..12 {
         let n = 1 + (case * 5) % 29;
@@ -396,4 +404,40 @@ fn precomputed_norms_blocks_are_bitwise_the_fresh_norms_path() {
     let pre = k.matrix_pre(&ds.x, &nx, &landmarks, &ny);
     let plain = k.matrix(&ds.x, &landmarks);
     assert_eq!(pre.data, plain.data, "matrix_pre != matrix");
+}
+
+// ---------------------------------------------------------------------------
+// Cholesky engine crossing (PR 10): cached ≡ uncached under both engines
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cached_equals_uncached_under_both_chol_engines() {
+    // The gramcache contract (cached ≡ uncached bitwise, thread-invariant)
+    // must hold regardless of which factorization engine the process is
+    // pinned to. Hold the lock for the whole crossing: `force_chol` is
+    // process-global and a concurrent bitwise test must not observe the
+    // flip mid-comparison.
+    use leverkrr::linalg::{force_chol, CholMode};
+    let _lock = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let ds = dataset(300, 31);
+    let k = kernel();
+    let lam = leverkrr::krr::lambda::fig2(ds.n());
+    let est = RecursiveRls::default();
+    for mode in [CholMode::Scalar, CholMode::Blocked] {
+        let _guard = force_chol(mode);
+        let (cached, _, _) =
+            with_threads(4, || estimate_with_workspace(&est, &ds, &k, lam, 28, true));
+        let (uncached, _, _) =
+            with_threads(4, || estimate_with_workspace(&est, &ds, &k, lam, 28, false));
+        assert_eq!(
+            cached, uncached,
+            "cached-vs-uncached diverged under {mode:?} engine"
+        );
+        let (single, _, _) =
+            with_threads(1, || estimate_with_workspace(&est, &ds, &k, lam, 28, true));
+        assert_eq!(
+            cached, single,
+            "1-vs-4-thread parity broke under {mode:?} engine"
+        );
+    }
 }

@@ -162,6 +162,84 @@ fn blocked_engine_bit_identical_across_threads_and_simd() {
 }
 
 #[test]
+fn cholesky_engine_bit_identical_across_threads_simd_and_panels() {
+    use leverkrr::linalg::{chol, simd, Cholesky};
+    // the blocked factor/solve engine: thread count × SIMD dispatch ×
+    // panel width must all be wall-clock-only (the force flags are
+    // process-global, so everything stays inside the POOL_LOCK window)
+    let _lock = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let mut rng = Rng::seed_from_u64(115);
+    let spd = {
+        let mut g = random_mat(&mut rng, 160, 140).gram();
+        g.add_diag(140.0 * 0.5);
+        g
+    };
+    let rhs = random_mat(&mut rng, 140, 37);
+    let mut base: Option<(Vec<f64>, Vec<f64>, Vec<f64>)> = None;
+    for &nb in &[8usize, 32, 512] {
+        let _p = chol::override_panel(nb);
+        for simd_on in [false, true] {
+            let _s = simd::force_simd(simd_on);
+            for nt in [1usize, 4] {
+                let got = with_threads(nt, || {
+                    let ch = Cholesky::factor(&spd).unwrap();
+                    (ch.reconstruct().data, ch.solve_mat(&rhs).data, ch.inv_quad_diag())
+                });
+                match &base {
+                    None => base = Some(got),
+                    Some(b) => {
+                        assert_eq!(b.0, got.0, "factor diverged (nb={nb} simd={simd_on} nt={nt})");
+                        assert_eq!(
+                            b.1, got.1,
+                            "solve_mat diverged (nb={nb} simd={simd_on} nt={nt})"
+                        );
+                        assert_eq!(
+                            b.2, got.2,
+                            "inv_quad_diag diverged (nb={nb} simd={simd_on} nt={nt})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn cholesky_scalar_and_blocked_engines_thread_invariant_and_agree() {
+    // the LEVERKRR_CHOL=scalar|blocked crossing: each engine is bitwise
+    // invariant across threads; the two engines agree to tolerance
+    use leverkrr::linalg::{force_chol, CholMode, Cholesky};
+    let _lock = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let mut rng = Rng::seed_from_u64(116);
+    let spd = {
+        let mut g = random_mat(&mut rng, 130, 110).gram();
+        g.add_diag(110.0 * 0.5);
+        g
+    };
+    let rhs = random_mat(&mut rng, 110, 21);
+    let mut per_mode = Vec::new();
+    for mode in [CholMode::Scalar, CholMode::Blocked] {
+        let _m = force_chol(mode);
+        let run = || {
+            let ch = Cholesky::factor_jittered(&spd).unwrap();
+            (ch.solve_mat(&rhs).data, ch.inv_quad_diag())
+        };
+        let s1 = with_threads(1, run);
+        let s4 = with_threads(4, run);
+        assert_eq!(s1.0, s4.0, "{mode:?} solve_mat diverged across threads");
+        assert_eq!(s1.1, s4.1, "{mode:?} inv_quad_diag diverged across threads");
+        per_mode.push(s1);
+    }
+    let scale = 1.0 + per_mode[0].0.iter().map(|v| v.abs()).fold(0.0, f64::max);
+    for (a, b) in per_mode[0].0.iter().zip(&per_mode[1].0) {
+        assert!((a - b).abs() < 1e-8 * scale, "engines disagree on solve_mat: {a} vs {b}");
+    }
+    for (a, b) in per_mode[0].1.iter().zip(&per_mode[1].1) {
+        assert!((a - b).abs() < 1e-8 * (1.0 + a.abs()), "engines disagree on inv_quad_diag");
+    }
+}
+
+#[test]
 fn kmeans_bit_identical_across_threads() {
     // End-to-end Lloyd's (seeding + blocked assignment + updates):
     // reseed the Rng per run so both thread counts see the same draws.

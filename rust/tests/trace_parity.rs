@@ -166,6 +166,57 @@ fn stream_fingerprint(n: usize, budget: usize) -> (Vec<u64>, Vec<f64>, Vec<f64>)
     (arrivals, beta, preds)
 }
 
+// ---------------------------------------------------------------------------
+// factorization engine crossing (PR 10): tracing must be inert under
+// both the scalar oracle and the blocked engine
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cholesky_engines_bitwise_identical_under_tracing() {
+    use leverkrr::linalg::{force_chol, CholMode, Cholesky, Mat};
+    let _lock = TRACE_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let mut rng = Rng::seed_from_u64(53);
+    let x = Mat::from_fn(150, 130, |_, _| rng.normal());
+    let mut spd = Mat::zeros(150, 150);
+    for i in 0..150 {
+        for j in 0..150 {
+            let mut s = 0.0;
+            for t in 0..130 {
+                s += x[(i, t)] * x[(j, t)];
+            }
+            spd[(i, j)] = s + if i == j { 75.0 } else { 0.0 };
+        }
+    }
+    let rhs = Mat::from_fn(150, 21, |_, _| rng.normal());
+    for mode in [CholMode::Scalar, CholMode::Blocked] {
+        let _mode = force_chol(mode);
+        for nt in [1usize, 4] {
+            let (off, on) = off_then_on(nt, || {
+                let ch = Cholesky::factor(&spd).unwrap();
+                (ch.solve_mat(&rhs).data, ch.inv_quad_diag())
+            });
+            assert_eq!(
+                to_bits(&off.0),
+                to_bits(&on.0),
+                "{mode:?} multi-RHS solve diverged under tracing at {nt} threads"
+            );
+            assert_eq!(
+                to_bits(&off.1),
+                to_bits(&on.1),
+                "{mode:?} inv_quad_diag diverged under tracing at {nt} threads"
+            );
+        }
+        // coverage: the factor span is recorded in both modes, and the
+        // blocked engine additionally records per-panel spans
+        let paths = traced_paths();
+        assert!(paths.contains(&"chol.factor"), "{mode:?}: factor span missing: {paths:?}");
+        if mode == CholMode::Blocked {
+            assert!(paths.contains(&"chol.panel"), "panel span missing: {paths:?}");
+        }
+    }
+    trace::reset();
+}
+
 #[test]
 fn stream_replay_bitwise_identical_under_tracing() {
     let _lock = TRACE_LOCK.lock().unwrap_or_else(|p| p.into_inner());
